@@ -1,0 +1,78 @@
+//! The gambling pathology, live (paper §4.2 / Proposition 3).
+//!
+//!     cargo run --release --example gambling_casino
+//!
+//! Simulates the paper's slot machine — arm 1 pays $1 always, arm 2 pays
+//! $0 w.p. 0.99 and $50 w.p. 0.01 — and shows why delight-based screening
+//! is fooled: a lucky draw on the bad arm produces a large positive
+//! delight that no per-sample statistic can distinguish from a genuine
+//! breakthrough (Remark 2). Pure tabular substrate; no artifacts needed.
+
+use kondo::bandit_math::gambling_stats;
+use kondo::coordinator::KondoGate;
+use kondo::envs::bandit::GamblingBandit;
+use kondo::metrics::ascii_table;
+use kondo::utils::rng::Pcg32;
+
+fn main() {
+    // the paper's slot machine: mu* = 1, Delta = 0.5, sigma ~ 5, eps = 1%
+    // (arm 2 pays 0 w.p. 0.99 / 50 w.p. 0.01 -> mean 0.5, sd ~ 4.97)
+    println!("slot machine: arm 1 pays $1 always; arm 2 pays $0 (99%) or $50 (1%)");
+    let mut rng = Pcg32::seeded(777);
+    let gate = KondoGate::price(0.0);
+
+    // --- empirical casino with the *actual* two-point payout
+    let trials = 200_000;
+    let eps = 0.01;
+    let mut opened_on_bad = 0u64;
+    let mut pulls_bad = 0u64;
+    let mut chi_bad_max: f64 = 0.0;
+    let baseline = 1.0 - eps * 0.5; // V^pi for the two-point machine
+    for _ in 0..trials {
+        let arm = if rng.bernoulli(eps) { 1 } else { 0 };
+        if arm == 1 {
+            pulls_bad += 1;
+            let r = if rng.bernoulli(0.01) { 50.0 } else { 0.0 };
+            let u = r - baseline;
+            let ell = -(eps as f64).ln();
+            let chi = u * ell;
+            chi_bad_max = chi_bad_max.max(chi);
+            if !gate.decide(&[chi], &mut rng).keep.is_empty() {
+                opened_on_bad += 1;
+            }
+        }
+    }
+    println!(
+        "\npulled the bad arm {pulls_bad} times; the zero-price Kondo gate opened on {opened_on_bad} of them ({:.2}%)",
+        100.0 * opened_on_bad as f64 / pulls_bad.max(1) as f64
+    );
+    println!(
+        "largest delight produced by a lucky draw: {chi_bad_max:.1} (a 'breakthrough' that isn't)"
+    );
+
+    // --- the Gaussian model of Prop 3, across sigma/delta regimes
+    let mut rows = Vec::new();
+    for &sigma in &[0.05, 0.15, 0.5, 1.5, 5.0] {
+        let g = GamblingBandit::new(1.0, 0.5, sigma, eps);
+        let st = gambling_stats(&g);
+        rows.push(vec![
+            format!("{:.1}", st.sigma_over_delta),
+            format!("{:.4}", st.p_false_positive),
+            format!("{:.1}", st.amplification),
+            if st.sigma_over_delta < 1.0 { "reliable".into() } else { "pathological".into() },
+        ]);
+    }
+    println!(
+        "\n{}",
+        ascii_table(
+            &["sigma/Delta", "Pr(U2 > 0 | pull)", "delight amplification", "regime"],
+            &rows
+        )
+    );
+    println!(
+        "Prop 3: under homoskedastic noise no arm is disproportionately amplified;\n\
+         with differential sigma/Delta >> 1, lucky draws open the gate at Theta(1) rate\n\
+         and delight multiplies them by log(1/eps) — an environmental limit, not an\n\
+         algorithmic flaw (Remark 2)."
+    );
+}

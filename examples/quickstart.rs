@@ -1,0 +1,77 @@
+//! Quickstart: train the MNIST-bandit policy with the Kondo gate in ~30s.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Trains DG-K (rho = 3%) against plain PG for a few hundred steps and
+//! prints both learning curves plus the backward-pass ledger — the
+//! paper's headline phenomenon in miniature: nearly the same learning,
+//! a fraction of the backward compute.
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::metrics::ascii_curve;
+use kondo::runtime::Engine;
+use kondo::trainers::{train_mnist, MnistTrainerCfg};
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::new("artifacts")?;
+    println!("platform: {} | artifacts loaded", eng.platform());
+
+    // a glimpse of the synthetic digit corpus (the MNIST substitution)
+    use kondo::envs::digits::{ascii_digit, DigitCorpus, Split};
+    let corpus = DigitCorpus::new(1234);
+    let a = ascii_digit(&corpus.image(Split::Train, 3));
+    let b = ascii_digit(&corpus.image(Split::Train, 7));
+    for (la, lb) in a.lines().zip(b.lines()) {
+        println!("{la}   {lb}");
+    }
+    println!("two corpus samples: a '3' and a '7'\n");
+
+    let mut results = Vec::new();
+    for (name, method) in [
+        ("PG", Method::Pg),
+        ("DG-K rho=3%", Method::DgK {
+            gate: KondoGate::rate(0.03),
+            priority: Priority::Delight,
+        }),
+    ] {
+        let cfg = MnistTrainerCfg {
+            method,
+            baseline: Baseline::Expected,
+            lr: 3e-4,
+            steps: 600,
+            eval_every: 50,
+            eval_size: 500,
+            seed: 0,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let res = train_mnist(&eng, &cfg)?;
+        println!(
+            "\n{name}: trained {} steps in {:.1}s",
+            cfg.steps,
+            t0.elapsed().as_secs_f64()
+        );
+        let steps: Vec<f64> = res.curve.iter().map(|p| p.step as f64).collect();
+        let errs: Vec<f64> = res.curve.iter().map(|p| p.metric2).collect();
+        print!("{}", ascii_curve(&format!("{name} test err"), &steps, &errs, 48));
+        println!(
+            "  final test err {:.3} | backward passes {} / {} forward ({}x reduction)",
+            res.final_test_err,
+            res.ledger.backward_kept,
+            res.ledger.forward_samples,
+            res.ledger.forward_samples / res.ledger.backward_kept.max(1)
+        );
+        results.push((name, res));
+    }
+
+    let (_, pg) = &results[0];
+    let (_, kg) = &results[1];
+    println!(
+        "\nKondo gate: {:.1}x fewer backward passes, test err {:.3} vs PG {:.3}",
+        pg.ledger.backward_kept as f64 / kg.ledger.backward_kept.max(1) as f64,
+        kg.final_test_err,
+        pg.final_test_err
+    );
+    Ok(())
+}

@@ -1,0 +1,233 @@
+"""AOT lowering: every L2 entry point -> HLO *text* artifact + manifest.
+
+Run once by ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides the ``.hlo.txt`` files this writes ``manifest.json``: for every
+artifact its positional input/output signature, for every model its
+parameter tensors in artifact-argument order with their init rule (the
+Rust side re-initializes parameters per seed from these rules), and the
+static shape constants. The Rust runtime refuses to run against a manifest
+whose constants disagree with its own config.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model
+from .models import mlp, transformer
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": "i32" if dtype == I32 else "f32"}
+
+
+def _param_inputs(param_specs):
+    return [_sig(n, s, F32) for n, s in param_specs]
+
+
+def _init_rules(param_specs, model_name):
+    """Per-tensor init rule mirrored by rust/src/model (normal / zeros / ones)."""
+    rules = []
+    for name, shape in param_specs:
+        if model_name == "mnist":
+            if name == "w1":
+                rule = {"kind": "normal", "scale": float(np.sqrt(2.0 / C.MNIST_IN))}
+            elif name in ("w2", "w3"):
+                rule = {"kind": "normal", "scale": float(np.sqrt(2.0 / C.MNIST_HIDDEN))}
+            else:
+                rule = {"kind": "zeros"}
+        else:
+            if "ln" in name and name.endswith("_s"):
+                rule = {"kind": "ones"}
+            elif len(shape) == 1:
+                rule = {"kind": "zeros"}
+            else:
+                rule = {"kind": "normal", "scale": 0.02}
+        rules.append({"name": name, "shape": list(shape), **rule})
+    return rules
+
+
+def build_artifacts():
+    """Returns {name: (fn, [input ShapeDtypeStructs], [input sigs], [output sigs])}."""
+    arts = {}
+    mlp_p = [spec(s) for _, s in mlp.PARAM_SPECS]
+    mlp_sig = _param_inputs(mlp.PARAM_SPECS)
+    B, Be, A = C.MNIST_BATCH, C.MNIST_EVAL_BATCH, C.MNIST_ACTIONS
+
+    arts["mnist_fwd"] = (
+        model.mnist_fwd,
+        mlp_p + [spec((B, C.MNIST_IN)), spec((B, A))],
+        mlp_sig + [_sig("x", (B, C.MNIST_IN), F32), _sig("logit_noise", (B, A), F32)],
+        [_sig("logp", (B, A), F32)],
+    )
+    arts["mnist_fwd_eval"] = (
+        model.mnist_fwd_eval,
+        mlp_p + [spec((Be, C.MNIST_IN))],
+        mlp_sig + [_sig("x", (Be, C.MNIST_IN), F32)],
+        [_sig("logp", (Be, A), F32)],
+    )
+    grad_outs = [_sig("loss", (1,), F32)] + [_sig(f"g_{n}", s, F32) for n, s in mlp.PARAM_SPECS]
+    for cap in C.MNIST_BWD_CAPS:
+        arts[f"mnist_bwd_c{cap}"] = (
+            model.mnist_bwd,
+            mlp_p + [spec((cap, C.MNIST_IN)), spec((cap,), I32), spec((cap,))],
+            mlp_sig
+            + [
+                _sig("x", (cap, C.MNIST_IN), F32),
+                _sig("actions", (cap,), I32),
+                _sig("weights", (cap,), F32),
+            ],
+            grad_outs,
+        )
+
+    import functools
+
+    for h_max in C.REV_SETS:
+        pre = f"rev{h_max}"
+        specs = transformer.param_specs(h_max)
+        tf_p = [spec(s) for _, s in specs]
+        tf_sig = _param_inputs(specs)
+        Rb, Hm = C.REV_BATCH, h_max
+
+        arts[f"{pre}_rollout"] = (
+            functools.partial(model.rev_rollout, h_max),
+            tf_p + [spec((Rb, Hm), I32), spec((1,), I32), spec((1,), I32), spec((1,), I32)],
+            tf_sig
+            + [
+                _sig("prompt", (Rb, Hm), I32),
+                _sig("h", (1,), I32),
+                _sig("m", (1,), I32),
+                _sig("seed", (1,), I32),
+            ],
+            [_sig("actions", (Rb, Hm), I32), _sig("logp", (Rb, Hm), F32)],
+        )
+        arts[f"{pre}_fwd"] = (
+            functools.partial(model.rev_fwd, h_max),
+            tf_p
+            + [spec((Rb, Hm), I32), spec((Rb, Hm), I32), spec((1,), I32), spec((1,), I32)],
+            tf_sig
+            + [
+                _sig("prompt", (Rb, Hm), I32),
+                _sig("actions", (Rb, Hm), I32),
+                _sig("h", (1,), I32),
+                _sig("m", (1,), I32),
+            ],
+            [_sig("logp", (Rb, Hm), F32)],
+        )
+        tf_grad_outs = [_sig("loss", (1,), F32)] + [
+            _sig(f"g_{n}", s, F32) for n, s in specs
+        ]
+        for cap in C.REV_BWD_CAPS:
+            arts[f"{pre}_bwd_c{cap}"] = (
+                functools.partial(model.rev_bwd, h_max),
+                tf_p
+                + [
+                    spec((cap, Hm), I32),
+                    spec((cap, Hm), I32),
+                    spec((cap, Hm)),
+                    spec((1,), I32),
+                    spec((1,), I32),
+                ],
+                tf_sig
+                + [
+                    _sig("prompt", (cap, Hm), I32),
+                    _sig("actions", (cap, Hm), I32),
+                    _sig("weights", (cap, Hm), F32),
+                    _sig("h", (1,), I32),
+                    _sig("m", (1,), I32),
+                ],
+                tf_grad_outs,
+            )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = build_artifacts()
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "constants": {
+            "mnist_batch": C.MNIST_BATCH,
+            "mnist_eval_batch": C.MNIST_EVAL_BATCH,
+            "mnist_actions": C.MNIST_ACTIONS,
+            "mnist_in": C.MNIST_IN,
+            "mnist_bwd_caps": list(C.MNIST_BWD_CAPS),
+            "rev_batch": C.REV_BATCH,
+            "rev_sets": list(C.REV_SETS),
+            "h_max": C.H_MAX,
+            "vocab": C.VOCAB,
+            "pad": C.PAD,
+            "rev_bwd_caps": list(C.REV_BWD_CAPS),
+            "neg_inf": C.NEG_INF,
+        },
+        "models": {
+            "mnist": {"params": _init_rules(mlp.PARAM_SPECS, "mnist")},
+            **{
+                f"reversal{hm}": {
+                    "params": _init_rules(transformer.param_specs(hm), "reversal")
+                }
+                for hm in C.REV_SETS
+            },
+        },
+        "artifacts": {},
+    }
+
+    for name, (fn, in_specs, in_sigs, out_sigs) in arts.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": in_sigs,
+            "outputs": out_sigs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

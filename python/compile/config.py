@@ -1,0 +1,36 @@
+"""Static model / artifact configuration shared by L1 kernels, L2 models and aot.py.
+
+These constants define the single compiled shape-set. Smaller problem sizes
+(H <= H_MAX, M <= VOCAB) are expressed at run time through masks fed to the
+artifacts as data, so one artifact set serves every sweep point in the paper
+(Figures 8-10, 18-21).
+"""
+
+# ---------------------------------------------------------------- MNIST MLP
+MNIST_IN = 784          # 28*28 images
+MNIST_HIDDEN = 100      # paper App A.1: two hidden layers of 100 units
+MNIST_ACTIONS = 10      # digits 0..9
+MNIST_BATCH = 100       # paper App A.1: B = 100
+MNIST_EVAL_BATCH = 500  # evaluation chunk size (test set is streamed in chunks)
+# Capacity buckets for the gated backward executor (L3 packs kept samples
+# into the smallest bucket >= kept count). rho=0.03 of B=100 -> bucket 4.
+MNIST_BWD_CAPS = (4, 8, 16, 32, 64, 100)
+
+# ------------------------------------------------------ Token reversal model
+D_MODEL = 64            # paper App D.1
+N_LAYERS = 2
+N_HEADS = 2
+D_HEAD = D_MODEL // N_HEADS
+D_FF = 4 * D_MODEL
+# Two compiled shape sets: a fast one for H <= 16 (most sweeps) and the
+# full one for the long-sequence scaling axis (paper sweeps H <= 30).
+# Each set has sequence length SEQ = 2*h_max (prompt half + response half).
+REV_SETS = (16, 32)
+H_MAX = max(REV_SETS)   # largest supported sequence
+VOCAB = 64              # largest supported vocabulary (paper sweeps M <= 64)
+PAD = VOCAB             # pad token id (input-embedding only, never an action)
+VOCAB_IN = VOCAB + 1    # input embedding table includes PAD
+REV_BATCH = 100         # paper App D.1: P=10 prompts x S=10 responses
+REV_BWD_CAPS = (13, 25, 50, 100)
+
+NEG_INF = -1e30         # additive-mask negative (finite: avoids NaN in softmax)

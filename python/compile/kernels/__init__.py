@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .attention import flash_attention
+from .fused_head import head_action_logprobs, head_logprobs
+
+__all__ = ["flash_attention", "head_logprobs", "head_action_logprobs"]

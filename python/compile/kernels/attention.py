@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: causally-masked flash attention, VMEM-tiled.
+
+TPU adaptation of the paper's sequence-model training path (DESIGN.md
+par.4): the HBM<->VMEM schedule a CUDA kernel would express with
+threadblocks/shared memory is expressed here with a BlockSpec grid
+(batch*heads, q-blocks, k-blocks) and the running-softmax recurrence in
+VMEM scratch. Inputs collapse batch and heads into one leading dim.
+
+`flash_attention` is a `jax.custom_vjp`: forward runs the Pallas kernel;
+backward recomputes attention probabilities with plain jnp and applies the
+standard analytic gradients (flash-attention bwd without dedicated kernel
+-- correctness-first; see DESIGN.md par.7 for the perf plan).
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..config import NEG_INF
+
+
+def _pick_block(n, target):
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def _kernel(q_ref, k_ref, v_ref, pm_ref, o_ref, m_scr, l_scr, acc_scr, *, bq, bk, dh):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = (q @ k.T) * (1.0 / np.sqrt(dh))
+
+    # Causal mask from global indices; key padding mask is additive input.
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    s = jnp.where(kj <= qi, s, NEG_INF)
+    s = s + pm_ref[0][None, :]
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(jk == nk - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...] / l_scr[...][:, None]
+
+
+def _flash_raw(q, k, v, pad_add, block_q, block_k):
+    bh, t, dh = q.shape
+    bq = _pick_block(t, block_q)
+    bk = _pick_block(t, block_k)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, dh=dh)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, t // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, pad_add)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def flash_attention(q, k, v, pad_add, block_q=32, block_k=32):
+    """Causal attention with key-pad mask. q,k,v: [BH,T,Dh]; pad_add: [BH,T]."""
+    return _flash_raw(q, k, v, pad_add, block_q, block_k)
+
+
+def _fwd(q, k, v, pad_add, block_q, block_k):
+    out = _flash_raw(q, k, v, pad_add, block_q, block_k)
+    return out, (q, k, v, pad_add)
+
+
+def _bwd(block_q, block_k, res, do):
+    q, k, v, pad_add = res
+    t = q.shape[1]
+    dh = q.shape[2]
+    scale = 1.0 / np.sqrt(dh)
+    s = q @ jnp.swapaxes(k, -1, -2) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(causal[None, :, :], s, NEG_INF)
+    s = s + pad_add[:, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.swapaxes(p, -1, -2) @ do
+    dp = do @ jnp.swapaxes(v, -1, -2)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    # Replicate autodiff-of-ref exactly: `jnp.where(causal, ...)` blocks the
+    # cotangent at causally-masked entries. This matters only in degenerate
+    # all-masked query rows (pad positions), where softmax is uniform over
+    # equally -inf entries and ds is not numerically zero.
+    ds = jnp.where(causal[None, :, :], ds, 0.0)
+    dq = (ds @ k) * scale
+    dk = (jnp.swapaxes(ds, -1, -2) @ q) * scale
+    # pad_add is a mask, not a trainable input: zero cotangent.
+    return dq, dk, dv, jnp.zeros_like(pad_add)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,223 @@
+"""L1 Pallas kernel: fused classifier head with streaming log-softmax.
+
+This is the paper's "cheap screening pass" made cheap at the kernel level
+(DESIGN.md par.4). The head projection `h @ w.T + b` is tiled over vocab
+blocks sized for VMEM; a running (max, sumexp) pair per row implements the
+flash-attention recurrence applied to log-softmax, so surprisal / delight
+inputs are produced in a single MXU pass without re-reading logits from HBM.
+
+Two entry points:
+
+- ``head_logprobs(h, w, b, extra)``       -> full log-probs [N, V]
+  (needed where the coordinator samples actions from the distribution).
+- ``head_action_logprobs(h, w, b, a, extra)`` -> chosen-action log-probs [N]
+  (the pure screening/training path: the [N, V] logit tensor is never
+  materialized in HBM -- only per-row accumulators and the output [N]).
+
+Both are `jax.custom_vjp` so the same kernels sit on the differentiated
+training path; backward rules are the exact analytic gradients of
+`ref.head_logprobs` (the select variant recomputes the [N, V] softmax in
+the backward, a deliberate rematerialization trade documented in
+DESIGN.md par.7/L2).
+
+Kernels run with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls; structure (BlockSpec schedule) is TPU-shaped, numerics are
+validated on CPU against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block(n, target):
+    """Largest divisor of n that is <= target (TPU lane-friendly when possible)."""
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+# --------------------------------------------------------------------------
+# Full log-probs kernel: logits [N, V] + row logsumexp [N] in one sweep.
+# --------------------------------------------------------------------------
+
+def _full_kernel(h_ref, w_ref, b_ref, e_ref, out_ref, lse_ref, m_scr, l_scr):
+    j = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    # MXU tile: [bB, D] @ [D, bV] plus bias and additive extra (noise/mask).
+    logits = h_ref[...] @ w_ref[...].T + b_ref[...][None, :] + e_ref[...]
+    out_ref[...] = logits
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=1
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nv - 1)
+    def _fin():
+        lse_ref[...] = m_scr[...] + jnp.log(l_scr[...])
+
+
+def _full_raw(h, w, b, extra, block_b, block_v):
+    n, d = h.shape
+    v = w.shape[0]
+    bb = _pick_block(n, block_b)
+    bv = _pick_block(v, block_v)
+    logits, lse = pl.pallas_call(
+        _full_kernel,
+        grid=(n // bb, v // bv),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bv,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, v), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb,), jnp.float32),
+            pltpu.VMEM((bb,), jnp.float32),
+        ],
+        interpret=True,
+    )(h, w, b, extra)
+    return logits - lse[:, None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def head_logprobs(h, w, b, extra, block_b=32, block_v=128):
+    """log_softmax(h @ w.T + b + extra): [N, V], Pallas-fused."""
+    return _full_raw(h, w, b, extra, block_b, block_v)
+
+
+def _full_fwd(h, w, b, extra, block_b, block_v):
+    logp = _full_raw(h, w, b, extra, block_b, block_v)
+    return logp, (h, w, logp)
+
+
+def _full_bwd(block_b, block_v, res, g):
+    h, w, logp = res
+    p = jnp.exp(logp)
+    dlogits = g - p * jnp.sum(g, axis=-1, keepdims=True)
+    dh = dlogits @ w
+    dw = dlogits.T @ h
+    db = jnp.sum(dlogits, axis=0)
+    return dh, dw, db, dlogits
+
+
+head_logprobs.defvjp(_full_fwd, _full_bwd)
+
+
+# --------------------------------------------------------------------------
+# Select kernel: chosen-action log-probs only -- the streaming screen.
+# The [N, V] logits never leave VMEM; per-row accumulators carry
+# (running max, running sumexp, chosen logit) across vocab blocks.
+# --------------------------------------------------------------------------
+
+def _sel_kernel(h_ref, w_ref, b_ref, a_ref, e_ref, out_ref, m_scr, l_scr, a_scr):
+    j = pl.program_id(1)
+    nv = pl.num_programs(1)
+    bv = w_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        a_scr[...] = jnp.zeros_like(a_scr)
+
+    logits = h_ref[...] @ w_ref[...].T + b_ref[...][None, :] + e_ref[...]
+
+    # Each action index lands in exactly one vocab block: accumulate its logit.
+    local = a_ref[...] - j * bv
+    hit = (local >= 0) & (local < bv)
+    safe = jnp.clip(local, 0, bv - 1)
+    picked = jnp.take_along_axis(logits, safe[:, None], axis=1)[:, 0]
+    a_scr[...] = a_scr[...] + jnp.where(hit, picked, 0.0)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=1
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nv - 1)
+    def _fin():
+        out_ref[...] = a_scr[...] - (m_scr[...] + jnp.log(l_scr[...]))
+
+
+def _sel_raw(h, w, b, actions, extra, block_b, block_v):
+    n, d = h.shape
+    v = w.shape[0]
+    bb = _pick_block(n, block_b)
+    bv = _pick_block(v, block_v)
+    return pl.pallas_call(
+        _sel_kernel,
+        grid=(n // bb, v // bv),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bv,), lambda i, j: (j,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bb,), jnp.float32),
+            pltpu.VMEM((bb,), jnp.float32),
+            pltpu.VMEM((bb,), jnp.float32),
+        ],
+        interpret=True,
+    )(h, w, b, actions, extra)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def head_action_logprobs(h, w, b, actions, extra, block_b=32, block_v=128):
+    """log pi(a) for chosen actions: [N], without materializing [N, V]."""
+    return _sel_raw(h, w, b, actions, extra, block_b, block_v)
+
+
+def _sel_fwd(h, w, b, actions, extra, block_b, block_v):
+    out = _sel_raw(h, w, b, actions, extra, block_b, block_v)
+    return out, (h, w, b, actions, extra)
+
+
+def _sel_bwd(block_b, block_v, res, g):
+    # Deliberate rematerialization: the backward recomputes softmax [N, V]
+    # with plain jnp (XLA fuses it); grad of gathered log-softmax is
+    # g * (onehot(a) - softmax).
+    h, w, b, actions, extra = res
+    v = w.shape[0]
+    logits = h @ w.T + b[None, :] + extra
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(actions, v, dtype=h.dtype)
+    dlogits = g[:, None] * (onehot - p)
+    dh = dlogits @ w
+    dw = dlogits.T @ h
+    db = jnp.sum(dlogits, axis=0)
+    return dh, dw, db, None, dlogits
+
+
+head_action_logprobs.defvjp(_sel_fwd, _sel_bwd)

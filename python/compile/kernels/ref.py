@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has an exact reference here; pytest asserts
+allclose between the two across hypothesis-generated shapes and dtypes.
+These are also the implementations the custom-VJP backward rules are
+derived from, so kernel-vs-ref agreement implies gradient correctness.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..config import NEG_INF
+
+
+def head_logprobs(h, w, b, extra):
+    """log_softmax(h @ w.T + b + extra) over the last axis.
+
+    h: [N, D] activations; w: [V, D] head weights; b: [V] bias;
+    extra: [N, V] additive term (logit noise / vocab mask). Returns [N, V].
+    """
+    logits = h @ w.T + b[None, :] + extra
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def head_action_logprobs(h, w, b, actions, extra):
+    """log pi(a) for the chosen action only: [N]."""
+    logp = head_logprobs(h, w, b, extra)
+    return jnp.take_along_axis(logp, actions[:, None], axis=1)[:, 0]
+
+
+def attention(q, k, v, pad_add):
+    """Causal softmax attention with additive key padding mask.
+
+    q, k, v: [BH, T, Dh] (batch*heads collapsed); pad_add: [BH, T] additive
+    mask applied to keys (0 for valid, NEG_INF for padded). Returns [BH, T, Dh].
+    """
+    t = q.shape[1]
+    dh = q.shape[2]
+    s = q @ jnp.swapaxes(k, -1, -2) * (1.0 / jnp.sqrt(jnp.float32(dh)))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(causal[None, :, :], s, NEG_INF)
+    s = s + pad_add[:, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v

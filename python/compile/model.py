@@ -1,0 +1,77 @@
+"""L2 export surface: flat-argument wrappers around the models.
+
+Artifacts take parameters as individual leading arguments (in
+``PARAM_ORDER``) followed by data inputs, so the Rust runtime can marshal
+them positionally from its parameter store. aot.py lowers each function
+here to one HLO-text artifact; the (name, shape, dtype) signature of every
+artifact is recorded in ``manifest.json``.
+"""
+
+import jax.numpy as jnp
+
+from . import config as C
+from .models import mlp, transformer
+
+# ---------------------------------------------------------------- MNIST MLP
+
+N_MLP = len(mlp.PARAM_ORDER)
+
+
+def _mlp_params(args):
+    return dict(zip(mlp.PARAM_ORDER, args))
+
+
+def mnist_fwd(*args):
+    """(params..., x[B,784], noise[B,10]) -> (logp[B,10],)"""
+    p = _mlp_params(args[:N_MLP])
+    x, noise = args[N_MLP:]
+    return (mlp.forward_logprobs(p, x, noise),)
+
+
+def mnist_fwd_eval(*args):
+    """(params..., x[Be,784]) -> (logp[Be,10],) -- zero-noise eval pass."""
+    p = _mlp_params(args[:N_MLP])
+    (x,) = args[N_MLP:]
+    noise = jnp.zeros((x.shape[0], C.MNIST_ACTIONS))
+    return (mlp.forward_logprobs(p, x, noise),)
+
+
+def mnist_bwd(*args):
+    """(params..., x[c,784], a[c], w[c]) -> (loss[1], grads...)"""
+    p = _mlp_params(args[:N_MLP])
+    x, actions, weights = args[N_MLP:]
+    out = mlp.backward(p, x, actions, weights)
+    return (out[0].reshape(1),) + out[1:]
+
+
+# ------------------------------------------------------------ Token reversal
+# One wrapper set per compiled h_max (config.REV_SETS).
+
+
+def _tf_params(args, h_max):
+    order = transformer.param_order(h_max)
+    return dict(zip(order, args[: len(order)])), len(order)
+
+
+def rev_rollout(h_max, *args):
+    """(params..., prompt i32[B,Hm], h i32[1], m i32[1], seed i32[1])
+    -> (actions i32[B,Hm], logp f32[B,Hm])"""
+    p, n = _tf_params(args, h_max)
+    prompt, h, m, seed = args[n:]
+    return transformer.rollout(p, prompt, h[0], m[0], seed[0], h_max)
+
+
+def rev_fwd(h_max, *args):
+    """(params..., prompt, actions, h[1], m[1]) -> (logp f32[B,Hm],)"""
+    p, n = _tf_params(args, h_max)
+    prompt, actions, h, m = args[n:]
+    return (transformer.teacher_logp(p, prompt, actions, h[0], m[0], h_max),)
+
+
+def rev_bwd(h_max, *args):
+    """(params..., prompt[c,Hm], actions[c,Hm], w[c,Hm], h[1], m[1])
+    -> (loss[1], grads...)"""
+    p, n = _tf_params(args, h_max)
+    prompt, actions, weights, h, m = args[n:]
+    out = transformer.backward(p, prompt, actions, weights, h[0], m[0], h_max)
+    return (out[0].reshape(1),) + out[1:]

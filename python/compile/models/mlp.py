@@ -1,0 +1,71 @@
+"""L2: MNIST contextual-bandit policy -- two-layer MLP (paper App A.1).
+
+Architecture: 784 -> 100 -> 100 -> softmax(10), ReLU activations. The head
+is the L1 fused streaming-log-softmax Pallas kernel, so the forward pass
+that produces the gate's screening signal is the optimized path.
+
+The backward artifact computes grad of  L(theta) = -sum_i w_i log pi(a_i|x_i)
+for per-sample weights w supplied by the L3 coordinator. Every method in
+the paper (PG / DG / DG-K / PPO / PMPO) reduces to a choice of w, so a
+single compiled backward serves all of them (DESIGN.md par.2 algo/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import config as C
+from ..kernels import head_action_logprobs, head_logprobs
+
+# Parameter tensors in artifact-argument order (manifest `models.mnist.params`).
+PARAM_SPECS = [
+    ("w1", (C.MNIST_IN, C.MNIST_HIDDEN)),
+    ("b1", (C.MNIST_HIDDEN,)),
+    ("w2", (C.MNIST_HIDDEN, C.MNIST_HIDDEN)),
+    ("b2", (C.MNIST_HIDDEN,)),
+    ("w3", (C.MNIST_ACTIONS, C.MNIST_HIDDEN)),  # [V, D] for the fused head
+    ("b3", (C.MNIST_ACTIONS,)),
+]
+PARAM_ORDER = [name for name, _ in PARAM_SPECS]
+
+
+def init_params(key):
+    """He-normal init for ReLU layers, zero biases (matches companion setup)."""
+    ks = jax.random.split(key, 3)
+    p = {}
+    p["w1"] = jax.random.normal(ks[0], PARAM_SPECS[0][1]) * jnp.sqrt(2.0 / C.MNIST_IN)
+    p["b1"] = jnp.zeros(PARAM_SPECS[1][1])
+    p["w2"] = jax.random.normal(ks[1], PARAM_SPECS[2][1]) * jnp.sqrt(2.0 / C.MNIST_HIDDEN)
+    p["b2"] = jnp.zeros(PARAM_SPECS[3][1])
+    p["w3"] = jax.random.normal(ks[2], PARAM_SPECS[4][1]) * jnp.sqrt(2.0 / C.MNIST_HIDDEN)
+    p["b3"] = jnp.zeros(PARAM_SPECS[5][1])
+    return p
+
+
+def _trunk(p, x):
+    h1 = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h2 = jax.nn.relu(h1 @ p["w2"] + p["b2"])
+    return h2
+
+
+def forward_logprobs(p, x, logit_noise):
+    """Full policy distribution log pi(.|x): [B, 10].
+
+    `logit_noise` [B, 10] is added to logits pre-softmax (zeros normally;
+    N(0, sigma_Z^2) for the Fig 4b robustness experiment).
+    """
+    h2 = _trunk(p, x)
+    return head_logprobs(h2, p["w3"], p["b3"], logit_noise)
+
+
+def weighted_loss(p, x, actions, weights):
+    """-sum_i w_i log pi(a_i | x_i); grads of this are the policy update."""
+    h2 = _trunk(p, x)
+    extra = jnp.zeros((x.shape[0], C.MNIST_ACTIONS), dtype=jnp.float32)
+    logp_a = head_action_logprobs(h2, p["w3"], p["b3"], actions, extra)
+    return -jnp.sum(weights * logp_a)
+
+
+def backward(p, x, actions, weights):
+    """(loss, grads-in-PARAM_ORDER) for the weighted objective."""
+    loss, grads = jax.value_and_grad(weighted_loss)(p, x, actions, weights)
+    return (loss,) + tuple(grads[name] for name in PARAM_ORDER)

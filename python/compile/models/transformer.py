@@ -1,0 +1,272 @@
+"""L2: decoder-only transformer for token reversal (paper App D.1).
+
+d_model=64, 2 layers, 2 heads, causal attention -- identical architecture
+to the companion paper. The module is parametrized by ``h_max``: two
+compiled shape sets (h_max 16 and 32) serve every (H, M) sweep point, with
+masks expressed as *data* (scalar h, m inputs) carving out the active
+problem (DESIGN.md par.5).
+
+Sequence layout (teacher forcing and rollout agree exactly):
+
+    slot t in [0, h_max)        prompt, LEFT-padded: [0, h_max-H) = PAD,
+                                [h_max-H, h_max) = prompt tokens
+    slot t in [h_max, seq)      response inputs: slot h_max+j holds
+                                action[j] for j <= H-2, PAD beyond
+
+    logits at slot h_max-1+j predict action[j], j in [0, H).
+
+Kernel placement (DESIGN.md par.7, CPU adaptation): the L1 Pallas flash
+kernel runs on the ACTING path (rollout prefill) where the paper's cheap
+screening signal is produced; the differentiated teacher path uses
+vectorized jnp attention, because interpret-mode Pallas lowers to a
+sequential grid loop that XLA-CPU cannot parallelize (on real TPU both
+paths would use the Mosaic kernel). Correctness of the pallas/jnp pair is
+pinned by python/tests/test_kernels.py.
+
+Three exported entry points per shape set (artifact names in parentheses,
+``revNN`` prefix = h_max):
+
+  - ``rollout``      (revNN_rollout): autoregressive sampling fully inside
+    HLO -- prefill over the prompt half with the flash kernel, then a
+    ``lax.scan`` decode loop over a KV cache.
+  - ``teacher_logp`` (revNN_fwd): log pi(a_j) of given actions (PPO
+    ratios, re-scoring across inner epochs).
+  - ``backward``     (revNN_bwd_c*): grads of -sum w_{b,j} log pi(a_{b,j}).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import config as C
+from ..kernels import flash_attention, ref
+
+LN_EPS = 1e-5
+
+
+def seq_of(h_max):
+    return 2 * h_max
+
+
+def _layer_specs(l):
+    d, dff = C.D_MODEL, C.D_FF
+    return [
+        (f"l{l}_ln1_s", (d,)), (f"l{l}_ln1_b", (d,)),
+        (f"l{l}_wq", (d, d)), (f"l{l}_bq", (d,)),
+        (f"l{l}_wk", (d, d)), (f"l{l}_bk", (d,)),
+        (f"l{l}_wv", (d, d)), (f"l{l}_bv", (d,)),
+        (f"l{l}_wo", (d, d)), (f"l{l}_bo", (d,)),
+        (f"l{l}_ln2_s", (d,)), (f"l{l}_ln2_b", (d,)),
+        (f"l{l}_wu", (d, C.D_FF)), (f"l{l}_bu", (C.D_FF,)),
+        (f"l{l}_wd", (C.D_FF, d)), (f"l{l}_bd", (d,)),
+    ]
+
+
+def param_specs(h_max):
+    """Parameter tensors in artifact-argument order for one shape set."""
+    return (
+        [("tok_emb", (C.VOCAB_IN, C.D_MODEL)), ("pos_emb", (seq_of(h_max), C.D_MODEL))]
+        + [s for l in range(C.N_LAYERS) for s in _layer_specs(l)]
+        + [
+            ("lnf_s", (C.D_MODEL,)), ("lnf_b", (C.D_MODEL,)),
+            ("w_head", (C.VOCAB, C.D_MODEL)),  # [V, D] for the fused head
+            ("b_head", (C.VOCAB,)),
+        ]
+    )
+
+
+def param_order(h_max):
+    return [name for name, _ in param_specs(h_max)]
+
+
+def init_params(key, h_max):
+    p = {}
+    specs = param_specs(h_max)
+    ks = iter(jax.random.split(key, len(specs)))
+    for name, shape in specs:
+        k = next(ks)
+        if "ln" in name and name.endswith("_s"):
+            p[name] = jnp.ones(shape)
+        elif len(shape) == 1:
+            p[name] = jnp.zeros(shape)
+        else:
+            p[name] = jax.random.normal(k, shape) * 0.02
+    return p
+
+
+def _ln(x, s, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * s + b
+
+
+def _split_heads(x):
+    # [B, T, D] -> [B*nh, T, dh]
+    b, t, _ = x.shape
+    x = x.reshape(b, t, C.N_HEADS, C.D_HEAD).transpose(0, 2, 1, 3)
+    return x.reshape(b * C.N_HEADS, t, C.D_HEAD)
+
+
+def _merge_heads(x, b):
+    t = x.shape[1]
+    x = x.reshape(b, C.N_HEADS, t, C.D_HEAD).transpose(0, 2, 1, 3)
+    return x.reshape(b, t, C.D_MODEL)
+
+
+def _block_full(p, l, x, pad_add, use_flash):
+    """Full-sequence transformer block. Returns (x_out, k_heads, v_heads)
+    with k/v heads [B, nh, T, dh] so the rollout prefill can seed its KV
+    cache. `use_flash` selects the L1 Pallas kernel (acting path) vs the
+    vectorized jnp reference (differentiated path)."""
+    b, t, _ = x.shape
+    xn = _ln(x, p[f"l{l}_ln1_s"], p[f"l{l}_ln1_b"])
+    q = xn @ p[f"l{l}_wq"] + p[f"l{l}_bq"]
+    k = xn @ p[f"l{l}_wk"] + p[f"l{l}_bk"]
+    v = xn @ p[f"l{l}_wv"] + p[f"l{l}_bv"]
+    qh, kh, vh = _split_heads(q), _split_heads(k), _split_heads(v)
+    pad_h = jnp.repeat(pad_add, C.N_HEADS, axis=0)
+    attn = flash_attention(qh, kh, vh, pad_h) if use_flash else ref.attention(qh, kh, vh, pad_h)
+    x = x + _merge_heads(attn, b) @ p[f"l{l}_wo"] + p[f"l{l}_bo"]
+    xn2 = _ln(x, p[f"l{l}_ln2_s"], p[f"l{l}_ln2_b"])
+    x = x + jax.nn.relu(xn2 @ p[f"l{l}_wu"] + p[f"l{l}_bu"]) @ p[f"l{l}_wd"] + p[f"l{l}_bd"]
+    kh4 = kh.reshape(b, C.N_HEADS, t, C.D_HEAD)
+    vh4 = vh.reshape(b, C.N_HEADS, t, C.D_HEAD)
+    return x, kh4, vh4
+
+
+def _prompt_pad_add(h, h_max):
+    t = jnp.arange(h_max)
+    return jnp.where(t >= h_max - h, 0.0, C.NEG_INF)
+
+
+def _full_pad_add(h, h_max):
+    """Valid keys: real prompt tokens + the H-1 teacher-forced response inputs."""
+    t = jnp.arange(seq_of(h_max))
+    valid = (t >= h_max - h) & (t < h_max + h - 1 + (h == 0))
+    return jnp.where(valid, 0.0, C.NEG_INF)
+
+
+def _vocab_add(m):
+    return jnp.where(jnp.arange(C.VOCAB) < m, 0.0, C.NEG_INF)
+
+
+def _teacher_tokens(prompt, actions, h, h_max):
+    j = jnp.arange(h_max)
+    resp_in = jnp.where(j[None, :] < h - 1, actions, C.PAD)
+    return jnp.concatenate([prompt, resp_in], axis=1)
+
+
+def teacher_hidden(p, prompt, actions, h, h_max):
+    tokens = _teacher_tokens(prompt, actions, h, h_max)
+    b = tokens.shape[0]
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+    pad_add = jnp.broadcast_to(_full_pad_add(h, h_max)[None, :], (b, seq_of(h_max)))
+    for l in range(C.N_LAYERS):
+        x, _, _ = _block_full(p, l, x, pad_add, use_flash=False)
+    return _ln(x, p["lnf_s"], p["lnf_b"])
+
+
+def teacher_logp(p, prompt, actions, h, m, h_max):
+    """log pi(action_j) at every response slot: [B, h_max] (j >= H is junk,
+    zeroed by the coordinator's weights)."""
+    b = prompt.shape[0]
+    hid = teacher_hidden(p, prompt, actions, h, h_max)
+    sel = jax.lax.dynamic_slice_in_dim(hid, h_max - 1, h_max, axis=1)
+    flat = sel.reshape(b * h_max, C.D_MODEL)
+    acts = jnp.clip(actions, 0, C.VOCAB - 1).reshape(b * h_max)
+    extra = jnp.broadcast_to(_vocab_add(m)[None, :], (b * h_max, C.VOCAB))
+    logp = ref.head_action_logprobs(flat, p["w_head"], p["b_head"], acts, extra)
+    return logp.reshape(b, h_max)
+
+
+def weighted_loss(p, prompt, actions, weights, h, m, h_max):
+    logp = teacher_logp(p, prompt, actions, h, m, h_max)
+    return -jnp.sum(weights * logp)
+
+
+def backward(p, prompt, actions, weights, h, m, h_max):
+    loss, grads = jax.value_and_grad(weighted_loss)(
+        p, prompt, actions, weights, h, m, h_max
+    )
+    return (loss,) + tuple(grads[name] for name in param_order(h_max))
+
+
+# --------------------------------------------------------------------------
+# Rollout: prefill (flash kernel) + lax.scan decode over a KV cache.
+# --------------------------------------------------------------------------
+
+def _decode_block(p, l, x, k_cache, v_cache, pos, slot_add):
+    """Single-position transformer block over the KV cache."""
+    b = x.shape[0]
+    xn = _ln(x, p[f"l{l}_ln1_s"], p[f"l{l}_ln1_b"])
+    q = (xn @ p[f"l{l}_wq"] + p[f"l{l}_bq"]).reshape(b, C.N_HEADS, C.D_HEAD)
+    k = (xn @ p[f"l{l}_wk"] + p[f"l{l}_bk"]).reshape(b, C.N_HEADS, 1, C.D_HEAD)
+    v = (xn @ p[f"l{l}_wv"] + p[f"l{l}_bv"]).reshape(b, C.N_HEADS, 1, C.D_HEAD)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, pos, 0))
+    s = jnp.einsum("bhd,bhtd->bht", q, k_cache) * (1.0 / jnp.sqrt(jnp.float32(C.D_HEAD)))
+    s = s + slot_add[None, None, :]
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bht,bhtd->bhd", pr, v_cache).reshape(b, C.D_MODEL)
+    x = x + ctx @ p[f"l{l}_wo"] + p[f"l{l}_bo"]
+    xn2 = _ln(x, p[f"l{l}_ln2_s"], p[f"l{l}_ln2_b"])
+    x = x + jax.nn.relu(xn2 @ p[f"l{l}_wu"] + p[f"l{l}_bu"]) @ p[f"l{l}_wd"] + p[f"l{l}_bd"]
+    return x, k_cache, v_cache
+
+
+def rollout(p, prompt, h, m, seed, h_max):
+    """Sample responses autoregressively. prompt: i32[B, h_max] (left-
+    padded); h, m, seed scalars. Returns (actions i32[B, h_max],
+    logp f32[B, h_max]) -- entries at j >= H are sampled-but-unused."""
+    b = prompt.shape[0]
+    seq = seq_of(h_max)
+    key = jax.random.PRNGKey(seed)
+
+    # ---- prefill over the prompt half with the L1 flash kernel
+    x = p["tok_emb"][prompt] + p["pos_emb"][None, :h_max, :]
+    pad_add = jnp.broadcast_to(_prompt_pad_add(h, h_max)[None, :], (b, h_max))
+    k_caches, v_caches = [], []
+    for l in range(C.N_LAYERS):
+        x, kh, vh = _block_full(p, l, x, pad_add, use_flash=True)
+        kc = jnp.zeros((b, C.N_HEADS, seq, C.D_HEAD))
+        vc = jnp.zeros((b, C.N_HEADS, seq, C.D_HEAD))
+        k_caches.append(jax.lax.dynamic_update_slice(kc, kh, (0, 0, 0, 0)))
+        v_caches.append(jax.lax.dynamic_update_slice(vc, vh, (0, 0, 0, 0)))
+    hid = _ln(x, p["lnf_s"], p["lnf_b"])
+
+    vocab_add = _vocab_add(m)
+
+    def head_logits(hvec):
+        return hvec @ p["w_head"].T + p["b_head"] + vocab_add[None, :]
+
+    logits0 = head_logits(hid[:, h_max - 1, :])
+    a0 = jax.random.categorical(jax.random.fold_in(key, 0), logits0)
+    logp0 = jnp.take_along_axis(jax.nn.log_softmax(logits0, -1), a0[:, None], 1)[:, 0]
+
+    k_cache = jnp.stack(k_caches)
+    v_cache = jnp.stack(v_caches)
+    slot_idx = jnp.arange(seq)
+    prompt_valid = (slot_idx >= h_max - h) & (slot_idx < h_max)
+
+    def step(carry, j):
+        k_cache, v_cache, prev = carry
+        pos = h_max + j - 1  # slot holding input token action[j-1]
+        x = p["tok_emb"][prev] + p["pos_emb"][pos]
+        valid = prompt_valid | ((slot_idx >= h_max) & (slot_idx <= pos))
+        slot_add = jnp.where(valid, 0.0, C.NEG_INF)
+        kcs, vcs = [], []
+        for l in range(C.N_LAYERS):
+            x, kc, vc = _decode_block(p, l, x, k_cache[l], v_cache[l], pos, slot_add)
+            kcs.append(kc)
+            vcs.append(vc)
+        hidj = _ln(x, p["lnf_s"], p["lnf_b"])
+        logits = head_logits(hidj)
+        aj = jax.random.categorical(jax.random.fold_in(key, j), logits)
+        lpj = jnp.take_along_axis(jax.nn.log_softmax(logits, -1), aj[:, None], 1)[:, 0]
+        return (jnp.stack(kcs), jnp.stack(vcs), aj), (aj, lpj)
+
+    js = jnp.arange(1, h_max)
+    _, (acts_rest, logp_rest) = jax.lax.scan(step, (k_cache, v_cache, a0), js)
+
+    actions = jnp.concatenate([a0[:, None], acts_rest.T], axis=1).astype(jnp.int32)
+    logp = jnp.concatenate([logp0[:, None], logp_rest.T], axis=1)
+    return actions, logp

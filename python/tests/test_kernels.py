@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and block sizes that do / don't divide evenly);
+explicit tests pin the shapes the artifacts are actually compiled at.
+Gradient tests compare the custom-VJP backward against jax.grad of the
+reference implementation -- the CORE correctness signal for the repo.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import config as C
+from compile.kernels import attention, fused_head, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ------------------------------------------------------------ fused head
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([4, 10, 25, 100]),
+    d=st.sampled_from([8, 100]),
+    v=st.sampled_from([10, 64]),
+    bb=st.sampled_from([8, 32]),
+    bv=st.sampled_from([16, 128]),
+)
+def test_head_logprobs_matches_ref(n, d, v, bb, bv):
+    h, w, b, e = _rand(0, n, d), _rand(1, v, d), _rand(2, v), 0.1 * _rand(3, n, v)
+    got = fused_head.head_logprobs(h, w, b, e, bb, bv)
+    want = ref.head_logprobs(h, w, b, e)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([4, 25, 100]),
+    v=st.sampled_from([10, 64]),
+    bv=st.sampled_from([8, 128]),
+)
+def test_head_action_logprobs_matches_ref(n, v, bv):
+    d = 16
+    h, w, b, e = _rand(0, n, d), _rand(1, v, d), _rand(2, v), jnp.zeros((n, v))
+    a = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, v)
+    got = fused_head.head_action_logprobs(h, w, b, a, e, 32, bv)
+    want = ref.head_action_logprobs(h, w, b, a, e)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_head_logprobs_normalized():
+    h, w, b = _rand(0, 100, 100), _rand(1, 10, 100), _rand(2, 10)
+    logp = fused_head.head_logprobs(h, w, b, jnp.zeros((100, 10)))
+    np.testing.assert_allclose(jnp.exp(logp).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_head_logprobs_grads_match_ref():
+    h, w, b, e = _rand(0, 25, 16), _rand(1, 10, 16), _rand(2, 10), 0.1 * _rand(3, 25, 10)
+
+    def loss_kern(h, w, b, e):
+        return jnp.sum(jnp.sin(fused_head.head_logprobs(h, w, b, e)))
+
+    def loss_ref(h, w, b, e):
+        return jnp.sum(jnp.sin(ref.head_logprobs(h, w, b, e)))
+
+    gk = jax.grad(loss_kern, argnums=(0, 1, 2, 3))(h, w, b, e)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(h, w, b, e)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-5)
+
+
+def test_head_action_logprobs_grads_match_ref():
+    n, d, v = 25, 16, 10
+    h, w, b = _rand(0, n, d), _rand(1, v, d), _rand(2, v)
+    e = 0.1 * _rand(3, n, v)
+    a = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, v)
+    wts = _rand(4, n)
+
+    def loss_kern(h, w, b, e):
+        return jnp.sum(wts * fused_head.head_action_logprobs(h, w, b, a, e))
+
+    def loss_ref(h, w, b, e):
+        return jnp.sum(wts * ref.head_action_logprobs(h, w, b, a, e))
+
+    gk = jax.grad(loss_kern, argnums=(0, 1, 2, 3))(h, w, b, e)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(h, w, b, e)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_head_logit_noise_shifts_distribution():
+    # extra acts as additive logits: a huge boost on class 3 makes it argmax.
+    h, w, b = _rand(0, 8, 16), _rand(1, 10, 16), _rand(2, 10)
+    e = jnp.zeros((8, 10)).at[:, 3].set(50.0)
+    logp = fused_head.head_logprobs(h, w, b, e)
+    assert int(jnp.argmax(logp, -1).min()) == 3 and int(jnp.argmax(logp, -1).max()) == 3
+
+
+def test_head_vocab_mask_zeroes_probability():
+    # NEG_INF in extra implements the vocab mask for M < VOCAB.
+    n, d, v, m = 16, 8, 64, 5
+    h, w, b = _rand(0, n, d), _rand(1, v, d), _rand(2, v)
+    e = jnp.broadcast_to(jnp.where(jnp.arange(v) < m, 0.0, C.NEG_INF)[None, :], (n, v))
+    p = jnp.exp(fused_head.head_logprobs(h, w, b, e))
+    assert float(p[:, m:].max()) == pytest.approx(0.0, abs=1e-30)
+    np.testing.assert_allclose(p[:, :m].sum(-1), 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------------------ attention
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4]),
+    t=st.sampled_from([8, 32, 64]),
+    dh=st.sampled_from([8, 32]),
+    bq=st.sampled_from([8, 32]),
+    npad=st.integers(min_value=0, max_value=6),
+)
+def test_flash_attention_matches_ref(bh, t, dh, bq, npad):
+    q, k, v = _rand(0, bh, t, dh), _rand(1, bh, t, dh), _rand(2, bh, t, dh)
+    pad = jnp.where(jnp.arange(t)[None, :] < npad, C.NEG_INF, 0.0) * jnp.ones((bh, 1))
+    got = attention.flash_attention(q, k, v, pad, bq, bq)
+    want = ref.attention(q, k, v, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_grads_match_ref():
+    bh, t, dh = 4, 64, 32
+    q, k, v = _rand(0, bh, t, dh), _rand(1, bh, t, dh), _rand(2, bh, t, dh)
+    pad = jnp.where(jnp.arange(t)[None, :] < 3, C.NEG_INF, 0.0) * jnp.ones((bh, 1))
+    tgt = _rand(7, bh, t, dh)
+
+    def loss_kern(q, k, v):
+        return jnp.sum((attention.flash_attention(q, k, v, pad) - tgt) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum((ref.attention(q, k, v, pad) - tgt) ** 2)
+
+    gk = jax.grad(loss_kern, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_flash_attention_causality():
+    # Perturbing a future key/value must not change earlier outputs.
+    bh, t, dh = 2, 32, 8
+    q, k, v = _rand(0, bh, t, dh), _rand(1, bh, t, dh), _rand(2, bh, t, dh)
+    pad = jnp.zeros((bh, t))
+    base = attention.flash_attention(q, k, v, pad)
+    k2 = k.at[:, t - 1, :].add(100.0)
+    v2 = v.at[:, t - 1, :].add(-50.0)
+    pert = attention.flash_attention(q, k2, v2, pad)
+    np.testing.assert_allclose(base[:, : t - 1], pert[:, : t - 1], rtol=1e-6)
+    assert float(jnp.abs(base[:, t - 1] - pert[:, t - 1]).max()) > 1e-3
+
+
+def test_flash_attention_pad_keys_ignored():
+    bh, t, dh, npad = 2, 16, 8, 4
+    q, k, v = _rand(0, bh, t, dh), _rand(1, bh, t, dh), _rand(2, bh, t, dh)
+    pad = jnp.where(jnp.arange(t)[None, :] < npad, C.NEG_INF, 0.0) * jnp.ones((bh, 1))
+    base = attention.flash_attention(q, k, v, pad)
+    k2 = k.at[:, :npad].set(_rand(5, bh, npad, dh) * 7.0)
+    v2 = v.at[:, :npad].set(_rand(6, bh, npad, dh) * 7.0)
+    pert = attention.flash_attention(q, k2, v2, pad)
+    # Outputs at non-pad query positions are unchanged.
+    np.testing.assert_allclose(base[:, npad:], pert[:, npad:], rtol=1e-5, atol=1e-6)

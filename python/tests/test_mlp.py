@@ -1,0 +1,106 @@
+"""L2 MNIST MLP: distribution sanity, gradient correctness, weight algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import config as C
+from compile.kernels import ref
+from compile.models import mlp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(b=16, seed=0):
+    p = mlp.init_params(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, C.MNIST_IN))
+    return p, x
+
+
+def _ref_logprobs(p, x, noise):
+    h1 = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h2 = jax.nn.relu(h1 @ p["w2"] + p["b2"])
+    return ref.head_logprobs(h2, p["w3"], p["b3"], noise)
+
+
+def test_forward_is_normalized_distribution():
+    p, x = _setup()
+    logp = mlp.forward_logprobs(p, x, jnp.zeros((16, 10)))
+    assert logp.shape == (16, 10)
+    np.testing.assert_allclose(jnp.exp(logp).sum(-1), 1.0, rtol=1e-5)
+    assert float(logp.max()) <= 0.0
+
+
+def test_forward_matches_pure_ref():
+    p, x = _setup()
+    noise = 0.3 * jax.random.normal(jax.random.PRNGKey(7), (16, 10))
+    got = mlp.forward_logprobs(p, x, noise)
+    want = _ref_logprobs(p, x, noise)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_backward_matches_jax_grad_of_ref():
+    p, x = _setup(b=8)
+    a = jax.random.randint(jax.random.PRNGKey(3), (8,), 0, 10)
+    w = jax.random.normal(jax.random.PRNGKey(4), (8,))
+
+    def ref_loss(p):
+        logp = _ref_logprobs(p, x, jnp.zeros((8, 10)))
+        lp_a = jnp.take_along_axis(logp, a[:, None], 1)[:, 0]
+        return -jnp.sum(w * lp_a)
+
+    out = mlp.backward(p, x, a, w)
+    loss, grads = out[0], out[1:]
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(p)
+    np.testing.assert_allclose(loss, ref_l, rtol=1e-5)
+    for g, name in zip(grads, mlp.PARAM_ORDER):
+        np.testing.assert_allclose(g, ref_g[name], rtol=1e-4, atol=1e-6)
+
+
+def test_zero_weights_give_zero_grads():
+    p, x = _setup(b=4)
+    a = jnp.array([0, 1, 2, 3])
+    out = mlp.backward(p, x, a, jnp.zeros(4))
+    for g in out[1:]:
+        assert float(jnp.abs(g).max()) == 0.0
+
+
+def test_backward_is_linear_in_weights():
+    # grad(w) + grad(w') == grad(w + w'): the property that lets the L3
+    # batcher split a batch across capacity buckets without bias.
+    p, x = _setup(b=8)
+    a = jax.random.randint(jax.random.PRNGKey(3), (8,), 0, 10)
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (8,))
+    w2 = jax.random.normal(jax.random.PRNGKey(6), (8,))
+    g1 = mlp.backward(p, x, a, w1)[1:]
+    g2 = mlp.backward(p, x, a, w2)[1:]
+    g12 = mlp.backward(p, x, a, w1 + w2)[1:]
+    for a_, b_, c_ in zip(g1, g2, g12):
+        np.testing.assert_allclose(a_ + b_, c_, rtol=1e-4, atol=1e-5)
+
+
+def test_padding_samples_with_zero_weight_is_exact():
+    # Packing k kept samples into a larger bucket with zero-weight padding
+    # must give identical grads -- the L3 bucketed-backward invariant.
+    p, x = _setup(b=8)
+    a = jax.random.randint(jax.random.PRNGKey(3), (8,), 0, 10)
+    w = jax.random.normal(jax.random.PRNGKey(5), (8,))
+    g_full = mlp.backward(p, x, a, w)[1:]
+    xp = jnp.concatenate([x, jax.random.normal(jax.random.PRNGKey(9), (8, C.MNIST_IN))])
+    ap = jnp.concatenate([a, jnp.zeros(8, jnp.int32)])
+    wp = jnp.concatenate([w, jnp.zeros(8)])
+    g_pad = mlp.backward(p, xp, ap, wp)[1:]
+    for gf, gp in zip(g_full, g_pad):
+        np.testing.assert_allclose(gf, gp, rtol=1e-4, atol=1e-6)
+
+
+def test_gradient_step_improves_weighted_objective():
+    p, x = _setup(b=32)
+    a = jax.random.randint(jax.random.PRNGKey(3), (32,), 0, 10)
+    w = jnp.ones(32)
+    out = mlp.backward(p, x, a, w)
+    loss0, grads = out[0], out[1:]
+    lr = 1e-2
+    p2 = {n: p[n] - lr * g for n, g in zip(mlp.PARAM_ORDER, grads)}
+    loss1 = mlp.backward(p2, x, a, w)[0]
+    assert float(loss1) < float(loss0)

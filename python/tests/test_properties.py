@@ -1,0 +1,96 @@
+"""Hypothesis property tests across the L2 models (invariants the L3
+coordinator relies on, beyond the fixed-case tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import config as C
+from compile.models import mlp, transformer as tf
+
+jax.config.update("jax_platform_name", "cpu")
+
+HM = 16
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_mlp_grads_scale_linearly_in_weights(b, seed):
+    # grad(c * w) == c * grad(w): the scaling the trainer's /B normalization
+    # and Fig-3 cost model both assume.
+    key = jax.random.PRNGKey(seed)
+    p = mlp.init_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, C.MNIST_IN))
+    a = jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, 10)
+    w = jax.random.normal(jax.random.fold_in(key, 3), (b,))
+    g1 = mlp.backward(p, x, a, w)[1:]
+    g3 = mlp.backward(p, x, a, 3.0 * w)[1:]
+    for u, v in zip(g1, g3):
+        np.testing.assert_allclose(3.0 * u, v, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=8),
+    perm_seed=st.integers(min_value=0, max_value=100),
+)
+def test_mlp_grads_invariant_to_sample_order(b, perm_seed):
+    # the batcher may pack kept samples in any order
+    key = jax.random.PRNGKey(7)
+    p = mlp.init_params(key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, C.MNIST_IN))
+    a = jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, 10)
+    w = jax.random.normal(jax.random.fold_in(key, 3), (b,))
+    perm = jax.random.permutation(jax.random.PRNGKey(perm_seed), b)
+    g = mlp.backward(p, x, a, w)[1:]
+    gp = mlp.backward(p, x[perm], a[perm], w[perm])[1:]
+    for u, v in zip(g, gp):
+        np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    h=st.integers(min_value=2, max_value=12),
+    m=st.sampled_from([2, 4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_rollout_teacher_consistency_random_hm(h, m, seed):
+    # the decode path and the teacher path agree for ANY (h, m) point the
+    # sweep drivers might visit
+    p = tf.init_params(jax.random.PRNGKey(3), HM)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (2, h), 0, m)
+    pad = jnp.full((2, HM - h), C.PAD, jnp.int32)
+    prompt = jnp.concatenate([pad, toks.astype(jnp.int32)], axis=1)
+    actions, lp_roll = tf.rollout(p, prompt, h, m, seed, HM)
+    lp_teach = tf.teacher_logp(p, prompt, actions, h, m, HM)
+    np.testing.assert_allclose(
+        lp_roll[:, :h], lp_teach[:, :h], rtol=2e-4, atol=2e-4
+    )
+    assert int(actions[:, :h].max()) < m
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_transformer_grads_additive_in_weights(seed):
+    # grad(w1) + grad(w2) == grad(w1 + w2): lets the coordinator split a
+    # gated batch across capacity buckets without bias
+    p = tf.init_params(jax.random.PRNGKey(1), HM)
+    h, m = 4, 2
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (2, h), 0, m)
+    pad = jnp.full((2, HM - h), C.PAD, jnp.int32)
+    prompt = jnp.concatenate([pad, toks.astype(jnp.int32)], axis=1)
+    actions = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, HM), 0, m)
+    k = jax.random.PRNGKey(seed + 2)
+    w1 = jnp.zeros((2, HM)).at[:, :h].set(jax.random.normal(k, (2, h)))
+    w2 = jnp.zeros((2, HM)).at[:, :h].set(
+        jax.random.normal(jax.random.fold_in(k, 1), (2, h))
+    )
+    g1 = tf.backward(p, prompt, actions, w1, h, m, HM)[1:]
+    g2 = tf.backward(p, prompt, actions, w2, h, m, HM)[1:]
+    g12 = tf.backward(p, prompt, actions, w1 + w2, h, m, HM)[1:]
+    for a, b, c in zip(g1, g2, g12):
+        np.testing.assert_allclose(np.array(a) + np.array(b), c, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,68 @@
+//! L3 hot-path microbenches: gate decision, quantile pricing, packing,
+//! gather. Perf target (DESIGN.md §7): gate + pack must stay <= 5% of a
+//! training step (i.e. well under 100 us at the observed ~2-10 ms steps).
+
+mod bench_util;
+
+use bench_util::bench;
+use kondo::coordinator::{BucketSet, EwQuantile, KondoGate, P2Quantile, Priority};
+use kondo::coordinator::batcher::gather_rows_f32;
+use kondo::utils::rng::Pcg32;
+use kondo::utils::stats::quantile_f32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(0);
+    let chi: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+    let chi_f32: Vec<f32> = chi.iter().map(|&c| c as f32).collect();
+
+    // Algorithm 1 per batch: quantile pricing + Bernoulli gating (B = 100)
+    let gate_rate = KondoGate::rate(0.03);
+    bench("gate.decide rate=0.03 B=100", 50_000, 1000, || {
+        std::hint::black_box(gate_rate.decide(&chi, &mut rng));
+    });
+    let gate_price = KondoGate::price(0.0);
+    bench("gate.decide lambda=0 B=100", 50_000, 1000, || {
+        std::hint::black_box(gate_price.decide(&chi, &mut rng));
+    });
+    let gate_soft = KondoGate::price(0.0).with_eta(0.5);
+    bench("gate.decide soft eta=0.5 B=100", 50_000, 1000, || {
+        std::hint::black_box(gate_soft.decide(&chi, &mut rng));
+    });
+
+    // pricing alternatives
+    bench("quantile_f32 (1-rho) B=100", 50_000, 1000, || {
+        std::hint::black_box(quantile_f32(&chi_f32, 0.97));
+    });
+    let mut p2 = P2Quantile::new(0.97);
+    bench("P2Quantile.update", 200_000, 1000, || {
+        p2.update(rng.normal());
+    });
+    let mut ew = EwQuantile::new(0.97, 0.05);
+    bench("EwQuantile.update", 200_000, 1000, || {
+        ew.update(rng.normal());
+    });
+
+    // priority scoring
+    let u: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+    let ell: Vec<f64> = (0..100).map(|_| rng.uniform() + 0.1).collect();
+    for pr in [Priority::Delight, Priority::Additive { alpha: 0.5 }, Priority::Uniform] {
+        bench(&format!("priority.score_batch {} B=100", pr.name()), 50_000, 1000, || {
+            std::hint::black_box(pr.score_batch(&u, &ell, &mut rng));
+        });
+    }
+
+    // bucketed packing + gather (the x[kept, 784] marshaling of a step)
+    let buckets = BucketSet::new(vec![4, 8, 16, 32, 64, 100]).unwrap();
+    let kept: Vec<usize> = (0..3).map(|i| i * 17).collect();
+    bench("buckets.pack kept=3", 200_000, 1000, || {
+        std::hint::black_box(buckets.pack(&kept));
+    });
+    let x: Vec<f32> = (0..100 * 784).map(|i| i as f32).collect();
+    bench("gather_rows_f32 3 of 100 x 784 -> cap 4", 50_000, 1000, || {
+        std::hint::black_box(gather_rows_f32(&x, 784, &kept, 4));
+    });
+    let kept100: Vec<usize> = (0..100).collect();
+    bench("gather_rows_f32 100 of 100 x 784 -> cap 100", 10_000, 100, || {
+        std::hint::black_box(gather_rows_f32(&x, 784, &kept100, 100));
+    });
+}

@@ -1,0 +1,79 @@
+//! End-to-end training-step latency per method — the bench behind the
+//! paper's headline claim: at a fixed forward cost, gating collapses the
+//! per-step backward wall-clock (Figs 1b/3/8b in time rather than counts).
+
+mod bench_util;
+
+use bench_util::{bench, fmt_ns};
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::runtime::Engine;
+use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
+
+fn main() {
+    let Ok(eng) = Engine::new("artifacts") else {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    };
+
+    let methods: Vec<(&str, Method)> = vec![
+        ("pg", Method::Pg),
+        ("dg", Method::Dg),
+        ("dgk_rho3", Method::DgK {
+            gate: KondoGate::rate(0.03),
+            priority: Priority::Delight,
+        }),
+    ];
+
+    println!("--- MNIST: 50-step runs (amortized per-step latency) ---");
+    let mut mnist_ns = Vec::new();
+    for (name, m) in &methods {
+        let r = bench(&format!("mnist step [{name}]"), 3, 1, || {
+            let cfg = MnistTrainerCfg {
+                method: *m,
+                baseline: Baseline::Expected,
+                lr: 3e-4,
+                steps: 50,
+                eval_every: 1000, // no eval inside the timed region
+                eval_size: 500,
+                seed: 0,
+                ..Default::default()
+            };
+            std::hint::black_box(train_mnist(&eng, &cfg).unwrap());
+        });
+        mnist_ns.push((name.to_string(), r.mean_ns / 50.0));
+    }
+    for (name, ns) in &mnist_ns {
+        println!("  per-step [{name}]: {}", fmt_ns(*ns));
+    }
+    let pg = mnist_ns[0].1;
+    let kg = mnist_ns[2].1;
+    println!("  step-time speedup DG-K vs PG: {:.2}x", pg / kg);
+
+    println!("\n--- token reversal H=10 M=2: 10-step runs ---");
+    let mut rev_ns = Vec::new();
+    for (name, m) in &methods {
+        let r = bench(&format!("reversal step [{name}]"), 2, 1, || {
+            let cfg = ReversalTrainerCfg {
+                method: *m,
+                lr: 3e-4,
+                steps: 10,
+                h: 10,
+                m: 2,
+                seed: 0,
+                eval_every: 1000,
+                inner_epochs: 1,
+            };
+            std::hint::black_box(train_reversal(&eng, &cfg).unwrap());
+        });
+        rev_ns.push((name.to_string(), r.mean_ns / 10.0));
+    }
+    for (name, ns) in &rev_ns {
+        println!("  per-step [{name}]: {}", fmt_ns(*ns));
+    }
+    let pg = rev_ns[0].1;
+    let kg = rev_ns[2].1;
+    println!("  step-time speedup DG-K vs PG: {:.2}x", pg / kg);
+    println!("\nexpected shape: DG-K per-step latency well below PG/DG — the skipped");
+    println!("backward passes are real wall-clock savings, not just counter savings.");
+}

@@ -1,0 +1,86 @@
+//! Artifact execution latency per bucket — the measured substance behind
+//! the paper's cost model (Fig 3) and the bucketed-backward design: the
+//! rows show how backward wall-clock scales with compiled capacity.
+
+mod bench_util;
+
+use bench_util::bench;
+use kondo::model::ParamStore;
+use kondo::runtime::{Engine, HostTensor};
+use kondo::utils::rng::Pcg32;
+
+fn main() {
+    let Ok(eng) = Engine::new("artifacts") else {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    };
+    let man = eng.manifest().clone();
+    let mut rng = Pcg32::seeded(3);
+
+    // ---- MNIST forward + every backward bucket
+    let rules = man.model("mnist").unwrap().to_vec();
+    let params = ParamStore::init(&rules, 0);
+    let b = man.constants.mnist_batch;
+    let img = man.constants.mnist_in;
+    let nact = man.constants.mnist_actions;
+    let x: Vec<f32> = (0..b * img).map(|_| rng.normal() as f32).collect();
+
+    let mut fwd_in = params.as_inputs();
+    fwd_in.push(HostTensor::f32(&[b, img], x.clone()));
+    fwd_in.push(HostTensor::zeros_f32(&[b, nact]));
+    bench("mnist_fwd B=100 (L1 fused head)", 300, 20, || {
+        std::hint::black_box(eng.execute("mnist_fwd", &fwd_in).unwrap());
+    });
+
+    for &cap in &man.constants.mnist_bwd_caps {
+        let mut bin = params.as_inputs();
+        bin.push(HostTensor::f32(&[cap, img], x[..cap * img].to_vec()));
+        bin.push(HostTensor::i32(&[cap], vec![1; cap]));
+        bin.push(HostTensor::f32(&[cap], vec![0.5; cap]));
+        let name = format!("mnist_bwd_c{cap}");
+        bench(&format!("{name} (bucketed backward)"), 200, 10, || {
+            std::hint::black_box(eng.execute(&name, &bin).unwrap());
+        });
+    }
+
+    // ---- reversal (fast shape set): rollout + backward buckets
+    let hm = man.constants.rev_sets[0];
+    let rules = man.model(&format!("reversal{hm}")).unwrap().to_vec();
+    let params = ParamStore::init(&rules, 0);
+    let batch = man.constants.rev_batch;
+    let prompt: Vec<i32> = (0..batch * hm)
+        .map(|i| if i % hm < hm - 10 { man.constants.pad as i32 } else { (i % 2) as i32 })
+        .collect();
+    let h_t = HostTensor::scalar_i32(10);
+    let m_t = HostTensor::scalar_i32(2);
+
+    let mut rin = params.as_inputs();
+    rin.push(HostTensor::i32(&[batch, hm], prompt.clone()));
+    rin.push(h_t.clone());
+    rin.push(m_t.clone());
+    rin.push(HostTensor::scalar_i32(7));
+    bench(
+        &format!("rev{hm}_rollout B=100 (L1 flash prefill + scan decode)"),
+        30,
+        3,
+        || {
+            std::hint::black_box(eng.execute(&format!("rev{hm}_rollout"), &rin).unwrap());
+        },
+    );
+
+    for &cap in &man.constants.rev_bwd_caps {
+        let mut bin = params.as_inputs();
+        bin.push(HostTensor::i32(&[cap, hm], prompt[..cap * hm].to_vec()));
+        bin.push(HostTensor::i32(&[cap, hm], vec![0; cap * hm]));
+        bin.push(HostTensor::f32(&[cap, hm], vec![0.1; cap * hm]));
+        bin.push(h_t.clone());
+        bin.push(m_t.clone());
+        let name = format!("rev{hm}_bwd_c{cap}");
+        bench(&format!("{name} (bucketed backward)"), 30, 3, || {
+            std::hint::black_box(eng.execute(&name, &bin).unwrap());
+        });
+    }
+
+    println!("\nexpected shape: backward wall-clock grows with bucket capacity — the gate's");
+    println!("skipped samples are real skipped compute (DESIGN.md 'gating = shape choice').");
+}

@@ -1,0 +1,104 @@
+//! Advantage baselines (paper App A.1 / A.3, Figs 13-14).
+//!
+//! For the MNIST bandit the reward is R = 1{a = y} (+ optional noise with
+//! mean zero), so the expected-confidence baseline b = sum_a pi(a) E[r(a)]
+//! equals pi(y) -- the paper's main-body choice. Zero and constant
+//! baselines are the robustness comparisons; Oracle is E[R | x] under the
+//! true label (identical to Expected for mean-zero reward noise, kept as a
+//! separate variant to mirror the paper's four-way figure).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Baseline {
+    /// b = 0
+    Zero,
+    /// b = c (paper uses 0.5)
+    Constant(f64),
+    /// b = sum_a pi(a) E[r(a) | x] = pi(y) for indicator reward
+    Expected,
+    /// b = E[R | x] with the true label
+    Oracle,
+}
+
+impl Baseline {
+    /// Baseline value for one MNIST-bandit sample: full policy `pi` over
+    /// actions, true label `y`.
+    pub fn value(&self, pi: &[f32], y: usize) -> f64 {
+        match *self {
+            Baseline::Zero => 0.0,
+            Baseline::Constant(c) => c,
+            Baseline::Expected | Baseline::Oracle => pi[y] as f64,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Baseline::Zero => "zero".into(),
+            Baseline::Constant(c) => format!("constant{c}"),
+            Baseline::Expected => "expected".into(),
+            Baseline::Oracle => "oracle".into(),
+        }
+    }
+}
+
+/// Grouped empirical baseline (paper App D.1, GRPO-style): mean reward of
+/// each prompt's response group. `rewards` is episode-major with `group`
+/// consecutive episodes per prompt.
+pub fn grouped_baseline(rewards: &[f64], group: usize) -> Vec<f64> {
+    assert!(group > 0 && rewards.len() % group == 0);
+    let mut out = vec![0.0; rewards.len()];
+    for g in 0..rewards.len() / group {
+        let lo = g * group;
+        let mean: f64 = rewards[lo..lo + group].iter().sum::<f64>() / group as f64;
+        for b in out.iter_mut().skip(lo).take(group) {
+            *b = mean;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_values() {
+        let pi = [0.1f32, 0.7, 0.2];
+        assert_eq!(Baseline::Zero.value(&pi, 1), 0.0);
+        assert_eq!(Baseline::Constant(0.5).value(&pi, 1), 0.5);
+        assert!((Baseline::Expected.value(&pi, 1) - 0.7).abs() < 1e-6);
+        assert!((Baseline::Oracle.value(&pi, 2) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expected_baseline_gives_paper_advantages() {
+        // App A.1: U(y*) = 1 - p, U(a != y*) = -p
+        let pi = [0.3f32, 0.6, 0.1];
+        let y = 1;
+        let b = Baseline::Expected.value(&pi, y);
+        let u_correct = 1.0 - b;
+        let u_wrong = 0.0 - b;
+        assert!((u_correct - 0.4).abs() < 1e-6);
+        assert!((u_wrong + 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grouped_baseline_is_group_mean() {
+        let r = [1.0, 0.0, 0.5, 0.5, 1.0, 1.0];
+        let b = grouped_baseline(&r, 2);
+        assert_eq!(b, vec![0.5, 0.5, 0.5, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn grouped_baseline_centers_advantages() {
+        let r = [1.0, 0.0, 0.25, 0.75];
+        let b = grouped_baseline(&r, 4);
+        let adv: f64 = r.iter().zip(&b).map(|(x, y)| x - y).sum();
+        assert!(adv.abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grouped_baseline_rejects_ragged() {
+        grouped_baseline(&[1.0, 2.0, 3.0], 2);
+    }
+}

@@ -1,0 +1,303 @@
+//! Policy-gradient methods as per-sample weight rules.
+//!
+//! Every method in the paper reduces to "run the weighted backward
+//! artifact with weights w": PG uses w = U, DG uses w = chi = U*ell,
+//! DG-K gates first and uses w = U on the kept set (Algorithm 1 line 10),
+//! PPO uses the clipped-surrogate weight U*r*1{unclipped}, PMPO (alpha=1,
+//! beta_KL=0) maximizes log-likelihood of positive-advantage samples.
+//! This is what lets one compiled backward serve all five methods.
+
+pub mod baseline;
+
+use crate::coordinator::{GateDecision, KondoGate, Priority};
+use crate::utils::rng::Pcg32;
+use crate::utils::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// REINFORCE: w = U, backward for every sample.
+    Pg,
+    /// Delightful policy gradient: w = chi = U * ell, backward for every sample.
+    Dg,
+    /// DG with the Kondo gate: backward only for kept samples, w = U.
+    DgK { gate: KondoGate, priority: Priority },
+    /// PPO clipped surrogate (eps); ratio r = exp(logp_new - logp_old).
+    Ppo { eps: f64 },
+    /// PMPO with mixing alpha (alpha = 1 keeps only positive advantages).
+    Pmpo { alpha: f64 },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Pg => "pg".into(),
+            Method::Dg => "dg".into(),
+            Method::DgK { gate, priority } => {
+                let g = match gate.pricing {
+                    crate::coordinator::Pricing::Rate(r) => format!("rho{r}"),
+                    crate::coordinator::Pricing::Price(l) => format!("lam{l}"),
+                };
+                if *priority == Priority::Delight {
+                    format!("dgk_{g}")
+                } else {
+                    format!("dgk_{g}_{}", priority.name())
+                }
+            }
+            Method::Ppo { .. } => "ppo".into(),
+            Method::Pmpo { .. } => "pmpo".into(),
+        }
+    }
+
+    /// Does this method gate backward passes?
+    pub fn is_gated(&self) -> bool {
+        matches!(self, Method::DgK { .. })
+    }
+}
+
+/// Per-batch decision: which samples get a backward pass, with what weight.
+#[derive(Debug, Clone)]
+pub struct WeightDecision {
+    /// weight per sample (0 for skipped)
+    pub weights: Vec<f32>,
+    /// samples receiving a backward pass (all samples for ungated methods)
+    pub keep: Vec<usize>,
+    /// gate diagnostics if gated
+    pub gate: Option<GateDecision>,
+}
+
+/// Inputs to the weight rule for one batch.
+pub struct BatchSignals<'a> {
+    /// advantage U_t
+    pub u: &'a [f64],
+    /// surprisal ell_t = -log pi(a_t) under the CURRENT policy
+    pub ell: &'a [f64],
+    /// behaviour-policy log-probs (for PPO ratios); None means on-policy
+    pub logp_old: Option<&'a [f64]>,
+    /// additive noise already applied to delight upstream, if any
+    pub chi_override: Option<&'a [f64]>,
+}
+
+impl Method {
+    /// Compute weights/keep set for one batch (Algorithm 1 for DG-K).
+    pub fn decide(&self, s: &BatchSignals, rng: &mut Pcg32) -> WeightDecision {
+        let n = s.u.len();
+        assert_eq!(s.ell.len(), n);
+        match self {
+            Method::Pg => WeightDecision {
+                weights: s.u.iter().map(|&u| u as f32).collect(),
+                keep: (0..n).collect(),
+                gate: None,
+            },
+            Method::Dg => {
+                let chi = delight(s);
+                WeightDecision {
+                    weights: chi.iter().map(|&c| c as f32).collect(),
+                    keep: (0..n).collect(),
+                    gate: None,
+                }
+            }
+            Method::DgK { gate, priority } => {
+                // Screening scores: delight (or an ablation priority), with
+                // any upstream noise honoured through chi_override.
+                let scores = if *priority == Priority::Delight {
+                    delight(s)
+                } else {
+                    priority.score_batch(s.u, s.ell, rng)
+                };
+                let d = gate.decide(&scores, rng);
+                let mut weights = vec![0.0f32; n];
+                for &i in &d.keep {
+                    weights[i] = s.u[i] as f32; // Algorithm 1 line 10
+                }
+                WeightDecision { weights, keep: d.keep.clone(), gate: Some(d) }
+            }
+            Method::Ppo { eps } => {
+                let ones: Vec<f64>;
+                let lp_old = match s.logp_old {
+                    Some(l) => l,
+                    None => {
+                        ones = s.ell.iter().map(|&e| -e).collect();
+                        &ones
+                    }
+                };
+                let weights = s
+                    .u
+                    .iter()
+                    .zip(s.ell.iter().zip(lp_old))
+                    .map(|(&u, (&ell, &lo))| {
+                        let r = (-ell - lo).exp(); // exp(logp_new - logp_old)
+                        let unclipped = if u >= 0.0 { r <= 1.0 + eps } else { r >= 1.0 - eps };
+                        if unclipped {
+                            (u * r) as f32
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                WeightDecision { weights, keep: (0..n).collect(), gate: None }
+            }
+            Method::Pmpo { alpha } => {
+                let npos = s.u.iter().filter(|&&u| u > 0.0).count().max(1) as f64;
+                let nneg = s.u.iter().filter(|&&u| u < 0.0).count().max(1) as f64;
+                let weights = s
+                    .u
+                    .iter()
+                    .map(|&u| {
+                        if u > 0.0 {
+                            (alpha / npos) as f32
+                        } else if u < 0.0 {
+                            (-(1.0 - alpha) / nneg) as f32
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                WeightDecision { weights, keep: (0..n).collect(), gate: None }
+            }
+        }
+    }
+}
+
+/// chi_t = U_t * ell_t, unless overridden by a noise-injected version.
+pub fn delight(s: &BatchSignals) -> Vec<f64> {
+    match s.chi_override {
+        Some(c) => c.to_vec(),
+        None => s.u.iter().zip(s.ell).map(|(&u, &l)| u * l).collect(),
+    }
+}
+
+/// Apply relative delight noise (Fig 4a): chi + N(0, (rel * std(chi))^2).
+pub fn perturb_delight_rel(chi: &[f64], rel: f64, rng: &mut Pcg32) -> Vec<f64> {
+    if rel == 0.0 {
+        return chi.to_vec();
+    }
+    let sd = stats::std_dev(chi);
+    chi.iter().map(|&c| c + rng.normal() * rel * sd).collect()
+}
+
+/// Apply absolute delight noise (Fig 17): chi + N(0, sigma^2).
+pub fn perturb_delight_abs(chi: &[f64], sigma: f64, rng: &mut Pcg32) -> Vec<f64> {
+    if sigma == 0.0 {
+        return chi.to_vec();
+    }
+    chi.iter().map(|&c| c + rng.normal() * sigma).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Pricing;
+
+    fn rng() -> Pcg32 {
+        Pcg32::seeded(5)
+    }
+
+    fn sig<'a>(u: &'a [f64], ell: &'a [f64]) -> BatchSignals<'a> {
+        BatchSignals { u, ell, logp_old: None, chi_override: None }
+    }
+
+    #[test]
+    fn pg_weights_are_advantages() {
+        let u = [0.5, -0.3];
+        let ell = [1.0, 2.0];
+        let d = Method::Pg.decide(&sig(&u, &ell), &mut rng());
+        assert_eq!(d.weights, vec![0.5, -0.3]);
+        assert_eq!(d.keep, vec![0, 1]);
+    }
+
+    #[test]
+    fn dg_weights_are_delight() {
+        let u = [0.5, -0.3];
+        let ell = [1.0, 2.0];
+        let d = Method::Dg.decide(&sig(&u, &ell), &mut rng());
+        assert_eq!(d.weights, vec![0.5, -0.6]);
+    }
+
+    #[test]
+    fn dgk_zero_price_keeps_positive_delight_with_u_weights() {
+        let u = [0.5, -0.3, 0.2];
+        let ell = [1.0, 2.0, 0.1];
+        let m = Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight };
+        let d = m.decide(&sig(&u, &ell), &mut rng());
+        assert_eq!(d.keep, vec![0, 2]);
+        assert_eq!(d.weights, vec![0.5, 0.0, 0.2]); // U, not chi
+        let g = d.gate.unwrap();
+        assert_eq!(g.lambda, 0.0);
+    }
+
+    #[test]
+    fn dgk_rate_keeps_top_fraction() {
+        let u: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let ell = vec![1.0; 100];
+        let m = Method::DgK { gate: KondoGate::rate(0.03), priority: Priority::Delight };
+        let d = m.decide(&sig(&u, &ell), &mut rng());
+        assert_eq!(d.keep.len(), 3);
+        assert!(d.keep.iter().all(|&i| i >= 97));
+    }
+
+    #[test]
+    fn ppo_on_policy_equals_pg() {
+        let u = [0.5, -0.3];
+        let ell = [1.0, 2.0];
+        let d = Method::Ppo { eps: 0.2 }.decide(&sig(&u, &ell), &mut rng());
+        for (w, &uu) in d.weights.iter().zip(&u) {
+            assert!((*w as f64 - uu).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ppo_clips_large_ratios() {
+        let u = [1.0, -1.0];
+        let ell = [0.5, 0.5]; // logp_new = -0.5
+        let lp_old = [-2.0, -0.1]; // ratios e^{1.5} ~ 4.48 and e^{-0.4} ~ 0.67
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: Some(&lp_old), chi_override: None };
+        let d = Method::Ppo { eps: 0.2 }.decide(&s, &mut rng());
+        assert_eq!(d.weights[0], 0.0); // positive adv, ratio > 1.2 -> clipped
+        assert_eq!(d.weights[1], 0.0); // negative adv, ratio < 0.8 -> clipped
+    }
+
+    #[test]
+    fn pmpo_alpha1_keeps_only_positive() {
+        let u = [0.5, -0.3, 0.2, 0.0];
+        let ell = [1.0; 4];
+        let d = Method::Pmpo { alpha: 1.0 }.decide(&sig(&u, &ell), &mut rng());
+        assert!((d.weights[0] - 0.5f32).abs() < 1e-6); // 1/npos = 1/2
+        assert_eq!(d.weights[1], 0.0);
+        assert!((d.weights[2] - 0.5f32).abs() < 1e-6);
+        assert_eq!(d.weights[3], 0.0);
+    }
+
+    #[test]
+    fn chi_override_feeds_gate() {
+        // noise-injected delight must drive the gate, not the clean signal
+        let u = [1.0, 1.0];
+        let ell = [1.0, 1.0];
+        let noisy = [-1.0, 2.0];
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: Some(&noisy) };
+        let m = Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight };
+        let d = m.decide(&s, &mut rng());
+        assert_eq!(d.keep, vec![1]);
+    }
+
+    #[test]
+    fn delight_noise_helpers() {
+        let chi = vec![1.0, -1.0, 0.5, 2.0];
+        let mut r = rng();
+        assert_eq!(perturb_delight_rel(&chi, 0.0, &mut r), chi);
+        let noisy = perturb_delight_rel(&chi, 0.5, &mut r);
+        assert_ne!(noisy, chi);
+        let abs = perturb_delight_abs(&chi, 1.0, &mut r);
+        assert_ne!(abs, chi);
+    }
+
+    #[test]
+    fn method_names() {
+        assert_eq!(Method::Pg.name(), "pg");
+        let m = Method::DgK { gate: KondoGate::rate(0.03), priority: Priority::Delight };
+        assert_eq!(m.name(), "dgk_rho0.03");
+        assert!(matches!(
+            Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight },
+            Method::DgK { gate: KondoGate { pricing: Pricing::Price(_), .. }, .. }
+        ));
+    }
+}

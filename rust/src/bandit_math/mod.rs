@@ -1,0 +1,224 @@
+//! Exact tabular analysis (paper §4, App C): numerical validation of
+//! Lemma 1, Propositions 1-3 and Remark 1 on the symmetric softmax bandit.
+//!
+//! Everything here is closed-form or Monte-Carlo over the exact bandit —
+//! no artifacts and no function approximation, matching the paper's
+//! "setting with exact gradients".
+
+use crate::coordinator::KondoGate;
+use crate::envs::bandit::{GamblingBandit, SymmetricBandit};
+use crate::utils::math::{cosine, perp_norm2};
+use crate::utils::rng::Pcg32;
+use crate::utils::stats;
+
+/// Monte-Carlo batch-gradient geometry for PG vs the zero-price Kondo gate
+/// (Proposition 1 / Remark 1).
+#[derive(Debug, Clone, Copy)]
+pub struct GeometryStats {
+    pub p: f64,
+    pub batch: usize,
+    /// mean cosine(batch gradient, grad J)
+    pub cos_pg: f64,
+    pub cos_kg: f64,
+    /// mean perpendicular variance per sample
+    pub varperp_pg: f64,
+    pub varperp_kg: f64,
+    /// mean backward passes per batch
+    pub bwd_pg: f64,
+    pub bwd_kg: f64,
+}
+
+/// Simulate `trials` batches of size `batch` and compare PG vs zero-price
+/// hard-gated (KG) batch gradients. The baseline is b = p (expected
+/// confidence), matching Eq. (2).
+pub fn gradient_geometry(
+    k: usize,
+    p: f64,
+    batch: usize,
+    trials: usize,
+    rng: &mut Pcg32,
+) -> GeometryStats {
+    let bandit = SymmetricBandit::with_p(k, 0, p);
+    let grad_j = bandit.grad_j();
+    let b = p; // expected-confidence baseline
+    let gate = KondoGate::price(0.0);
+
+    let mut cos_pg = Vec::with_capacity(trials);
+    let mut cos_kg = Vec::with_capacity(trials);
+    let mut varperp_pg = Vec::new();
+    let mut varperp_kg = Vec::new();
+    let mut bwd_pg = 0usize;
+    let mut bwd_kg = 0usize;
+
+    for _ in 0..trials {
+        let mut gsum_pg = vec![0.0f32; k];
+        let mut gsum_kg = vec![0.0f32; k];
+        let mut chi = Vec::with_capacity(batch);
+        let mut samples = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let a = bandit.sample(rng);
+            let u = bandit.reward(a) - b;
+            let ell = bandit.surprisal(a);
+            chi.push(u * ell);
+            samples.push((a, u));
+        }
+        let keep = gate.decide(&chi, rng).keep;
+        let kept: std::collections::HashSet<usize> = keep.iter().copied().collect();
+        for (i, &(a, u)) in samples.iter().enumerate() {
+            let g = bandit.phi(a);
+            let gi: Vec<f32> = g.iter().map(|&x| u as f32 * x).collect();
+            for j in 0..k {
+                gsum_pg[j] += gi[j];
+            }
+            varperp_pg.push(perp_norm2(&gi, &grad_j));
+            bwd_pg += 1;
+            if kept.contains(&i) {
+                for j in 0..k {
+                    gsum_kg[j] += gi[j];
+                }
+                varperp_kg.push(perp_norm2(&gi, &grad_j));
+                bwd_kg += 1;
+            }
+        }
+        cos_pg.push(cosine(&gsum_pg, &grad_j));
+        if !keep.is_empty() {
+            cos_kg.push(cosine(&gsum_kg, &grad_j));
+        }
+    }
+
+    GeometryStats {
+        p,
+        batch,
+        cos_pg: stats::mean(&cos_pg),
+        cos_kg: stats::mean(&cos_kg),
+        varperp_pg: stats::mean(&varperp_pg),
+        varperp_kg: if varperp_kg.is_empty() { 0.0 } else { stats::mean(&varperp_kg) },
+        bwd_pg: bwd_pg as f64 / trials as f64,
+        bwd_kg: bwd_kg as f64 / trials as f64,
+    }
+}
+
+/// Proposition 2: the additive-mix separation threshold
+/// alpha*(p, K) = L / (1 + L), L = log(p(K-1)/(1-p)); 0 when L <= 0.
+pub fn alpha_star(p: f64, k: usize) -> f64 {
+    let l = (p * (k - 1) as f64 / (1.0 - p)).ln();
+    if l <= 0.0 {
+        0.0
+    } else {
+        l / (1.0 + l)
+    }
+}
+
+/// Proposition 2 check: does f_alpha = alpha*U + (1-alpha)*ell rank the
+/// correct action above incorrect ones, at baseline b = p?
+pub fn additive_separates(p: f64, k: usize, alpha: f64) -> bool {
+    let bandit = SymmetricBandit::with_p(k, 0, p);
+    let u_c = 1.0 - p;
+    let u_w = -p;
+    let ell_c = bandit.surprisal(0);
+    let ell_w = bandit.surprisal(1);
+    let f_c = alpha * u_c + (1.0 - alpha) * ell_c;
+    let f_w = alpha * u_w + (1.0 - alpha) * ell_w;
+    f_c > f_w
+}
+
+/// Delight's sign consistency (Prop 2 part 1) at baseline b = p.
+pub fn delight_separates(p: f64, k: usize) -> bool {
+    let bandit = SymmetricBandit::with_p(k, 0, p);
+    let chi_c = (1.0 - p) * bandit.surprisal(0);
+    let chi_w = -p * bandit.surprisal(1);
+    chi_c > 0.0 && chi_w < 0.0
+}
+
+/// Proposition 3 numbers for a gambling bandit: exact false-positive
+/// probability and the delight amplification factor.
+#[derive(Debug, Clone, Copy)]
+pub struct GamblingStats {
+    pub sigma_over_delta: f64,
+    pub p_false_positive: f64,
+    pub amplification: f64,
+}
+
+pub fn gambling_stats(g: &GamblingBandit) -> GamblingStats {
+    GamblingStats {
+        sigma_over_delta: g.sigma / g.delta,
+        p_false_positive: g.p_false_positive(),
+        amplification: g.gamble_surprisal(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop1_direction_and_variance() {
+        let mut rng = Pcg32::seeded(21);
+        let g = gradient_geometry(10, 0.1, 100, 200, &mut rng);
+        // KG batch cosine ~ 1 (every kept term is the same vector)
+        assert!(g.cos_kg > 0.999, "cos_kg = {}", g.cos_kg);
+        // KG kills perpendicular variance
+        assert!(g.varperp_kg < 1e-9, "varperp_kg = {}", g.varperp_kg);
+        assert!(g.varperp_pg > 1e-4, "varperp_pg = {}", g.varperp_pg);
+        // KG backward cost ~ p * B
+        assert!((g.bwd_kg - 0.1 * 100.0).abs() < 3.0, "bwd_kg = {}", g.bwd_kg);
+        assert_eq!(g.bwd_pg, 100.0);
+    }
+
+    #[test]
+    fn remark1_cosine_scaling() {
+        // cos(PG batch grad, grad J) ~ p sqrt(B) for p^2 B << 1
+        let mut rng = Pcg32::seeded(22);
+        let p = 0.02;
+        let g1 = gradient_geometry(10, p, 25, 400, &mut rng);
+        let g2 = gradient_geometry(10, p, 400, 400, &mut rng);
+        // 16x batch -> ~4x cosine
+        let ratio = g2.cos_pg / g1.cos_pg.max(1e-9);
+        assert!(ratio > 2.0 && ratio < 8.0, "ratio = {ratio}");
+        // and PG cosine is small in this regime while KG is ~1
+        assert!(g1.cos_pg < 0.75, "cos_pg = {}", g1.cos_pg);
+        assert!(g1.cos_kg > 0.99);
+    }
+
+    #[test]
+    fn prop2_alpha_star_table() {
+        // App C.3 table values
+        assert!((alpha_star(0.5, 10) - 0.69).abs() < 0.01);
+        assert!((alpha_star(0.5, 100) - 0.82).abs() < 0.01);
+        assert!((alpha_star(0.9, 100) - 0.87).abs() < 0.01);
+        assert!((alpha_star(0.5, 50_000) - 0.92).abs() < 0.01);
+    }
+
+    #[test]
+    fn prop2_separation_thresholds() {
+        for &(p, k) in &[(0.5, 10), (0.9, 100), (0.3, 50)] {
+            let astar = alpha_star(p, k);
+            assert!(delight_separates(p, k));
+            // slightly above the threshold separates, slightly below fails
+            assert!(additive_separates(p, k, astar + 0.02), "p={p} k={k}");
+            assert!(!additive_separates(p, k, astar - 0.02), "p={p} k={k}");
+        }
+    }
+
+    #[test]
+    fn prop2_no_tuning_needed_below_uniform() {
+        // p <= 1/K: any alpha separates (L <= 0)
+        let (p, k) = (0.03, 20);
+        assert_eq!(alpha_star(p, k), 0.0);
+        for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            assert!(additive_separates(p, k, alpha));
+        }
+    }
+
+    #[test]
+    fn prop3_regimes() {
+        let reliable = gambling_stats(&GamblingBandit::new(1.0, 0.5, 0.05, 0.01));
+        let patho = gambling_stats(&GamblingBandit::new(1.0, 0.5, 5.0, 0.01));
+        assert!(reliable.p_false_positive < 1e-6);
+        assert!(patho.p_false_positive > 0.4);
+        // the paper's slot machine: sigma/delta = 10
+        assert!((patho.sigma_over_delta - 10.0).abs() < 1e-9);
+        // amplification = log(1/eps)
+        assert!((patho.amplification - (100.0f64).ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,124 @@
+//! Experiment configuration: TOML presets (`configs/*.toml`) + CLI
+//! overrides. Two preset families ship with the repo: `scaled` (fits this
+//! testbed's budget; the EXPERIMENTS.md runs) and `paper` (the paper's
+//! full seed/step counts).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::utils::toml::TomlDoc;
+
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// seeds per configuration
+    pub seeds: usize,
+    /// MNIST gradient steps
+    pub mnist_steps: usize,
+    /// token-reversal gradient steps
+    pub rev_steps: usize,
+    /// evaluation cadence (steps)
+    pub eval_every: usize,
+    /// test images per evaluation
+    pub eval_size: usize,
+    /// Adam learning rates
+    pub lr_mnist: f64,
+    pub lr_rev: f64,
+    /// output directory for CSVs
+    pub out_dir: String,
+    /// artifact directory
+    pub artifacts_dir: String,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            seeds: 3,
+            mnist_steps: 1000,
+            rev_steps: 200,
+            eval_every: 50,
+            eval_size: 1000,
+            lr_mnist: 1e-3,
+            lr_rev: 3e-4,
+            out_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Apply a parsed TOML document on top of the current values.
+    pub fn apply_doc(&mut self, doc: &TomlDoc) {
+        if let Some(v) = doc.i64("exp.seeds") {
+            self.seeds = v as usize;
+        }
+        if let Some(v) = doc.i64("exp.mnist_steps") {
+            self.mnist_steps = v as usize;
+        }
+        if let Some(v) = doc.i64("exp.rev_steps") {
+            self.rev_steps = v as usize;
+        }
+        if let Some(v) = doc.i64("exp.eval_every") {
+            self.eval_every = v as usize;
+        }
+        if let Some(v) = doc.i64("exp.eval_size") {
+            self.eval_size = v as usize;
+        }
+        if let Some(v) = doc.f64("exp.lr_mnist") {
+            self.lr_mnist = v;
+        }
+        if let Some(v) = doc.f64("exp.lr_rev") {
+            self.lr_rev = v;
+        }
+        if let Some(v) = doc.str("exp.out_dir") {
+            self.out_dir = v.to_string();
+        }
+        if let Some(v) = doc.str("exp.artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+    }
+
+    /// Load a preset file on top of defaults.
+    pub fn load(path: &Path) -> Result<ExpConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = ExpConfig::default();
+        cfg.apply_doc(&doc);
+        Ok(cfg)
+    }
+
+    /// Apply `key=value` CLI overrides (same keys as the TOML, without the
+    /// `exp.` prefix).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        let doc = TomlDoc::parse(&format!("[exp]\n{key} = {value}"))
+            .map_err(|e| anyhow::anyhow!("bad override {key}={value}: {e}"))?;
+        self.apply_doc(&doc);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_doc_then_override() {
+        let mut cfg = ExpConfig::default();
+        let doc = TomlDoc::parse("[exp]\nseeds = 10\nlr_mnist = 0.003").unwrap();
+        cfg.apply_doc(&doc);
+        assert_eq!(cfg.seeds, 10);
+        assert_eq!(cfg.lr_mnist, 0.003);
+        cfg.apply_override("seeds", "2").unwrap();
+        assert_eq!(cfg.seeds, 2);
+        // untouched field keeps default
+        assert_eq!(cfg.eval_every, 50);
+    }
+
+    #[test]
+    fn string_override() {
+        let mut cfg = ExpConfig::default();
+        cfg.apply_override("out_dir", "\"/tmp/r\"").unwrap();
+        assert_eq!(cfg.out_dir, "/tmp/r");
+    }
+}

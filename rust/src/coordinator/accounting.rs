@@ -1,0 +1,148 @@
+//! Compute ledger: the bookkeeping behind every "forward-pass space" /
+//! "backward-pass space" axis in the paper and the Fig 3 cost model
+//! total = forward + r * backward (r = backward/forward cost ratio).
+//!
+//! Two backward counters are kept: `backward_kept` (samples the gate chose,
+//! the paper's idealized x-axis) and `backward_executed` (sample-slots the
+//! bucketed executor actually ran, including padding -- the honest cost on
+//! real hardware).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    pub forward_samples: u64,
+    pub forward_calls: u64,
+    pub backward_kept: u64,
+    pub backward_executed: u64,
+    pub backward_calls: u64,
+    /// executed-bucket histogram: capacity -> count
+    pub bucket_hist: BTreeMap<usize, u64>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn record_forward(&mut self, samples: usize) {
+        self.forward_samples += samples as u64;
+        self.forward_calls += 1;
+    }
+
+    pub fn record_backward(&mut self, cap: usize, kept: usize) {
+        debug_assert!(kept <= cap);
+        self.backward_kept += kept as u64;
+        self.backward_executed += cap as u64;
+        self.backward_calls += 1;
+        *self.bucket_hist.entry(cap).or_insert(0) += 1;
+    }
+
+    /// Fig 3 cost model in forward-sample equivalents, using the gate's
+    /// idealized backward count.
+    pub fn total_compute(&self, cost_ratio: f64) -> f64 {
+        self.forward_samples as f64 + cost_ratio * self.backward_kept as f64
+    }
+
+    /// Same but charging the padded slots the executor actually ran.
+    pub fn total_compute_executed(&self, cost_ratio: f64) -> f64 {
+        self.forward_samples as f64 + cost_ratio * self.backward_executed as f64
+    }
+
+    /// Fraction of executed backward slots that were padding.
+    pub fn padding_overhead(&self) -> f64 {
+        if self.backward_executed == 0 {
+            return 0.0;
+        }
+        1.0 - self.backward_kept as f64 / self.backward_executed as f64
+    }
+
+    /// Empirical gate rate: kept backward samples per forward sample.
+    pub fn gate_rate(&self) -> f64 {
+        if self.forward_samples == 0 {
+            return 0.0;
+        }
+        self.backward_kept as f64 / self.forward_samples as f64
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        self.forward_samples += other.forward_samples;
+        self.forward_calls += other.forward_calls;
+        self.backward_kept += other.backward_kept;
+        self.backward_executed += other.backward_executed;
+        self.backward_calls += other.backward_calls;
+        for (&cap, &n) in &other.bucket_hist {
+            *self.bucket_hist.entry(cap).or_insert(0) += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut l = Ledger::new();
+        l.record_forward(100);
+        l.record_forward(100);
+        l.record_backward(4, 3);
+        l.record_backward(8, 8);
+        assert_eq!(l.forward_samples, 200);
+        assert_eq!(l.forward_calls, 2);
+        assert_eq!(l.backward_kept, 11);
+        assert_eq!(l.backward_executed, 12);
+        assert_eq!(l.bucket_hist[&4], 1);
+        assert_eq!(l.bucket_hist[&8], 1);
+    }
+
+    #[test]
+    fn cost_model_matches_fig3() {
+        let mut l = Ledger::new();
+        l.record_forward(100);
+        l.record_backward(4, 3);
+        // ratio 0: backward free -> cost is pure forward
+        assert_eq!(l.total_compute(0.0), 100.0);
+        // ratio 4: the paper's "typical" point
+        assert_eq!(l.total_compute(4.0), 112.0);
+        assert_eq!(l.total_compute_executed(4.0), 116.0);
+    }
+
+    #[test]
+    fn gate_rate_and_padding() {
+        let mut l = Ledger::new();
+        l.record_forward(100);
+        l.record_backward(4, 3);
+        assert!((l.gate_rate() - 0.03).abs() < 1e-12);
+        assert!((l.padding_overhead() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pg_vs_gated_backward_ratio() {
+        // PG: every sample backward; DG-K rho=0.03: ~3 per 100.
+        let mut pg = Ledger::new();
+        let mut kg = Ledger::new();
+        for _ in 0..100 {
+            pg.record_forward(100);
+            pg.record_backward(100, 100);
+            kg.record_forward(100);
+            kg.record_backward(4, 3);
+        }
+        let ratio = pg.backward_kept as f64 / kg.backward_kept as f64;
+        assert!((ratio - 100.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Ledger::new();
+        a.record_forward(10);
+        a.record_backward(4, 2);
+        let mut b = Ledger::new();
+        b.record_forward(5);
+        b.record_backward(4, 4);
+        a.merge(&b);
+        assert_eq!(a.forward_samples, 15);
+        assert_eq!(a.backward_kept, 6);
+        assert_eq!(a.bucket_hist[&4], 2);
+    }
+}

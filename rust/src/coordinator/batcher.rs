@@ -1,0 +1,208 @@
+//! Bucketed backward executor: turning the stochastic gate into static
+//! shape choice (DESIGN.md §4, "gating = shape specialization").
+//!
+//! Backward artifacts are compiled at a fixed set of capacities. The kept
+//! samples of a batch are packed densely into the smallest bucket that
+//! fits (splitting across several buckets when necessary); unused slots
+//! are padded with zero weight, which is exact because the weighted
+//! objective is linear in the weights (tested in python/tests/test_mlp.py
+//! ::test_padding_samples_with_zero_weight_is_exact).
+
+use anyhow::{bail, Result};
+
+/// A set of compiled backward capacities, ascending.
+#[derive(Debug, Clone)]
+pub struct BucketSet {
+    caps: Vec<usize>,
+}
+
+/// One backward execution: which kept samples go in which bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedChunk {
+    /// compiled capacity to execute
+    pub cap: usize,
+    /// sample indices occupying the first `idx.len()` slots (rest padded)
+    pub idx: Vec<usize>,
+}
+
+impl PackedChunk {
+    /// Executed sample-slots (the real backward cost of this chunk).
+    pub fn executed(&self) -> usize {
+        self.cap
+    }
+
+    pub fn padding(&self) -> usize {
+        self.cap - self.idx.len()
+    }
+}
+
+impl BucketSet {
+    pub fn new(mut caps: Vec<usize>) -> Result<BucketSet> {
+        if caps.is_empty() {
+            bail!("bucket set cannot be empty");
+        }
+        caps.sort_unstable();
+        caps.dedup();
+        if caps[0] == 0 {
+            bail!("bucket capacity 0 is invalid");
+        }
+        Ok(BucketSet { caps })
+    }
+
+    pub fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    pub fn max_cap(&self) -> usize {
+        *self.caps.last().unwrap()
+    }
+
+    /// Smallest capacity >= n, or None if n exceeds the largest bucket.
+    pub fn smallest_fitting(&self, n: usize) -> Option<usize> {
+        self.caps.iter().copied().find(|&c| c >= n)
+    }
+
+    /// Pack `kept` sample indices into chunks. Greedy: fill max-cap chunks
+    /// while the remainder exceeds the largest bucket, then one
+    /// smallest-fitting chunk for the tail. Returns no chunks for no kept
+    /// samples (skipping the backward entirely -- the whole point).
+    pub fn pack(&self, kept: &[usize]) -> Vec<PackedChunk> {
+        let mut chunks = Vec::new();
+        let mut rest = kept;
+        let maxc = self.max_cap();
+        while rest.len() > maxc {
+            chunks.push(PackedChunk { cap: maxc, idx: rest[..maxc].to_vec() });
+            rest = &rest[maxc..];
+        }
+        if !rest.is_empty() {
+            let cap = self.smallest_fitting(rest.len()).unwrap();
+            chunks.push(PackedChunk { cap, idx: rest.to_vec() });
+        }
+        chunks
+    }
+
+    /// Total executed sample-slots for a kept-count (cost model helper).
+    pub fn executed_slots(&self, kept: usize) -> usize {
+        let fake: Vec<usize> = (0..kept).collect();
+        self.pack(&fake).iter().map(|c| c.cap).sum()
+    }
+}
+
+/// Gather rows of a flat [n, row] matrix into a padded [cap, row] buffer.
+pub fn gather_rows_f32(src: &[f32], row: usize, idx: &[usize], cap: usize) -> Vec<f32> {
+    assert!(idx.len() <= cap);
+    let mut out = vec![0.0f32; cap * row];
+    for (slot, &i) in idx.iter().enumerate() {
+        out[slot * row..(slot + 1) * row].copy_from_slice(&src[i * row..(i + 1) * row]);
+    }
+    out
+}
+
+/// Same for i32 rows (tokens / actions).
+pub fn gather_rows_i32(src: &[i32], row: usize, idx: &[usize], cap: usize) -> Vec<i32> {
+    assert!(idx.len() <= cap);
+    let mut out = vec![0i32; cap * row];
+    for (slot, &i) in idx.iter().enumerate() {
+        out[slot * row..(slot + 1) * row].copy_from_slice(&src[i * row..(i + 1) * row]);
+    }
+    out
+}
+
+/// Gather scalars with zero padding.
+pub fn gather_f32(src: &[f32], idx: &[usize], cap: usize) -> Vec<f32> {
+    gather_rows_f32(src, 1, idx, cap)
+}
+
+pub fn gather_i32(src: &[i32], idx: &[usize], cap: usize) -> Vec<i32> {
+    gather_rows_i32(src, 1, idx, cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buckets() -> BucketSet {
+        BucketSet::new(vec![4, 8, 16, 32, 64, 100]).unwrap()
+    }
+
+    #[test]
+    fn smallest_fitting_picks_tightest() {
+        let b = buckets();
+        assert_eq!(b.smallest_fitting(1), Some(4));
+        assert_eq!(b.smallest_fitting(4), Some(4));
+        assert_eq!(b.smallest_fitting(5), Some(8));
+        assert_eq!(b.smallest_fitting(100), Some(100));
+        assert_eq!(b.smallest_fitting(101), None);
+    }
+
+    #[test]
+    fn pack_empty_is_no_backward() {
+        assert!(buckets().pack(&[]).is_empty());
+    }
+
+    #[test]
+    fn pack_small_uses_one_tight_bucket() {
+        let c = buckets().pack(&[7, 2, 9]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].cap, 4);
+        assert_eq!(c[0].idx, vec![7, 2, 9]);
+        assert_eq!(c[0].padding(), 1);
+    }
+
+    #[test]
+    fn pack_oversized_splits() {
+        let kept: Vec<usize> = (0..230).collect();
+        let c = buckets().pack(&kept);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0].cap, 100);
+        assert_eq!(c[1].cap, 100);
+        assert_eq!(c[2].cap, 32);
+        let total: usize = c.iter().map(|x| x.idx.len()).sum();
+        assert_eq!(total, 230);
+        // every index exactly once
+        let mut all: Vec<usize> = c.iter().flat_map(|x| x.idx.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, kept);
+    }
+
+    #[test]
+    fn executed_slots_cost_model() {
+        let b = buckets();
+        assert_eq!(b.executed_slots(0), 0);
+        assert_eq!(b.executed_slots(3), 4);
+        assert_eq!(b.executed_slots(100), 100);
+        assert_eq!(b.executed_slots(104), 104); // 100 + 4
+    }
+
+    #[test]
+    fn gate_rate_3pct_of_100_costs_4_slots() {
+        // the paper's headline rho=0.03 on B=100: 3 kept -> bucket 4, a 25x
+        // backward-compute reduction at bucket granularity.
+        assert_eq!(buckets().executed_slots(3), 4);
+    }
+
+    #[test]
+    fn gather_pads_with_zeros() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows of 2
+        let out = gather_rows_f32(&src, 2, &[2, 0], 4);
+        assert_eq!(out, vec![5.0, 6.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_i32_matches() {
+        let src = vec![10, 20, 30];
+        assert_eq!(gather_i32(&src, &[1], 2), vec![20, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_bucket_sets() {
+        assert!(BucketSet::new(vec![]).is_err());
+        assert!(BucketSet::new(vec![0, 4]).is_err());
+    }
+
+    #[test]
+    fn dedups_and_sorts() {
+        let b = BucketSet::new(vec![16, 4, 16, 8]).unwrap();
+        assert_eq!(b.caps(), &[4, 8, 16]);
+    }
+}

@@ -1,0 +1,207 @@
+//! The Kondo gate (paper §2.1, Algorithm 1).
+//!
+//! For each sample the gate compares a priority score chi against a price
+//! lambda and draws G ~ Ber(sigma((chi - lambda)/eta)). Two pricing modes:
+//!
+//! - `Rate(rho)`  — Algorithm 1 line 5: lambda is the per-batch
+//!   (1-rho)-quantile of chi, targeting a fraction rho of backward passes.
+//! - `Price(lambda)` — fixed price; `Price(0.0)` is the adaptive
+//!   sign-gate of §5 (DG-K lambda=0), whose keep-rate tracks the policy's
+//!   own success rate (Prop 1: it keeps exactly the positive-delight set).
+//!
+//! eta -> 0 gives the hard threshold I{chi > lambda}; eta -> inf gives the
+//! constant gate w = 1/2 (standard PG up to uniform rescaling).
+
+use crate::utils::math::sigmoid;
+use crate::utils::rng::Pcg32;
+use crate::utils::stats::quantile;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pricing {
+    /// Target gate rate rho in (0, 1]: per-batch quantile pricing.
+    Rate(f64),
+    /// Fixed price lambda.
+    Price(f64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KondoGate {
+    pub pricing: Pricing,
+    /// Temperature eta >= 0. 0 means hard threshold (the eta->0 limit).
+    pub eta: f64,
+}
+
+/// Outcome of gating one batch.
+#[derive(Debug, Clone)]
+pub struct GateDecision {
+    /// indices of samples that receive a backward pass
+    pub keep: Vec<usize>,
+    /// gate probability per sample (diagnostics / Fig 15)
+    pub probs: Vec<f64>,
+    /// the price actually used
+    pub lambda: f64,
+}
+
+impl KondoGate {
+    pub fn rate(rho: f64) -> KondoGate {
+        assert!(rho > 0.0 && rho <= 1.0, "rho must be in (0,1]");
+        KondoGate { pricing: Pricing::Rate(rho), eta: 0.0 }
+    }
+
+    pub fn price(lambda: f64) -> KondoGate {
+        KondoGate { pricing: Pricing::Price(lambda), eta: 0.0 }
+    }
+
+    pub fn with_eta(mut self, eta: f64) -> KondoGate {
+        assert!(eta >= 0.0);
+        self.eta = eta;
+        self
+    }
+
+    /// Resolve the price for a batch of priority scores.
+    pub fn resolve_lambda(&self, chi: &[f64]) -> f64 {
+        match self.pricing {
+            Pricing::Price(l) => l,
+            Pricing::Rate(rho) => {
+                if rho >= 1.0 {
+                    // keep everything: price below the minimum
+                    chi.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0
+                } else {
+                    quantile(chi, 1.0 - rho)
+                }
+            }
+        }
+    }
+
+    /// Gate probability for one score at a given price.
+    pub fn prob(&self, chi: f64, lambda: f64) -> f64 {
+        if self.eta == 0.0 {
+            if chi > lambda {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            sigmoid((chi - lambda) / self.eta)
+        }
+    }
+
+    /// Algorithm 1: decide which samples in the batch get a backward pass.
+    pub fn decide(&self, chi: &[f64], rng: &mut Pcg32) -> GateDecision {
+        if chi.is_empty() {
+            return GateDecision { keep: vec![], probs: vec![], lambda: 0.0 };
+        }
+        let lambda = self.resolve_lambda(chi);
+        let probs: Vec<f64> = chi.iter().map(|&c| self.prob(c, lambda)).collect();
+        let keep = probs
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p >= 1.0 || (p > 0.0 && rng.bernoulli(p)))
+            .map(|(i, _)| i)
+            .collect();
+        GateDecision { keep, probs, lambda }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg32 {
+        Pcg32::seeded(1)
+    }
+
+    #[test]
+    fn rate_mode_keeps_roughly_rho_fraction() {
+        let mut r = rng();
+        let chi: Vec<f64> = (0..1000).map(|_| r.normal()).collect();
+        for &rho in &[0.01, 0.03, 0.1, 0.5] {
+            let d = KondoGate::rate(rho).decide(&chi, &mut r);
+            let kept = d.keep.len() as f64 / 1000.0;
+            assert!(
+                (kept - rho).abs() < 0.02 + rho * 0.5,
+                "rho={rho} kept={kept}"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_one_recovers_full_dg() {
+        let mut r = rng();
+        let chi: Vec<f64> = (0..64).map(|_| r.normal()).collect();
+        let d = KondoGate::rate(1.0).decide(&chi, &mut r);
+        assert_eq!(d.keep.len(), 64);
+    }
+
+    #[test]
+    fn zero_price_hard_gate_keeps_positive_delight_only() {
+        // Prop 1 setup: gate at lambda=0 keeps exactly chi > 0.
+        let mut r = rng();
+        let chi = vec![0.5, -0.1, 0.0, 2.0, -3.0];
+        let d = KondoGate::price(0.0).decide(&chi, &mut r);
+        assert_eq!(d.keep, vec![0, 3]);
+    }
+
+    #[test]
+    fn hard_gate_keeps_top_scores() {
+        let mut r = rng();
+        let chi = vec![0.1, 0.9, 0.5, 0.7, 0.3, 0.2, 0.8, 0.4, 0.6, 1.0];
+        let d = KondoGate::rate(0.2).decide(&chi, &mut r);
+        // top 20% of 10 samples = indices of the 2 largest (0.9, 1.0)
+        assert_eq!(d.keep, vec![1, 9]);
+    }
+
+    #[test]
+    fn eta_zero_is_hard_threshold() {
+        let g = KondoGate::price(0.5);
+        assert_eq!(g.prob(0.6, 0.5), 1.0);
+        assert_eq!(g.prob(0.4, 0.5), 0.0);
+        assert_eq!(g.prob(0.5, 0.5), 0.0); // strict
+    }
+
+    #[test]
+    fn eta_large_is_constant_half() {
+        // eta -> inf limit: the gate forgets chi (standard PG rescaled).
+        let g = KondoGate::price(0.0).with_eta(1e12);
+        for &c in &[-5.0, 0.0, 5.0] {
+            assert!((g.prob(c, 0.0) - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn soft_gate_probability_matches_sigmoid() {
+        let g = KondoGate::price(1.0).with_eta(2.0);
+        let p = g.prob(2.0, 1.0);
+        assert!((p - sigmoid(0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn soft_gate_empirical_rate_matches_prob() {
+        let g = KondoGate::price(0.0).with_eta(1.0);
+        let mut r = rng();
+        let chi = vec![0.7; 4000];
+        let d = g.decide(&chi, &mut r);
+        let want = sigmoid(0.7);
+        let got = d.keep.len() as f64 / 4000.0;
+        assert!((got - want).abs() < 0.02, "got {got} want {want}");
+    }
+
+    #[test]
+    fn gate_is_monotone_in_chi() {
+        let g = KondoGate::price(0.3).with_eta(0.5);
+        let mut last = -1.0;
+        for i in 0..20 {
+            let c = -2.0 + 0.2 * i as f64;
+            let p = g.prob(c, 0.3);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        let mut r = rng();
+        let d = KondoGate::rate(0.5).decide(&[], &mut r);
+        assert!(d.keep.is_empty());
+    }
+}

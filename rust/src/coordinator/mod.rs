@@ -1,0 +1,22 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! `priority` scores samples from the forward pass, `gate` decides which
+//! backward passes to pay for (Algorithm 1), `batcher` packs the kept
+//! samples into compiled capacity buckets so skipped compute is real
+//! skipped compute, `accounting` keeps the forward/backward ledger every
+//! paper axis is drawn from, and `quantile` provides the streaming-price
+//! variant of the adaptive gate.
+
+pub mod accounting;
+pub mod batcher;
+pub mod gate;
+pub mod priority;
+pub mod quantile;
+pub mod speculative;
+
+pub use accounting::Ledger;
+pub use batcher::{BucketSet, PackedChunk};
+pub use gate::{GateDecision, KondoGate, Pricing};
+pub use priority::Priority;
+pub use quantile::{EwQuantile, P2Quantile};
+pub use speculative::{rank_correlation, screening_precision, DraftScreen};

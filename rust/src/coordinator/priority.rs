@@ -1,0 +1,117 @@
+//! Priority signals for screening backward passes (paper §2.2, Fig 5).
+//!
+//! Delight chi = U * ell is the paper's signal; the alternatives here are
+//! the comparison set of Fig 5 / Proposition 2: advantage-only,
+//! surprisal-only, |advantage|, uniform random, and the additive family
+//! f_alpha = alpha*U + (1-alpha)*ell that Prop 2 shows can mis-rank.
+
+use crate::utils::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Priority {
+    /// chi = U * ell (the paper's delight)
+    Delight,
+    /// U alone: usefulness without rarity
+    Advantage,
+    /// ell alone: rarity without usefulness
+    Surprisal,
+    /// |U|: magnitude of usefulness, sign-blind
+    AbsAdvantage,
+    /// uniform random subsampling (control)
+    Uniform,
+    /// alpha*U + (1-alpha)*ell (UCB-style additive mix)
+    Additive { alpha: f64 },
+}
+
+impl Priority {
+    /// Score one sample. `u` advantage, `ell` surprisal (= -log pi(a)).
+    /// Uniform draws its score from `rng` so thresholding keeps a random
+    /// subset of the requested size.
+    pub fn score(&self, u: f64, ell: f64, rng: &mut Pcg32) -> f64 {
+        match *self {
+            Priority::Delight => u * ell,
+            Priority::Advantage => u,
+            Priority::Surprisal => ell,
+            Priority::AbsAdvantage => u.abs(),
+            Priority::Uniform => rng.uniform(),
+            Priority::Additive { alpha } => alpha * u + (1.0 - alpha) * ell,
+        }
+    }
+
+    /// Score a whole batch.
+    pub fn score_batch(&self, u: &[f64], ell: &[f64], rng: &mut Pcg32) -> Vec<f64> {
+        assert_eq!(u.len(), ell.len());
+        u.iter().zip(ell).map(|(&a, &l)| self.score(a, l, rng)).collect()
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Priority::Delight => "delight".into(),
+            Priority::Advantage => "advantage".into(),
+            Priority::Surprisal => "surprisal".into(),
+            Priority::AbsAdvantage => "abs_advantage".into(),
+            Priority::Uniform => "uniform".into(),
+            Priority::Additive { alpha } => format!("additive_a{alpha:.2}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg32 {
+        Pcg32::seeded(0)
+    }
+
+    #[test]
+    fn delight_is_product() {
+        let mut r = rng();
+        assert_eq!(Priority::Delight.score(0.5, 2.0, &mut r), 1.0);
+        assert_eq!(Priority::Delight.score(-0.5, 2.0, &mut r), -1.0);
+    }
+
+    #[test]
+    fn delight_sign_follows_advantage() {
+        // Prop 2 part 1: sgn(chi) = sgn(U) since ell > 0 always.
+        let mut r = rng();
+        for &(u, ell) in &[(0.3, 0.1), (0.3, 5.0), (-0.9, 0.1), (-0.01, 9.0)] {
+            let chi = Priority::Delight.score(u, ell, &mut r);
+            assert_eq!(chi > 0.0, u > 0.0);
+        }
+    }
+
+    #[test]
+    fn additive_can_flip_sign() {
+        // Prop 2 part 2: adding a positive surprisal can make a negative-
+        // advantage sample outrank a positive one.
+        let mut r = rng();
+        let alpha = 0.2;
+        let bad = Priority::Additive { alpha }.score(-0.1, 8.0, &mut r); // rare failure
+        let good = Priority::Additive { alpha }.score(0.9, 0.05, &mut r); // common success
+        assert!(bad > good, "additive mis-ranks: bad={bad} good={good}");
+        // delight ranks them correctly
+        let db = Priority::Delight.score(-0.1, 8.0, &mut r);
+        let dg = Priority::Delight.score(0.9, 0.05, &mut r);
+        assert!(dg > db);
+    }
+
+    #[test]
+    fn alpha_limits_recover_pure_signals() {
+        let mut r = rng();
+        let u = 0.37;
+        let ell = 1.3;
+        assert_eq!(Priority::Additive { alpha: 1.0 }.score(u, ell, &mut r), u);
+        assert_eq!(Priority::Additive { alpha: 0.0 }.score(u, ell, &mut r), ell);
+    }
+
+    #[test]
+    fn uniform_is_random_but_deterministic_in_seed() {
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let s1 = Priority::Uniform.score_batch(&[0.0; 5], &[0.0; 5], &mut r1);
+        let s2 = Priority::Uniform.score_batch(&[0.0; 5], &[0.0; 5], &mut r2);
+        assert_eq!(s1, s2);
+        assert!(s1.windows(2).any(|w| w[0] != w[1]));
+    }
+}

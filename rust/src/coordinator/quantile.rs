@@ -1,0 +1,255 @@
+//! P² streaming quantile estimator (Jain & Chlamtac 1985).
+//!
+//! Used for cross-batch adaptive pricing: instead of re-sorting every
+//! batch, the coordinator can maintain a running (1-rho)-quantile of
+//! delight over the whole stream and price against it. O(1) memory and
+//! update; this is the ablation "streaming lambda" mode of the gate.
+
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    /// marker heights
+    h: [f64; 5],
+    /// marker positions (1-based, as in the paper)
+    n: [f64; 5],
+    /// desired positions
+    np: [f64; 5],
+    /// desired position increments
+    dn: [f64; 5],
+    count: usize,
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&q));
+        P2Quantile {
+            q,
+            h: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dn: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for i in 0..5 {
+                    self.h[i] = self.init[i];
+                }
+            }
+            return;
+        }
+
+        // find cell k
+        let k = if x < self.h[0] {
+            self.h[0] = x;
+            0
+        } else if x >= self.h[4] {
+            self.h[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.h[i] && x < self.h[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // adjust interior markers
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let ds = d.signum();
+                let hp = self.parabolic(i, ds);
+                if self.h[i - 1] < hp && hp < self.h[i + 1] {
+                    self.h[i] = hp;
+                } else {
+                    self.h[i] = self.linear(i, ds);
+                }
+                self.n[i] += ds;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (n0, n1, n2) = (self.n[i - 1], self.n[i], self.n[i + 1]);
+        let (h0, h1, h2) = (self.h[i - 1], self.h[i], self.h[i + 1]);
+        h1 + d / (n2 - n0)
+            * ((n1 - n0 + d) * (h2 - h1) / (n2 - n1) + (n2 - n1 - d) * (h1 - h0) / (n1 - n0))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as f64 + d) as usize;
+        self.h[i] + d * (self.h[j] - self.h[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate; exact for < 5 observations.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.init.len() < 5 {
+            let mut v = self.init.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pos = self.q * (v.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            return if lo == hi { v[lo] } else { v[lo] + (pos - lo as f64) * (v[hi] - v[lo]) };
+        }
+        self.h[2]
+    }
+}
+
+/// Exponentially-weighted quantile tracker (Robbins-Monro stochastic
+/// approximation). Unlike P² it follows *drifting* distributions -- the
+/// relevant case for a streaming gate price, since the delight
+/// distribution collapses toward zero as the policy improves. The step
+/// size self-scales with a running mean absolute deviation.
+#[derive(Debug, Clone)]
+pub struct EwQuantile {
+    q: f64,
+    lam: f64,
+    /// running mean absolute deviation (scale estimate)
+    mad: f64,
+    rate: f64,
+    count: usize,
+}
+
+impl EwQuantile {
+    pub fn new(q: f64, rate: f64) -> EwQuantile {
+        assert!((0.0..=1.0).contains(&q) && rate > 0.0);
+        EwQuantile { q, lam: 0.0, mad: 1.0, rate, count: 0 }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.count += 1;
+        if self.count == 1 {
+            self.lam = x;
+            self.mad = x.abs().max(1e-9);
+            return;
+        }
+        self.mad = 0.99 * self.mad + 0.01 * (x - self.lam).abs().max(1e-12);
+        let step = self.rate * self.mad;
+        if x > self.lam {
+            self.lam += step * self.q;
+        } else {
+            self.lam -= step * (1.0 - self.q);
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        self.lam
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Pcg32;
+    use crate::utils::stats::quantile;
+
+    #[test]
+    fn tracks_uniform_quantiles() {
+        for &q in &[0.25, 0.5, 0.9, 0.97] {
+            let mut est = P2Quantile::new(q);
+            let mut rng = Pcg32::seeded(2);
+            let xs: Vec<f64> = (0..20_000).map(|_| rng.uniform()).collect();
+            for &x in &xs {
+                est.update(x);
+            }
+            let exact = quantile(&xs, q);
+            assert!((est.value() - exact).abs() < 0.02, "q={q}: {} vs {exact}", est.value());
+        }
+    }
+
+    #[test]
+    fn tracks_normal_quantiles() {
+        let mut est = P2Quantile::new(0.97);
+        let mut rng = Pcg32::seeded(3);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        for &x in &xs {
+            est.update(x);
+        }
+        // Phi^-1(0.97) ~ 1.8808
+        assert!((est.value() - 1.8808).abs() < 0.08, "{}", est.value());
+    }
+
+    #[test]
+    fn exact_for_few_samples() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            est.update(x);
+        }
+        assert_eq!(est.value(), 2.0);
+        assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn ew_quantile_tracks_stationary() {
+        let mut est = EwQuantile::new(0.9, 0.05);
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..50_000 {
+            est.update(rng.normal());
+        }
+        // Phi^-1(0.9) ~ 1.2816
+        assert!((est.value() - 1.2816).abs() < 0.15, "{}", est.value());
+    }
+
+    #[test]
+    fn ew_quantile_adapts_to_drift() {
+        // the gate-price use case: delight distribution collapses toward
+        // zero as the policy improves; the tracker must follow.
+        let mut est = EwQuantile::new(0.9, 0.05);
+        let mut rng = Pcg32::seeded(4);
+        for _ in 0..5000 {
+            est.update(rng.normal() + 10.0);
+        }
+        assert!(est.value() > 9.0);
+        for _ in 0..20_000 {
+            est.update(rng.normal());
+        }
+        assert!(est.value() < 2.5, "stale estimate {}", est.value());
+    }
+
+    #[test]
+    fn p2_is_for_stationary_streams() {
+        // documents the P2/EW split: P2 nails the stationary quantile but
+        // (by design) does not forget an early regime.
+        let mut p2 = P2Quantile::new(0.9);
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..5000 {
+            p2.update(rng.normal() + 10.0);
+        }
+        for _ in 0..20_000 {
+            p2.update(rng.normal());
+        }
+        assert!(p2.value() > 2.5, "P2 unexpectedly forgot: {}", p2.value());
+    }
+}

@@ -1,0 +1,203 @@
+//! Speculative delight screening (paper §3.2 / §7 "distilled delight
+//! predictors"): a cheap draft model predicts each sample's surprisal
+//! before the expensive forward/backward, mirroring speculative decoding
+//! but for training.
+//!
+//! The draft here is an online linear probe on raw inputs trained to
+//! regress the full model's per-sample surprisal ell (and hence delight
+//! chi_hat = U * ell_hat). It costs one [D]·[D] dot per sample — orders
+//! of magnitude below the policy forward — and §3.2 of the paper shows the
+//! gate tolerates exactly this kind of approximation. `agreement`
+//! quantifies screening quality as precision of the draft's top-rho set
+//! against the true top-rho set.
+
+use crate::utils::rng::Pcg32;
+use crate::utils::stats::quantile;
+
+/// Online linear surprisal predictor: ell_hat = w·x + b, SGD on squared
+/// error against the observed surprisal from the full forward.
+#[derive(Debug, Clone)]
+pub struct DraftScreen {
+    w: Vec<f32>,
+    b: f32,
+    lr: f32,
+    /// samples seen (for the cold-start guard)
+    seen: u64,
+}
+
+impl DraftScreen {
+    pub fn new(dim: usize, lr: f32) -> DraftScreen {
+        DraftScreen { w: vec![0.0; dim], b: 0.0, lr, seen: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Predict surprisal for one input row.
+    pub fn predict(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), self.w.len());
+        let mut acc = self.b as f64;
+        for (w, &v) in self.w.iter().zip(x) {
+            acc += (*w as f64) * v as f64;
+        }
+        acc
+    }
+
+    /// Predicted delight chi_hat = U * ell_hat for a batch ([n, dim] rows).
+    pub fn predict_delight(&self, xs: &[f32], u: &[f64]) -> Vec<f64> {
+        let d = self.w.len();
+        u.iter()
+            .enumerate()
+            .map(|(i, &ui)| ui * self.predict(&xs[i * d..(i + 1) * d]))
+            .collect()
+    }
+
+    /// One SGD pass against observed surprisals.
+    pub fn update(&mut self, xs: &[f32], ell: &[f64]) {
+        let d = self.w.len();
+        for (i, &target) in ell.iter().enumerate() {
+            let row = &xs[i * d..(i + 1) * d];
+            let err = (self.predict(row) - target) as f32;
+            let g = self.lr * err;
+            for (w, &v) in self.w.iter_mut().zip(row) {
+                *w -= g * v;
+            }
+            self.b -= g;
+            self.seen += 1;
+        }
+    }
+
+    /// Is the draft warm enough to screen with? (one epoch of batches)
+    pub fn warmed_up(&self, batch: usize) -> bool {
+        self.seen >= 20 * batch as u64
+    }
+}
+
+/// Screening agreement: precision of the approximate top-rho set against
+/// the exact top-rho set (both sets of size ceil(rho * n)).
+pub fn screening_precision(chi_true: &[f64], chi_hat: &[f64], rho: f64) -> f64 {
+    assert_eq!(chi_true.len(), chi_hat.len());
+    let n = chi_true.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let k = ((rho * n as f64).ceil() as usize).clamp(1, n);
+    let top = |xs: &[f64]| -> std::collections::HashSet<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx[..k].iter().copied().collect()
+    };
+    let t = top(chi_true);
+    let h = top(chi_hat);
+    t.intersection(&h).count() as f64 / k as f64
+}
+
+/// Spearman-style rank correlation between true and approximate delight
+/// (diagnostic reported by the `spec` experiment driver).
+pub fn rank_correlation(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ranks = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        let mut r = vec![0.0; n];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    };
+    let ra = ranks(a);
+    let rb = ranks(b);
+    let d2: f64 = ra.iter().zip(&rb).map(|(x, y)| (x - y) * (x - y)).sum();
+    1.0 - 6.0 * d2 / (n as f64 * (n as f64 * n as f64 - 1.0))
+}
+
+/// Synthetic sanity harness: how good must the draft be (noise level on
+/// chi) for top-rho screening to retain a given precision? Used by the
+/// ablation driver to trace the paper's approximate-delight story without
+/// a trainer in the loop.
+pub fn precision_under_noise(n: usize, rho: f64, rel_noise: f64, rng: &mut Pcg32) -> f64 {
+    let chi: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let sd = {
+        let q75 = quantile(&chi, 0.75);
+        let q25 = quantile(&chi, 0.25);
+        (q75 - q25) / 1.349
+    };
+    let chi_hat: Vec<f64> =
+        chi.iter().map(|&c| c + rng.normal() * rel_noise * sd).collect();
+    screening_precision(&chi, &chi_hat, rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draft_learns_linear_surprisal() {
+        // ground truth ell = 2*x0 - x1 + 0.5 is exactly representable
+        let mut rng = Pcg32::seeded(1);
+        let mut draft = DraftScreen::new(2, 0.05);
+        for _ in 0..300 {
+            let xs: Vec<f32> = (0..20 * 2).map(|_| rng.normal() as f32).collect();
+            let ell: Vec<f64> = (0..20)
+                .map(|i| 2.0 * xs[i * 2] as f64 - xs[i * 2 + 1] as f64 + 0.5)
+                .collect();
+            draft.update(&xs, &ell);
+        }
+        let x = [1.0f32, 1.0];
+        assert!((draft.predict(&x) - 1.5).abs() < 0.05, "{}", draft.predict(&x));
+        assert!(draft.warmed_up(20));
+    }
+
+    #[test]
+    fn predict_delight_multiplies_advantage() {
+        let mut d = DraftScreen::new(1, 0.1);
+        d.w[0] = 1.0; // ell_hat = x
+        let xs = [2.0f32, 3.0];
+        let u = [0.5, -1.0];
+        let chi = d.predict_delight(&xs, &u);
+        assert!((chi[0] - 1.0).abs() < 1e-9);
+        assert!((chi[1] + 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_screen_has_precision_one() {
+        let chi = vec![0.1, 0.9, -0.5, 0.7, 0.2];
+        assert_eq!(screening_precision(&chi, &chi, 0.4), 1.0);
+    }
+
+    #[test]
+    fn anti_correlated_screen_has_low_precision() {
+        let chi: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let neg: Vec<f64> = chi.iter().map(|&c| -c).collect();
+        assert_eq!(screening_precision(&chi, &neg, 0.1), 0.0);
+    }
+
+    #[test]
+    fn precision_degrades_smoothly_with_noise() {
+        let mut rng = Pcg32::seeded(2);
+        let p0 = precision_under_noise(1000, 0.05, 0.0, &mut rng);
+        let p1 = precision_under_noise(1000, 0.05, 0.5, &mut rng);
+        let p2 = precision_under_noise(1000, 0.05, 3.0, &mut rng);
+        assert_eq!(p0, 1.0);
+        assert!(p1 > 0.3 && p1 < 1.0, "p1 = {p1}");
+        assert!(p2 < p1, "p2 = {p2}");
+    }
+
+    #[test]
+    fn rank_correlation_bounds() {
+        let a: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let b: Vec<f64> = a.iter().map(|&x| x * 2.0 + 1.0).collect();
+        let c: Vec<f64> = a.iter().rev().cloned().collect();
+        assert!((rank_correlation(&a, &b) - 1.0).abs() < 1e-9);
+        assert!((rank_correlation(&a, &c) + 1.0).abs() < 1e-9);
+    }
+}

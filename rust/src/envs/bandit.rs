@@ -1,0 +1,235 @@
+//! Tabular bandits with exact gradients (paper §4, App C).
+//!
+//! `SymmetricBandit` realizes Assumption 1: K arms, one correct arm y*,
+//! deterministic indicator reward, softmax policy with uniform incorrect
+//! mass. Gradients live in logit space: the score of action a is
+//! phi(a) = e_a - pi, the true gradient is grad J = p * phi(y*).
+//!
+//! `GamblingBandit` realizes Proposition 3's two-armed slot machine.
+
+use crate::utils::math::softmax_v;
+use crate::utils::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct SymmetricBandit {
+    pub k: usize,
+    pub y_star: usize,
+    /// policy logits z
+    pub z: Vec<f32>,
+}
+
+impl SymmetricBandit {
+    /// Construct with success probability exactly `p` and uniform incorrect
+    /// probabilities (Assumption 1's symmetric configuration).
+    pub fn with_p(k: usize, y_star: usize, p: f64) -> SymmetricBandit {
+        assert!(k >= 2 && y_star < k && p > 0.0 && p < 1.0);
+        let others = ((1.0 - p) / (k - 1) as f64).ln() as f32;
+        let mut z = vec![others; k];
+        z[y_star] = p.ln() as f32;
+        SymmetricBandit { k, y_star, z }
+    }
+
+    pub fn pi(&self) -> Vec<f32> {
+        softmax_v(&self.z)
+    }
+
+    pub fn p_star(&self) -> f64 {
+        self.pi()[self.y_star] as f64
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        rng.categorical_from_logits(&self.z)
+    }
+
+    pub fn reward(&self, a: usize) -> f64 {
+        if a == self.y_star {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Score function in logit space: phi(a) = e_a - pi.
+    pub fn phi(&self, a: usize) -> Vec<f32> {
+        let pi = self.pi();
+        let mut v: Vec<f32> = pi.iter().map(|&p| -p).collect();
+        v[a] += 1.0;
+        v
+    }
+
+    /// True objective gradient: grad_z J = p * phi(y*).
+    pub fn grad_j(&self) -> Vec<f32> {
+        let p = self.p_star() as f32;
+        self.phi(self.y_star).iter().map(|&x| p * x).collect()
+    }
+
+    /// Per-sample PG term g(a) = (r(a) - b) * phi(a).
+    pub fn per_sample_grad(&self, a: usize, b: f64) -> Vec<f32> {
+        let u = (self.reward(a) - b) as f32;
+        self.phi(a).iter().map(|&x| u * x).collect()
+    }
+
+    /// Surprisal of action a under the current policy.
+    pub fn surprisal(&self, a: usize) -> f64 {
+        -(self.pi()[a] as f64).ln()
+    }
+}
+
+/// Proposition 3's two-armed gambling bandit: arm 0 pays mu* exactly;
+/// arm 1 pays N(mu* - delta, sigma^2). Policy plays arm 1 w.p. epsilon.
+#[derive(Debug, Clone, Copy)]
+pub struct GamblingBandit {
+    pub mu_star: f64,
+    pub delta: f64,
+    pub sigma: f64,
+    pub epsilon: f64,
+}
+
+impl GamblingBandit {
+    pub fn new(mu_star: f64, delta: f64, sigma: f64, epsilon: f64) -> GamblingBandit {
+        assert!(delta > 0.0 && sigma >= 0.0 && epsilon > 0.0 && epsilon < 1.0);
+        GamblingBandit { mu_star, delta, sigma, epsilon }
+    }
+
+    /// Baseline b = V^pi = mu* - eps * delta (App C.4).
+    pub fn value(&self) -> f64 {
+        self.mu_star - self.epsilon * self.delta
+    }
+
+    pub fn sample_arm(&self, rng: &mut Pcg32) -> usize {
+        if rng.bernoulli(self.epsilon) {
+            1
+        } else {
+            0
+        }
+    }
+
+    pub fn reward(&self, arm: usize, rng: &mut Pcg32) -> f64 {
+        match arm {
+            0 => self.mu_star,
+            _ => self.mu_star - self.delta + self.sigma * rng.normal(),
+        }
+    }
+
+    /// Exact Pr(U_2 > 0 | A = 2) = 1 - Phi((1-eps) * delta / sigma).
+    pub fn p_false_positive(&self) -> f64 {
+        if self.sigma == 0.0 {
+            return 0.0;
+        }
+        1.0 - crate::utils::math::normal_cdf((1.0 - self.epsilon) * self.delta / self.sigma)
+    }
+
+    /// Surprisal of the gamble arm: log(1/eps).
+    pub fn gamble_surprisal(&self) -> f64 {
+        -(self.epsilon).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::math::{cosine, dot};
+
+    #[test]
+    fn with_p_hits_target_probability() {
+        for &p in &[0.01, 0.1, 0.5, 0.9] {
+            let b = SymmetricBandit::with_p(10, 3, p);
+            assert!((b.p_star() - p).abs() < 1e-6, "p={p}");
+            let pi = b.pi();
+            // uniform incorrect mass
+            let q = pi[0];
+            for (a, &v) in pi.iter().enumerate() {
+                if a != 3 {
+                    assert!((v - q).abs() < 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phi_correct_is_parallel_to_grad_j() {
+        // Lemma 1 part 1
+        let b = SymmetricBandit::with_p(10, 0, 0.2);
+        let phi = b.phi(0);
+        let g = b.grad_j();
+        assert!(cosine(&phi, &g) > 0.999999);
+    }
+
+    #[test]
+    fn phi_incorrect_cosine_is_theta_p() {
+        // Lemma 1 part 2: |cos(phi(a), grad J)| = Theta(p)
+        for &p in &[0.02, 0.05, 0.1] {
+            let b = SymmetricBandit::with_p(10, 0, p);
+            let c = cosine(&b.phi(3), &b.grad_j()).abs();
+            assert!(c < 3.0 * p && c > p / 3.0, "p={p} cos={c}");
+        }
+    }
+
+    #[test]
+    fn inner_product_formula() {
+        // <phi(a), phi(y*)> = -p(1-p)K/(K-1)  (App C.1)
+        let k = 10;
+        let p = 0.3;
+        let b = SymmetricBandit::with_p(k, 0, p);
+        let want = -p * (1.0 - p) * k as f64 / (k - 1) as f64;
+        let got = dot(&b.phi(5), &b.phi(0));
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn expected_pg_gradient_is_grad_j() {
+        // E[g] with b=0: sum_a pi(a) r(a) phi(a) = p phi(y*) = grad J
+        let b = SymmetricBandit::with_p(5, 2, 0.3);
+        let pi = b.pi();
+        let mut e = vec![0.0f32; 5];
+        for a in 0..5 {
+            let g = b.per_sample_grad(a, 0.0);
+            for i in 0..5 {
+                e[i] += pi[a] * g[i];
+            }
+        }
+        let gj = b.grad_j();
+        for i in 0..5 {
+            assert!((e[i] - gj[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sampling_matches_policy() {
+        let b = SymmetricBandit::with_p(4, 1, 0.55);
+        let mut rng = Pcg32::seeded(11);
+        let n = 40_000;
+        let hits = (0..n).filter(|_| b.sample(&mut rng) == 1).count();
+        assert!((hits as f64 / n as f64 - 0.55).abs() < 0.01);
+    }
+
+    #[test]
+    fn gambling_false_positive_regimes() {
+        // Prop 3: sigma/delta << 1 -> tiny; >> 1 -> Theta(1)
+        let reliable = GamblingBandit::new(1.0, 0.5, 0.05, 0.01);
+        let pathological = GamblingBandit::new(1.0, 0.5, 5.0, 0.01);
+        assert!(reliable.p_false_positive() < 1e-6);
+        assert!(pathological.p_false_positive() > 0.4);
+    }
+
+    #[test]
+    fn gambling_empirical_matches_exact() {
+        let g = GamblingBandit::new(1.0, 0.5, 1.0, 0.05);
+        let mut rng = Pcg32::seeded(12);
+        let b = g.value();
+        let n = 50_000;
+        let fp = (0..n)
+            .filter(|_| g.reward(1, &mut rng) - b > 0.0)
+            .count() as f64
+            / n as f64;
+        assert!((fp - g.p_false_positive()).abs() < 0.01, "{fp} vs {}", g.p_false_positive());
+    }
+
+    #[test]
+    fn delight_amplification_grows_as_policy_avoids_arm() {
+        // Prop 3 part 3: |chi_2| factor log(1/eps) increases as eps -> 0
+        let a = GamblingBandit::new(1.0, 0.5, 5.0, 0.1);
+        let b = GamblingBandit::new(1.0, 0.5, 5.0, 0.001);
+        assert!(b.gamble_surprisal() > a.gamble_surprisal() * 2.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Synthetic procedural digit corpus — the MNIST substitution (DESIGN.md §6).
+//!
+//! No network access is available for the real MNIST download, so we render
+//! a 10-class 28x28 digit corpus procedurally: seven-segment glyph
+//! templates with per-sample geometric jitter (shift, scale, thickness),
+//! intensity variation and pixel noise. Deterministic per (split, index,
+//! corpus seed); the fixed split is 60k train / 10k test like MNIST.
+//!
+//! What the experiments need from the dataset -- a learnable 10-way visual
+//! contextual bandit with a moving accuracy frontier -- is preserved; the
+//! absolute error floor differs from MNIST and is reported as ours.
+
+use crate::utils::rng::Pcg32;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const N_CLASSES: usize = 10;
+pub const TRAIN_SIZE: usize = 60_000;
+pub const TEST_SIZE: usize = 10_000;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Seven-segment encoding per digit: [A, B, C, D, E, F, G]
+///   A top, B top-right, C bottom-right, D bottom, E bottom-left,
+///   F top-left, G middle.
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],    // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],   // 2
+    [true, true, true, true, false, false, true],   // 3
+    [false, true, true, false, false, true, true],  // 4
+    [true, false, true, true, false, true, true],   // 5
+    [true, false, true, true, true, true, true],    // 6
+    [true, true, true, false, false, false, false], // 7
+    [true, true, true, true, true, true, true],     // 8
+    [true, true, true, true, false, true, true],    // 9
+];
+
+#[derive(Debug, Clone)]
+pub struct DigitCorpus {
+    seed: u64,
+    /// pixel noise sigma
+    pub noise: f32,
+}
+
+impl DigitCorpus {
+    pub fn new(seed: u64) -> DigitCorpus {
+        DigitCorpus { seed, noise: 0.12 }
+    }
+
+    /// Label of sample `idx` in `split` (uniform over classes by index).
+    pub fn label(&self, _split: Split, idx: usize) -> usize {
+        idx % N_CLASSES
+    }
+
+    fn sample_rng(&self, split: Split, idx: usize) -> Pcg32 {
+        let s = match split {
+            Split::Train => 0x7261_696e_u64,
+            Split::Test => 0x7465_7374_u64,
+        };
+        Pcg32::new(self.seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15), s)
+    }
+
+    /// Render sample `idx`: 784 pixels in [0, 1].
+    pub fn image(&self, split: Split, idx: usize) -> Vec<f32> {
+        let label = self.label(split, idx);
+        let mut rng = self.sample_rng(split, idx);
+
+        // geometric jitter (moderate: keeps classes separable in pixel
+        // space while still moving the learning frontier over training)
+        let dx = rng.below(3) as i32 - 1;
+        let dy = rng.below(3) as i32 - 1;
+        let scale = 0.9 + 0.2 * rng.uniform() as f32;
+        let thick = 2 + rng.below(2) as i32; // 2 or 3 px
+        let intensity = 0.75 + 0.25 * rng.uniform() as f32;
+
+        let mut img = vec![0.0f32; IMG_PIXELS];
+        // glyph box before jitter: x in [9, 19], y in [5, 23]
+        let cx = 14.0f32;
+        let cy = 14.0f32;
+        let hw = 5.0 * scale; // half width
+        let hh = 9.0 * scale; // half height
+
+        let x0 = cx - hw + dx as f32;
+        let x1 = cx + hw + dx as f32;
+        let y0 = cy - hh + dy as f32;
+        let y1 = cy + hh + dy as f32;
+        let ym = cy + dy as f32;
+
+        // each segment as a line (x_a, y_a) -> (x_b, y_b)
+        let segs: [((f32, f32), (f32, f32)); 7] = [
+            ((x0, y0), (x1, y0)), // A
+            ((x1, y0), (x1, ym)), // B
+            ((x1, ym), (x1, y1)), // C
+            ((x0, y1), (x1, y1)), // D
+            ((x0, ym), (x0, y1)), // E
+            ((x0, y0), (x0, ym)), // F
+            ((x0, ym), (x1, ym)), // G
+        ];
+
+        for (si, &on) in SEGMENTS[label].iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let ((xa, ya), (xb, yb)) = segs[si];
+            draw_line(&mut img, xa, ya, xb, yb, thick, intensity);
+        }
+
+        // pixel noise + clamp
+        for p in img.iter_mut() {
+            *p = (*p + self.noise * rng.normal() as f32).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// Materialize a full split (or its first `n` samples) into memory.
+    pub fn materialize(&self, split: Split, n: usize) -> (Vec<f32>, Vec<usize>) {
+        let size = match split {
+            Split::Train => TRAIN_SIZE,
+            Split::Test => TEST_SIZE,
+        };
+        let n = n.min(size);
+        let mut xs = Vec::with_capacity(n * IMG_PIXELS);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            xs.extend_from_slice(&self.image(split, i));
+            ys.push(self.label(split, i));
+        }
+        (xs, ys)
+    }
+
+    /// Sample a batch with replacement from the train split.
+    pub fn sample_batch(&self, b: usize, rng: &mut Pcg32) -> (Vec<f32>, Vec<usize>) {
+        let mut xs = Vec::with_capacity(b * IMG_PIXELS);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let idx = rng.below(TRAIN_SIZE as u32) as usize;
+            xs.extend_from_slice(&self.image(Split::Train, idx));
+            ys.push(self.label(Split::Train, idx));
+        }
+        (xs, ys)
+    }
+}
+
+fn draw_line(img: &mut [f32], xa: f32, ya: f32, xb: f32, yb: f32, thick: i32, val: f32) {
+    // supersample along the segment, stamping a thick x thick square
+    let len = ((xb - xa).powi(2) + (yb - ya).powi(2)).sqrt().max(1.0);
+    let steps = (len * 2.0) as usize + 1;
+    let half = thick / 2;
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let x = xa + t * (xb - xa);
+        let y = ya + t * (yb - ya);
+        for oy in -half..=half {
+            for ox in -half..=half {
+                let px = (x + ox as f32).round() as i32;
+                let py = (y + oy as f32).round() as i32;
+                if (0..IMG_SIDE as i32).contains(&px) && (0..IMG_SIDE as i32).contains(&py) {
+                    let i = py as usize * IMG_SIDE + px as usize;
+                    img[i] = img[i].max(val);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_are_deterministic() {
+        let c = DigitCorpus::new(0);
+        assert_eq!(c.image(Split::Train, 5), c.image(Split::Train, 5));
+        assert_ne!(c.image(Split::Train, 5), c.image(Split::Train, 15)); // same label, different render
+    }
+
+    #[test]
+    fn train_and_test_disjoint_renders() {
+        let c = DigitCorpus::new(0);
+        assert_ne!(c.image(Split::Train, 3), c.image(Split::Test, 3));
+    }
+
+    #[test]
+    fn pixels_in_range_and_nonempty() {
+        let c = DigitCorpus::new(1);
+        for idx in 0..20 {
+            let img = c.image(Split::Train, idx);
+            assert_eq!(img.len(), IMG_PIXELS);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let lit = img.iter().filter(|&&p| p > 0.5).count();
+            assert!(lit > 20, "digit {idx} nearly blank: {lit} bright px");
+        }
+    }
+
+    #[test]
+    fn labels_uniform() {
+        let c = DigitCorpus::new(0);
+        for i in 0..30 {
+            assert_eq!(c.label(Split::Train, i), i % 10);
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean inter-class L2 distance must dominate intra-class distance,
+        // otherwise the bandit is unlearnable.
+        let c = DigitCorpus::new(0);
+        let imgs: Vec<Vec<f32>> = (0..40).map(|i| c.image(Split::Train, i)).collect();
+        let d2 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let mut intra = 0.0;
+        let mut nintra = 0;
+        let mut inter = 0.0;
+        let mut ninter = 0;
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                if i % 10 == j % 10 {
+                    intra += d2(&imgs[i], &imgs[j]);
+                    nintra += 1;
+                } else {
+                    inter += d2(&imgs[i], &imgs[j]);
+                    ninter += 1;
+                }
+            }
+        }
+        let intra = intra / nintra as f32;
+        let inter = inter / ninter as f32;
+        assert!(
+            inter > 1.25 * intra,
+            "classes not separable: inter {inter} vs intra {intra}"
+        );
+    }
+
+    #[test]
+    fn batch_sampling_shapes() {
+        let c = DigitCorpus::new(0);
+        let mut rng = Pcg32::seeded(9);
+        let (xs, ys) = c.sample_batch(17, &mut rng);
+        assert_eq!(xs.len(), 17 * IMG_PIXELS);
+        assert_eq!(ys.len(), 17);
+        assert!(ys.iter().all(|&y| y < 10));
+    }
+
+    #[test]
+    fn materialize_test_split() {
+        let c = DigitCorpus::new(0);
+        let (xs, ys) = c.materialize(Split::Test, 50);
+        assert_eq!(xs.len(), 50 * IMG_PIXELS);
+        assert_eq!(ys.len(), 50);
+    }
+}
+
+/// Render a 28x28 image as ASCII art (for the Fig 16 kept/skipped panels).
+pub fn ascii_digit(img: &[f32]) -> String {
+    assert_eq!(img.len(), IMG_PIXELS);
+    let glyphs = [' ', '.', ':', '+', '#', '@'];
+    let mut s = String::with_capacity((IMG_SIDE + 1) * IMG_SIDE / 2);
+    // halve vertical resolution (terminal cells are ~2x taller than wide)
+    for row in (0..IMG_SIDE).step_by(2) {
+        for col in 0..IMG_SIDE {
+            let v = 0.5 * (img[row * IMG_SIDE + col]
+                + img[(row + 1).min(IMG_SIDE - 1) * IMG_SIDE + col]);
+            let g = ((v * (glyphs.len() - 1) as f32).round() as usize).min(glyphs.len() - 1);
+            s.push(glyphs[g]);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod ascii_tests {
+    use super::*;
+
+    #[test]
+    fn ascii_digit_renders_glyph() {
+        let c = DigitCorpus::new(0);
+        let art = ascii_digit(&c.image(Split::Train, 8)); // an '8'
+        assert_eq!(art.lines().count(), IMG_SIDE / 2);
+        assert!(art.contains('@') || art.contains('#'), "no bright pixels:\n{art}");
+        assert!(art.contains(' '));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ascii_digit_rejects_bad_len() {
+        ascii_digit(&[0.0; 10]);
+    }
+}

@@ -1,0 +1,144 @@
+//! MNIST contextual bandit (paper §3, App A): observe an image, pick a
+//! digit, receive r = 1{a = y} plus optional noise. Wraps the synthetic
+//! digit corpus and owns the reward-noise model of Figs 4/6.
+
+use crate::utils::rng::Pcg32;
+
+use super::digits::{DigitCorpus, Split, IMG_PIXELS, N_CLASSES};
+
+/// Reward-noise configuration (paper App A.1 "Gambling experiment").
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RewardNoise {
+    /// homoskedastic sigma_R on every action
+    pub sigma_r: f64,
+    /// extra sigma_G on the designated gamble action
+    pub sigma_g: f64,
+    /// the gamble action (paper uses a = 0)
+    pub gamble_action: usize,
+}
+
+impl RewardNoise {
+    pub fn clean() -> RewardNoise {
+        RewardNoise::default()
+    }
+
+    pub fn homoskedastic(sigma_r: f64) -> RewardNoise {
+        RewardNoise { sigma_r, ..Default::default() }
+    }
+
+    pub fn gambling(sigma_g: f64) -> RewardNoise {
+        RewardNoise { sigma_g, gamble_action: 0, sigma_r: 0.0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MnistBandit {
+    pub corpus: DigitCorpus,
+    pub noise: RewardNoise,
+    pub batch: usize,
+}
+
+/// One sampled batch of contexts.
+pub struct ContextBatch {
+    /// [batch * 784] row-major images
+    pub x: Vec<f32>,
+    /// true labels
+    pub y: Vec<usize>,
+}
+
+impl MnistBandit {
+    pub fn new(seed: u64, batch: usize, noise: RewardNoise) -> MnistBandit {
+        MnistBandit { corpus: DigitCorpus::new(seed), noise, batch }
+    }
+
+    pub fn n_actions(&self) -> usize {
+        N_CLASSES
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        IMG_PIXELS
+    }
+
+    pub fn sample_contexts(&self, rng: &mut Pcg32) -> ContextBatch {
+        let (x, y) = self.corpus.sample_batch(self.batch, rng);
+        ContextBatch { x, y }
+    }
+
+    /// Reward for taking `action` on a context with label `y`.
+    pub fn reward(&self, action: usize, y: usize, rng: &mut Pcg32) -> f64 {
+        let mut r = if action == y { 1.0 } else { 0.0 };
+        if self.noise.sigma_r > 0.0 {
+            r += self.noise.sigma_r * rng.normal();
+        }
+        if self.noise.sigma_g > 0.0 && action == self.noise.gamble_action {
+            r += self.noise.sigma_g * rng.normal();
+        }
+        r
+    }
+
+    /// Expected reward of `action` given label `y` (noise is mean-zero).
+    pub fn mean_reward(&self, action: usize, y: usize) -> f64 {
+        if action == y {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Materialized test set (first `n` samples) for evaluation.
+    pub fn test_set(&self, n: usize) -> ContextBatch {
+        let (x, y) = self.corpus.materialize(Split::Test, n);
+        ContextBatch { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_reward_is_indicator() {
+        let env = MnistBandit::new(0, 4, RewardNoise::clean());
+        let mut rng = Pcg32::seeded(0);
+        assert_eq!(env.reward(3, 3, &mut rng), 1.0);
+        assert_eq!(env.reward(2, 3, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn homoskedastic_noise_has_right_moments() {
+        let env = MnistBandit::new(0, 4, RewardNoise::homoskedastic(0.5));
+        let mut rng = Pcg32::seeded(1);
+        let n = 20_000;
+        let rs: Vec<f64> = (0..n).map(|_| env.reward(1, 1, &mut rng)).collect();
+        let mean: f64 = rs.iter().sum::<f64>() / n as f64;
+        let var: f64 = rs.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02);
+        assert!((var.sqrt() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn gambling_noise_only_on_gamble_action() {
+        let env = MnistBandit::new(0, 4, RewardNoise::gambling(2.0));
+        let mut rng = Pcg32::seeded(2);
+        // non-gamble action: exact indicator
+        assert_eq!(env.reward(3, 3, &mut rng), 1.0);
+        assert_eq!(env.reward(5, 3, &mut rng), 0.0);
+        // gamble action: noisy even when wrong
+        let r = env.reward(0, 3, &mut rng);
+        assert!(r != 0.0);
+        // variance check on the gamble arm
+        let n = 20_000;
+        let rs: Vec<f64> = (0..n).map(|_| env.reward(0, 3, &mut rng)).collect();
+        let var: f64 = rs.iter().map(|r| r * r).sum::<f64>() / n as f64;
+        assert!((var.sqrt() - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn context_batches_are_seed_deterministic() {
+        let env = MnistBandit::new(0, 8, RewardNoise::clean());
+        let b1 = env.sample_contexts(&mut Pcg32::seeded(3));
+        let b2 = env.sample_contexts(&mut Pcg32::seeded(3));
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.y, b2.y);
+    }
+}

@@ -1,0 +1,7 @@
+//! Environments / substrates: synthetic digit corpus, MNIST contextual
+//! bandit, exact tabular bandits, token reversal.
+
+pub mod bandit;
+pub mod digits;
+pub mod mnist;
+pub mod reversal;

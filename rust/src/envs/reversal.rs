@@ -1,0 +1,193 @@
+//! Token reversal environment (paper §5, App D).
+//!
+//! A batch is P prompts x S sampled responses (paper: 10 x 10 = 100
+//! episodes). Prompts are length-H sequences over vocabulary [0, M); the
+//! target is the reversed prompt; reward is per-position accuracy averaged
+//! over the episode. The grouped (GRPO-style) baseline is the mean reward
+//! of each prompt's response group.
+//!
+//! Prompts are marshaled LEFT-padded into i32[batch, H_MAX] as the
+//! transformer artifacts expect (python/compile/models/transformer.py).
+
+use crate::utils::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReversalEnv {
+    /// sequence length H (<= h_max)
+    pub h: usize,
+    /// vocabulary size M (<= vocab)
+    pub m: usize,
+    /// prompts per batch
+    pub p: usize,
+    /// responses per prompt
+    pub s: usize,
+    /// compiled maximum sequence length
+    pub h_max: usize,
+    /// pad token id
+    pub pad: i32,
+}
+
+/// One batch of prompts, replicated S times each.
+#[derive(Debug, Clone)]
+pub struct PromptBatch {
+    /// left-padded prompt tokens, [batch * h_max] row-major
+    pub tokens: Vec<i32>,
+    /// raw prompts, [p * h]
+    pub raw: Vec<i32>,
+    pub batch: usize,
+}
+
+impl ReversalEnv {
+    pub fn new(h: usize, m: usize, p: usize, s: usize, h_max: usize, pad: i32) -> ReversalEnv {
+        assert!(h >= 1 && h <= h_max, "H out of range");
+        assert!(m >= 2, "vocab must be >= 2");
+        ReversalEnv { h, m, p, s, h_max, pad }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.p * self.s
+    }
+
+    /// Sample P prompts and tile each S times.
+    pub fn sample_prompts(&self, rng: &mut Pcg32) -> PromptBatch {
+        let mut raw = Vec::with_capacity(self.p * self.h);
+        for _ in 0..self.p * self.h {
+            raw.push(rng.below(self.m as u32) as i32);
+        }
+        let batch = self.batch_size();
+        let mut tokens = vec![self.pad; batch * self.h_max];
+        for pi in 0..self.p {
+            for si in 0..self.s {
+                let ep = pi * self.s + si;
+                let row = &mut tokens[ep * self.h_max..(ep + 1) * self.h_max];
+                let off = self.h_max - self.h;
+                for j in 0..self.h {
+                    row[off + j] = raw[pi * self.h + j];
+                }
+            }
+        }
+        PromptBatch { tokens, raw, batch }
+    }
+
+    /// Target (reversed prompt) for episode `ep`.
+    pub fn target(&self, batch: &PromptBatch, ep: usize) -> Vec<i32> {
+        let pi = ep / self.s;
+        let prompt = &batch.raw[pi * self.h..(pi + 1) * self.h];
+        prompt.iter().rev().copied().collect()
+    }
+
+    /// Per-episode reward: fraction of correct positions (paper: kappa=1
+    /// linear shaping of the per-position indicator mean, already in [0,1]).
+    pub fn episode_reward(&self, batch: &PromptBatch, ep: usize, actions_row: &[i32]) -> f64 {
+        let tgt = self.target(batch, ep);
+        let correct = tgt
+            .iter()
+            .enumerate()
+            .filter(|(j, &t)| actions_row[*j] == t)
+            .count();
+        correct as f64 / self.h as f64
+    }
+
+    /// Rewards for a full batch of sampled actions ([batch * h_max] row-major).
+    pub fn rewards(&self, batch: &PromptBatch, actions: &[i32]) -> Vec<f64> {
+        (0..batch.batch)
+            .map(|ep| {
+                self.episode_reward(batch, ep, &actions[ep * self.h_max..(ep + 1) * self.h_max])
+            })
+            .collect()
+    }
+
+    /// Per-position correctness for diagnostics ([batch, h] flattened).
+    pub fn position_correct(&self, batch: &PromptBatch, actions: &[i32]) -> Vec<bool> {
+        let mut out = Vec::with_capacity(batch.batch * self.h);
+        for ep in 0..batch.batch {
+            let tgt = self.target(batch, ep);
+            let row = &actions[ep * self.h_max..(ep + 1) * self.h_max];
+            for j in 0..self.h {
+                out.push(row[j] == tgt[j]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> ReversalEnv {
+        ReversalEnv::new(5, 4, 3, 2, 32, 64)
+    }
+
+    #[test]
+    fn prompts_left_padded_and_tiled() {
+        let e = env();
+        let mut rng = Pcg32::seeded(0);
+        let b = e.sample_prompts(&mut rng);
+        assert_eq!(b.batch, 6);
+        assert_eq!(b.tokens.len(), 6 * 32);
+        for ep in 0..6 {
+            let row = &b.tokens[ep * 32..(ep + 1) * 32];
+            assert!(row[..27].iter().all(|&t| t == 64), "pad region");
+            assert!(row[27..].iter().all(|&t| (0..4).contains(&t)), "prompt region");
+        }
+        // episodes of the same prompt share tokens
+        assert_eq!(b.tokens[0..32], b.tokens[32..64]);
+        // different prompts differ (w.h.p.)
+        assert_ne!(b.tokens[0..32], b.tokens[2 * 32..3 * 32]);
+    }
+
+    #[test]
+    fn reward_is_exact_reversal_fraction() {
+        let e = env();
+        let mut rng = Pcg32::seeded(1);
+        let b = e.sample_prompts(&mut rng);
+        let tgt = e.target(&b, 0);
+        // perfect response
+        let mut actions = vec![0i32; 6 * 32];
+        actions[..5].copy_from_slice(&tgt);
+        assert_eq!(e.episode_reward(&b, 0, &actions[..32]), 1.0);
+        // break two positions
+        actions[0] = (actions[0] + 1) % 4;
+        actions[3] = (actions[3] + 1) % 4;
+        assert!((e.episode_reward(&b, 0, &actions[..32]) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn target_is_reverse_of_prompt() {
+        let e = env();
+        let mut rng = Pcg32::seeded(2);
+        let b = e.sample_prompts(&mut rng);
+        let tgt = e.target(&b, 5); // prompt index 2
+        let prompt = &b.raw[2 * 5..3 * 5];
+        let rev: Vec<i32> = prompt.iter().rev().copied().collect();
+        assert_eq!(tgt, rev);
+    }
+
+    #[test]
+    fn rewards_batch_consistency() {
+        let e = env();
+        let mut rng = Pcg32::seeded(3);
+        let b = e.sample_prompts(&mut rng);
+        let actions = vec![1i32; 6 * 32];
+        let rs = e.rewards(&b, &actions);
+        assert_eq!(rs.len(), 6);
+        for (ep, &r) in rs.iter().enumerate() {
+            assert_eq!(r, e.episode_reward(&b, ep, &actions[ep * 32..(ep + 1) * 32]));
+        }
+    }
+
+    #[test]
+    fn position_correct_matches_reward() {
+        let e = env();
+        let mut rng = Pcg32::seeded(4);
+        let b = e.sample_prompts(&mut rng);
+        let actions = vec![2i32; 6 * 32];
+        let pc = e.position_correct(&b, &actions);
+        let rs = e.rewards(&b, &actions);
+        for ep in 0..6 {
+            let frac = pc[ep * 5..(ep + 1) * 5].iter().filter(|&&c| c).count() as f64 / 5.0;
+            assert!((frac - rs[ep]).abs() < 1e-12);
+        }
+    }
+}

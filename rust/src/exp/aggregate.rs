@@ -1,0 +1,134 @@
+//! Seed aggregation: mean +/- SEM of learning curves across seeds, aligned
+//! on eval points (all seeds share the same eval cadence).
+
+use crate::trainers::EvalPoint;
+use crate::utils::stats;
+
+/// Mean/SEM of one metric across seeds, per eval point.
+#[derive(Debug, Clone)]
+pub struct AggCurve {
+    pub steps: Vec<usize>,
+    pub forward: Vec<f64>,
+    pub backward_kept: Vec<f64>,
+    pub backward_executed: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub sem: Vec<f64>,
+    /// secondary metric (test error on MNIST)
+    pub mean2: Vec<f64>,
+    pub sem2: Vec<f64>,
+}
+
+pub fn aggregate(curves: &[Vec<EvalPoint>]) -> AggCurve {
+    assert!(!curves.is_empty());
+    let n = curves.iter().map(|c| c.len()).min().unwrap();
+    let mut out = AggCurve {
+        steps: vec![],
+        forward: vec![],
+        backward_kept: vec![],
+        backward_executed: vec![],
+        mean: vec![],
+        sem: vec![],
+        mean2: vec![],
+        sem2: vec![],
+    };
+    for i in 0..n {
+        let ms: Vec<f64> = curves.iter().map(|c| c[i].metric).collect();
+        let m2: Vec<f64> = curves.iter().map(|c| c[i].metric2).collect();
+        out.steps.push(curves[0][i].step);
+        out.forward
+            .push(stats::mean(&curves.iter().map(|c| c[i].forward_samples as f64).collect::<Vec<_>>()));
+        out.backward_kept.push(stats::mean(
+            &curves.iter().map(|c| c[i].backward_kept as f64).collect::<Vec<_>>(),
+        ));
+        out.backward_executed.push(stats::mean(
+            &curves.iter().map(|c| c[i].backward_executed as f64).collect::<Vec<_>>(),
+        ));
+        out.mean.push(stats::mean(&ms));
+        out.sem.push(stats::sem(&ms));
+        out.mean2.push(stats::mean(&m2));
+        out.sem2.push(stats::sem(&m2));
+    }
+    out
+}
+
+impl AggCurve {
+    pub fn final_metric(&self) -> f64 {
+        *self.mean.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn final_metric2(&self) -> f64 {
+        *self.mean2.last().unwrap_or(&f64::NAN)
+    }
+
+    /// First backward-kept count at which `mean` drops to <= target
+    /// (linear scan; None if never reached). Used for Fig 3 time-to-error.
+    pub fn backward_to_reach(&self, target: f64) -> Option<f64> {
+        for i in 0..self.mean.len() {
+            if self.mean[i] <= target {
+                return Some(self.backward_kept[i]);
+            }
+        }
+        None
+    }
+
+    pub fn forward_to_reach(&self, target: f64) -> Option<f64> {
+        for i in 0..self.mean.len() {
+            if self.mean[i] <= target {
+                return Some(self.forward[i]);
+            }
+        }
+        None
+    }
+
+    /// Mean of the metric over all eval points (paper's "average error").
+    pub fn average_metric(&self) -> f64 {
+        stats::mean(&self.mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(step: usize, m: f64) -> EvalPoint {
+        EvalPoint {
+            step,
+            forward_samples: (step * 100) as u64,
+            backward_kept: (step * 3) as u64,
+            backward_executed: (step * 4) as u64,
+            metric: m,
+            metric2: m / 2.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_mean_and_sem() {
+        let a = vec![pt(10, 0.5), pt(20, 0.3)];
+        let b = vec![pt(10, 0.7), pt(20, 0.1)];
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.steps, vec![10, 20]);
+        assert!((agg.mean[0] - 0.6).abs() < 1e-12);
+        assert!((agg.mean[1] - 0.2).abs() < 1e-12);
+        assert!(agg.sem[0] > 0.0);
+        assert!((agg.final_metric() - 0.2).abs() < 1e-12);
+        assert!((agg.final_metric2() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_to_reach() {
+        let a = vec![pt(10, 0.5), pt(20, 0.3), pt(30, 0.1)];
+        let agg = aggregate(&[a]);
+        assert_eq!(agg.backward_to_reach(0.3), Some(60.0));
+        assert_eq!(agg.forward_to_reach(0.3), Some(2000.0));
+        assert_eq!(agg.backward_to_reach(0.05), None);
+        assert!((agg.average_metric() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncates_to_shortest() {
+        let a = vec![pt(10, 0.5), pt(20, 0.3)];
+        let b = vec![pt(10, 0.7)];
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.steps.len(), 1);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tabular-bandit drivers: Propositions 1-3 and the App C.3 alpha* table.
+
+use anyhow::Result;
+
+use crate::bandit_math::{
+    additive_separates, alpha_star, delight_separates, gambling_stats, gradient_geometry,
+};
+use crate::envs::bandit::GamblingBandit;
+use crate::metrics::{ascii_table, CsvWriter};
+use crate::utils::rng::Pcg32;
+
+use super::ExpCtx;
+
+/// Proposition 1 / Lemma 1 / Remark 1: gradient geometry of PG vs the
+/// zero-price Kondo gate across (p, B).
+pub fn prop1(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/prop1/geometry.csv", ctx.cfg.out_dir),
+        &["p", "batch", "cos_pg", "cos_kg", "varperp_pg", "varperp_kg", "bwd_pg", "bwd_kg"],
+    )?;
+    let mut rng = Pcg32::seeded(7);
+    let mut rows = Vec::new();
+    for &p in &[0.02, 0.05, 0.1, 0.3] {
+        for &b in &[25usize, 100, 400] {
+            let g = gradient_geometry(10, p, b, 300, &mut rng);
+            w.rowf(&[
+                p,
+                b as f64,
+                g.cos_pg,
+                g.cos_kg,
+                g.varperp_pg,
+                g.varperp_kg,
+                g.bwd_pg,
+                g.bwd_kg,
+            ])?;
+            rows.push(vec![
+                format!("{p}"),
+                format!("{b}"),
+                format!("{:.3}", g.cos_pg),
+                format!("{:.3}", g.cos_kg),
+                format!("{:.2e}", g.varperp_pg),
+                format!("{:.1e}", g.varperp_kg),
+                format!("{:.0}", g.bwd_pg),
+                format!("{:.1}", g.bwd_kg),
+            ]);
+        }
+    }
+    let mut out = ascii_table(
+        &["p", "B", "cos PG", "cos KG", "var_perp PG", "var_perp KG", "bwd PG", "bwd KG"],
+        &rows,
+    );
+    out.push_str("Prop 1: KG cosine ~ 1 with zero perpendicular variance at ~pB backward passes; PG cosine ~ p*sqrt(B) (Remark 1)\n");
+    Ok(out)
+}
+
+/// Proposition 2: the alpha*(p, K) table (App C.3) + separation checks.
+pub fn prop2(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/prop2/alpha_star.csv", ctx.cfg.out_dir),
+        &["K", "p", "L", "alpha_star", "delight_separates", "additive_at_half"],
+    )?;
+    // the paper's table rows + a below-uniform row
+    let cases = [(10usize, 0.5), (100, 0.5), (100, 0.9), (50_000, 0.5), (20, 0.03)];
+    let mut rows = Vec::new();
+    for &(k, p) in &cases {
+        let l = (p * (k - 1) as f64 / (1.0 - p)).ln();
+        let astar = alpha_star(p, k);
+        let dsep = delight_separates(p, k);
+        let asep = additive_separates(p, k, 0.5);
+        w.row(&[
+            k.to_string(),
+            format!("{p}"),
+            format!("{l:.2}"),
+            format!("{astar:.3}"),
+            dsep.to_string(),
+            asep.to_string(),
+        ])?;
+        rows.push(vec![
+            format!("({k}, {p})"),
+            format!("{l:.1}"),
+            format!("{astar:.2}"),
+            dsep.to_string(),
+            asep.to_string(),
+        ]);
+    }
+    let mut out =
+        ascii_table(&["(K, p)", "L", "alpha*", "delight ok", "additive@0.5 ok"], &rows);
+    out.push_str("paper App C.3: alpha* = 0.69 / 0.82 / 0.87 / 0.92 for the four table rows; delight separates everywhere\n");
+    Ok(out)
+}
+
+/// Proposition 3: gambling false positives vs sigma/delta + amplification.
+pub fn prop3(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/prop3/gambling.csv", ctx.cfg.out_dir),
+        &["sigma_over_delta", "p_false_pos_exact", "p_false_pos_mc", "epsilon", "amplification"],
+    )?;
+    let mut rng = Pcg32::seeded(13);
+    let mut rows = Vec::new();
+    for &ratio in &[0.1, 0.3, 1.0, 3.0, 10.0] {
+        let g = GamblingBandit::new(1.0, 0.5, 0.5 * ratio, 0.01);
+        let st = gambling_stats(&g);
+        // Monte-Carlo check of the closed form
+        let n = 20_000;
+        let b = g.value();
+        let mc = (0..n).filter(|_| g.reward(1, &mut rng) - b > 0.0).count() as f64 / n as f64;
+        w.rowf(&[ratio, st.p_false_positive, mc, g.epsilon, st.amplification])?;
+        rows.push(vec![
+            format!("{ratio}"),
+            format!("{:.4}", st.p_false_positive),
+            format!("{mc:.4}"),
+            format!("{:.2}", st.amplification),
+        ]);
+    }
+    // amplification growth as the policy avoids the arm (part 3)
+    let mut amp_rows = Vec::new();
+    for &eps in &[0.1, 0.01, 0.001] {
+        let g = GamblingBandit::new(1.0, 0.5, 5.0, eps);
+        amp_rows.push(vec![format!("{eps}"), format!("{:.2}", g.gamble_surprisal())]);
+    }
+    let mut out = ascii_table(
+        &["sigma/delta", "Pr(U2>0) exact", "Pr(U2>0) MC", "log(1/eps)"],
+        &rows,
+    );
+    out.push_str(&ascii_table(&["epsilon", "delight amplification"], &amp_rows));
+    out.push_str("Prop 3: false positives vanish for sigma/delta << 1, are Theta(1) for >> 1; amplification log(1/eps) grows as the policy avoids the arm\n");
+    Ok(out)
+}

@@ -1,0 +1,197 @@
+//! Extension drivers beyond the paper's figures: the §7 "natural next
+//! steps" (speculative delight screening, adaptive pricing) and ablations
+//! of this implementation's own design choices (DESIGN.md §7).
+
+use anyhow::Result;
+
+use crate::algo::baseline::Baseline;
+use crate::algo::Method;
+use crate::coordinator::speculative::precision_under_noise;
+use crate::coordinator::{BucketSet, KondoGate, Priority};
+use crate::metrics::{ascii_table, CsvWriter};
+use crate::trainers::{train_mnist, MnistTrainerCfg};
+use crate::utils::rng::Pcg32;
+use crate::utils::stats;
+
+use super::ExpCtx;
+
+fn dgk(rho: f64) -> Method {
+    Method::DgK { gate: KondoGate::rate(rho), priority: Priority::Delight }
+}
+
+fn cfg_of(ctx: &ExpCtx, method: Method, seed: u64) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        method,
+        baseline: Baseline::Expected,
+        lr: ctx.cfg.lr_mnist,
+        steps: ctx.cfg.mnist_steps,
+        eval_every: ctx.cfg.eval_every,
+        eval_size: ctx.cfg.eval_size,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// `spec`: speculative-decoding-for-training (paper §3.2/§7). An online
+/// linear draft predicts delight; the gate screens on the prediction.
+/// Reports learning quality, backward budget, and screening precision of
+/// the draft against exact delight.
+pub fn spec(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/spec/speculative.csv", ctx.cfg.out_dir),
+        &["variant", "seed", "final_test_err", "bwd_kept", "draft_precision"],
+    )?;
+    let mut rows = Vec::new();
+    for (name, draft) in [("exact_delight", false), ("draft_screen", true)] {
+        let mut errs = Vec::new();
+        let mut precs = Vec::new();
+        let mut bwd = 0u64;
+        for s in 0..ctx.cfg.seeds {
+            let mut c = cfg_of(ctx, dgk(0.03), s as u64);
+            c.draft_screen = draft;
+            let res = train_mnist(ctx.eng, &c)?;
+            w.row(&[
+                name.into(),
+                s.to_string(),
+                format!("{:.4}", res.final_test_err),
+                res.ledger.backward_kept.to_string(),
+                format!("{:.3}", res.draft_precision),
+            ])?;
+            errs.push(res.final_test_err);
+            precs.push(res.draft_precision);
+            bwd = res.ledger.backward_kept;
+        }
+        rows.push(vec![
+            name.into(),
+            format!("{:.4}", stats::mean(&errs)),
+            format!("{:.3}", stats::mean(&precs)),
+            bwd.to_string(),
+        ]);
+    }
+    // synthetic precision-vs-noise curve (how approximate may the draft be?)
+    let mut rng = Pcg32::seeded(31);
+    let mut noise_rows = Vec::new();
+    for &nl in &[0.0, 0.25, 0.5, 1.0, 2.0] {
+        let ps: Vec<f64> =
+            (0..50).map(|_| precision_under_noise(100, 0.03, nl, &mut rng)).collect();
+        noise_rows.push(vec![format!("{nl}"), format!("{:.3}", stats::mean(&ps))]);
+    }
+    let mut out = ascii_table(
+        &["screen", "final test err", "screen precision", "bwd kept"],
+        &rows,
+    );
+    out.push_str(&ascii_table(&["rel noise on chi", "top-3% precision"], &noise_rows));
+    out.push_str("paper 3.2: approximate delight preserves most of the gate's value — the draft screen should trade a little error for zero-cost screening\n");
+    Ok(out)
+}
+
+/// `abl_pricing`: per-batch quantile (Algorithm 1 line 5) vs streaming EW
+/// quantile pricing — same target rate, different lambda estimators.
+pub fn abl_pricing(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/abl_pricing/pricing.csv", ctx.cfg.out_dir),
+        &["pricing", "seed", "final_test_err", "gate_rate", "bwd_kept"],
+    )?;
+    let mut rows = Vec::new();
+    for (name, streaming) in [("batch_quantile", false), ("streaming_ew", true)] {
+        let mut errs = Vec::new();
+        let mut rates = Vec::new();
+        for s in 0..ctx.cfg.seeds {
+            let mut c = cfg_of(ctx, dgk(0.03), s as u64);
+            c.streaming_lambda = streaming;
+            let res = train_mnist(ctx.eng, &c)?;
+            w.row(&[
+                name.into(),
+                s.to_string(),
+                format!("{:.4}", res.final_test_err),
+                format!("{:.4}", res.ledger.gate_rate()),
+                res.ledger.backward_kept.to_string(),
+            ])?;
+            errs.push(res.final_test_err);
+            rates.push(res.ledger.gate_rate());
+        }
+        rows.push(vec![
+            name.into(),
+            format!("{:.4}", stats::mean(&errs)),
+            format!("{:.4}", stats::mean(&rates)),
+        ]);
+    }
+    let mut out = ascii_table(&["pricing", "final test err", "empirical gate rate"], &rows);
+    out.push_str("streaming pricing costs O(1) per sample instead of a per-batch sort and should track the same rate\n");
+    Ok(out)
+}
+
+/// `abl_eta`: gate temperature sweep — eta -> 0 is the hard threshold,
+/// large eta forgets delight (the two limits of §2.1).
+pub fn abl_eta(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/abl_eta/eta.csv", ctx.cfg.out_dir),
+        &["eta", "final_test_err", "gate_rate"],
+    )?;
+    let mut rows = Vec::new();
+    for &eta in &[0.0, 0.01, 0.1, 1.0, 10.0] {
+        let m = Method::DgK {
+            gate: KondoGate::rate(0.03).with_eta(eta),
+            priority: Priority::Delight,
+        };
+        let mut errs = Vec::new();
+        let mut rates = Vec::new();
+        for s in 0..ctx.cfg.seeds {
+            let res = train_mnist(ctx.eng, &cfg_of(ctx, m, s as u64))?;
+            errs.push(res.final_test_err);
+            rates.push(res.ledger.gate_rate());
+        }
+        w.rowf(&[eta, stats::mean(&errs), stats::mean(&rates)])?;
+        rows.push(vec![
+            format!("{eta}"),
+            format!("{:.4}", stats::mean(&errs)),
+            format!("{:.4}", stats::mean(&rates)),
+        ]);
+    }
+    let mut out = ascii_table(&["eta", "final test err", "empirical gate rate"], &rows);
+    out.push_str("small eta ~ hard top-rho gate; large eta approaches a constant coin-flip gate (rate -> 0.5, PG-like sampling)\n");
+    Ok(out)
+}
+
+/// `abl_buckets`: bucket-set granularity — executed backward slots per
+/// kept-count under different compiled capacity sets (analytic, plus the
+/// padding overhead actually observed at rho = 3%).
+pub fn abl_buckets(ctx: &ExpCtx) -> Result<String> {
+    let sets: [(&str, Vec<usize>); 4] = [
+        ("full_only", vec![100]),
+        ("pow2", vec![4, 8, 16, 32, 64, 100]),
+        ("dense", vec![2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 100]),
+        ("coarse", vec![25, 100]),
+    ];
+    let mut w = CsvWriter::create(
+        format!("{}/abl_buckets/buckets.csv", ctx.cfg.out_dir),
+        &["set", "kept", "executed", "overhead"],
+    )?;
+    let mut rows = Vec::new();
+    for (name, caps) in &sets {
+        let b = BucketSet::new(caps.clone()).unwrap();
+        for &kept in &[1usize, 3, 10, 30, 100] {
+            let ex = b.executed_slots(kept);
+            let ovh = ex as f64 / kept as f64;
+            w.row(&[
+                name.to_string(),
+                kept.to_string(),
+                ex.to_string(),
+                format!("{ovh:.2}"),
+            ])?;
+            if kept == 3 {
+                rows.push(vec![
+                    name.to_string(),
+                    ex.to_string(),
+                    format!("{ovh:.2}x"),
+                ]);
+            }
+        }
+    }
+    let mut out = ascii_table(
+        &["bucket set", "slots executed for 3 kept", "overhead"],
+        &rows,
+    );
+    out.push_str("the compiled set {4,8,...,100} keeps rho=3% padding overhead at 1.33x vs 33x for a single full-batch executable — why the gate's savings survive static shapes\n");
+    Ok(out)
+}

@@ -1,0 +1,446 @@
+//! MNIST experiment drivers: Figs 1-6, 11-17 of the paper.
+//! Each driver writes CSVs under `results/<id>/` and returns a printed
+//! summary whose rows mirror the paper's series.
+
+use anyhow::Result;
+
+use crate::algo::baseline::Baseline;
+use crate::algo::Method;
+use crate::coordinator::{KondoGate, Priority};
+use crate::envs::mnist::RewardNoise;
+use crate::metrics::{ascii_curve, ascii_table, CsvWriter};
+use crate::trainers::{train_mnist, MnistRunResult, MnistTrainerCfg};
+
+use super::aggregate::{aggregate, AggCurve};
+use super::ExpCtx;
+
+fn base_cfg(ctx: &ExpCtx, method: Method, seed: u64) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        method,
+        baseline: Baseline::Expected,
+        lr: ctx.cfg.lr_mnist,
+        steps: ctx.cfg.mnist_steps,
+        eval_every: ctx.cfg.eval_every,
+        eval_size: ctx.cfg.eval_size,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Run one method across seeds, returning per-seed curves + aggregate.
+fn run_seeds(
+    ctx: &ExpCtx,
+    mk: impl Fn(u64) -> MnistTrainerCfg,
+) -> Result<(Vec<MnistRunResult>, AggCurve)> {
+    let mut runs = Vec::new();
+    for s in 0..ctx.cfg.seeds {
+        runs.push(train_mnist(ctx.eng, &mk(s as u64))?);
+    }
+    let agg = aggregate(&runs.iter().map(|r| r.curve.clone()).collect::<Vec<_>>());
+    Ok((runs, agg))
+}
+
+fn dgk(rho: f64) -> Method {
+    Method::DgK { gate: KondoGate::rate(rho), priority: Priority::Delight }
+}
+
+fn write_curves(ctx: &ExpCtx, id: &str, series: &[(&str, &AggCurve)]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        format!("{}/{}/curves.csv", ctx.cfg.out_dir, id),
+        &[
+            "series", "step", "forward", "backward_kept", "backward_executed", "train_err",
+            "train_sem", "test_err", "test_sem",
+        ],
+    )?;
+    for (name, agg) in series {
+        for i in 0..agg.steps.len() {
+            w.row(&[
+                name.to_string(),
+                agg.steps[i].to_string(),
+                format!("{}", agg.forward[i]),
+                format!("{}", agg.backward_kept[i]),
+                format!("{}", agg.backward_executed[i]),
+                format!("{}", agg.mean[i]),
+                format!("{}", agg.sem[i]),
+                format!("{}", agg.mean2[i]),
+                format!("{}", agg.sem2[i]),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig 1 (+ Fig 12 twin): PG vs DG vs DG-K(rho=0.03), forward & backward space.
+pub fn fig1(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::new();
+    let mut series = Vec::new();
+    for (name, m) in [("pg", Method::Pg), ("dg", Method::Dg), ("dgk_0.03", dgk(0.03))] {
+        let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
+        out.push_str(&ascii_curve(
+            &format!("{name} train err"),
+            &agg.steps.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+            &agg.mean,
+            50,
+        ));
+        series.push((name.to_string(), agg));
+    }
+    let refs: Vec<(&str, &AggCurve)> = series.iter().map(|(n, a)| (n.as_str(), a)).collect();
+    write_curves(ctx, "fig1", &refs)?;
+
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(n, a)| {
+            vec![
+                n.clone(),
+                format!("{:.4}", a.final_metric()),
+                format!("{:.4}", a.final_metric2()),
+                format!("{:.0}", a.backward_kept.last().unwrap_or(&0.0)),
+                format!("{:.0}", a.forward.last().unwrap_or(&0.0)),
+            ]
+        })
+        .collect();
+    out.push_str(&ascii_table(
+        &["method", "final train err", "final test err", "bwd samples", "fwd samples"],
+        &rows,
+    ));
+    let bwd_pg = series[0].1.backward_kept.last().copied().unwrap_or(1.0);
+    let bwd_kg = series[2].1.backward_kept.last().copied().unwrap_or(1.0).max(1.0);
+    out.push_str(&format!(
+        "DG-K backward reduction vs PG/DG: {:.0}x (paper: ~33x at rho=0.03; two orders of magnitude in bwd-space curves)\n",
+        bwd_pg / bwd_kg
+    ));
+    Ok(out)
+}
+
+/// Fig 2: gate-rate sweep rho in {0.01 .. 1.0}.
+pub fn fig2(ctx: &ExpCtx) -> Result<String> {
+    let rhos = [0.01, 0.03, 0.05, 0.1, 0.2, 0.5, 1.0];
+    let mut series = Vec::new();
+    for &rho in &rhos {
+        let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, dgk(rho), s))?;
+        series.push((format!("rho_{rho}"), agg));
+    }
+    let refs: Vec<(&str, &AggCurve)> = series.iter().map(|(n, a)| (n.as_str(), a)).collect();
+    write_curves(ctx, "fig2", &refs)?;
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(n, a)| {
+            vec![
+                n.clone(),
+                format!("{:.4}", a.final_metric2()),
+                format!("{:.0}", a.backward_kept.last().unwrap_or(&0.0)),
+            ]
+        })
+        .collect();
+    let mut out = ascii_table(&["rho", "final test err", "bwd samples"], &rows);
+    let b0 = series[0].1.backward_kept.last().copied().unwrap_or(1.0).max(1.0);
+    let b1 = series.last().unwrap().1.backward_kept.last().copied().unwrap_or(1.0);
+    out.push_str(&format!(
+        "rho=0.01 uses {:.0}x fewer backward passes than rho=1.0 (paper: ~100x)\n",
+        b1 / b0
+    ));
+    Ok(out)
+}
+
+/// Fig 3: compute speedup vs PG as a function of backward/forward cost ratio.
+pub fn fig3(ctx: &ExpCtx) -> Result<String> {
+    let mut curves = Vec::new();
+    for (name, m) in [("pg", Method::Pg), ("dg", Method::Dg), ("dgk_0.03", dgk(0.03))] {
+        let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
+        curves.push((name, agg));
+    }
+    // target error: the paper uses 5% (reachable at the paper preset's 10k
+    // steps); at scaled presets use the tightest level ALL methods reach so
+    // the speedup ratio is always defined.
+    let worst_final =
+        curves.iter().map(|(_, a)| a.final_metric2()).fold(0.0f64, f64::max);
+    let target = (worst_final * 1.05 + 1e-4).max(0.05);
+    let ratios = [0.0, 1.0, 2.0, 4.0, 8.0];
+    let mut w = CsvWriter::create(
+        format!("{}/fig3/speedup.csv", ctx.cfg.out_dir),
+        &["cost_ratio", "method", "compute_to_target", "speedup_vs_pg"],
+    )?;
+    let mut rows = Vec::new();
+    for &r in &ratios {
+        let cost = |agg: &AggCurve| -> Option<f64> {
+            // total = fwd + r * bwd at the first eval point reaching target
+            for i in 0..agg.mean2.len() {
+                if agg.mean2[i] <= target {
+                    return Some(agg.forward[i] + r * agg.backward_kept[i]);
+                }
+            }
+            None
+        };
+        let pg_cost = cost(&curves[0].1);
+        for (name, agg) in &curves {
+            let c = cost(agg);
+            let speedup = match (pg_cost, c) {
+                (Some(p), Some(c)) => p / c,
+                _ => f64::NAN,
+            };
+            w.row(&[
+                format!("{r}"),
+                name.to_string(),
+                c.map(|v| format!("{v:.0}")).unwrap_or("unreached".into()),
+                format!("{speedup:.2}"),
+            ])?;
+            rows.push(vec![format!("{r}"), name.to_string(), format!("{speedup:.2}")]);
+        }
+    }
+    let mut out = ascii_table(&["cost ratio", "method", "speedup vs PG"], &rows);
+    out.push_str(
+        "expected shape: DG ~constant speedup; DG-K speedup grows with the cost ratio (paper: 6x at ratio 4)\n",
+    );
+    Ok(out)
+}
+
+/// Fig 4 (+ Fig 17): delight-noise and logit-noise robustness for DG vs DG-K.
+pub fn fig4(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/fig4/noise.csv", ctx.cfg.out_dir),
+        &["kind", "sigma", "method", "final_test_err", "sem"],
+    )?;
+    let methods: [(&str, Method); 2] = [("dg", Method::Dg), ("dgk_0.03", dgk(0.03))];
+    let mut rows = Vec::new();
+    // (a) relative delight noise; (b) logit noise; (c) absolute delight (Fig 17)
+    let sweeps: [(&str, Vec<f64>); 3] = [
+        ("delight_rel", vec![0.0, 0.25, 0.5, 1.0, 2.0]),
+        ("logit", vec![0.0, 0.5, 1.0, 2.0]),
+        ("delight_abs", vec![0.0, 0.5, 1.0, 2.0]),
+    ];
+    for (kind, sigmas) in &sweeps {
+        for &sigma in sigmas {
+            for (name, m) in methods.iter() {
+                let (_, agg) = run_seeds(ctx, |s| {
+                    let mut c = base_cfg(ctx, *m, s);
+                    match *kind {
+                        "delight_rel" => c.delight_noise_rel = sigma,
+                        "logit" => c.logit_noise = sigma,
+                        _ => c.delight_noise_abs = sigma,
+                    }
+                    c
+                })?;
+                let e = agg.final_metric2();
+                let sem = *agg.sem2.last().unwrap_or(&0.0);
+                w.row(&[
+                    kind.to_string(),
+                    format!("{sigma}"),
+                    name.to_string(),
+                    format!("{e:.4}"),
+                    format!("{sem:.4}"),
+                ])?;
+                rows.push(vec![
+                    kind.to_string(),
+                    format!("{sigma}"),
+                    name.to_string(),
+                    format!("{e:.4}"),
+                ]);
+            }
+        }
+    }
+    let mut out = ascii_table(&["noise kind", "sigma", "method", "final test err"], &rows);
+    out.push_str("expected shape: DG tolerates ~50% relative delight noise / logit sigma ~1; DG-K degrades earlier\n");
+    Ok(out)
+}
+
+/// Fig 5: priority-signal comparison (backward budget sweep + additive alpha).
+pub fn fig5(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/fig5/priority.csv", ctx.cfg.out_dir),
+        &["panel", "param", "priority", "final_test_err"],
+    )?;
+    let mut rows = Vec::new();
+    // (a) error vs backward batch size, by priority
+    let priorities = [
+        Priority::Delight,
+        Priority::Advantage,
+        Priority::Surprisal,
+        Priority::AbsAdvantage,
+        Priority::Uniform,
+    ];
+    for &kept in &[3usize, 10, 30] {
+        let rho = kept as f64 / 100.0;
+        for pr in priorities {
+            let m = Method::DgK { gate: KondoGate::rate(rho), priority: pr };
+            let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
+            let e = agg.final_metric2();
+            w.row(&[
+                "bwd_batch".into(),
+                kept.to_string(),
+                pr.name(),
+                format!("{e:.4}"),
+            ])?;
+            rows.push(vec!["bwd".into(), kept.to_string(), pr.name(), format!("{e:.4}")]);
+        }
+    }
+    // (b) additive alpha sweep at rho = 0.03 (delight as the flat reference)
+    for &alpha in &[0.0, 0.25, 0.5, 0.75, 1.0] {
+        let m = Method::DgK {
+            gate: KondoGate::rate(0.03),
+            priority: Priority::Additive { alpha },
+        };
+        let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
+        let e = agg.final_metric2();
+        w.row(&["alpha".into(), format!("{alpha}"), format!("additive_{alpha}"), format!("{e:.4}")])?;
+        rows.push(vec!["alpha".into(), format!("{alpha}"), "additive".into(), format!("{e:.4}")]);
+    }
+    let mut out = ascii_table(&["panel", "param", "priority", "final test err"], &rows);
+    out.push_str("expected shape: delight robust across budgets; surprisal-only fails; additive collapses at low alpha (Prop 2)\n");
+    Ok(out)
+}
+
+/// Fig 6: gambling pathology on MNIST (homoskedastic vs gambling noise).
+pub fn fig6(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/fig6/gambling.csv", ctx.cfg.out_dir),
+        &["noise_kind", "sigma", "method", "final_test_err"],
+    )?;
+    let mut rows = Vec::new();
+    let methods: [(&str, Method); 2] = [("pg", Method::Pg), ("dg", Method::Dg)];
+    for &sigma in &[0.0, 0.5, 1.0, 2.0, 5.0] {
+        for (name, m) in methods.iter() {
+            let (_, agg) = run_seeds(ctx, |s| {
+                let mut c = base_cfg(ctx, *m, s);
+                c.noise = RewardNoise::homoskedastic(sigma);
+                c
+            })?;
+            let e = agg.final_metric2();
+            w.row(&["homoskedastic".into(), format!("{sigma}"), name.to_string(), format!("{e:.4}")])?;
+            rows.push(vec!["homo".into(), format!("{sigma}"), name.to_string(), format!("{e:.4}")]);
+        }
+    }
+    for &sigma in &[0.0, 0.5, 1.0, 1.5, 2.0] {
+        for (name, m) in methods.iter() {
+            let (_, agg) = run_seeds(ctx, |s| {
+                let mut c = base_cfg(ctx, *m, s);
+                c.noise = RewardNoise::gambling(sigma);
+                c
+            })?;
+            let e = agg.final_metric2();
+            w.row(&["gambling".into(), format!("{sigma}"), name.to_string(), format!("{e:.4}")])?;
+            rows.push(vec!["gamble".into(), format!("{sigma}"), name.to_string(), format!("{e:.4}")]);
+        }
+    }
+    let mut out = ascii_table(&["kind", "sigma", "method", "final test err"], &rows);
+    out.push_str("expected shape: homoskedastic degrades PG and DG together; gambling collapses DG near sigma_G ~ 1 while PG degrades gracefully (Prop 3)\n");
+    Ok(out)
+}
+
+/// Fig 11: learning-rate sweep for PG / DG / DG-K.
+pub fn fig11(ctx: &ExpCtx) -> Result<String> {
+    let mut w = CsvWriter::create(
+        format!("{}/fig11/lr.csv", ctx.cfg.out_dir),
+        &["lr", "method", "final_train_err", "final_test_err"],
+    )?;
+    let mut rows = Vec::new();
+    for &lr in &[1e-4, 3e-4, 1e-3, 3e-3] {
+        for (name, m) in [("pg", Method::Pg), ("dg", Method::Dg), ("dgk_0.03", dgk(0.03))] {
+            let (_, agg) = run_seeds(ctx, |s| {
+                let mut c = base_cfg(ctx, m, s);
+                c.lr = lr;
+                c
+            })?;
+            w.row(&[
+                format!("{lr}"),
+                name.to_string(),
+                format!("{:.4}", agg.final_metric()),
+                format!("{:.4}", agg.final_metric2()),
+            ])?;
+            rows.push(vec![
+                format!("{lr}"),
+                name.to_string(),
+                format!("{:.4}", agg.final_metric()),
+                format!("{:.4}", agg.final_metric2()),
+            ]);
+        }
+    }
+    let mut out = ascii_table(&["lr", "method", "train err", "test err"], &rows);
+    out.push_str("expected shape: shared optimum near lr=1e-3; train and test track closely\n");
+    Ok(out)
+}
+
+/// Figs 13-14: baseline robustness (zero / constant / expected / oracle).
+pub fn fig13(ctx: &ExpCtx) -> Result<String> {
+    let baselines = [
+        Baseline::Zero,
+        Baseline::Constant(0.5),
+        Baseline::Expected,
+        Baseline::Oracle,
+    ];
+    let mut w = CsvWriter::create(
+        format!("{}/fig13/baselines.csv", ctx.cfg.out_dir),
+        &["baseline", "method", "final_test_err", "bwd_samples"],
+    )?;
+    let mut rows = Vec::new();
+    for bl in baselines {
+        for (name, m) in [("pg", Method::Pg), ("dg", Method::Dg), ("dgk_0.03", dgk(0.03))] {
+            let (_, agg) = run_seeds(ctx, |s| {
+                let mut c = base_cfg(ctx, m, s);
+                c.baseline = bl;
+                c
+            })?;
+            w.row(&[
+                bl.name(),
+                name.to_string(),
+                format!("{:.4}", agg.final_metric2()),
+                format!("{:.0}", agg.backward_kept.last().unwrap_or(&0.0)),
+            ])?;
+            rows.push(vec![
+                bl.name(),
+                name.to_string(),
+                format!("{:.4}", agg.final_metric2()),
+                format!("{:.0}", agg.backward_kept.last().unwrap_or(&0.0)),
+            ]);
+        }
+    }
+    let mut out = ascii_table(&["baseline", "method", "test err", "bwd samples"], &rows);
+    out.push_str("expected shape: DG-K matches DG in fwd space and dominates in bwd space under all baselines\n");
+    Ok(out)
+}
+
+/// Figs 15-16: gate selection profile -- ECDF of pi(y*) for kept vs skipped
+/// samples at three training stages, plus (y, a, p) exemplars.
+pub fn fig15(ctx: &ExpCtx) -> Result<String> {
+    let steps = ctx.cfg.mnist_steps;
+    let stages = vec![steps / 10, steps / 2, steps];
+    let mut cfg = base_cfg(ctx, dgk(0.03), 0);
+    cfg.gate_profile_steps = stages.clone();
+    let res = train_mnist(ctx.eng, &cfg)?;
+
+    let mut w = CsvWriter::create(
+        format!("{}/fig15/gate_profile.csv", ctx.cfg.out_dir),
+        &["stage_step", "group", "p_star"],
+    )?;
+    let mut out = String::new();
+    for gp in &res.gate_profiles {
+        for &p in &gp.kept_p {
+            w.row(&[gp.step.to_string(), "kept".into(), format!("{p:.5}")])?;
+        }
+        for &p in &gp.skipped_p {
+            w.row(&[gp.step.to_string(), "skipped".into(), format!("{p:.5}")])?;
+        }
+        let mk = crate::utils::stats::mean(&gp.kept_p);
+        let ms = crate::utils::stats::mean(&gp.skipped_p);
+        out.push_str(&format!(
+            "step {:>5}: mean pi(y*) kept {:.3} vs skipped {:.3} ({} kept / {} skipped)\n",
+            gp.step,
+            mk,
+            ms,
+            gp.kept_p.len(),
+            gp.skipped_p.len()
+        ));
+        // Fig 16 exemplars: (y, a, p) of first few kept / skipped
+        for (label, samples) in
+            [("kept", &gp.kept_samples), ("skipped", &gp.skipped_samples)]
+        {
+            let ex: Vec<String> = samples
+                .iter()
+                .take(5)
+                .map(|(y, a, p)| format!("y={y} a={a} p={p:.2}"))
+                .collect();
+            out.push_str(&format!("  {label:>8}: {}\n", ex.join(" | ")));
+        }
+    }
+    out.push_str("expected shape: kept samples have systematically lower pi(y*) (the learning frontier) once the policy is past the uniform stage\n");
+    Ok(out)
+}

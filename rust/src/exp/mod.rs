@@ -1,0 +1,88 @@
+//! Experiment harness: one driver per paper figure/table (DESIGN.md §3).
+//!
+//! `run(id, ctx)` dispatches to the driver, which writes CSVs under
+//! `results/<id>/` and returns a human-readable summary whose rows mirror
+//! the paper's series. `run_all` walks every experiment.
+
+pub mod aggregate;
+pub mod bandit_figs;
+pub mod extensions;
+pub mod mnist_figs;
+pub mod reversal_figs;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExpConfig;
+use crate::runtime::Engine;
+
+pub struct ExpCtx<'a> {
+    pub eng: &'a Engine,
+    pub cfg: &'a ExpConfig,
+}
+
+/// Every experiment id, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "prop1", "prop2", "prop3", "fig8",
+    "fig9", "fig10", "fig11", "fig13", "fig15",
+];
+
+/// Extensions beyond the paper (its §7 next steps + our ablations); run
+/// individually or via `repro exp extras`.
+pub const EXTRAS: &[&str] = &["spec", "abl_pricing", "abl_eta", "abl_buckets"];
+
+/// What each id reproduces (for `repro list`).
+pub fn describe(id: &str) -> &'static str {
+    match id {
+        "fig1" => "MNIST: PG vs DG vs DG-K(rho=0.03), fwd & bwd space (+Fig 12 test-error twin)",
+        "fig2" => "MNIST: gate-rate sweep rho in {0.01..1.0}",
+        "fig3" => "MNIST: compute speedup vs backward/forward cost ratio",
+        "fig4" => "MNIST: delight-noise & logit-noise robustness (+Fig 17 absolute twin)",
+        "fig5" => "MNIST: priority signals (bwd budget sweep + additive alpha)",
+        "fig6" => "MNIST: gambling pathology (sigma_R vs sigma_G)",
+        "prop1" => "bandit: Kondo gate Pareto improvement (direction/variance/cost)",
+        "prop2" => "bandit: delight sign-consistency + alpha*(p,K) table (App C.3)",
+        "prop3" => "bandit: gambling pathology regimes",
+        "fig8" => "reversal: learning curves H=10 M=2, six methods",
+        "fig9" => "reversal: vocab scaling M* (+Figs 19/21)",
+        "fig10" => "reversal: length scaling H* (+Figs 18/20)",
+        "fig11" => "MNIST: learning-rate sweep",
+        "fig13" => "MNIST: baseline robustness (+Fig 14 bwd-space twin)",
+        "fig15" => "MNIST: gate selection profile, kept vs skipped (+Fig 16 exemplars)",
+        "spec" => "EXT: speculative delight screening via an online linear draft (paper 3.2/7)",
+        "abl_pricing" => "EXT: per-batch quantile vs streaming EW pricing of lambda",
+        "abl_eta" => "EXT: gate temperature sweep (hard threshold <-> constant gate)",
+        "abl_buckets" => "EXT: backward bucket granularity vs padding overhead",
+        _ => "unknown",
+    }
+}
+
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<String> {
+    let t0 = std::time::Instant::now();
+    let body = match id {
+        "fig1" => mnist_figs::fig1(ctx)?,
+        "fig2" => mnist_figs::fig2(ctx)?,
+        "fig3" => mnist_figs::fig3(ctx)?,
+        "fig4" => mnist_figs::fig4(ctx)?,
+        "fig5" => mnist_figs::fig5(ctx)?,
+        "fig6" => mnist_figs::fig6(ctx)?,
+        "fig11" => mnist_figs::fig11(ctx)?,
+        "fig13" => mnist_figs::fig13(ctx)?,
+        "fig15" => mnist_figs::fig15(ctx)?,
+        "prop1" => bandit_figs::prop1(ctx)?,
+        "prop2" => bandit_figs::prop2(ctx)?,
+        "prop3" => bandit_figs::prop3(ctx)?,
+        "fig8" => reversal_figs::fig8(ctx)?,
+        "fig9" => reversal_figs::fig9(ctx)?,
+        "fig10" => reversal_figs::fig10(ctx)?,
+        "spec" => extensions::spec(ctx)?,
+        "abl_pricing" => extensions::abl_pricing(ctx)?,
+        "abl_eta" => extensions::abl_eta(ctx)?,
+        "abl_buckets" => extensions::abl_buckets(ctx)?,
+        other => bail!("unknown experiment '{other}' (see `repro list`)"),
+    };
+    Ok(format!(
+        "=== {id}: {desc} ===\n{body}[{id} done in {:.1}s]\n",
+        t0.elapsed().as_secs_f64(),
+        desc = describe(id),
+    ))
+}

@@ -1,0 +1,21 @@
+//! `kondo`: Rust + JAX + Pallas reproduction of *"Does This Gradient Spark
+//! Joy?"* -- the Kondo gate over the Delightful Policy Gradient.
+//!
+//! Three-layer architecture (see DESIGN.md): Pallas kernels (L1) and JAX
+//! models (L2) are AOT-compiled to HLO-text artifacts at build time; this
+//! crate is the L3 coordinator that owns the training loop, the Kondo gate,
+//! the bucketed backward executor, every environment/substrate, and the
+//! experiment harness that regenerates each figure of the paper.
+
+pub mod algo;
+pub mod bandit_math;
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod trainers;
+pub mod utils;

@@ -1,0 +1,226 @@
+//! `repro` — the launcher for the kondo reproduction.
+//!
+//! Subcommands:
+//!   repro list                          — experiments and what they reproduce
+//!   repro exp <id>|all [overrides]     — regenerate a paper figure/table
+//!   repro train mnist|reversal [...]   — run one training job
+//!   repro stats                         — artifact inventory
+//!
+//! Overrides are `key=value` pairs over configs/default.toml (seeds,
+//! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
+//! out_dir, artifacts_dir), plus `preset=scaled|paper` to load
+//! configs/<preset>.toml first.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::config::ExpConfig;
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::exp::{self, ExpCtx};
+use kondo::runtime::Engine;
+use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &[String]) -> Result<ExpConfig> {
+    let mut cfg = ExpConfig::default();
+    // default preset file if present
+    let default_path = Path::new("configs/default.toml");
+    if default_path.exists() {
+        cfg = ExpConfig::load(default_path)?;
+    }
+    // preset=NAME loads configs/NAME.toml on top
+    for a in args {
+        if let Some(name) = a.strip_prefix("preset=") {
+            let p = format!("configs/{name}.toml");
+            let doc = kondo::utils::toml::TomlDoc::parse(&std::fs::read_to_string(&p)?)
+                .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+            cfg.apply_doc(&doc);
+        }
+    }
+    const CFG_KEYS: &[&str] = &[
+        "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
+        "lr_rev", "out_dir", "artifacts_dir",
+    ];
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            if CFG_KEYS.contains(&k) {
+                cfg.apply_override(k, v)?;
+            }
+        }
+    }
+    Ok(cfg)
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            println!("experiments (repro exp <id>):");
+            for id in exp::ALL {
+                println!("  {id:<12} {}", exp::describe(id));
+            }
+            println!("extensions (repro exp <id> | repro exp extras):");
+            for id in exp::EXTRAS {
+                println!("  {id:<12} {}", exp::describe(id));
+            }
+            Ok(())
+        }
+        Some("exp") => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            let cfg = load_config(&args[2.min(args.len())..])?;
+            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let ctx = ExpCtx { eng: &eng, cfg: &cfg };
+            let ids: Vec<&str> = match id {
+                "all" => exp::ALL.to_vec(),
+                "extras" => exp::EXTRAS.to_vec(),
+                other => vec![other],
+            };
+            for i in ids {
+                let summary = exp::run(i, &ctx)?;
+                println!("{summary}");
+            }
+            print_artifact_stats(&eng);
+            Ok(())
+        }
+        Some("train") => {
+            let what = args.get(1).map(String::as_str).unwrap_or("mnist");
+            let rest = &args[2.min(args.len())..];
+            let cfg = load_config(rest)?;
+            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let method = parse_method(rest)?;
+            match what {
+                "mnist" => {
+                    let tcfg = MnistTrainerCfg {
+                        method,
+                        baseline: Baseline::Expected,
+                        lr: cfg.lr_mnist,
+                        steps: cfg.mnist_steps,
+                        eval_every: cfg.eval_every,
+                        eval_size: cfg.eval_size,
+                        seed: arg_u64(rest, "seed").unwrap_or(0),
+                        ..Default::default()
+                    };
+                    let res = train_mnist(&eng, &tcfg)?;
+                    println!(
+                        "final train err {:.4} | test err {:.4} | fwd {} bwd_kept {} bwd_exec {} (gate rate {:.3}, padding {:.1}%)",
+                        res.final_train_err,
+                        res.final_test_err,
+                        res.ledger.forward_samples,
+                        res.ledger.backward_kept,
+                        res.ledger.backward_executed,
+                        res.ledger.gate_rate(),
+                        100.0 * res.ledger.padding_overhead(),
+                    );
+                }
+                "reversal" => {
+                    let tcfg = ReversalTrainerCfg {
+                        method,
+                        lr: cfg.lr_rev,
+                        steps: cfg.rev_steps,
+                        h: arg_u64(rest, "h").unwrap_or(5) as usize,
+                        m: arg_u64(rest, "m").unwrap_or(2) as usize,
+                        seed: arg_u64(rest, "seed").unwrap_or(0),
+                        eval_every: (cfg.rev_steps / 20).max(1),
+                        inner_epochs: arg_u64(rest, "epochs").unwrap_or(1) as usize,
+                    };
+                    let res = train_reversal(&eng, &tcfg)?;
+                    println!(
+                        "final reward {:.4} | mean reward {:.4} | fwd {} bwd_kept {} bwd_exec {}",
+                        res.final_reward,
+                        res.mean_reward,
+                        res.ledger.forward_samples,
+                        res.ledger.backward_kept,
+                        res.ledger.backward_executed,
+                    );
+                }
+                other => bail!("unknown trainer '{other}' (mnist|reversal)"),
+            }
+            print_artifact_stats(&eng);
+            Ok(())
+        }
+        Some("stats") => {
+            let cfg = load_config(&args[1.min(args.len())..])?;
+            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let man = eng.manifest();
+            println!("platform: {}", eng.platform());
+            println!("artifacts ({}):", man.artifacts.len());
+            for (name, sig) in &man.artifacts {
+                let in_el: usize = sig.inputs.iter().map(|t| t.numel()).sum();
+                let out_el: usize = sig.outputs.iter().map(|t| t.numel()).sum();
+                println!(
+                    "  {name:<18} {} inputs ({in_el:>8} elems) -> {} outputs ({out_el:>8} elems)",
+                    sig.inputs.len(),
+                    sig.outputs.len()
+                );
+            }
+            for (model, rules) in &man.models {
+                let n: usize = rules.iter().map(|r| r.numel()).sum();
+                println!("model {model}: {} tensors, {} params", rules.len(), n);
+            }
+            Ok(())
+        }
+        Some("help") | None => {
+            println!(
+                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg"
+            );
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}' (try `repro help`)"),
+    }
+}
+
+fn arg_u64(args: &[String], key: &str) -> Option<u64> {
+    args.iter()
+        .find_map(|a| a.strip_prefix(&format!("{key}=")))
+        .and_then(|v| v.parse().ok())
+}
+
+fn parse_method(args: &[String]) -> Result<Method> {
+    let name = args
+        .iter()
+        .find_map(|a| a.strip_prefix("method="))
+        .unwrap_or("dg");
+    Ok(match name {
+        "pg" => Method::Pg,
+        "dg" => Method::Dg,
+        "ppo" => Method::Ppo { eps: 0.2 },
+        "pmpo" => Method::Pmpo { alpha: 1.0 },
+        "dgk_lam0" => {
+            Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight }
+        }
+        other => {
+            if let Some(rho) = other.strip_prefix("dgk_rho") {
+                let rho: f64 = rho.parse()?;
+                Method::DgK { gate: KondoGate::rate(rho), priority: Priority::Delight }
+            } else {
+                bail!("unknown method '{other}' (pg|dg|ppo|pmpo|dgk_lam0|dgk_rho<r>)")
+            }
+        }
+    })
+}
+
+fn print_artifact_stats(eng: &Engine) {
+    let stats = eng.stats();
+    if stats.is_empty() {
+        return;
+    }
+    println!("\nartifact timings:");
+    for (name, st) in stats {
+        if st.calls > 0 {
+            println!(
+                "  {name:<18} {:>6} calls, {:>8.2} ms/call (compile {:.2}s)",
+                st.calls,
+                1e3 * st.total_secs / st.calls as f64,
+                st.compile_secs
+            );
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Result emission: CSV files under `results/<exp>/` plus ASCII rendering
+//! of curves and tables in the paper's own rows/series.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A CSV writer with a fixed header.
+pub struct CsvWriter {
+    path: PathBuf,
+    file: fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { path, file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "column count mismatch in {}", self.path.display());
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Render an ASCII table (paper-style rows).
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let parts: Vec<String> =
+            cells.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}", w = w)).collect();
+        let _ = writeln!(out, "| {} |", parts.join(" | "));
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let _ = writeln!(
+        out,
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Render a log-scale-x ASCII sparkline of (x, y) series, for terminal
+/// inspection of learning curves.
+pub fn ascii_curve(name: &str, xs: &[f64], ys: &[f64], width: usize) -> String {
+    if xs.is_empty() {
+        return format!("{name}: (empty)\n");
+    }
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut s = String::new();
+    let n = xs.len();
+    let _ = write!(s, "{name:<24} [{ymin:.4} .. {ymax:.4}] ");
+    for i in 0..width.min(n) {
+        let idx = i * (n - 1) / width.max(1).min(n - 1).max(1);
+        let y = ys[idx.min(n - 1)];
+        let g = if (ymax - ymin).abs() < 1e-12 {
+            0
+        } else {
+            (((y - ymin) / (ymax - ymin)) * (glyphs.len() - 1) as f64).round() as usize
+        };
+        s.push(glyphs[g.min(glyphs.len() - 1)]);
+    }
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join(format!("kondo_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        w.row(&["x".into(), "y".into()]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,y\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join(format!("kondo_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.rowf(&[1.0]);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = ascii_table(
+            &["method", "err"],
+            &[vec!["pg".into(), "0.05".into()], vec!["dgk".into(), "0.005".into()]],
+        );
+        assert!(t.contains("method"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn curve_renders() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (-x / 5.0).exp()).collect();
+        let s = ascii_curve("test", &xs, &ys, 40);
+        assert!(s.contains("test"));
+    }
+}

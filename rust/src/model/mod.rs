@@ -1,0 +1,186 @@
+//! Model parameter store: named tensors in artifact-argument order.
+//!
+//! The Rust side owns parameters (the Python layer only defines shapes and
+//! init rules in the manifest); every training step marshals them as the
+//! leading artifact inputs and applies optimizer updates to the host copy.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, InitKind, InitRule};
+use crate::utils::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    rules: Vec<InitRule>,
+    tensors: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Initialize parameters from manifest init rules, deterministically in
+    /// `seed` (normal / zeros / ones — mirrors python init exactly in law).
+    pub fn init(rules: &[InitRule], seed: u64) -> ParamStore {
+        let mut rng = Pcg32::new(seed, 0x9d2c5680);
+        let tensors = rules
+            .iter()
+            .map(|r| {
+                let n = r.numel();
+                match r.kind {
+                    InitKind::Normal { scale } => {
+                        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                    }
+                    InitKind::Zeros => vec![0.0; n],
+                    InitKind::Ones => vec![1.0; n],
+                }
+            })
+            .collect();
+        ParamStore { rules: rules.to_vec(), tensors }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn n_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn rules(&self) -> &[InitRule] {
+        &self.rules
+    }
+
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.tensors[i]
+    }
+
+    pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.tensors[i]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&[f32]> {
+        self.rules
+            .iter()
+            .position(|r| r.name == name)
+            .map(|i| self.tensors[i].as_slice())
+    }
+
+    /// Parameters as the leading artifact inputs.
+    pub fn as_inputs(&self) -> Vec<HostTensor> {
+        self.rules
+            .iter()
+            .zip(&self.tensors)
+            .map(|(r, t)| HostTensor::f32(&r.shape, t.clone()))
+            .collect()
+    }
+
+    /// Validate a gradient tensor list (bwd artifact outputs after the loss).
+    pub fn check_grads(&self, grads: &[HostTensor]) -> Result<()> {
+        if grads.len() != self.tensors.len() {
+            bail!("got {} grad tensors, expected {}", grads.len(), self.tensors.len());
+        }
+        for (g, r) in grads.iter().zip(&self.rules) {
+            if g.shape() != r.shape.as_slice() {
+                bail!("grad for '{}': shape {:?} != {:?}", r.name, g.shape(), r.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Accumulate `other`-scaled gradients into an f32 accumulator with the
+    /// same layout (used when a gated batch spans several buckets).
+    pub fn zeros_like(&self) -> Vec<Vec<f32>> {
+        self.tensors.iter().map(|t| vec![0.0; t.len()]).collect()
+    }
+}
+
+/// Gradient accumulator matching a ParamStore layout.
+pub fn accumulate(acc: &mut [Vec<f32>], grads: &[HostTensor]) -> Result<()> {
+    if acc.len() != grads.len() {
+        bail!("accumulator arity mismatch");
+    }
+    for (a, g) in acc.iter_mut().zip(grads) {
+        let gs = g.as_f32()?;
+        if a.len() != gs.len() {
+            bail!("accumulator length mismatch");
+        }
+        for (x, &y) in a.iter_mut().zip(gs) {
+            *x += y;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules() -> Vec<InitRule> {
+        vec![
+            InitRule {
+                name: "w".into(),
+                shape: vec![4, 3],
+                kind: InitKind::Normal { scale: 0.5 },
+            },
+            InitRule { name: "b".into(), shape: vec![3], kind: InitKind::Zeros },
+            InitRule { name: "s".into(), shape: vec![3], kind: InitKind::Ones },
+        ]
+    }
+
+    #[test]
+    fn init_respects_rules() {
+        let p = ParamStore::init(&rules(), 1);
+        assert_eq!(p.n_tensors(), 3);
+        assert_eq!(p.n_scalars(), 18);
+        assert!(p.tensor(0).iter().any(|&x| x != 0.0));
+        assert!(p.tensor(1).iter().all(|&x| x == 0.0));
+        assert!(p.tensor(2).iter().all(|&x| x == 1.0));
+        assert_eq!(p.by_name("b").unwrap().len(), 3);
+        assert!(p.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let a = ParamStore::init(&rules(), 7);
+        let b = ParamStore::init(&rules(), 7);
+        let c = ParamStore::init(&rules(), 8);
+        assert_eq!(a.tensor(0), b.tensor(0));
+        assert_ne!(a.tensor(0), c.tensor(0));
+    }
+
+    #[test]
+    fn normal_scale_applied() {
+        let big = vec![InitRule {
+            name: "w".into(),
+            shape: vec![10_000],
+            kind: InitKind::Normal { scale: 0.02 },
+        }];
+        let p = ParamStore::init(&big, 3);
+        let var: f64 =
+            p.tensor(0).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / 10_000.0;
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let p = ParamStore::init(&rules(), 1);
+        let mut acc = p.zeros_like();
+        let g: Vec<HostTensor> = p
+            .rules()
+            .iter()
+            .map(|r| HostTensor::f32(&r.shape, vec![1.0; r.numel()]))
+            .collect();
+        accumulate(&mut acc, &g).unwrap();
+        accumulate(&mut acc, &g).unwrap();
+        assert!(acc[0].iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn check_grads_rejects_bad_shapes() {
+        let p = ParamStore::init(&rules(), 1);
+        let bad = vec![
+            HostTensor::f32(&[4, 3], vec![0.0; 12]),
+            HostTensor::f32(&[4], vec![0.0; 4]), // wrong
+            HostTensor::f32(&[3], vec![0.0; 3]),
+        ];
+        assert!(p.check_grads(&bad).is_err());
+    }
+}

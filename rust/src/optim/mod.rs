@@ -1,0 +1,167 @@
+//! Optimizers over the host-side parameter store (Adam is the paper's
+//! optimizer; SGD kept for ablations). Gradients arrive as the backward
+//! artifact's output tensors, accumulated across capacity buckets.
+
+use crate::model::ParamStore;
+
+pub trait Optimizer {
+    /// Apply one update step given per-tensor gradients.
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]);
+    fn lr(&self) -> f64;
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// Adam (Kingma & Ba) with bias correction; defaults match the paper's
+/// experiments (betas 0.9/0.999, eps 1e-8).
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64, params: &ParamStore) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), params.n_tensors());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..grads.len() {
+            let g = &grads[i];
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            let p = params.tensor_mut(i);
+            assert_eq!(g.len(), p.len());
+            for j in 0..g.len() {
+                let gj = g[j] as f64;
+                let mj = self.beta1 * m[j] as f64 + (1.0 - self.beta1) * gj;
+                let vj = self.beta2 * v[j] as f64 + (1.0 - self.beta2) * gj * gj;
+                m[j] = mj as f32;
+                v[j] = vj as f32;
+                let mhat = mj / b1t;
+                let vhat = vj / b2t;
+                p[j] -= (self.lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+            }
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+/// Plain SGD (ablation baseline).
+pub struct Sgd {
+    lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Sgd {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), params.n_tensors());
+        for i in 0..grads.len() {
+            let g = &grads[i];
+            let p = params.tensor_mut(i);
+            for j in 0..g.len() {
+                p[j] -= (self.lr * g[j] as f64) as f32;
+            }
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{InitKind, InitRule};
+
+    fn quad_params() -> ParamStore {
+        let rules = vec![InitRule {
+            name: "x".into(),
+            shape: vec![2],
+            kind: InitKind::Ones,
+        }];
+        ParamStore::init(&rules, 0)
+    }
+
+    fn quad_grad(p: &ParamStore) -> Vec<Vec<f32>> {
+        // f(x) = 0.5 * ||x - [3, -2]||^2 ; grad = x - target
+        vec![vec![p.tensor(0)[0] - 3.0, p.tensor(0)[1] + 2.0]]
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut p = quad_params();
+        let mut opt = Adam::new(0.1, &p);
+        for _ in 0..500 {
+            let g = quad_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        assert!((p.tensor(0)[0] - 3.0).abs() < 1e-2);
+        assert!((p.tensor(0)[1] + 2.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut p = quad_params();
+        let mut opt = Sgd::new(0.3);
+        for _ in 0..100 {
+            let g = quad_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        assert!((p.tensor(0)[0] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |first update| == lr regardless of grad scale
+        let mut p = quad_params();
+        let mut opt = Adam::new(0.05, &p);
+        let before = p.tensor(0)[0];
+        opt.step(&mut p, &[vec![1234.0, -0.001]]);
+        let d0 = (p.tensor(0)[0] - before).abs();
+        assert!((d0 - 0.05).abs() < 1e-3, "step {d0}");
+    }
+
+    #[test]
+    fn zero_grad_is_noop_for_sgd() {
+        let mut p = quad_params();
+        let mut opt = Sgd::new(0.3);
+        let before = p.tensor(0).to_vec();
+        opt.step(&mut p, &[vec![0.0, 0.0]]);
+        assert_eq!(before, p.tensor(0));
+    }
+}

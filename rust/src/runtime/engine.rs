@@ -1,0 +1,155 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the L3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Executables are compiled lazily (first use) and cached for the process
+//! lifetime; per-artifact call counts and wall-clock are recorded for the
+//! compute ledger and the perf pass.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArtifactStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    execs: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<HashMap<String, ArtifactStats>>,
+}
+
+impl Engine {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            execs: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        {
+            let execs = self.execs.lock().unwrap();
+            if execs.contains_key(name) {
+                return Ok(());
+            }
+        }
+        let sig = self.manifest.artifact(name)?;
+        let path = self.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.execs.lock().unwrap().insert(name.to_string(), exe);
+        self.stats.lock().unwrap().entry(name.to_string()).or_default().compile_secs += dt;
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (e.g. at trainer startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; validates the input signature
+    /// against the manifest and unpacks the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let sig = self.manifest.artifact(name)?.clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "artifact '{name}': got {} inputs, manifest says {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&sig.inputs) {
+            t.check_sig(s).with_context(|| format!("artifact '{name}'"))?;
+        }
+        self.ensure_compiled(name)?;
+
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+        let result = {
+            let execs = self.execs.lock().unwrap();
+            let exe = execs.get(name).unwrap();
+            exe.execute::<Literal>(&lits)?
+        };
+        let out_lit = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            let e = st.entry(name.to_string()).or_default();
+            e.calls += 1;
+            e.total_secs += dt;
+        }
+
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "artifact '{name}': got {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&sig.outputs)
+            .map(|(lit, s)| HostTensor::from_literal(lit, s))
+            .collect()
+    }
+
+    /// Per-artifact timing snapshot (for EXPERIMENTS.md perf tables).
+    pub fn stats(&self) -> Vec<(String, ArtifactStats)> {
+        let st = self.stats.lock().unwrap();
+        let mut v: Vec<_> = st.iter().map(|(k, s)| (k.clone(), *s)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Measured mean wall-clock seconds per call of an artifact, if called.
+    pub fn mean_secs(&self, name: &str) -> Option<f64> {
+        let st = self.stats.lock().unwrap();
+        st.get(name).filter(|s| s.calls > 0).map(|s| s.total_secs / s.calls as f64)
+    }
+}

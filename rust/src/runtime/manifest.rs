@@ -1,0 +1,273 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` (L2) and the
+//! Rust runtime. Parsed with the in-repo JSON substrate; every accessor
+//! fails loudly on schema drift so a stale artifact set cannot be run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::utils::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitKind {
+    Normal { scale: f64 },
+    Zeros,
+    Ones,
+}
+
+#[derive(Debug, Clone)]
+pub struct InitRule {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: InitKind,
+}
+
+impl InitRule {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static shape constants pinned at AOT time (see python/compile/config.py).
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub mnist_batch: usize,
+    pub mnist_eval_batch: usize,
+    pub mnist_actions: usize,
+    pub mnist_in: usize,
+    pub mnist_bwd_caps: Vec<usize>,
+    pub rev_batch: usize,
+    /// compiled reversal shape sets (h_max values, ascending)
+    pub rev_sets: Vec<usize>,
+    pub h_max: usize,
+    pub vocab: usize,
+    pub pad: usize,
+    pub rev_bwd_caps: Vec<usize>,
+    pub neg_inf: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: Constants,
+    /// model name -> parameter init rules in artifact-argument order
+    pub models: BTreeMap<String, Vec<InitRule>>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn sig_from(j: &Json) -> Result<TensorSig> {
+    let name = j.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("sig: name"))?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("sig: shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("sig: bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(
+        j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("sig: dtype"))?,
+    )?;
+    Ok(TensorSig { name: name.to_string(), shape, dtype })
+}
+
+fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("constants: {key}"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("constants: {key} entry")))
+        .collect()
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("constants: {key}"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let c = j.get("constants").ok_or_else(|| anyhow!("missing constants"))?;
+        let constants = Constants {
+            mnist_batch: usize_of(c, "mnist_batch")?,
+            mnist_eval_batch: usize_of(c, "mnist_eval_batch")?,
+            mnist_actions: usize_of(c, "mnist_actions")?,
+            mnist_in: usize_of(c, "mnist_in")?,
+            mnist_bwd_caps: usize_arr(c, "mnist_bwd_caps")?,
+            rev_batch: usize_of(c, "rev_batch")?,
+            rev_sets: usize_arr(c, "rev_sets")?,
+            h_max: usize_of(c, "h_max")?,
+            vocab: usize_of(c, "vocab")?,
+            pad: usize_of(c, "pad")?,
+            rev_bwd_caps: usize_arr(c, "rev_bwd_caps")?,
+            neg_inf: c.get("neg_inf").and_then(Json::as_f64).ok_or_else(|| anyhow!("neg_inf"))?,
+        };
+
+        let mut models = BTreeMap::new();
+        let jm = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("models"))?;
+        for (mname, mv) in jm {
+            let params = mv
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model {mname}: params"))?;
+            let mut rules = Vec::new();
+            for p in params {
+                let name =
+                    p.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("param name"))?;
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("param dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                let kind = match p.get("kind").and_then(Json::as_str) {
+                    Some("normal") => InitKind::Normal {
+                        scale: p
+                            .get("scale")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| anyhow!("normal needs scale"))?,
+                    },
+                    Some("zeros") => InitKind::Zeros,
+                    Some("ones") => InitKind::Ones,
+                    other => bail!("param {name}: bad init kind {other:?}"),
+                };
+                rules.push(InitRule { name: name.to_string(), shape, kind });
+            }
+            models.insert(mname.clone(), rules);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let ja = j.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("artifacts"))?;
+        for (aname, av) in ja {
+            let file =
+                av.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("artifact file"))?;
+            let inputs = av
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact inputs"))?
+                .iter()
+                .map(sig_from)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = av
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact outputs"))?
+                .iter()
+                .map(sig_from)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                aname.clone(),
+                ArtifactSig { name: aname.clone(), file: file.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Manifest { constants, models, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&[InitRule]> {
+        self.models
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    /// Number of parameter tensors of a model (= leading artifact inputs).
+    pub fn n_params(&self, model: &str) -> usize {
+        self.models.get(model).map(|v| v.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "constants": {"mnist_batch": 100, "mnist_eval_batch": 500,
+        "mnist_actions": 10, "mnist_in": 784, "mnist_bwd_caps": [4, 100],
+        "rev_batch": 100, "rev_sets": [16, 32], "h_max": 32, "vocab": 64, "pad": 64,
+        "rev_bwd_caps": [13], "neg_inf": -1e+30},
+      "models": {"mnist": {"params": [
+        {"name": "w1", "shape": [784, 100], "kind": "normal", "scale": 0.05},
+        {"name": "b1", "shape": [100], "kind": "zeros"}]}},
+      "artifacts": {"mnist_fwd": {"file": "mnist_fwd.hlo.txt",
+        "inputs": [{"name": "w1", "shape": [784, 100], "dtype": "f32"}],
+        "outputs": [{"name": "logp", "shape": [100, 10], "dtype": "f32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.constants.mnist_batch, 100);
+        assert_eq!(m.constants.neg_inf, -1e30);
+        assert_eq!(m.constants.mnist_bwd_caps, vec![4, 100]);
+        let rules = m.model("mnist").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].kind, InitKind::Normal { scale: 0.05 });
+        assert_eq!(rules[0].numel(), 78400);
+        let a = m.artifact("mnist_fwd").unwrap();
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.outputs[0].shape, vec![100, 10]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = MINI.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, host tensors.
+//!
+//! Loads the HLO-text artifacts built once by `make artifacts` (python is
+//! never on the request path) and executes them on the CPU PJRT client.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSig, Constants, DType, InitKind, InitRule, Manifest, TensorSig};
+pub use tensor::HostTensor;

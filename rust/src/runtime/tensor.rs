@@ -1,0 +1,158 @@
+//! Host-side tensors and Literal marshaling for the PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use super::manifest::{DType, TensorSig};
+
+/// A host tensor: shape + data, f32 or i32 (the only dtypes artifacts use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::i32(&[1], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Validate against a manifest signature.
+    pub fn check_sig(&self, sig: &TensorSig) -> Result<()> {
+        if self.shape() != sig.shape.as_slice() {
+            bail!(
+                "input '{}': shape {:?} does not match manifest {:?}",
+                sig.name,
+                self.shape(),
+                sig.shape
+            );
+        }
+        if self.dtype() != sig.dtype {
+            bail!("input '{}': dtype {:?} != manifest {:?}", sig.name, self.dtype(), sig.dtype);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => Literal::vec1(data),
+            HostTensor::I32 { data, .. } => Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal, sig: &TensorSig) -> Result<HostTensor> {
+        let t = match sig.dtype {
+            DType::F32 => HostTensor::F32 { shape: sig.shape.clone(), data: lit.to_vec::<f32>()? },
+            DType::I32 => HostTensor::I32 { shape: sig.shape.clone(), data: lit.to_vec::<i32>()? },
+        };
+        if t.numel() != sig.numel() {
+            return Err(anyhow!(
+                "output '{}': got {} elements, manifest says {}",
+                sig.name,
+                t.numel(),
+                sig.numel()
+            ));
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(shape: &[usize], dtype: DType) -> TensorSig {
+        TensorSig { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn shape_checks() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert!(t.check_sig(&sig(&[2, 3], DType::F32)).is_ok());
+        assert!(t.check_sig(&sig(&[3, 2], DType::F32)).is_err());
+        assert!(t.check_sig(&sig(&[2, 3], DType::I32)).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_numel_panics() {
+        HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &sig(&[2, 2], DType::F32)).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(&[3], vec![7, -1, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &sig(&[3], DType::I32)).unwrap();
+        assert_eq!(t, back);
+    }
+}

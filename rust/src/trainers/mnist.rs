@@ -1,0 +1,375 @@
+//! MNIST-bandit trainer (paper §3, App A): the full L3 scheduling loop.
+//!
+//! Per step: sample contexts -> forward artifact (L1 fused head inside) ->
+//! sample actions -> rewards/advantages -> delight -> method weight rule
+//! (Kondo gate for DG-K) -> pack kept samples into backward buckets ->
+//! execute backward artifact(s) -> Adam. The ledger records the exact
+//! forward/backward sample counts that form the paper's compute axes.
+
+use anyhow::Result;
+
+use crate::algo::baseline::Baseline;
+use crate::algo::{perturb_delight_abs, perturb_delight_rel, BatchSignals, Method};
+use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32};
+use crate::coordinator::{
+    screening_precision, BucketSet, DraftScreen, EwQuantile, KondoGate, Ledger, Pricing,
+};
+use crate::envs::mnist::{MnistBandit, RewardNoise};
+use crate::model::{accumulate, ParamStore};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{Engine, HostTensor};
+use crate::utils::rng::Pcg32;
+
+use super::EvalPoint;
+
+#[derive(Debug, Clone)]
+pub struct MnistTrainerCfg {
+    pub method: Method,
+    pub baseline: Baseline,
+    pub lr: f64,
+    pub steps: usize,
+    pub eval_every: usize,
+    /// number of test images used for evaluation (multiple of eval batch)
+    pub eval_size: usize,
+    pub seed: u64,
+    pub noise: RewardNoise,
+    /// relative delight noise (Fig 4a); 0 = off
+    pub delight_noise_rel: f64,
+    /// absolute delight noise (Fig 17); 0 = off
+    pub delight_noise_abs: f64,
+    /// logit noise sigma_Z (Fig 4b); 0 = off
+    pub logit_noise: f64,
+    /// record pi(y*) of kept/skipped samples at these steps (Figs 15-16)
+    pub gate_profile_steps: Vec<usize>,
+    /// price lambda from a streaming EW quantile across batches instead of
+    /// the per-batch quantile (ablation of Algorithm 1 line 5)
+    pub streaming_lambda: bool,
+    /// speculative screening (paper 3.2/7): gate on delight predicted by
+    /// an online linear draft model instead of the exact forward-pass value
+    pub draft_screen: bool,
+}
+
+impl Default for MnistTrainerCfg {
+    fn default() -> Self {
+        MnistTrainerCfg {
+            method: Method::Pg,
+            baseline: Baseline::Expected,
+            lr: 1e-3,
+            steps: 1000,
+            eval_every: 100,
+            eval_size: 1000,
+            seed: 0,
+            noise: RewardNoise::clean(),
+            delight_noise_rel: 0.0,
+            delight_noise_abs: 0.0,
+            logit_noise: 0.0,
+            gate_profile_steps: vec![],
+            streaming_lambda: false,
+            draft_screen: false,
+        }
+    }
+}
+
+/// pi(y*) of kept vs skipped samples around one training step (Fig 15).
+#[derive(Debug, Clone)]
+pub struct GateProfile {
+    pub step: usize,
+    pub kept_p: Vec<f64>,
+    pub skipped_p: Vec<f64>,
+    /// (y, a, p) exemplars for the kept/skipped image panels (Fig 16)
+    pub kept_samples: Vec<(usize, usize, f64)>,
+    pub skipped_samples: Vec<(usize, usize, f64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MnistRunResult {
+    pub curve: Vec<EvalPoint>,
+    pub ledger: Ledger,
+    pub gate_profiles: Vec<GateProfile>,
+    pub final_test_err: f64,
+    pub final_train_err: f64,
+    /// mean precision of the draft screen's top-rho set vs exact delight
+    /// (1.0 when draft_screen is off or the draft is still cold)
+    pub draft_precision: f64,
+}
+
+/// Train one MNIST-bandit policy; deterministic in `cfg.seed`.
+pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult> {
+    let man = eng.manifest();
+    let b = man.constants.mnist_batch;
+    let n_act = man.constants.mnist_actions;
+    let img = man.constants.mnist_in;
+    let eval_b = man.constants.mnist_eval_batch;
+
+    let rules = man.model("mnist")?.to_vec();
+    let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x51ed) ^ 0xbeef);
+    let mut opt = Adam::new(cfg.lr, &params);
+    let buckets = BucketSet::new(man.constants.mnist_bwd_caps.clone())?;
+
+    // the corpus is fixed across seeds (like the MNIST download); only the
+    // sampling / action / gate randomness varies per seed
+    let env = MnistBandit::new(1234, b, cfg.noise);
+    let mut rng = Pcg32::new(cfg.seed, 0x6d6e_6973_74);
+
+    let test = env.test_set(cfg.eval_size.max(eval_b));
+    let mut ledger = Ledger::new();
+    let mut curve = Vec::new();
+    let mut gate_profiles = Vec::new();
+    let mut train_err_window = TrainWindow::new(10);
+    // streaming price tracker (targets the (1-rho)-quantile of delight)
+    let mut stream_tracker: Option<EwQuantile> = match (cfg.streaming_lambda, &cfg.method) {
+        (true, Method::DgK { gate, .. }) => match gate.pricing {
+            Pricing::Rate(rho) => Some(EwQuantile::new(1.0 - rho, 0.05)),
+            Pricing::Price(_) => None,
+        },
+        _ => None,
+    };
+    let mut draft: Option<DraftScreen> =
+        cfg.draft_screen.then(|| DraftScreen::new(img, 1e-3));
+    let mut precisions: Vec<f64> = Vec::new();
+
+    for step in 0..cfg.steps {
+        let ctx = env.sample_contexts(&mut rng);
+        let noise_t = if cfg.logit_noise > 0.0 {
+            let v: Vec<f32> =
+                (0..b * n_act).map(|_| (cfg.logit_noise * rng.normal()) as f32).collect();
+            HostTensor::f32(&[b, n_act], v)
+        } else {
+            HostTensor::zeros_f32(&[b, n_act])
+        };
+
+        // ---- forward pass (the only place the policy is evaluated)
+        let mut inputs = params.as_inputs();
+        inputs.push(HostTensor::f32(&[b, img], ctx.x.clone()));
+        inputs.push(noise_t);
+        let out = eng.execute("mnist_fwd", &inputs)?;
+        let logp = out[0].as_f32()?;
+        ledger.record_forward(b);
+
+        // ---- act, observe rewards, build signals
+        let mut actions = vec![0i32; b];
+        let mut u = vec![0.0f64; b];
+        let mut ell = vec![0.0f64; b];
+        let mut greedy_wrong = 0usize;
+        let mut p_star = vec![0.0f64; b];
+        for i in 0..b {
+            let row = &logp[i * n_act..(i + 1) * n_act];
+            let a = rng.categorical_from_logits(row);
+            actions[i] = a as i32;
+            let pi: Vec<f32> = row.iter().map(|&l| l.exp()).collect();
+            let y = ctx.y[i];
+            p_star[i] = pi[y] as f64;
+            let r = env.reward(a, y, &mut rng);
+            let bval = cfg.baseline.value(&pi, y);
+            u[i] = r - bval;
+            ell[i] = -(row[a] as f64);
+            let greedy = argmax(row);
+            if greedy != y {
+                greedy_wrong += 1;
+            }
+        }
+        train_err_window.push(greedy_wrong as f64 / b as f64);
+
+        // ---- delight (with optional screening noise) and the weight rule
+        let chi: Vec<f64> = u.iter().zip(&ell).map(|(&a, &l)| a * l).collect();
+        let mut chi_noisy = if cfg.delight_noise_rel > 0.0 {
+            Some(perturb_delight_rel(&chi, cfg.delight_noise_rel, &mut rng))
+        } else if cfg.delight_noise_abs > 0.0 {
+            Some(perturb_delight_abs(&chi, cfg.delight_noise_abs, &mut rng))
+        } else {
+            None
+        };
+        // speculative screen: gate on draft-predicted delight once the
+        // draft is warm; keep training it on the exact surprisal either way
+        if let Some(d) = draft.as_mut() {
+            if d.warmed_up(b) {
+                let chi_hat = d.predict_delight(&ctx.x, &u);
+                if let Method::DgK { gate, .. } = &cfg.method {
+                    if let Pricing::Rate(rho) = gate.pricing {
+                        precisions.push(screening_precision(&chi, &chi_hat, rho));
+                    }
+                }
+                chi_noisy = Some(chi_hat);
+            }
+            d.update(&ctx.x, &ell);
+        }
+        let signals = BatchSignals {
+            u: &u,
+            ell: &ell,
+            logp_old: None,
+            chi_override: chi_noisy.as_deref(),
+        };
+        // streaming-lambda ablation: price from the cross-batch tracker
+        // (hard gate), then feed this batch's delight into the tracker
+        let decision = if let (Some(tracker), Method::DgK { priority, .. }) =
+            (stream_tracker.as_mut(), &cfg.method)
+        {
+            let gate_chi = signals.chi_override.map(|c| c.to_vec()).unwrap_or_else(|| chi.clone());
+            let lam = if tracker.count() >= b { tracker.value() } else { f64::INFINITY };
+            let m = Method::DgK { gate: KondoGate::price(lam), priority: *priority };
+            let d = m.decide(&signals, &mut rng);
+            for &c in &gate_chi {
+                tracker.update(c);
+            }
+            d
+        } else {
+            cfg.method.decide(&signals, &mut rng)
+        };
+
+        if cfg.gate_profile_steps.contains(&(step + 1)) {
+            let keep_set: std::collections::HashSet<usize> =
+                decision.keep.iter().copied().collect();
+            let mut gp = GateProfile {
+                step: step + 1,
+                kept_p: vec![],
+                skipped_p: vec![],
+                kept_samples: vec![],
+                skipped_samples: vec![],
+            };
+            for i in 0..b {
+                let rec = (ctx.y[i], actions[i] as usize, p_star[i]);
+                if keep_set.contains(&i) {
+                    gp.kept_p.push(p_star[i]);
+                    gp.kept_samples.push(rec);
+                } else {
+                    gp.skipped_p.push(p_star[i]);
+                    gp.skipped_samples.push(rec);
+                }
+            }
+            gate_profiles.push(gp);
+        }
+
+        // ---- bucketed backward over the kept set
+        if !decision.keep.is_empty() {
+            let mut acc = params.zeros_like();
+            let weights_all = &decision.weights;
+            for chunk in buckets.pack(&decision.keep) {
+                let cap = chunk.cap;
+                let xs = gather_rows_f32(&ctx.x, img, &chunk.idx, cap);
+                let acts = gather_i32(&actions, &chunk.idx, cap);
+                let w: Vec<f32> = {
+                    let per_sample: Vec<f32> =
+                        chunk.idx.iter().map(|&i| weights_all[i]).collect();
+                    gather_f32(&per_sample, &(0..chunk.idx.len()).collect::<Vec<_>>(), cap)
+                };
+                let mut binputs = params.as_inputs();
+                binputs.push(HostTensor::f32(&[cap, img], xs));
+                binputs.push(HostTensor::i32(&[cap], acts));
+                binputs.push(HostTensor::f32(&[cap], w));
+                let bout = eng.execute(&format!("mnist_bwd_c{cap}"), &binputs)?;
+                accumulate(&mut acc, &bout[1..])?;
+                ledger.record_backward(cap, chunk.idx.len());
+            }
+            // average over the full batch (matches sum/B normalization)
+            for t in acc.iter_mut() {
+                for v in t.iter_mut() {
+                    *v /= b as f32;
+                }
+            }
+            opt.step(&mut params, &acc);
+        }
+
+        // ---- evaluation cadence
+        let last = step + 1 == cfg.steps;
+        if (step + 1) % cfg.eval_every == 0 || last {
+            let test_err = eval_test_error(eng, &params, &test.x, &test.y, eval_b, img, n_act)?;
+            curve.push(EvalPoint {
+                step: step + 1,
+                forward_samples: ledger.forward_samples,
+                backward_kept: ledger.backward_kept,
+                backward_executed: ledger.backward_executed,
+                metric: train_err_window.mean(),
+                metric2: test_err,
+            });
+        }
+    }
+
+    let final_test = curve.last().map(|p| p.metric2).unwrap_or(1.0);
+    let final_train = curve.last().map(|p| p.metric).unwrap_or(1.0);
+    Ok(MnistRunResult {
+        curve,
+        ledger,
+        gate_profiles,
+        final_test_err: final_test,
+        final_train_err: final_train,
+        draft_precision: if precisions.is_empty() {
+            1.0
+        } else {
+            crate::utils::stats::mean(&precisions)
+        },
+    })
+}
+
+/// Greedy test error via the eval artifact, in chunks of the eval batch.
+pub fn eval_test_error(
+    eng: &Engine,
+    params: &ParamStore,
+    xs: &[f32],
+    ys: &[usize],
+    eval_b: usize,
+    img: usize,
+    n_act: usize,
+) -> Result<f64> {
+    let n = ys.len();
+    let mut wrong = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        let take = eval_b.min(n - done);
+        // pad the final chunk up to eval_b with repeats
+        let mut chunk = vec![0.0f32; eval_b * img];
+        for i in 0..eval_b {
+            let src = (done + i.min(take - 1)).min(n - 1);
+            chunk[i * img..(i + 1) * img].copy_from_slice(&xs[src * img..(src + 1) * img]);
+        }
+        let mut inputs = params.as_inputs();
+        inputs.push(HostTensor::f32(&[eval_b, img], chunk));
+        let out = eng.execute("mnist_fwd_eval", &inputs)?;
+        let logp = out[0].as_f32()?;
+        for i in 0..take {
+            let row = &logp[i * n_act..(i + 1) * n_act];
+            if argmax(row) != ys[done + i] {
+                wrong += 1;
+            }
+        }
+        done += take;
+    }
+    Ok(wrong as f64 / n as f64)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = f32::NEG_INFINITY;
+    let mut arg = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best {
+            best = x;
+            arg = i;
+        }
+    }
+    arg
+}
+
+/// Sliding window over recent per-batch train errors.
+struct TrainWindow {
+    buf: Vec<f64>,
+    cap: usize,
+}
+
+impl TrainWindow {
+    fn new(cap: usize) -> TrainWindow {
+        TrainWindow { buf: vec![], cap }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.remove(0);
+        }
+        self.buf.push(v);
+    }
+
+    fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 1.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+}

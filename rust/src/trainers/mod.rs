@@ -1,0 +1,22 @@
+//! Training loops (the L3 scheduler): forward artifact -> delight -> Kondo
+//! gate -> bucketed backward -> optimizer, with the compute ledger and
+//! noise-injection hooks every experiment driver needs.
+
+pub mod mnist;
+pub mod reversal;
+
+pub use mnist::{train_mnist, MnistTrainerCfg, MnistRunResult};
+pub use reversal::{train_reversal, ReversalTrainerCfg, ReversalRunResult};
+
+/// One point of a learning curve, indexed by both step and compute.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub forward_samples: u64,
+    pub backward_kept: u64,
+    pub backward_executed: u64,
+    /// task metric: classification error (MNIST) or mean reward (reversal)
+    pub metric: f64,
+    /// secondary metric: test error (MNIST) / unused (reversal)
+    pub metric2: f64,
+}

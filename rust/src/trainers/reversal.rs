@@ -1,0 +1,219 @@
+//! Token-reversal trainer (paper §5, App D): transformer rollout fully
+//! inside the compiled artifact, per-token Kondo gating, episode-level
+//! bucketed backward.
+//!
+//! Gating is at TOKEN granularity (the paper gates tokens); the backward
+//! executor works at EPISODE granularity (a sequence either enters the
+//! backward batch or not), so an episode is executed iff it has at least
+//! one kept token, and its weight tensor zeroes all skipped tokens.
+
+use anyhow::Result;
+
+use crate::algo::baseline::grouped_baseline;
+use crate::algo::{BatchSignals, Method};
+use crate::coordinator::batcher::{gather_rows_f32, gather_rows_i32};
+use crate::coordinator::{BucketSet, Ledger};
+use crate::envs::reversal::ReversalEnv;
+use crate::model::{accumulate, ParamStore};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{Engine, HostTensor};
+use crate::utils::rng::Pcg32;
+
+use super::EvalPoint;
+
+#[derive(Debug, Clone)]
+pub struct ReversalTrainerCfg {
+    pub method: Method,
+    pub lr: f64,
+    pub steps: usize,
+    /// sequence length H <= h_max
+    pub h: usize,
+    /// vocabulary size M <= vocab
+    pub m: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// PPO inner epochs (ratio updates against the rollout policy)
+    pub inner_epochs: usize,
+}
+
+impl Default for ReversalTrainerCfg {
+    fn default() -> Self {
+        ReversalTrainerCfg {
+            method: Method::Pg,
+            lr: 3e-4,
+            steps: 300,
+            h: 5,
+            m: 2,
+            seed: 0,
+            eval_every: 10,
+            inner_epochs: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReversalRunResult {
+    pub curve: Vec<EvalPoint>,
+    pub ledger: Ledger,
+    pub final_reward: f64,
+    /// mean reward over the whole run (the paper's "solved" statistic)
+    pub mean_reward: f64,
+}
+
+pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<ReversalRunResult> {
+    let man = eng.manifest();
+    // pick the smallest compiled shape set that fits H (two sets are
+    // compiled; masks carve out the active problem inside the artifact)
+    let h_max = *man
+        .constants
+        .rev_sets
+        .iter()
+        .find(|&&hm| hm >= cfg.h)
+        .unwrap_or(&man.constants.h_max);
+    let prefix = format!("rev{h_max}");
+    let batch = man.constants.rev_batch;
+    let pad = man.constants.pad as i32;
+    assert!(cfg.h <= h_max && cfg.m <= man.constants.vocab);
+
+    let env = ReversalEnv::new(cfg.h, cfg.m, 10, 10, h_max, pad);
+    assert_eq!(env.batch_size(), batch);
+
+    let rules = man.model(&format!("reversal{h_max}"))?.to_vec();
+    let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x2545) ^ 0xcafe);
+    let mut opt = Adam::new(cfg.lr, &params);
+    let buckets = BucketSet::new(man.constants.rev_bwd_caps.clone())?;
+
+    let mut rng = Pcg32::new(cfg.seed, 0x7265_76);
+    let mut ledger = Ledger::new();
+    let mut curve = Vec::new();
+    let mut reward_sum = 0.0;
+    let mut reward_window = Vec::new();
+
+    let h_t = HostTensor::scalar_i32(cfg.h as i32);
+    let m_t = HostTensor::scalar_i32(cfg.m as i32);
+
+    for step in 0..cfg.steps {
+        let prompts = env.sample_prompts(&mut rng);
+        let prompt_t = HostTensor::i32(&[batch, h_max], prompts.tokens.clone());
+
+        // ---- rollout (autoregressive sampling inside the artifact)
+        let mut inputs = params.as_inputs();
+        inputs.push(prompt_t.clone());
+        inputs.push(h_t.clone());
+        inputs.push(m_t.clone());
+        inputs.push(HostTensor::scalar_i32(rng.next_u32() as i32 & 0x7fffffff));
+        let out = eng.execute(&format!("{prefix}_rollout"), &inputs)?;
+        let actions = out[0].as_i32()?.to_vec();
+        let logp = out[1].as_f32()?.to_vec();
+        ledger.record_forward(batch * cfg.h);
+
+        // ---- rewards, grouped baseline, per-token signals
+        let rewards = env.rewards(&prompts, &actions);
+        let base = grouped_baseline(&rewards, 10);
+        reward_sum += crate::utils::stats::mean(&rewards);
+        reward_window.push(crate::utils::stats::mean(&rewards));
+
+        let n_tok = batch * cfg.h;
+        let mut u = vec![0.0f64; n_tok];
+        let mut ell = vec![0.0f64; n_tok];
+        for ep in 0..batch {
+            let adv = rewards[ep] - base[ep];
+            for j in 0..cfg.h {
+                let t = ep * cfg.h + j;
+                u[t] = adv;
+                ell[t] = -(logp[ep * h_max + j] as f64);
+            }
+        }
+
+        let logp_roll: Vec<f64> = ell.iter().map(|&e| -e).collect();
+        for epoch in 0..cfg.inner_epochs.max(1) {
+            // ratios: first epoch is on-policy; later epochs re-score the
+            // sampled actions under the updated policy via rev_fwd.
+            let (ell_cur, lp_old): (Vec<f64>, Option<&[f64]>) = if epoch == 0 {
+                (ell.clone(), None)
+            } else {
+                let mut finputs = params.as_inputs();
+                finputs.push(prompt_t.clone());
+                finputs.push(HostTensor::i32(&[batch, h_max], actions.clone()));
+                finputs.push(h_t.clone());
+                finputs.push(m_t.clone());
+                let fout = eng.execute(&format!("{prefix}_fwd"), &finputs)?;
+                let lp_new = fout[0].as_f32()?;
+                ledger.record_forward(batch * cfg.h);
+                let mut e = vec![0.0f64; n_tok];
+                for ep in 0..batch {
+                    for j in 0..cfg.h {
+                        e[ep * cfg.h + j] = -(lp_new[ep * h_max + j] as f64);
+                    }
+                }
+                (e, Some(logp_roll.as_slice()))
+            };
+
+            let signals =
+                BatchSignals { u: &u, ell: &ell_cur, logp_old: lp_old, chi_override: None };
+            let decision = cfg.method.decide(&signals, &mut rng);
+            if decision.keep.is_empty() {
+                continue;
+            }
+
+            // ---- token keep-set -> episode list + weight tensor
+            let mut ep_weights = vec![0.0f32; batch * h_max];
+            let mut ep_has = vec![false; batch];
+            for &t in &decision.keep {
+                let ep = t / cfg.h;
+                let j = t % cfg.h;
+                ep_weights[ep * h_max + j] = decision.weights[t];
+                ep_has[ep] = true;
+            }
+            let episodes: Vec<usize> = (0..batch).filter(|&e| ep_has[e]).collect();
+            let kept_tokens = decision.keep.len();
+
+            let mut acc = params.zeros_like();
+            for chunk in buckets.pack(&episodes) {
+                let cap = chunk.cap;
+                let p_rows = gather_rows_i32(&prompts.tokens, h_max, &chunk.idx, cap);
+                let a_rows = gather_rows_i32(&actions, h_max, &chunk.idx, cap);
+                let w_rows = gather_rows_f32(&ep_weights, h_max, &chunk.idx, cap);
+                let mut binputs = params.as_inputs();
+                binputs.push(HostTensor::i32(&[cap, h_max], p_rows));
+                binputs.push(HostTensor::i32(&[cap, h_max], a_rows));
+                binputs.push(HostTensor::f32(&[cap, h_max], w_rows));
+                binputs.push(h_t.clone());
+                binputs.push(m_t.clone());
+                let bout = eng.execute(&format!("{prefix}_bwd_c{cap}"), &binputs)?;
+                accumulate(&mut acc, &bout[1..])?;
+                // token-denominated ledger: kept tokens vs executed slots
+                let share = chunk.idx.len() as f64 / episodes.len() as f64;
+                ledger.record_backward(cap * cfg.h, (kept_tokens as f64 * share) as usize);
+            }
+            for t in acc.iter_mut() {
+                for v in t.iter_mut() {
+                    *v /= batch as f32;
+                }
+            }
+            opt.step(&mut params, &acc);
+        }
+
+        let last = step + 1 == cfg.steps;
+        if (step + 1) % cfg.eval_every == 0 || last {
+            let recent = reward_window.iter().rev().take(10).sum::<f64>()
+                / reward_window.iter().rev().take(10).count().max(1) as f64;
+            curve.push(EvalPoint {
+                step: step + 1,
+                forward_samples: ledger.forward_samples,
+                backward_kept: ledger.backward_kept,
+                backward_executed: ledger.backward_executed,
+                metric: recent,
+                metric2: 0.0,
+            });
+        }
+    }
+
+    let final_reward = curve.last().map(|p| p.metric).unwrap_or(0.0);
+    Ok(ReversalRunResult {
+        curve,
+        ledger,
+        final_reward,
+        mean_reward: reward_sum / cfg.steps.max(1) as f64,
+    })
+}

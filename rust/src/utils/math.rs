@@ -1,0 +1,154 @@
+//! Numerics shared across the coordinator and the tabular analysis.
+
+/// Numerically stable log-sum-exp.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax of logits.
+pub fn softmax(xs: &mut [f32]) {
+    let lse = logsumexp(xs);
+    for x in xs.iter_mut() {
+        *x = (*x - lse).exp();
+    }
+}
+
+/// Softmax returning a new vector.
+pub fn softmax_v(xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    softmax(&mut v);
+    v
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Binary entropy H(w) in nats; H(0) = H(1) = 0.
+pub fn binary_entropy(w: f64) -> f64 {
+    if w <= 0.0 || w >= 1.0 {
+        return 0.0;
+    }
+    -w * w.ln() - (1.0 - w) * (1.0 - w).ln()
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// L2 norm.
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity; 0 if either vector is (numerically) zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na < 1e-300 || nb < 1e-300 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// Component of `a` perpendicular to `dir` (returns squared norm).
+pub fn perp_norm2(a: &[f32], dir: &[f32]) -> f64 {
+    let nd2 = dot(dir, dir);
+    if nd2 < 1e-300 {
+        return dot(a, a);
+    }
+    let proj = dot(a, dir) / nd2;
+    a.iter()
+        .zip(dir)
+        .map(|(&x, &d)| {
+            let p = x as f64 - proj * d as f64;
+            p * p
+        })
+        .sum()
+}
+
+/// Standard normal CDF Phi(x) via erf.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logsumexp_stable() {
+        assert!((logsumexp(&[1000.0, 1000.0]) - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+        assert!((logsumexp(&[0.0, 0.0, 0.0]) - (3.0f32).ln()).abs() < 1e-6);
+        assert_eq!(logsumexp(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax_v(&[1.0, 2.0, 3.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn sigmoid_limits_and_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(40.0) > 0.999999);
+        assert!(sigmoid(-40.0) < 1e-6);
+        for &x in &[0.3, 1.7, 5.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn binary_entropy_properties() {
+        assert_eq!(binary_entropy(0.0), 0.0);
+        assert_eq!(binary_entropy(1.0), 0.0);
+        assert!((binary_entropy(0.5) - (2.0f64).ln().abs()).abs() < 1e-12);
+        assert!(binary_entropy(0.3) > 0.0);
+        assert!((binary_entropy(0.3) - binary_entropy(0.7)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_and_perp() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 2.0];
+        assert!(cosine(&a, &a) > 0.999999);
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert!((perp_norm2(&b, &a) - 4.0).abs() < 1e-9);
+        assert!(perp_norm2(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn normal_cdf_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared substrates: RNG, numerics, statistics, JSON/TOML parsing.
+
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod toml;

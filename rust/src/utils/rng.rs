@@ -1,0 +1,209 @@
+//! Deterministic PCG32 RNG — the repo's single randomness source.
+//!
+//! Every experiment seeds one `Pcg32` per (run, seed) pair so results are
+//! exactly reproducible; no global RNG state anywhere.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). Small, fast, statistically solid.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// cached second Box-Muller variate
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1, gauss_spare: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 32 bits of precision.
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-ish rejection via modulo bias guard).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0);
+        let zone = u32::MAX - (u32::MAX % n);
+        loop {
+            let v = self.next_u32();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Bernoulli draw.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample an index from unnormalized log-probabilities (Gumbel-max).
+    pub fn categorical_from_logits(&mut self, logits: &[f32]) -> usize {
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = 0;
+        for (i, &l) in logits.iter().enumerate() {
+            let u = self.uniform().max(1e-300);
+            let g = -(-u.ln()).ln();
+            let v = l as f64 + g;
+            if v > best {
+                best = v;
+                arg = i;
+            }
+        }
+        arg
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split off an independent stream (deterministic fork).
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new(self.next_u64(), self.next_u64() | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg32::seeded(3);
+        let n = 20_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            s += u;
+        }
+        assert!((s / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(4);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg32::seeded(5);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn categorical_respects_logits() {
+        let mut r = Pcg32::seeded(6);
+        // heavily favour index 2
+        let logits = [0.0f32, 0.0, 5.0, 0.0];
+        let n = 2000;
+        let hits = (0..n).filter(|_| r.categorical_from_logits(&logits) == 2).count();
+        assert!(hits as f64 / n as f64 > 0.9);
+    }
+
+    #[test]
+    fn categorical_matches_softmax_frequencies() {
+        let mut r = Pcg32::seeded(8);
+        let logits = [1.0f32, 0.0, -1.0];
+        let exps: Vec<f64> = logits.iter().map(|&l| (l as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let n = 60_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[r.categorical_from_logits(&logits)] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - exps[i] / z).abs() < 0.01, "idx {i}: {emp}");
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut a = Pcg32::seeded(9);
+        let mut b = a.split();
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,160 @@
+//! Statistics helpers: summaries, quantiles, ECDF, least-squares fits.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// q-quantile (linear interpolation on sorted copy), q in [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Same for f32 slices, returning f32 (used on delight batches).
+pub fn quantile_f32(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    quantile(&v, q) as f32
+}
+
+/// Empirical CDF evaluated at sorted sample points: returns (xs_sorted, F(x)).
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let f = (1..=v.len()).map(|i| i as f64 / n).collect();
+    (v, f)
+}
+
+/// Ordinary least squares y = a + b x; returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (&xi, &yi) in x.iter().zip(y) {
+        sxx += (xi - mx) * (xi - mx);
+        sxy += (xi - mx) * (yi - my);
+    }
+    let b = if sxx.abs() < 1e-300 { 0.0 } else { sxy / sxx };
+    (my - b * mx, b)
+}
+
+/// Power-law fit y = c * x^alpha via log-log OLS; returns (c, alpha).
+/// Non-positive points are dropped.
+pub fn powerlaw_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let pts: Vec<(f64, f64)> = x
+        .iter()
+        .zip(y)
+        .filter(|(&a, &b)| a > 0.0 && b > 0.0)
+        .map(|(&a, &b)| (a.ln(), b.ln()))
+        .collect();
+    assert!(pts.len() >= 2, "need >= 2 positive points");
+    let lx: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ly: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (a, b) = linreg(&lx, &ly);
+    (a.exp(), b)
+}
+
+/// Summary of repeated measurements across seeds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub sem: f64,
+    pub n: usize,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    Summary { mean: mean(xs), sem: sem(xs), n: xs.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_sem() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+        assert!((sem(&xs) - 2.13809 / (8.0f64).sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+        // interpolation
+        let ys = [0.0, 10.0];
+        assert!((quantile(&ys, 0.3) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_is_gate_price() {
+        // the (1-rho)-quantile used by the adaptive Kondo gate: rho=0.25 of
+        // 4 values keeps exactly the top one above the price.
+        let chi = [0.1f32, 0.5, -0.3, 0.9];
+        let lam = quantile_f32(&chi, 0.75);
+        let kept = chi.iter().filter(|&&c| c > lam).count();
+        assert_eq!(kept, 1);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (x, f) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+        assert_eq!(f, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linreg(&x, &y);
+        assert!((a - 1.0).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn powerlaw_recovers_exponent() {
+        let x = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let y: Vec<f64> = x.iter().map(|&v: &f64| 3.0 * v.powf(-1.5)).collect();
+        let (c, alpha) = powerlaw_fit(&x, &y);
+        assert!((c - 3.0).abs() < 1e-6);
+        assert!((alpha + 1.5).abs() < 1e-9);
+    }
+}

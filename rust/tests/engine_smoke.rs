@@ -1,0 +1,48 @@
+//! End-to-end smoke: load real artifacts, execute mnist_fwd, check logp.
+use kondo::runtime::{Engine, HostTensor};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn mnist_fwd_produces_normalized_logprobs() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = Engine::new(&dir).unwrap();
+    let man = eng.manifest();
+    let rules = man.model("mnist").unwrap().to_vec();
+    let b = man.constants.mnist_batch;
+    let d = man.constants.mnist_in;
+    let a = man.constants.mnist_actions;
+
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    let mut rng = kondo::utils::rng::Pcg32::seeded(0);
+    for r in &rules {
+        let n: usize = r.shape.iter().product();
+        let data: Vec<f32> = match r.kind {
+            kondo::runtime::InitKind::Normal { scale } => {
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+            }
+            kondo::runtime::InitKind::Zeros => vec![0.0; n],
+            kondo::runtime::InitKind::Ones => vec![1.0; n],
+        };
+        inputs.push(HostTensor::f32(&r.shape, data));
+    }
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    inputs.push(HostTensor::f32(&[b, d], x));
+    inputs.push(HostTensor::zeros_f32(&[b, a]));
+
+    let out = eng.execute("mnist_fwd", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let logp = out[0].as_f32().unwrap();
+    assert_eq!(logp.len(), b * a);
+    for row in logp.chunks(a) {
+        let s: f32 = row.iter().map(|&l| l.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-4, "row sums to {s}");
+        assert!(row.iter().all(|&l| l <= 1e-5));
+    }
+}

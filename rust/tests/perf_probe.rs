@@ -1,0 +1,15 @@
+use kondo::algo::Method;
+use kondo::runtime::Engine;
+use kondo::trainers::{train_reversal, ReversalTrainerCfg};
+
+#[test]
+fn per_artifact_timing() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() { return }
+    let eng = Engine::new(&dir).unwrap();
+    let cfg = ReversalTrainerCfg { method: Method::Dg, steps: 5, h: 10, m: 2, seed: 0, eval_every: 5, ..Default::default() };
+    train_reversal(&eng, &cfg).unwrap();
+    for (name, st) in eng.stats() {
+        println!("{name}: calls={} mean={:.1}ms compile={:.1}s", st.calls, 1e3*st.total_secs/st.calls.max(1) as f64, st.compile_secs);
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration + property tests over the full L3 pipeline with real
+//! artifacts. Property-style tests draw seeded random cases (proptest is
+//! not in the offline vendor set; the loop-with-seeds pattern below is the
+//! same idea with reproducible failures).
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32};
+use kondo::coordinator::{BucketSet, KondoGate, Priority};
+use kondo::model::{accumulate, ParamStore};
+use kondo::runtime::{Engine, HostTensor};
+use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
+use kondo::utils::rng::Pcg32;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::new(&dir).unwrap())
+}
+
+/// PROPERTY (the bucketed-backward invariant, end to end): for random kept
+/// subsets, the gradient computed by packing kept samples into the
+/// smallest bucket equals the full-batch gradient with zeroed weights.
+#[test]
+fn bucketed_backward_equals_full_batch_zero_weight() {
+    let Some(eng) = engine() else { return };
+    let man = eng.manifest();
+    let b = man.constants.mnist_batch;
+    let img = man.constants.mnist_in;
+    let rules = man.model("mnist").unwrap().to_vec();
+    let params = ParamStore::init(&rules, 3);
+    let buckets = BucketSet::new(man.constants.mnist_bwd_caps.clone()).unwrap();
+
+    for case_seed in 0..5u64 {
+        let mut rng = Pcg32::seeded(100 + case_seed);
+        let x: Vec<f32> = (0..b * img).map(|_| rng.normal() as f32).collect();
+        let actions: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+        let n_keep = 1 + rng.below(20) as usize;
+        let mut idx: Vec<usize> = (0..b).collect();
+        rng.shuffle(&mut idx);
+        let kept: Vec<usize> = idx[..n_keep].to_vec();
+        let weights: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+
+        // full batch, zeroing skipped weights
+        let mut w_full = vec![0.0f32; b];
+        for &i in &kept {
+            w_full[i] = weights[i];
+        }
+        let mut inp = params.as_inputs();
+        inp.push(HostTensor::f32(&[b, img], x.clone()));
+        inp.push(HostTensor::i32(&[b], actions.clone()));
+        inp.push(HostTensor::f32(&[b], w_full));
+        let full = eng.execute(&format!("mnist_bwd_c{b}"), &inp).unwrap();
+
+        // bucketed path
+        let mut acc = params.zeros_like();
+        for chunk in buckets.pack(&kept) {
+            let cap = chunk.cap;
+            let xs = gather_rows_f32(&x, img, &chunk.idx, cap);
+            let acts = gather_i32(&actions, &chunk.idx, cap);
+            let per: Vec<f32> = chunk.idx.iter().map(|&i| weights[i]).collect();
+            let w = gather_f32(&per, &(0..chunk.idx.len()).collect::<Vec<_>>(), cap);
+            let mut binp = params.as_inputs();
+            binp.push(HostTensor::f32(&[cap, img], xs));
+            binp.push(HostTensor::i32(&[cap], acts));
+            binp.push(HostTensor::f32(&[cap], w));
+            let out = eng.execute(&format!("mnist_bwd_c{cap}"), &binp).unwrap();
+            accumulate(&mut acc, &out[1..]).unwrap();
+        }
+
+        for (ti, g_full) in full[1..].iter().enumerate() {
+            let gf = g_full.as_f32().unwrap();
+            let gb = &acc[ti];
+            let max_abs = gf.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+            for (a, bb) in gf.iter().zip(gb) {
+                assert!(
+                    (a - bb).abs() <= 1e-4 * max_abs + 1e-6,
+                    "case {case_seed}, tensor {ti}: {a} vs {bb}"
+                );
+            }
+        }
+    }
+}
+
+/// DG-K with rho = 1 keeps everything with weight U: it must be EXACTLY
+/// PG (same seeds -> bitwise-equal training trajectory).
+#[test]
+fn dgk_rate_one_is_pg() {
+    let Some(eng) = engine() else { return };
+    let mk = |method| MnistTrainerCfg {
+        method,
+        baseline: Baseline::Expected,
+        lr: 1e-3,
+        steps: 30,
+        eval_every: 30,
+        eval_size: 500,
+        seed: 5,
+        ..Default::default()
+    };
+    let pg = train_mnist(&eng, &mk(Method::Pg)).unwrap();
+    let kg = train_mnist(
+        &eng,
+        &mk(Method::DgK { gate: KondoGate::rate(1.0), priority: Priority::Delight }),
+    )
+    .unwrap();
+    assert_eq!(pg.final_test_err, kg.final_test_err);
+    assert_eq!(pg.curve.last().unwrap().metric, kg.curve.last().unwrap().metric);
+    // but the ledgers agree too: rho=1 pays for every backward pass
+    assert_eq!(pg.ledger.backward_kept, kg.ledger.backward_kept);
+}
+
+/// Training is deterministic in the seed and differs across seeds.
+#[test]
+fn mnist_training_deterministic_in_seed() {
+    let Some(eng) = engine() else { return };
+    let mk = |seed| MnistTrainerCfg {
+        method: Method::Dg,
+        steps: 20,
+        eval_every: 20,
+        eval_size: 500,
+        seed,
+        ..Default::default()
+    };
+    let a = train_mnist(&eng, &mk(7)).unwrap();
+    let b = train_mnist(&eng, &mk(7)).unwrap();
+    let c = train_mnist(&eng, &mk(8)).unwrap();
+    assert_eq!(a.final_test_err, b.final_test_err);
+    assert_eq!(a.ledger.backward_kept, b.ledger.backward_kept);
+    assert!(
+        (a.curve[0].metric - c.curve[0].metric).abs() > 0.0
+            || a.final_test_err != c.final_test_err
+    );
+}
+
+/// The ledger adds up: forward samples = steps * B; the adaptive gate's
+/// empirical rate is close to rho; executed slots >= kept samples.
+#[test]
+fn ledger_consistency_under_gating() {
+    let Some(eng) = engine() else { return };
+    let cfg = MnistTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.05), priority: Priority::Delight },
+        steps: 100,
+        eval_every: 100,
+        eval_size: 500,
+        seed: 2,
+        ..Default::default()
+    };
+    let res = train_mnist(&eng, &cfg).unwrap();
+    assert_eq!(res.ledger.forward_samples, 100 * 100);
+    assert!(res.ledger.backward_executed >= res.ledger.backward_kept);
+    let rate = res.ledger.gate_rate();
+    assert!((rate - 0.05).abs() < 0.02, "gate rate {rate}");
+    // executed slots land on compiled bucket capacities only
+    for cap in res.ledger.bucket_hist.keys() {
+        assert!(eng.manifest().constants.mnist_bwd_caps.contains(cap));
+    }
+}
+
+/// Reversal: the lambda=0 adaptive gate must keep roughly the positive-
+/// advantage token fraction and save backward compute vs full DG.
+#[test]
+fn reversal_adaptive_gate_saves_backward() {
+    let Some(eng) = engine() else { return };
+    let mk = |method| ReversalTrainerCfg {
+        method,
+        steps: 15,
+        h: 5,
+        m: 2,
+        seed: 3,
+        eval_every: 15,
+        ..Default::default()
+    };
+    let dg = train_reversal(&eng, &mk(Method::Dg)).unwrap();
+    let kg = train_reversal(
+        &eng,
+        &mk(Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight }),
+    )
+    .unwrap();
+    assert!(kg.ledger.backward_kept < dg.ledger.backward_kept);
+    assert!(kg.ledger.backward_executed <= dg.ledger.backward_executed);
+    assert_eq!(dg.ledger.forward_samples, kg.ledger.forward_samples);
+}
+
+/// PPO with inner epochs runs the rev_fwd re-scoring path.
+#[test]
+fn ppo_inner_epochs_exercise_ratio_path() {
+    let Some(eng) = engine() else { return };
+    let cfg = ReversalTrainerCfg {
+        method: Method::Ppo { eps: 0.2 },
+        steps: 4,
+        h: 4,
+        m: 2,
+        seed: 1,
+        eval_every: 4,
+        inner_epochs: 2,
+        ..Default::default()
+    };
+    let res = train_reversal(&eng, &cfg).unwrap();
+    // 4 rollouts + 4 re-scoring forwards, tokens each
+    assert_eq!(res.ledger.forward_samples, (4 + 4) * 100 * 4);
+    assert!(res.ledger.backward_calls >= 8);
+}
+
+/// PROPERTY: gather with identity indices is the identity (random shapes).
+#[test]
+fn gather_identity_property() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let rows = 1 + rng.below(20) as usize;
+        let width = 1 + rng.below(50) as usize;
+        let src: Vec<f32> = (0..rows * width).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<usize> = (0..rows).collect();
+        let out = gather_rows_f32(&src, width, &idx, rows);
+        assert_eq!(out, src);
+    }
+}

@@ -1,0 +1,55 @@
+//! End-to-end training smoke tests over real artifacts.
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::runtime::Engine;
+use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::new(&dir).unwrap())
+}
+
+#[test]
+fn mnist_dgk_learns_and_saves_backward() {
+    let Some(eng) = engine() else { return };
+    let t0 = std::time::Instant::now();
+    let cfg = MnistTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.03), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        steps: 300,
+        eval_every: 100,
+        eval_size: 500,
+        seed: 1,
+        ..Default::default()
+    };
+    let res = train_mnist(&eng, &cfg).unwrap();
+    println!("300 DG-K steps in {:.1}s; test err {:.3}; bwd kept {} / fwd {}",
+        t0.elapsed().as_secs_f64(), res.final_test_err,
+        res.ledger.backward_kept, res.ledger.forward_samples);
+    assert!(res.final_test_err < 0.5, "did not learn: {}", res.final_test_err);
+    // gate keeps ~3%: kept backward samples far below forward samples
+    assert!(res.ledger.backward_kept * 10 < res.ledger.forward_samples);
+}
+
+#[test]
+fn reversal_dg_learns() {
+    let Some(eng) = engine() else { return };
+    let t0 = std::time::Instant::now();
+    let cfg = ReversalTrainerCfg {
+        method: Method::Dg,
+        steps: 60,
+        h: 3,
+        m: 2,
+        seed: 1,
+        eval_every: 20,
+        ..Default::default()
+    };
+    let res = train_reversal(&eng, &cfg).unwrap();
+    println!("60 reversal steps in {:.1}s; final reward {:.3}",
+        t0.elapsed().as_secs_f64(), res.final_reward);
+    assert!(res.final_reward > 0.55, "no learning: {}", res.final_reward);
+}
