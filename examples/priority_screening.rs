@@ -15,7 +15,7 @@ use kondo::runtime::Engine;
 use kondo::trainers::{train_mnist, MnistTrainerCfg};
 
 fn main() -> anyhow::Result<()> {
-    let eng = Engine::new("artifacts")?;
+    let eng = Engine::open("artifacts")?;
     let priorities = [
         Priority::Delight,
         Priority::Advantage,

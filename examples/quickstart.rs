@@ -14,7 +14,7 @@ use kondo::runtime::Engine;
 use kondo::trainers::{train_mnist, MnistTrainerCfg};
 
 fn main() -> anyhow::Result<()> {
-    let eng = Engine::new("artifacts")?;
+    let eng = Engine::open("artifacts")?;
     println!("platform: {} | artifacts loaded", eng.platform());
 
     // a glimpse of the synthetic digit corpus (the MNIST substitution)

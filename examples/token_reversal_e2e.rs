@@ -17,7 +17,7 @@ use kondo::runtime::Engine;
 use kondo::trainers::{train_reversal, ReversalTrainerCfg};
 
 fn main() -> anyhow::Result<()> {
-    let eng = Engine::new("artifacts")?;
+    let eng = Engine::open("artifacts")?;
     println!("platform: {} | token reversal H=10 M=2, 300 steps x 100 episodes", eng.platform());
 
     let methods: Vec<(&str, Method)> = vec![
@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             seed: 0,
             eval_every: 15,
             inner_epochs: 1,
+            ..Default::default()
         };
         let t0 = std::time::Instant::now();
         let res = train_reversal(&eng, &cfg)?;

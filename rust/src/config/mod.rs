@@ -26,8 +26,10 @@ pub struct ExpConfig {
     pub lr_rev: f64,
     /// output directory for CSVs
     pub out_dir: String,
-    /// artifact directory
+    /// artifact directory (`"native"` selects the built-in pure-Rust testbed)
     pub artifacts_dir: String,
+    /// worker threads for the sharded training coordinator (1 = serial)
+    pub workers: usize,
 }
 
 impl Default for ExpConfig {
@@ -42,6 +44,7 @@ impl Default for ExpConfig {
             lr_rev: 3e-4,
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
+            workers: 1,
         }
     }
 }
@@ -75,6 +78,9 @@ impl ExpConfig {
         }
         if let Some(v) = doc.str("exp.artifacts_dir") {
             self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.i64("exp.workers") {
+            self.workers = (v.max(1)) as usize;
         }
     }
 
@@ -113,6 +119,16 @@ mod tests {
         assert_eq!(cfg.seeds, 2);
         // untouched field keeps default
         assert_eq!(cfg.eval_every, 50);
+        assert_eq!(cfg.workers, 1);
+    }
+
+    #[test]
+    fn workers_override_clamps_to_one() {
+        let mut cfg = ExpConfig::default();
+        cfg.apply_override("workers", "4").unwrap();
+        assert_eq!(cfg.workers, 4);
+        cfg.apply_override("workers", "0").unwrap();
+        assert_eq!(cfg.workers, 1);
     }
 
     #[test]

@@ -12,6 +12,11 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Ledger {
     pub forward_samples: u64,
+    /// forward sample-slots actually executed, including shard padding
+    /// (== forward_samples on unsharded runs; the honest hardware cost,
+    /// mirroring backward_executed). NOT part of the determinism contract:
+    /// it legitimately varies with the worker count.
+    pub forward_executed: u64,
     pub forward_calls: u64,
     pub backward_kept: u64,
     pub backward_executed: u64,
@@ -26,7 +31,15 @@ impl Ledger {
     }
 
     pub fn record_forward(&mut self, samples: usize) {
+        self.record_forward_padded(samples, samples);
+    }
+
+    /// Forward execution whose compiled capacity exceeded the live sample
+    /// count (sharded forward padded up to a capacity bucket).
+    pub fn record_forward_padded(&mut self, samples: usize, executed_slots: usize) {
+        debug_assert!(samples <= executed_slots);
         self.forward_samples += samples as u64;
+        self.forward_executed += executed_slots as u64;
         self.forward_calls += 1;
     }
 
@@ -67,6 +80,7 @@ impl Ledger {
 
     pub fn merge(&mut self, other: &Ledger) {
         self.forward_samples += other.forward_samples;
+        self.forward_executed += other.forward_executed;
         self.forward_calls += other.forward_calls;
         self.backward_kept += other.backward_kept;
         self.backward_executed += other.backward_executed;
@@ -74,6 +88,61 @@ impl Ledger {
         for (&cap, &n) in &other.bucket_hist {
             *self.bucket_hist.entry(cap).or_insert(0) += n;
         }
+    }
+}
+
+/// Shard-aware ledger: one `Ledger` per logical shard of the worker pool,
+/// merged deterministically (ascending shard index) into batch totals.
+/// Forward/backward work is attributed to the shard that logically owns it
+/// -- sample shards for forward scoring, `chunk_index % n_shards` for
+/// backward chunks -- so the attribution is a function of the batch alone,
+/// not of which OS thread happened to run the work.
+#[derive(Debug, Clone)]
+pub struct ShardedLedger {
+    shards: Vec<Ledger>,
+}
+
+impl ShardedLedger {
+    pub fn new(n_shards: usize) -> ShardedLedger {
+        ShardedLedger { shards: vec![Ledger::new(); n_shards.max(1)] }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &Ledger {
+        &self.shards[i]
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut Ledger {
+        &mut self.shards[i]
+    }
+
+    /// Shard that owns backward chunk `chunk_index` (round-robin).
+    pub fn backward_owner(&self, chunk_index: usize) -> usize {
+        chunk_index % self.shards.len()
+    }
+
+    /// Merge all shards into one total ledger, in shard order.
+    pub fn total(&self) -> Ledger {
+        let mut t = Ledger::new();
+        for s in &self.shards {
+            t.merge(s);
+        }
+        t
+    }
+
+    /// Load imbalance of executed backward slots: max-shard / mean-shard
+    /// (1.0 = perfectly balanced; 0.0 when no backward work ran).
+    pub fn backward_imbalance(&self) -> f64 {
+        let per: Vec<u64> = self.shards.iter().map(|s| s.backward_executed).collect();
+        let total: u64 = per.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / per.len() as f64;
+        *per.iter().max().unwrap() as f64 / mean
     }
 }
 
@@ -89,6 +158,7 @@ mod tests {
         l.record_backward(4, 3);
         l.record_backward(8, 8);
         assert_eq!(l.forward_samples, 200);
+        assert_eq!(l.forward_executed, 200);
         assert_eq!(l.forward_calls, 2);
         assert_eq!(l.backward_kept, 11);
         assert_eq!(l.backward_executed, 12);
@@ -130,6 +200,53 @@ mod tests {
         }
         let ratio = pg.backward_kept as f64 / kg.backward_kept as f64;
         assert!((ratio - 100.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn padded_forward_counts_slots_separately() {
+        let mut l = Ledger::new();
+        // shards of 5 samples executed in capacity-8 artifacts
+        l.record_forward_padded(5, 8);
+        l.record_forward_padded(5, 8);
+        assert_eq!(l.forward_samples, 10);
+        assert_eq!(l.forward_executed, 16);
+        let mut t = Ledger::new();
+        t.merge(&l);
+        assert_eq!(t.forward_executed, 16);
+    }
+
+    #[test]
+    fn sharded_ledger_total_matches_manual_merge() {
+        let mut sl = ShardedLedger::new(4);
+        assert_eq!(sl.n_shards(), 4);
+        for i in 0..4 {
+            sl.shard_mut(i).record_forward(25);
+        }
+        // 3 chunks round-robin over 4 shards
+        for (ci, (cap, kept)) in [(8usize, 8usize), (8, 8), (4, 1)].iter().enumerate() {
+            let owner = sl.backward_owner(ci);
+            assert_eq!(owner, ci % 4);
+            sl.shard_mut(owner).record_backward(*cap, *kept);
+        }
+        let t = sl.total();
+        assert_eq!(t.forward_samples, 100);
+        assert_eq!(t.forward_calls, 4);
+        assert_eq!(t.backward_kept, 17);
+        assert_eq!(t.backward_executed, 20);
+        assert_eq!(t.bucket_hist[&8], 2);
+        assert_eq!(t.bucket_hist[&4], 1);
+    }
+
+    #[test]
+    fn sharded_ledger_imbalance() {
+        let mut sl = ShardedLedger::new(2);
+        assert_eq!(sl.backward_imbalance(), 0.0);
+        sl.shard_mut(0).record_backward(30, 30);
+        sl.shard_mut(1).record_backward(10, 10);
+        // max 30 over mean 20
+        assert!((sl.backward_imbalance() - 1.5).abs() < 1e-12);
+        // zero-shard guard: constructor clamps to one shard
+        assert_eq!(ShardedLedger::new(0).n_shards(), 1);
     }
 
     #[test]

@@ -112,15 +112,29 @@ mod tests {
     }
 
     #[test]
-    fn rate_mode_keeps_roughly_rho_fraction() {
+    fn rate_mode_keep_count_matches_quantile_definition() {
+        // Deterministic, derived from the definition instead of a loose
+        // tolerance band: at eta = 0 the gate keeps exactly the samples
+        // with chi above the (1-rho)-quantile price, and for distinct
+        // scores that count is within one sample of rho * n.
         let mut r = rng();
-        let chi: Vec<f64> = (0..1000).map(|_| r.normal()).collect();
+        let n = 1000;
+        let chi: Vec<f64> = (0..n).map(|_| r.normal()).collect();
         for &rho in &[0.01, 0.03, 0.1, 0.5] {
-            let d = KondoGate::rate(rho).decide(&chi, &mut r);
-            let kept = d.keep.len() as f64 / 1000.0;
+            let gate = KondoGate::rate(rho);
+            let d = gate.decide(&chi, &mut r);
+            let lambda = gate.resolve_lambda(&chi);
+            assert_eq!(d.lambda, lambda, "rho={rho}");
+            let expected: Vec<usize> =
+                (0..n).filter(|&i| chi[i] > lambda).collect();
+            assert_eq!(d.keep, expected, "rho={rho}: keep set != {{i : chi_i > lambda}}");
+            // quantile(chi, 1-rho) interpolates at position (1-rho)(n-1),
+            // so the strict-above count is within one of the rho target
+            let target = rho * n as f64;
             assert!(
-                (kept - rho).abs() < 0.02 + rho * 0.5,
-                "rho={rho} kept={kept}"
+                (d.keep.len() as f64 - target).abs() <= 1.0,
+                "rho={rho}: kept {} vs target {target}",
+                d.keep.len()
             );
         }
     }

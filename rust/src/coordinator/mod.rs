@@ -3,20 +3,24 @@
 //! `priority` scores samples from the forward pass, `gate` decides which
 //! backward passes to pay for (Algorithm 1), `batcher` packs the kept
 //! samples into compiled capacity buckets so skipped compute is real
-//! skipped compute, `accounting` keeps the forward/backward ledger every
-//! paper axis is drawn from, and `quantile` provides the streaming-price
-//! variant of the adaptive gate.
+//! skipped compute, `accounting` keeps the (shard-aware) forward/backward
+//! ledger every paper axis is drawn from, `quantile` provides the
+//! streaming-price variant of the adaptive gate, and `pool` is the worker
+//! pool that shards each batch across threads under the determinism
+//! contract of DESIGN.md §"L3 parallelism".
 
 pub mod accounting;
 pub mod batcher;
 pub mod gate;
+pub mod pool;
 pub mod priority;
 pub mod quantile;
 pub mod speculative;
 
-pub use accounting::Ledger;
+pub use accounting::{Ledger, ShardedLedger};
 pub use batcher::{BucketSet, PackedChunk};
 pub use gate::{GateDecision, KondoGate, Pricing};
+pub use pool::{split_shards, unit_rng, Shard, WorkerPool};
 pub use priority::Priority;
 pub use quantile::{EwQuantile, P2Quantile};
 pub use speculative::{rank_correlation, screening_precision, DraftScreen};

@@ -1,0 +1,238 @@
+//! Worker pool: the sharded execution substrate of the L3 coordinator.
+//!
+//! A batch is split into contiguous shards; workers (std::thread + mpsc
+//! channels) run forward execution, delight scoring, and bucketed backward
+//! chunks concurrently. Everything here is built around one invariant,
+//! the **determinism contract** (DESIGN.md §"L3 parallelism"):
+//!
+//!   the training trajectory is a pure function of the seed, independent
+//!   of the `workers` knob.
+//!
+//! Three mechanisms enforce it:
+//! 1. `run` returns results in *task order*, no matter which worker
+//!    finished first -- merges (chi scores, gradients) always happen in a
+//!    fixed order on the caller's thread.
+//! 2. Per-sample randomness comes from `unit_rng(seed, step, i)` streams
+//!    keyed by the sample's batch index, not from a shared sequential
+//!    generator -- shard boundaries cannot shift anybody's draws.
+//! 3. Batch-global decisions (the Kondo gate's quantile price) are taken
+//!    on the merged score vector, never per shard.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{mpsc, Mutex};
+
+use crate::utils::rng::Pcg32;
+
+/// One contiguous slice of a batch, assigned to a logical shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    /// The whole batch as a single shard.
+    pub fn full(n: usize) -> Shard {
+        Shard { index: 0, start: 0, end: n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.end
+    }
+}
+
+/// Deterministic contiguous split of `n` items into at most `workers`
+/// shards (sizes differ by at most one, larger shards first). Depends only
+/// on `(n, workers)`.
+pub fn split_shards(n: usize, workers: usize) -> Vec<Shard> {
+    let w = workers.max(1).min(n.max(1));
+    let base = n / w;
+    let rem = n % w;
+    let mut shards = Vec::with_capacity(w);
+    let mut start = 0;
+    for index in 0..w {
+        let len = base + usize::from(index < rem);
+        shards.push(Shard { index, start, end: start + len });
+        start += len;
+    }
+    shards
+}
+
+/// Per-(seed, step, unit) RNG stream. All per-sample randomness (action
+/// sampling, reward noise) draws from these streams so that the draw a
+/// sample sees is a function of its batch index alone -- the heart of the
+/// determinism contract.
+pub fn unit_rng(seed: u64, step: u64, unit: u64) -> Pcg32 {
+    let stream = unit.wrapping_mul(2).wrapping_add(1);
+    Pcg32::new(seed ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15), stream)
+}
+
+/// Fixed-size worker pool over scoped threads. Stateless between calls:
+/// each `run` spawns up to `workers` scoped threads that drain a shared
+/// task queue and send `(index, result)` pairs back over an mpsc channel;
+/// the caller reassembles results in task order.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool { workers: workers.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f` over every task, returning results in task order. With one
+    /// worker (or at most one task) this degenerates to an inline loop on
+    /// the caller's thread -- the `workers = 1` baseline path that sharded
+    /// runs must reproduce bit for bit.
+    pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = tasks.len();
+        if self.workers == 1 || n <= 1 {
+            return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        let queue: Mutex<VecDeque<(usize, T)>> =
+            Mutex::new(tasks.into_iter().enumerate().collect());
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        let n_threads = self.workers.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..n_threads {
+                let tx = tx.clone();
+                let queue = &queue;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let task = queue.lock().unwrap().pop_front();
+                    let Some((i, t)) = task else { break };
+                    if tx.send((i, f(i, t))).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            for (i, r) in rx {
+                out[i] = Some(r);
+            }
+            out.into_iter()
+                .map(|r| r.expect("pool worker terminated before returning its result"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_shards_covers_batch_exactly() {
+        for (n, w) in [(32, 4), (33, 4), (10, 3), (5, 8), (1, 4), (100, 7)] {
+            let shards = split_shards(n, w);
+            assert!(shards.len() <= w);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, n);
+            let total: usize = shards.iter().map(Shard::len).sum();
+            assert_eq!(total, n, "n={n} w={w}");
+            for pair in shards.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+                // sizes differ by at most one, monotonically non-increasing
+                assert!(pair[0].len() >= pair[1].len());
+                assert!(pair[0].len() - pair[1].len() <= 1);
+            }
+            for (i, s) in shards.iter().enumerate() {
+                assert_eq!(s.index, i);
+                assert!(!s.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn split_shards_empty_batch() {
+        let shards = split_shards(0, 4);
+        assert_eq!(shards.len(), 1);
+        assert!(shards[0].is_empty());
+    }
+
+    #[test]
+    fn run_preserves_task_order() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<usize> = (0..64).collect();
+        let out = pool.run(tasks, |i, t| {
+            assert_eq!(i, t);
+            // stagger completion to scramble any accidental order reliance
+            std::thread::sleep(std::time::Duration::from_micros(((64 - t) % 7) as u64 * 50));
+            t * 10
+        });
+        assert_eq!(out, (0..64).map(|t| t * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_single_worker_is_inline() {
+        let pool = WorkerPool::new(1);
+        let tid = std::thread::current().id();
+        let out = pool.run(vec![1, 2, 3], |_, t| {
+            assert_eq!(std::thread::current().id(), tid);
+            t + 1
+        });
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn run_executes_every_task_once() {
+        let pool = WorkerPool::new(8);
+        let count = AtomicUsize::new(0);
+        let out = pool.run((0..200).collect::<Vec<_>>(), |_, t: i32| {
+            count.fetch_add(1, Ordering::SeqCst);
+            t
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 200);
+        assert_eq!(out.len(), 200);
+    }
+
+    #[test]
+    fn run_results_independent_of_worker_count() {
+        let tasks: Vec<u64> = (0..50).collect();
+        let f = |_: usize, t: u64| {
+            // deterministic per-task work with its own rng stream
+            let mut rng = unit_rng(9, 3, t);
+            rng.next_u32() as u64 + t
+        };
+        let a = WorkerPool::new(1).run(tasks.clone(), f);
+        let b = WorkerPool::new(4).run(tasks.clone(), f);
+        let c = WorkerPool::new(16).run(tasks, f);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn unit_rng_streams_are_stable_and_distinct() {
+        let mut a = unit_rng(1, 2, 3);
+        let mut b = unit_rng(1, 2, 3);
+        assert_eq!(a.next_u32(), b.next_u32());
+        let mut c = unit_rng(1, 2, 4);
+        let mut d = unit_rng(1, 3, 3);
+        let x = unit_rng(1, 2, 3).next_u32();
+        assert_ne!(x, c.next_u32());
+        assert_ne!(x, d.next_u32());
+    }
+}

@@ -28,6 +28,7 @@ fn cfg_of(ctx: &ExpCtx, method: Method, seed: u64) -> MnistTrainerCfg {
         eval_every: ctx.cfg.eval_every,
         eval_size: ctx.cfg.eval_size,
         seed,
+        workers: ctx.cfg.workers,
         ..Default::default()
     }
 }

@@ -23,6 +23,7 @@ fn base_cfg(ctx: &ExpCtx, method: Method, seed: u64) -> MnistTrainerCfg {
         eval_every: ctx.cfg.eval_every,
         eval_size: ctx.cfg.eval_size,
         seed,
+        workers: ctx.cfg.workers,
         ..Default::default()
     }
 }

@@ -6,6 +6,33 @@
 //! crate is the L3 coordinator that owns the training loop, the Kondo gate,
 //! the bucketed backward executor, every environment/substrate, and the
 //! experiment harness that regenerates each figure of the paper.
+//!
+//! # Sharded training (DESIGN.md §"L3 parallelism")
+//!
+//! The coordinator shards every training step across a worker pool
+//! ([`coordinator::pool`], the `workers` knob in [`config::ExpConfig`]):
+//! forward execution and delight scoring run per contiguous shard, the
+//! Kondo gate resolves one batch-global quantile price over the merged
+//! chi scores, and the bucketed backward chunks execute concurrently with
+//! gradients merged in chunk order. [`trainers::GatedLoop`] is the shared
+//! substrate both trainers run on.
+//!
+//! # Determinism contract
+//!
+//! With the hard gate (eta = 0) a training trajectory is a pure function
+//! of the seed, bit-identical for every `workers` value: per-sample
+//! randomness comes from `unit_rng(seed, step, sample)` streams, backends
+//! compute output rows independently (see [`runtime::native`]), and all
+//! cross-shard merges happen in fixed batch/chunk order. Locked by
+//! `rust/tests/gated_e2e.rs`.
+//!
+//! # Backends
+//!
+//! [`runtime::Engine`] fronts two interchangeable backends: the PJRT
+//! engine over compiled HLO artifacts (`Engine::new`), and the pure-Rust
+//! native testbed (`Engine::native_testbed()`) implementing the same
+//! artifact contract -- the substrate tests and benches run on in this
+//! offline build.
 
 pub mod algo;
 pub mod bandit_math;

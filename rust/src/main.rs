@@ -47,7 +47,7 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
     }
     const CFG_KEYS: &[&str] = &[
         "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
-        "lr_rev", "out_dir", "artifacts_dir",
+        "lr_rev", "out_dir", "artifacts_dir", "workers",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -76,7 +76,10 @@ fn real_main() -> Result<()> {
         Some("exp") => {
             let id = args.get(1).map(String::as_str).unwrap_or("all");
             let cfg = load_config(&args[2.min(args.len())..])?;
-            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let eng = Engine::open(&cfg.artifacts_dir)?;
+            // make the backend unmistakable in experiment logs: figures
+            // from the native testbed must not pass as artifact runs
+            println!("platform: {}", eng.platform());
             let ctx = ExpCtx { eng: &eng, cfg: &cfg };
             let ids: Vec<&str> = match id {
                 "all" => exp::ALL.to_vec(),
@@ -94,7 +97,7 @@ fn real_main() -> Result<()> {
             let what = args.get(1).map(String::as_str).unwrap_or("mnist");
             let rest = &args[2.min(args.len())..];
             let cfg = load_config(rest)?;
-            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let eng = Engine::open(&cfg.artifacts_dir)?;
             let method = parse_method(rest)?;
             match what {
                 "mnist" => {
@@ -106,6 +109,7 @@ fn real_main() -> Result<()> {
                         eval_every: cfg.eval_every,
                         eval_size: cfg.eval_size,
                         seed: arg_u64(rest, "seed").unwrap_or(0),
+                        workers: cfg.workers,
                         ..Default::default()
                     };
                     let res = train_mnist(&eng, &tcfg)?;
@@ -130,6 +134,7 @@ fn real_main() -> Result<()> {
                         seed: arg_u64(rest, "seed").unwrap_or(0),
                         eval_every: (cfg.rev_steps / 20).max(1),
                         inner_epochs: arg_u64(rest, "epochs").unwrap_or(1) as usize,
+                        workers: cfg.workers,
                     };
                     let res = train_reversal(&eng, &tcfg)?;
                     println!(
@@ -148,7 +153,7 @@ fn real_main() -> Result<()> {
         }
         Some("stats") => {
             let cfg = load_config(&args[1.min(args.len())..])?;
-            let eng = Engine::new(&cfg.artifacts_dir)?;
+            let eng = Engine::open(&cfg.artifacts_dir)?;
             let man = eng.manifest();
             println!("platform: {}", eng.platform());
             println!("artifacts ({}):", man.artifacts.len());

@@ -74,6 +74,11 @@ pub struct Constants {
     pub mnist_actions: usize,
     pub mnist_in: usize,
     pub mnist_bwd_caps: Vec<usize>,
+    /// capacities with compiled shard-sized forward artifacts
+    /// (`mnist_fwd_c{cap}`); empty = forward sharding unavailable.
+    /// Optional in manifest.json for compatibility with older artifact
+    /// sets.
+    pub mnist_fwd_caps: Vec<usize>,
     pub rev_batch: usize,
     /// compiled reversal shape sets (h_max values, ascending)
     pub rev_sets: Vec<usize>,
@@ -137,6 +142,7 @@ impl Manifest {
             mnist_actions: usize_of(c, "mnist_actions")?,
             mnist_in: usize_of(c, "mnist_in")?,
             mnist_bwd_caps: usize_arr(c, "mnist_bwd_caps")?,
+            mnist_fwd_caps: usize_arr(c, "mnist_fwd_caps").unwrap_or_default(),
             rev_batch: usize_of(c, "rev_batch")?,
             rev_sets: usize_arr(c, "rev_sets")?,
             h_max: usize_of(c, "h_max")?,
@@ -249,6 +255,8 @@ mod tests {
         assert_eq!(m.constants.mnist_batch, 100);
         assert_eq!(m.constants.neg_inf, -1e30);
         assert_eq!(m.constants.mnist_bwd_caps, vec![4, 100]);
+        // optional key absent -> forward sharding disabled
+        assert!(m.constants.mnist_fwd_caps.is_empty());
         let rules = m.model("mnist").unwrap();
         assert_eq!(rules.len(), 2);
         assert_eq!(rules[0].kind, InitKind::Normal { scale: 0.05 });

@@ -1,12 +1,18 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, host tensors.
+//! Runtime layer: execution engine, artifact manifest, host tensors.
 //!
-//! Loads the HLO-text artifacts built once by `make artifacts` (python is
-//! never on the request path) and executes them on the CPU PJRT client.
+//! Two interchangeable backends sit behind one artifact namespace: the
+//! PJRT engine over HLO-text artifacts built by `make artifacts` (python
+//! is never on the request path), and the pure-Rust native testbed
+//! (`Engine::native_testbed()`) that implements the same contract with
+//! row-independent, bit-deterministic math -- the substrate the sharded
+//! coordinator's determinism tests run on.
 
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
 pub use engine::Engine;
 pub use manifest::{ArtifactSig, Constants, DType, InitKind, InitRule, Manifest, TensorSig};
+pub use native::NativeTestbed;
 pub use tensor::HostTensor;

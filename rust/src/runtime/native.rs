@@ -1,0 +1,754 @@
+//! Native testbed backend: a pure-Rust reference implementation of the
+//! artifact contract, used when no compiled HLO artifact set is available
+//! (this offline environment has no PJRT runtime at all).
+//!
+//! The testbed registers the same artifact *names and signatures* the AOT
+//! pipeline would emit -- `mnist_fwd`, `mnist_bwd_c{cap}`, `rev8_rollout`,
+//! ... -- over deliberately small models: a 784-32-10 tanh MLP for the
+//! MNIST bandit and a pointer-attention model (learned position-attention
+//! x token-emission table) for token reversal. The trainers, gate,
+//! batcher, and worker pool run unmodified against it.
+//!
+//! Determinism contract (DESIGN.md §"L3 parallelism"): every artifact here
+//! is **row-independent** -- output row i is a pure function of input row
+//! i and the parameters, with all reductions taken in a fixed sequential
+//! order inside the row. Executing a batch whole, in shards, or padded to
+//! a larger capacity therefore yields bit-identical rows, which is what
+//! makes `workers=N` training trajectories bit-equal to `workers=1`.
+
+use anyhow::{bail, Result};
+
+use crate::utils::math::logsumexp;
+use crate::utils::rng::Pcg32;
+
+use super::manifest::{ArtifactSig, Constants, DType, InitKind, InitRule, Manifest, TensorSig};
+use super::tensor::HostTensor;
+
+// ---- testbed shape constants (small: tests train in seconds) ----
+pub const MNIST_BATCH: usize = 32;
+pub const MNIST_EVAL_BATCH: usize = 64;
+pub const MNIST_HIDDEN: usize = 32;
+pub const MNIST_ACTIONS: usize = 10;
+pub const MNIST_IN: usize = 784;
+/// Bucket ladder tops out BELOW the batch (32) on purpose: ungated
+/// methods must split into several chunks, so the chunk-order gradient
+/// merge of the worker pool is exercised (and determinism-tested) even
+/// on small runs.
+pub const MNIST_CAPS: [usize; 3] = [4, 8, 16];
+pub const REV_BATCH: usize = 100;
+pub const REV_HMAX: usize = 8;
+pub const REV_VOCAB: usize = 8;
+/// pad token id (== vocab, one past the last real token)
+pub const REV_PAD: usize = 8;
+/// max cap 64 < batch 100: full-batch backwards split into two chunks
+pub const REV_CAPS: [usize; 5] = [4, 8, 16, 32, 64];
+const NEG: f32 = -1.0e30;
+
+/// Stateless executor for the native artifact set.
+#[derive(Debug, Default)]
+pub struct NativeTestbed;
+
+fn sig(name: &str, shape: &[usize], dtype: DType) -> TensorSig {
+    TensorSig { name: name.to_string(), shape: shape.to_vec(), dtype }
+}
+
+fn param_sigs(rules: &[InitRule]) -> Vec<TensorSig> {
+    rules.iter().map(|r| sig(&r.name, &r.shape, DType::F32)).collect()
+}
+
+fn mnist_rules() -> Vec<InitRule> {
+    vec![
+        InitRule {
+            name: "w1".into(),
+            shape: vec![MNIST_IN, MNIST_HIDDEN],
+            kind: InitKind::Normal { scale: 0.05 },
+        },
+        InitRule { name: "b1".into(), shape: vec![MNIST_HIDDEN], kind: InitKind::Zeros },
+        InitRule {
+            name: "w2".into(),
+            shape: vec![MNIST_HIDDEN, MNIST_ACTIONS],
+            kind: InitKind::Normal { scale: 0.05 },
+        },
+        InitRule { name: "b2".into(), shape: vec![MNIST_ACTIONS], kind: InitKind::Zeros },
+    ]
+}
+
+fn rev_rules() -> Vec<InitRule> {
+    vec![
+        InitRule { name: "attn".into(), shape: vec![REV_HMAX, REV_HMAX], kind: InitKind::Zeros },
+        InitRule {
+            name: "emit".into(),
+            shape: vec![REV_VOCAB + 1, REV_VOCAB],
+            kind: InitKind::Normal { scale: 0.05 },
+        },
+    ]
+}
+
+fn art(name: &str, inputs: Vec<TensorSig>, outputs: Vec<TensorSig>) -> (String, ArtifactSig) {
+    (
+        name.to_string(),
+        ArtifactSig { name: name.to_string(), file: "<native>".to_string(), inputs, outputs },
+    )
+}
+
+impl NativeTestbed {
+    /// The manifest the AOT pipeline would have produced for this set.
+    pub fn manifest() -> Manifest {
+        let constants = Constants {
+            mnist_batch: MNIST_BATCH,
+            mnist_eval_batch: MNIST_EVAL_BATCH,
+            mnist_actions: MNIST_ACTIONS,
+            mnist_in: MNIST_IN,
+            mnist_bwd_caps: MNIST_CAPS.to_vec(),
+            mnist_fwd_caps: MNIST_CAPS.to_vec(),
+            rev_batch: REV_BATCH,
+            rev_sets: vec![REV_HMAX],
+            h_max: REV_HMAX,
+            vocab: REV_VOCAB,
+            pad: REV_PAD,
+            rev_bwd_caps: REV_CAPS.to_vec(),
+            neg_inf: NEG as f64,
+        };
+
+        let mnist = mnist_rules();
+        let rev = rev_rules();
+        let mut artifacts = std::collections::BTreeMap::new();
+
+        // MNIST forward (training batch, with exploration-noise input) at
+        // the full batch plus every shard capacity, eval forward, and the
+        // bucketed backward set.
+        let fwd = |cap: usize, name: &str| {
+            let mut inputs = param_sigs(&mnist);
+            inputs.push(sig("x", &[cap, MNIST_IN], DType::F32));
+            inputs.push(sig("noise", &[cap, MNIST_ACTIONS], DType::F32));
+            art(name, inputs, vec![sig("logp", &[cap, MNIST_ACTIONS], DType::F32)])
+        };
+        let (k, v) = fwd(MNIST_BATCH, "mnist_fwd");
+        artifacts.insert(k, v);
+        for cap in MNIST_CAPS {
+            let (k, v) = fwd(cap, &format!("mnist_fwd_c{cap}"));
+            artifacts.insert(k, v);
+        }
+        {
+            let mut inputs = param_sigs(&mnist);
+            inputs.push(sig("x", &[MNIST_EVAL_BATCH, MNIST_IN], DType::F32));
+            let (k, v) = art(
+                "mnist_fwd_eval",
+                inputs,
+                vec![sig("logp", &[MNIST_EVAL_BATCH, MNIST_ACTIONS], DType::F32)],
+            );
+            artifacts.insert(k, v);
+        }
+        for cap in MNIST_CAPS {
+            let mut inputs = param_sigs(&mnist);
+            inputs.push(sig("x", &[cap, MNIST_IN], DType::F32));
+            inputs.push(sig("actions", &[cap], DType::I32));
+            inputs.push(sig("w", &[cap], DType::F32));
+            let mut outputs = vec![sig("loss", &[1], DType::F32)];
+            outputs.extend(param_sigs(&mnist).into_iter().map(|mut t| {
+                t.name = format!("g_{}", t.name);
+                t
+            }));
+            let (k, v) = art(&format!("mnist_bwd_c{cap}"), inputs, outputs);
+            artifacts.insert(k, v);
+        }
+
+        // Token reversal: rollout + re-scoring forward at the full batch,
+        // bucketed backward per episode capacity.
+        {
+            let mut inputs = param_sigs(&rev);
+            inputs.push(sig("prompt", &[REV_BATCH, REV_HMAX], DType::I32));
+            inputs.push(sig("h", &[1], DType::I32));
+            inputs.push(sig("m", &[1], DType::I32));
+            inputs.push(sig("seed", &[1], DType::I32));
+            let (k, v) = art(
+                &format!("rev{REV_HMAX}_rollout"),
+                inputs,
+                vec![
+                    sig("actions", &[REV_BATCH, REV_HMAX], DType::I32),
+                    sig("logp", &[REV_BATCH, REV_HMAX], DType::F32),
+                ],
+            );
+            artifacts.insert(k, v);
+        }
+        {
+            let mut inputs = param_sigs(&rev);
+            inputs.push(sig("prompt", &[REV_BATCH, REV_HMAX], DType::I32));
+            inputs.push(sig("actions", &[REV_BATCH, REV_HMAX], DType::I32));
+            inputs.push(sig("h", &[1], DType::I32));
+            inputs.push(sig("m", &[1], DType::I32));
+            let (k, v) = art(
+                &format!("rev{REV_HMAX}_fwd"),
+                inputs,
+                vec![sig("logp", &[REV_BATCH, REV_HMAX], DType::F32)],
+            );
+            artifacts.insert(k, v);
+        }
+        for cap in REV_CAPS {
+            let mut inputs = param_sigs(&rev);
+            inputs.push(sig("prompt", &[cap, REV_HMAX], DType::I32));
+            inputs.push(sig("actions", &[cap, REV_HMAX], DType::I32));
+            inputs.push(sig("w", &[cap, REV_HMAX], DType::F32));
+            inputs.push(sig("h", &[1], DType::I32));
+            inputs.push(sig("m", &[1], DType::I32));
+            let outputs = vec![
+                sig("loss", &[1], DType::F32),
+                sig("g_attn", &[REV_HMAX, REV_HMAX], DType::F32),
+                sig("g_emit", &[REV_VOCAB + 1, REV_VOCAB], DType::F32),
+            ];
+            let (k, v) = art(&format!("rev{REV_HMAX}_bwd_c{cap}"), inputs, outputs);
+            artifacts.insert(k, v);
+        }
+
+        let mut models = std::collections::BTreeMap::new();
+        models.insert("mnist".to_string(), mnist);
+        models.insert(format!("reversal{REV_HMAX}"), rev);
+
+        Manifest { constants, models, artifacts }
+    }
+
+    /// Execute one artifact. Inputs are already validated against the
+    /// manifest signature by the engine, so shapes can be trusted here.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if name == "mnist_fwd" {
+            return mnist_forward(inputs, MNIST_BATCH, true);
+        }
+        if name == "mnist_fwd_eval" {
+            return mnist_forward(inputs, MNIST_EVAL_BATCH, false);
+        }
+        if let Some(cap) = suffix_cap(name, "mnist_fwd_c") {
+            return mnist_forward(inputs, cap, true);
+        }
+        if let Some(cap) = suffix_cap(name, "mnist_bwd_c") {
+            return mnist_backward(inputs, cap);
+        }
+        if name == format!("rev{REV_HMAX}_rollout") {
+            return rev_rollout(inputs);
+        }
+        if name == format!("rev{REV_HMAX}_fwd") {
+            return rev_forward(inputs);
+        }
+        if let Some(cap) = suffix_cap(name, &format!("rev{REV_HMAX}_bwd_c")) {
+            return rev_backward(inputs, cap);
+        }
+        bail!("native testbed: unknown artifact '{name}'")
+    }
+}
+
+fn suffix_cap(name: &str, prefix: &str) -> Option<usize> {
+    name.strip_prefix(prefix).and_then(|s| s.parse().ok())
+}
+
+// ---- MNIST MLP: x[784] -> tanh(32) -> log-softmax(10) ----
+
+/// Hidden activations for one input row (f64 accumulation, fixed order).
+fn mlp_hidden(w1: &[f32], b1: &[f32], xi: &[f32]) -> Vec<f32> {
+    let mut h = vec![0.0f32; MNIST_HIDDEN];
+    for (j, hj) in h.iter_mut().enumerate() {
+        let mut acc = b1[j] as f64;
+        for (d, &x) in xi.iter().enumerate() {
+            acc += x as f64 * w1[d * MNIST_HIDDEN + j] as f64;
+        }
+        *hj = acc.tanh() as f32;
+    }
+    h
+}
+
+/// Logits for one row given its hidden activations.
+fn mlp_logits(w2: &[f32], b2: &[f32], h: &[f32], noise_row: Option<&[f32]>) -> Vec<f32> {
+    let mut logits = vec![0.0f32; MNIST_ACTIONS];
+    for (k, lk) in logits.iter_mut().enumerate() {
+        let mut acc = b2[k] as f64;
+        for (j, &hj) in h.iter().enumerate() {
+            acc += hj as f64 * w2[j * MNIST_ACTIONS + k] as f64;
+        }
+        if let Some(n) = noise_row {
+            acc += n[k] as f64;
+        }
+        *lk = acc as f32;
+    }
+    logits
+}
+
+fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let lse = logsumexp(logits);
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+fn mnist_forward(inputs: &[HostTensor], cap: usize, with_noise: bool) -> Result<Vec<HostTensor>> {
+    let w1 = inputs[0].as_f32()?;
+    let b1 = inputs[1].as_f32()?;
+    let w2 = inputs[2].as_f32()?;
+    let b2 = inputs[3].as_f32()?;
+    let x = inputs[4].as_f32()?;
+    let noise = if with_noise { Some(inputs[5].as_f32()?) } else { None };
+
+    let mut logp = vec![0.0f32; cap * MNIST_ACTIONS];
+    for i in 0..cap {
+        let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
+        let h = mlp_hidden(w1, b1, xi);
+        let nrow = noise.map(|n| &n[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS]);
+        let logits = mlp_logits(w2, b2, &h, nrow);
+        logp[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS].copy_from_slice(&log_softmax(&logits));
+    }
+    Ok(vec![HostTensor::f32(&[cap, MNIST_ACTIONS], logp)])
+}
+
+/// Weighted score-function backward: L = -sum_i w_i log pi(a_i); outputs
+/// [loss, g_w1, g_b1, g_w2, g_b2]. Zero-weight (padding) rows are skipped,
+/// which is exact because every contribution scales with w_i.
+fn mnist_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
+    let w1 = inputs[0].as_f32()?;
+    let b1 = inputs[1].as_f32()?;
+    let w2 = inputs[2].as_f32()?;
+    let b2 = inputs[3].as_f32()?;
+    let x = inputs[4].as_f32()?;
+    let actions = inputs[5].as_i32()?;
+    let w = inputs[6].as_f32()?;
+
+    let mut loss = 0.0f64;
+    let mut gw1 = vec![0.0f32; MNIST_IN * MNIST_HIDDEN];
+    let mut gb1 = vec![0.0f32; MNIST_HIDDEN];
+    let mut gw2 = vec![0.0f32; MNIST_HIDDEN * MNIST_ACTIONS];
+    let mut gb2 = vec![0.0f32; MNIST_ACTIONS];
+
+    for i in 0..cap {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue;
+        }
+        let a = actions[i] as usize;
+        if a >= MNIST_ACTIONS {
+            bail!("mnist_bwd: action {a} out of range");
+        }
+        let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
+        let h = mlp_hidden(w1, b1, xi);
+        let logp = log_softmax(&mlp_logits(w2, b2, &h, None));
+        loss += wi as f64 * (-(logp[a] as f64));
+
+        // dL/dlogits = w * (softmax - onehot(a))
+        let mut dl = vec![0.0f32; MNIST_ACTIONS];
+        for (k, dlk) in dl.iter_mut().enumerate() {
+            let p = logp[k].exp();
+            *dlk = wi * (p - if k == a { 1.0 } else { 0.0 });
+        }
+        for k in 0..MNIST_ACTIONS {
+            gb2[k] += dl[k];
+        }
+        for (j, &hj) in h.iter().enumerate() {
+            let mut dh = 0.0f64;
+            for (k, &dlk) in dl.iter().enumerate() {
+                gw2[j * MNIST_ACTIONS + k] += hj * dlk;
+                dh += w2[j * MNIST_ACTIONS + k] as f64 * dlk as f64;
+            }
+            let dpre = ((1.0 - hj as f64 * hj as f64) * dh) as f32;
+            gb1[j] += dpre;
+            for (d, &xd) in xi.iter().enumerate() {
+                gw1[d * MNIST_HIDDEN + j] += xd * dpre;
+            }
+        }
+    }
+
+    Ok(vec![
+        HostTensor::f32(&[1], vec![loss as f32]),
+        HostTensor::f32(&[MNIST_IN, MNIST_HIDDEN], gw1),
+        HostTensor::f32(&[MNIST_HIDDEN], gb1),
+        HostTensor::f32(&[MNIST_HIDDEN, MNIST_ACTIONS], gw2),
+        HostTensor::f32(&[MNIST_ACTIONS], gb2),
+    ])
+}
+
+// ---- token reversal: pointer-attention model ----
+//
+// alpha[j, k] = softmax_k(attn[j, :]) is a learned soft pointer from
+// output position j to prompt position k; logits[ep, j, v] =
+// sum_k alpha[j, k] * emit[prompt[ep, k], v], masked to the active
+// vocabulary m. Solving reversal means learning alpha[j, .] ->
+// onehot(h_max - 1 - j + offset) and emit -> identity.
+
+fn rev_alpha(attn: &[f32]) -> Vec<f32> {
+    let mut alpha = vec![0.0f32; REV_HMAX * REV_HMAX];
+    for j in 0..REV_HMAX {
+        let row = &attn[j * REV_HMAX..(j + 1) * REV_HMAX];
+        let lse = logsumexp(row);
+        for k in 0..REV_HMAX {
+            alpha[j * REV_HMAX + k] = (row[k] - lse).exp();
+        }
+    }
+    alpha
+}
+
+/// Masked logits for one (episode, position): full vocab length, inactive
+/// tokens at -1e30.
+fn rev_logits(alpha: &[f32], emit: &[f32], prow: &[i32], j: usize, m: usize) -> Vec<f32> {
+    let mut logits = vec![NEG; REV_VOCAB];
+    for (v, lv) in logits.iter_mut().enumerate().take(m) {
+        let mut acc = 0.0f64;
+        for k in 0..REV_HMAX {
+            let t = prow[k] as usize;
+            acc += alpha[j * REV_HMAX + k] as f64 * emit[t * REV_VOCAB + v] as f64;
+        }
+        *lv = acc as f32;
+    }
+    logits
+}
+
+fn rev_scalars(inputs: &[HostTensor], h_idx: usize) -> Result<(usize, usize)> {
+    let h = inputs[h_idx].as_i32()?[0] as usize;
+    let m = inputs[h_idx + 1].as_i32()?[0] as usize;
+    if h == 0 || h > REV_HMAX || m < 2 || m > REV_VOCAB {
+        bail!("rev artifact: bad h={h} or m={m}");
+    }
+    Ok((h, m))
+}
+
+fn check_token(t: i32) -> Result<usize> {
+    let t = t as usize;
+    if t > REV_PAD {
+        bail!("rev artifact: token id {t} out of range");
+    }
+    Ok(t)
+}
+
+fn rev_rollout(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let attn = inputs[0].as_f32()?;
+    let emit = inputs[1].as_f32()?;
+    let prompt = inputs[2].as_i32()?;
+    let (h, m) = rev_scalars(inputs, 3)?;
+    let seed = inputs[5].as_i32()?[0] as u64;
+
+    let alpha = rev_alpha(attn);
+    let mut actions = vec![REV_PAD as i32; REV_BATCH * REV_HMAX];
+    let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
+    for ep in 0..REV_BATCH {
+        let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
+        for &t in prow {
+            check_token(t)?;
+        }
+        // per-episode stream: sampling is independent of how the batch
+        // would be sharded (rollout runs whole-batch today, but the
+        // contract keeps this future-proof)
+        let mut rng = Pcg32::new(seed, ep as u64);
+        for j in 0..h {
+            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let a = rng.categorical_from_logits(&logits);
+            let lse = logsumexp(&logits);
+            actions[ep * REV_HMAX + j] = a as i32;
+            logp[ep * REV_HMAX + j] = logits[a] - lse;
+        }
+    }
+    Ok(vec![
+        HostTensor::i32(&[REV_BATCH, REV_HMAX], actions),
+        HostTensor::f32(&[REV_BATCH, REV_HMAX], logp),
+    ])
+}
+
+fn rev_forward(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let attn = inputs[0].as_f32()?;
+    let emit = inputs[1].as_f32()?;
+    let prompt = inputs[2].as_i32()?;
+    let actions = inputs[3].as_i32()?;
+    let (h, m) = rev_scalars(inputs, 4)?;
+
+    let alpha = rev_alpha(attn);
+    let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
+    for ep in 0..REV_BATCH {
+        let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
+        for &t in prow {
+            check_token(t)?;
+        }
+        for j in 0..h {
+            let a = actions[ep * REV_HMAX + j] as usize;
+            if a >= m {
+                bail!("rev_fwd: action {a} outside active vocab {m}");
+            }
+            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let lse = logsumexp(&logits);
+            logp[ep * REV_HMAX + j] = logits[a] - lse;
+        }
+    }
+    Ok(vec![HostTensor::f32(&[REV_BATCH, REV_HMAX], logp)])
+}
+
+/// Episode-bucketed backward: L = -sum_{ep,j} w[ep,j] log pi(a[ep,j]);
+/// outputs [loss, g_attn, g_emit]. Zero-weight tokens (skipped by the
+/// gate, or whole padding episodes) contribute nothing.
+fn rev_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
+    let attn = inputs[0].as_f32()?;
+    let emit = inputs[1].as_f32()?;
+    let prompt = inputs[2].as_i32()?;
+    let actions = inputs[3].as_i32()?;
+    let w = inputs[4].as_f32()?;
+    let (h, m) = rev_scalars(inputs, 5)?;
+
+    let alpha = rev_alpha(attn);
+    let mut loss = 0.0f64;
+    let mut dalpha = vec![0.0f32; REV_HMAX * REV_HMAX];
+    let mut gemit = vec![0.0f32; (REV_VOCAB + 1) * REV_VOCAB];
+
+    for ep in 0..cap {
+        let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
+        for &t in prow {
+            check_token(t)?;
+        }
+        for j in 0..h {
+            let wij = w[ep * REV_HMAX + j];
+            if wij == 0.0 {
+                continue;
+            }
+            let a = actions[ep * REV_HMAX + j] as usize;
+            if a >= m {
+                bail!("rev_bwd: action {a} outside active vocab {m}");
+            }
+            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let lse = logsumexp(&logits);
+            loss += wij as f64 * ((lse - logits[a]) as f64);
+            for v in 0..m {
+                let p = (logits[v] - lse).exp();
+                let d = wij * (p - if v == a { 1.0 } else { 0.0 });
+                for k in 0..REV_HMAX {
+                    let t = check_token(prow[k])?;
+                    gemit[t * REV_VOCAB + v] += alpha[j * REV_HMAX + k] * d;
+                    dalpha[j * REV_HMAX + k] += d * emit[t * REV_VOCAB + v];
+                }
+            }
+        }
+    }
+
+    // softmax Jacobian per attention row: d attn = alpha * (d alpha - <alpha, d alpha>)
+    let mut gattn = vec![0.0f32; REV_HMAX * REV_HMAX];
+    for j in 0..REV_HMAX {
+        let mut dot = 0.0f64;
+        for k in 0..REV_HMAX {
+            dot += alpha[j * REV_HMAX + k] as f64 * dalpha[j * REV_HMAX + k] as f64;
+        }
+        for k in 0..REV_HMAX {
+            let i = j * REV_HMAX + k;
+            gattn[i] = alpha[i] * (dalpha[i] - dot as f32);
+        }
+    }
+
+    Ok(vec![
+        HostTensor::f32(&[1], vec![loss as f32]),
+        HostTensor::f32(&[REV_HMAX, REV_HMAX], gattn),
+        HostTensor::f32(&[REV_VOCAB + 1, REV_VOCAB], gemit),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamStore;
+
+    fn mnist_inputs(cap: usize, with_noise: bool) -> Vec<HostTensor> {
+        let params = ParamStore::init(&mnist_rules(), 7);
+        let mut rng = Pcg32::seeded(3);
+        let x: Vec<f32> = (0..cap * MNIST_IN).map(|_| rng.normal() as f32).collect();
+        let mut inputs = params.as_inputs();
+        inputs.push(HostTensor::f32(&[cap, MNIST_IN], x));
+        if with_noise {
+            inputs.push(HostTensor::zeros_f32(&[cap, MNIST_ACTIONS]));
+        }
+        inputs
+    }
+
+    #[test]
+    fn manifest_is_self_consistent() {
+        let m = NativeTestbed::manifest();
+        assert_eq!(m.constants.mnist_batch, MNIST_BATCH);
+        assert!(m.artifact("mnist_fwd").is_ok());
+        assert!(m.artifact("mnist_fwd_eval").is_ok());
+        for cap in MNIST_CAPS {
+            assert!(m.artifact(&format!("mnist_bwd_c{cap}")).is_ok());
+            assert!(m.artifact(&format!("mnist_fwd_c{cap}")).is_ok());
+        }
+        assert!(m.artifact("rev8_rollout").is_ok());
+        assert_eq!(m.model("mnist").unwrap().len(), 4);
+        assert_eq!(m.model("reversal8").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn mnist_forward_rows_are_normalized_logprobs() {
+        let out = mnist_forward(&mnist_inputs(MNIST_BATCH, true), MNIST_BATCH, true).unwrap();
+        let logp = out[0].as_f32().unwrap();
+        for row in logp.chunks(MNIST_ACTIONS) {
+            let s: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+        }
+    }
+
+    #[test]
+    fn mnist_forward_is_row_independent() {
+        // the determinism contract: row i is the same whether computed in
+        // a full batch or alone in a padded shard
+        let full_in = mnist_inputs(MNIST_BATCH, true);
+        let full = mnist_forward(&full_in, MNIST_BATCH, true).unwrap();
+        let logp_full = full[0].as_f32().unwrap();
+
+        let x = full_in[4].as_f32().unwrap();
+        let i = 17;
+        let mut shard_in = full_in[..4].to_vec();
+        let mut xs = vec![0.0f32; 4 * MNIST_IN];
+        xs[..MNIST_IN].copy_from_slice(&x[i * MNIST_IN..(i + 1) * MNIST_IN]);
+        shard_in.push(HostTensor::f32(&[4, MNIST_IN], xs));
+        shard_in.push(HostTensor::zeros_f32(&[4, MNIST_ACTIONS]));
+        let shard = mnist_forward(&shard_in, 4, true).unwrap();
+        let logp_shard = shard[0].as_f32().unwrap();
+        assert_eq!(
+            &logp_full[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS],
+            &logp_shard[..MNIST_ACTIONS]
+        );
+    }
+
+    #[test]
+    fn mnist_backward_matches_finite_difference() {
+        let cap = 4;
+        let params = ParamStore::init(&mnist_rules(), 11);
+        let mut rng = Pcg32::seeded(5);
+        let x: Vec<f32> = (0..cap * MNIST_IN).map(|_| rng.normal() as f32).collect();
+        let actions: Vec<i32> = (0..cap).map(|_| rng.below(10) as i32).collect();
+        let w = vec![0.7f32, -0.3, 0.0, 1.1];
+
+        let loss_of = |p: &ParamStore| -> f64 {
+            let mut inp = p.as_inputs();
+            inp.push(HostTensor::f32(&[cap, MNIST_IN], x.clone()));
+            inp.push(HostTensor::i32(&[cap], actions.clone()));
+            inp.push(HostTensor::f32(&[cap], w.clone()));
+            mnist_backward(&inp, cap).unwrap()[0].as_f32().unwrap()[0] as f64
+        };
+
+        let mut inp = params.as_inputs();
+        inp.push(HostTensor::f32(&[cap, MNIST_IN], x.clone()));
+        inp.push(HostTensor::i32(&[cap], actions.clone()));
+        inp.push(HostTensor::f32(&[cap], w.clone()));
+        let out = mnist_backward(&inp, cap).unwrap();
+
+        // probe a few coordinates of each gradient tensor
+        for (ti, n_probe) in [(1usize, 3usize), (2, 2), (3, 3), (4, 2)] {
+            let g = out[ti].as_f32().unwrap();
+            for probe in 0..n_probe {
+                let idx = (probe * 131) % g.len();
+                let eps = 1e-3f32;
+                let mut pp = params.clone();
+                pp.tensor_mut(ti - 1)[idx] += eps;
+                let mut pm = params.clone();
+                pm.tensor_mut(ti - 1)[idx] -= eps;
+                let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "tensor {ti} idx {idx}: fd {fd} vs analytic {}",
+                    g[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_do_not_contribute() {
+        let cap = 8;
+        let params = ParamStore::init(&mnist_rules(), 2);
+        let mut rng = Pcg32::seeded(9);
+        let x: Vec<f32> = (0..cap * MNIST_IN).map(|_| rng.normal() as f32).collect();
+        let actions: Vec<i32> = (0..cap).map(|_| rng.below(10) as i32).collect();
+        let mut w = vec![0.0f32; cap];
+        w[2] = 1.0;
+
+        let run = |x: &[f32], actions: &[i32], w: &[f32], cap: usize| {
+            let mut inp = params.as_inputs();
+            inp.push(HostTensor::f32(&[cap, MNIST_IN], x.to_vec()));
+            inp.push(HostTensor::i32(&[cap], actions.to_vec()));
+            inp.push(HostTensor::f32(&[cap], w.to_vec()));
+            mnist_backward(&inp, cap).unwrap()
+        };
+        let full = run(&x, &actions, &w, cap);
+        // same single sample packed alone into the cap-4 bucket
+        let mut xs = vec![0.0f32; 4 * MNIST_IN];
+        xs[..MNIST_IN].copy_from_slice(&x[2 * MNIST_IN..3 * MNIST_IN]);
+        let small = run(&xs, &[actions[2], 0, 0, 0], &[1.0, 0.0, 0.0, 0.0], 4);
+        for (a, b) in full.iter().zip(&small) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn rev_rollout_is_deterministic_and_masked() {
+        let params = ParamStore::init(&rev_rules(), 4);
+        let mut prompt = vec![REV_PAD as i32; REV_BATCH * REV_HMAX];
+        for (i, t) in prompt.iter_mut().enumerate() {
+            if i % REV_HMAX >= REV_HMAX - 4 {
+                *t = (i % 2) as i32;
+            }
+        }
+        let mk = || {
+            let mut inp = params.as_inputs();
+            inp.push(HostTensor::i32(&[REV_BATCH, REV_HMAX], prompt.clone()));
+            inp.push(HostTensor::scalar_i32(4));
+            inp.push(HostTensor::scalar_i32(2));
+            inp.push(HostTensor::scalar_i32(1234));
+            rev_rollout(&inp).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a[0].as_i32().unwrap(), b[0].as_i32().unwrap());
+        assert_eq!(a[1].as_f32().unwrap(), b[1].as_f32().unwrap());
+        // sampled tokens live in the active vocab m=2
+        for ep in 0..REV_BATCH {
+            for j in 0..4 {
+                let t = a[0].as_i32().unwrap()[ep * REV_HMAX + j];
+                assert!((0..2).contains(&t), "token {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn rev_backward_matches_finite_difference() {
+        let params = ParamStore::init(&rev_rules(), 8);
+        let cap = 4;
+        let h = 3;
+        let mut rng = Pcg32::seeded(12);
+        let mut prompt = vec![REV_PAD as i32; cap * REV_HMAX];
+        let mut actions = vec![0i32; cap * REV_HMAX];
+        let mut w = vec![0.0f32; cap * REV_HMAX];
+        for ep in 0..cap {
+            for j in 0..h {
+                prompt[ep * REV_HMAX + (REV_HMAX - h) + j] = rng.below(2) as i32;
+                actions[ep * REV_HMAX + j] = rng.below(2) as i32;
+                w[ep * REV_HMAX + j] = rng.normal() as f32;
+            }
+        }
+        let loss_of = |p: &ParamStore| -> f64 {
+            let mut inp = p.as_inputs();
+            inp.push(HostTensor::i32(&[cap, REV_HMAX], prompt.clone()));
+            inp.push(HostTensor::i32(&[cap, REV_HMAX], actions.clone()));
+            inp.push(HostTensor::f32(&[cap, REV_HMAX], w.clone()));
+            inp.push(HostTensor::scalar_i32(h as i32));
+            inp.push(HostTensor::scalar_i32(2));
+            rev_backward(&inp, cap).unwrap()[0].as_f32().unwrap()[0] as f64
+        };
+        let mut inp = params.as_inputs();
+        inp.push(HostTensor::i32(&[cap, REV_HMAX], prompt.clone()));
+        inp.push(HostTensor::i32(&[cap, REV_HMAX], actions.clone()));
+        inp.push(HostTensor::f32(&[cap, REV_HMAX], w.clone()));
+        inp.push(HostTensor::scalar_i32(h as i32));
+        inp.push(HostTensor::scalar_i32(2));
+        let out = rev_backward(&inp, cap).unwrap();
+
+        for (ti, n_probe) in [(1usize, 4usize), (2, 4)] {
+            let g = out[ti].as_f32().unwrap();
+            for probe in 0..n_probe {
+                let idx = (probe * 17) % g.len();
+                let eps = 1e-3f32;
+                let mut pp = params.clone();
+                pp.tensor_mut(ti - 1)[idx] += eps;
+                let mut pm = params.clone();
+                pm.tensor_mut(ti - 1)[idx] -= eps;
+                let fd = (loss_of(&pp) - loss_of(&pm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "tensor {ti} idx {idx}: fd {fd} vs analytic {}",
+                    g[idx]
+                );
+            }
+        }
+    }
+}

@@ -102,15 +102,20 @@ impl HostTensor {
     }
 
     pub fn from_literal(lit: &Literal, sig: &TensorSig) -> Result<HostTensor> {
-        let t = match sig.dtype {
-            DType::F32 => HostTensor::F32 { shape: sig.shape.clone(), data: lit.to_vec::<f32>()? },
-            DType::I32 => HostTensor::I32 { shape: sig.shape.clone(), data: lit.to_vec::<i32>()? },
+        let (got, t) = match sig.dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                (data.len(), HostTensor::F32 { shape: sig.shape.clone(), data })
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                (data.len(), HostTensor::I32 { shape: sig.shape.clone(), data })
+            }
         };
-        if t.numel() != sig.numel() {
+        if got != sig.numel() {
             return Err(anyhow!(
-                "output '{}': got {} elements, manifest says {}",
+                "output '{}': got {got} elements, manifest says {}",
                 sig.name,
-                t.numel(),
                 sig.numel()
             ));
         }
@@ -138,6 +143,39 @@ mod tests {
     #[should_panic]
     fn bad_numel_panics() {
         HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn constructors_and_accessors() {
+        let z = HostTensor::zeros_f32(&[3, 2]);
+        assert_eq!(z.shape(), &[3, 2]);
+        assert_eq!(z.numel(), 6);
+        assert_eq!(z.dtype(), DType::F32);
+        assert!(z.as_f32().unwrap().iter().all(|&v| v == 0.0));
+
+        let s = HostTensor::scalar_i32(-7);
+        assert_eq!(s.shape(), &[1]);
+        assert_eq!(s.as_i32().unwrap(), &[-7]);
+    }
+
+    #[test]
+    fn dtype_accessors_reject_wrong_type() {
+        let f = HostTensor::f32(&[2], vec![1.0, 2.0]);
+        let i = HostTensor::i32(&[2], vec![1, 2]);
+        assert!(f.as_i32().is_err());
+        assert!(i.as_f32().is_err());
+        assert!(f.clone().into_i32().is_err());
+        assert!(i.clone().into_f32().is_err());
+        assert_eq!(f.into_f32().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(i.into_i32().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn from_literal_rejects_wrong_element_count() {
+        let t = HostTensor::f32(&[4], vec![1.0; 4]);
+        let lit = t.to_literal().unwrap();
+        // manifest says 6 elements but the literal carries 4
+        assert!(HostTensor::from_literal(&lit, &sig(&[2, 3], DType::F32)).is_err());
     }
 
     #[test]

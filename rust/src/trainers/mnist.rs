@@ -1,26 +1,34 @@
-//! MNIST-bandit trainer (paper §3, App A): the full L3 scheduling loop.
+//! MNIST-bandit trainer (paper §3, App A): the full L3 scheduling loop,
+//! sharded across the coordinator's worker pool.
 //!
-//! Per step: sample contexts -> forward artifact (L1 fused head inside) ->
-//! sample actions -> rewards/advantages -> delight -> method weight rule
-//! (Kondo gate for DG-K) -> pack kept samples into backward buckets ->
-//! execute backward artifact(s) -> Adam. The ledger records the exact
+//! Per step: sample contexts -> forward artifact per shard (L1 fused head
+//! inside) -> per-sample action/reward/delight scoring on per-sample RNG
+//! streams -> merge chi in batch order and resolve ONE batch-global
+//! quantile price in the Kondo gate -> pack kept samples into backward
+//! buckets -> execute backward chunks across the pool -> merge gradients
+//! in chunk order -> Adam. The shard-aware ledger records the exact
 //! forward/backward sample counts that form the paper's compute axes.
+//!
+//! Determinism contract: with `eta = 0` (hard gate) the entire trajectory
+//! is a pure function of `cfg.seed`, bit-identical for every `workers`
+//! value (locked by rust/tests/gated_e2e.rs).
 
 use anyhow::Result;
 
 use crate::algo::baseline::Baseline;
 use crate::algo::{perturb_delight_abs, perturb_delight_rel, BatchSignals, Method};
-use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32};
+use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32, BucketSet};
+use crate::coordinator::pool::unit_rng;
 use crate::coordinator::{
-    screening_precision, BucketSet, DraftScreen, EwQuantile, KondoGate, Ledger, Pricing,
+    screening_precision, DraftScreen, EwQuantile, KondoGate, Ledger, Pricing, ShardedLedger,
 };
 use crate::envs::mnist::{MnistBandit, RewardNoise};
-use crate::model::{accumulate, ParamStore};
-use crate::optim::{Adam, Optimizer};
+use crate::model::ParamStore;
+use crate::optim::Adam;
 use crate::runtime::{Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
-use super::EvalPoint;
+use super::{EvalPoint, GatedLoop};
 
 #[derive(Debug, Clone)]
 pub struct MnistTrainerCfg {
@@ -47,6 +55,8 @@ pub struct MnistTrainerCfg {
     /// speculative screening (paper 3.2/7): gate on delight predicted by
     /// an online linear draft model instead of the exact forward-pass value
     pub draft_screen: bool,
+    /// worker threads for sharded forward/scoring/backward (1 = serial)
+    pub workers: usize,
 }
 
 impl Default for MnistTrainerCfg {
@@ -66,6 +76,7 @@ impl Default for MnistTrainerCfg {
             gate_profile_steps: vec![],
             streaming_lambda: false,
             draft_screen: false,
+            workers: 1,
         }
     }
 }
@@ -84,7 +95,11 @@ pub struct GateProfile {
 #[derive(Debug, Clone)]
 pub struct MnistRunResult {
     pub curve: Vec<EvalPoint>,
+    /// batch totals; always equals `shard_ledger.total()` (derived once at
+    /// the end of the run -- the shard ledger is the single source)
     pub ledger: Ledger,
+    /// per-shard attribution of the same work (diagnostics / load balance)
+    pub shard_ledger: ShardedLedger,
     pub gate_profiles: Vec<GateProfile>,
     pub final_test_err: f64,
     pub final_train_err: f64,
@@ -93,7 +108,17 @@ pub struct MnistRunResult {
     pub draft_precision: f64,
 }
 
-/// Train one MNIST-bandit policy; deterministic in `cfg.seed`.
+/// Per-shard scoring output, merged in shard order.
+struct ShardScore {
+    actions: Vec<i32>,
+    u: Vec<f64>,
+    ell: Vec<f64>,
+    p_star: Vec<f64>,
+    greedy_wrong: usize,
+}
+
+/// Train one MNIST-bandit policy; deterministic in `cfg.seed` for every
+/// `cfg.workers` value.
 pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult> {
     let man = eng.manifest();
     let b = man.constants.mnist_batch;
@@ -104,7 +129,14 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let rules = man.model("mnist")?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x51ed) ^ 0xbeef);
     let mut opt = Adam::new(cfg.lr, &params);
-    let buckets = BucketSet::new(man.constants.mnist_bwd_caps.clone())?;
+    let gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?;
+    // forward shard capacities are part of the manifest contract; an
+    // empty list (older artifact sets) disables forward sharding
+    let fwd_buckets = if man.constants.mnist_fwd_caps.is_empty() {
+        None
+    } else {
+        Some(BucketSet::new(man.constants.mnist_fwd_caps.clone())?)
+    };
 
     // the corpus is fixed across seeds (like the MNIST download); only the
     // sampling / action / gate randomness varies per seed
@@ -112,7 +144,7 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let mut rng = Pcg32::new(cfg.seed, 0x6d6e_6973_74);
 
     let test = env.test_set(cfg.eval_size.max(eval_b));
-    let mut ledger = Ledger::new();
+    let mut acct = ShardedLedger::new(gl.workers());
     let mut curve = Vec::new();
     let mut gate_profiles = Vec::new();
     let mut train_err_window = TrainWindow::new(10);
@@ -124,53 +156,83 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
         },
         _ => None,
     };
-    let mut draft: Option<DraftScreen> =
-        cfg.draft_screen.then(|| DraftScreen::new(img, 1e-3));
+    let mut draft: Option<DraftScreen> = cfg.draft_screen.then(|| DraftScreen::new(img, 1e-3));
     let mut precisions: Vec<f64> = Vec::new();
 
     for step in 0..cfg.steps {
         let ctx = env.sample_contexts(&mut rng);
-        let noise_t = if cfg.logit_noise > 0.0 {
-            let v: Vec<f32> =
-                (0..b * n_act).map(|_| (cfg.logit_noise * rng.normal()) as f32).collect();
-            HostTensor::f32(&[b, n_act], v)
+        let noise: Vec<f32> = if cfg.logit_noise > 0.0 {
+            (0..b * n_act).map(|_| (cfg.logit_noise * rng.normal()) as f32).collect()
         } else {
-            HostTensor::zeros_f32(&[b, n_act])
+            vec![0.0f32; b * n_act]
         };
 
-        // ---- forward pass (the only place the policy is evaluated)
-        let mut inputs = params.as_inputs();
-        inputs.push(HostTensor::f32(&[b, img], ctx.x.clone()));
-        inputs.push(noise_t);
-        let out = eng.execute("mnist_fwd", &inputs)?;
-        let logp = out[0].as_f32()?;
-        ledger.record_forward(b);
+        // ---- forward pass, one shard per worker (the only place the
+        // policy is evaluated on the training path)
+        let logp: Vec<f32> = gl.sharded_forward(
+            "mnist_fwd",
+            |cap| format!("mnist_fwd_c{cap}"),
+            fwd_buckets.as_ref(),
+            b,
+            n_act,
+            &mut acct,
+            |shard, cap| {
+                let idx: Vec<usize> = shard.range().collect();
+                let xs = gather_rows_f32(&ctx.x, img, &idx, cap);
+                let ns = gather_rows_f32(&noise, n_act, &idx, cap);
+                let mut inputs = params.as_inputs();
+                inputs.push(HostTensor::f32(&[cap, img], xs));
+                inputs.push(HostTensor::f32(&[cap, n_act], ns));
+                inputs
+            },
+        )?;
 
-        // ---- act, observe rewards, build signals
-        let mut actions = vec![0i32; b];
-        let mut u = vec![0.0f64; b];
-        let mut ell = vec![0.0f64; b];
-        let mut greedy_wrong = 0usize;
-        let mut p_star = vec![0.0f64; b];
-        for i in 0..b {
-            let row = &logp[i * n_act..(i + 1) * n_act];
-            let a = rng.categorical_from_logits(row);
-            actions[i] = a as i32;
-            let pi: Vec<f32> = row.iter().map(|&l| l.exp()).collect();
-            let y = ctx.y[i];
-            p_star[i] = pi[y] as f64;
-            let r = env.reward(a, y, &mut rng);
-            let bval = cfg.baseline.value(&pi, y);
-            u[i] = r - bval;
-            ell[i] = -(row[a] as f64);
-            let greedy = argmax(row);
-            if greedy != y {
-                greedy_wrong += 1;
+        // ---- act, observe rewards, build signals: sharded, with
+        // per-sample RNG streams so draws are independent of sharding
+        let seed = cfg.seed;
+        let scored: Vec<ShardScore> = gl.pool().run(gl.shards(b), |_, shard| {
+            let mut sc = ShardScore {
+                actions: Vec::with_capacity(shard.len()),
+                u: Vec::with_capacity(shard.len()),
+                ell: Vec::with_capacity(shard.len()),
+                p_star: Vec::with_capacity(shard.len()),
+                greedy_wrong: 0,
+            };
+            for i in shard.range() {
+                let mut srng = unit_rng(seed, step as u64, i as u64);
+                let row = &logp[i * n_act..(i + 1) * n_act];
+                let a = srng.categorical_from_logits(row);
+                let pi: Vec<f32> = row.iter().map(|&l| l.exp()).collect();
+                let y = ctx.y[i];
+                sc.p_star.push(pi[y] as f64);
+                let r = env.reward(a, y, &mut srng);
+                let bval = cfg.baseline.value(&pi, y);
+                sc.u.push(r - bval);
+                sc.ell.push(-(row[a] as f64));
+                sc.actions.push(a as i32);
+                if argmax(row) != y {
+                    sc.greedy_wrong += 1;
+                }
             }
+            sc
+        });
+        let mut actions = Vec::with_capacity(b);
+        let mut u = Vec::with_capacity(b);
+        let mut ell = Vec::with_capacity(b);
+        let mut p_star = Vec::with_capacity(b);
+        let mut greedy_wrong = 0usize;
+        for sc in scored {
+            actions.extend(sc.actions);
+            u.extend(sc.u);
+            ell.extend(sc.ell);
+            p_star.extend(sc.p_star);
+            greedy_wrong += sc.greedy_wrong;
         }
         train_err_window.push(greedy_wrong as f64 / b as f64);
 
-        // ---- delight (with optional screening noise) and the weight rule
+        // ---- delight (with optional screening noise) and the weight rule;
+        // chi is merged in batch order so the gate's quantile price is
+        // batch-global regardless of sharding
         let chi: Vec<f64> = u.iter().zip(&ell).map(|(&a, &l)| a * l).collect();
         let mut chi_noisy = if cfg.delight_noise_rel > 0.0 {
             Some(perturb_delight_rel(&chi, cfg.delight_noise_rel, &mut rng))
@@ -193,18 +255,15 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             }
             d.update(&ctx.x, &ell);
         }
-        let signals = BatchSignals {
-            u: &u,
-            ell: &ell,
-            logp_old: None,
-            chi_override: chi_noisy.as_deref(),
-        };
+        let signals =
+            BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: chi_noisy.as_deref() };
         // streaming-lambda ablation: price from the cross-batch tracker
         // (hard gate), then feed this batch's delight into the tracker
         let decision = if let (Some(tracker), Method::DgK { priority, .. }) =
             (stream_tracker.as_mut(), &cfg.method)
         {
-            let gate_chi = signals.chi_override.map(|c| c.to_vec()).unwrap_or_else(|| chi.clone());
+            let gate_chi =
+                signals.chi_override.map(|c| c.to_vec()).unwrap_or_else(|| chi.clone());
             let lam = if tracker.count() >= b { tracker.value() } else { f64::INFINITY };
             let m = Method::DgK { gate: KondoGate::price(lam), priority: *priority };
             let d = m.decide(&signals, &mut rng);
@@ -239,45 +298,41 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             gate_profiles.push(gp);
         }
 
-        // ---- bucketed backward over the kept set
+        // ---- bucketed backward over the kept set, chunks across workers
         if !decision.keep.is_empty() {
-            let mut acc = params.zeros_like();
+            let chunks = gl.buckets().pack(&decision.keep);
+            gl.record_backward_chunks(&mut acct, &chunks, 1, |c| c.idx.len());
             let weights_all = &decision.weights;
-            for chunk in buckets.pack(&decision.keep) {
-                let cap = chunk.cap;
-                let xs = gather_rows_f32(&ctx.x, img, &chunk.idx, cap);
-                let acts = gather_i32(&actions, &chunk.idx, cap);
-                let w: Vec<f32> = {
-                    let per_sample: Vec<f32> =
-                        chunk.idx.iter().map(|&i| weights_all[i]).collect();
-                    gather_f32(&per_sample, &(0..chunk.idx.len()).collect::<Vec<_>>(), cap)
-                };
-                let mut binputs = params.as_inputs();
-                binputs.push(HostTensor::f32(&[cap, img], xs));
-                binputs.push(HostTensor::i32(&[cap], acts));
-                binputs.push(HostTensor::f32(&[cap], w));
-                let bout = eng.execute(&format!("mnist_bwd_c{cap}"), &binputs)?;
-                accumulate(&mut acc, &bout[1..])?;
-                ledger.record_backward(cap, chunk.idx.len());
-            }
-            // average over the full batch (matches sum/B normalization)
-            for t in acc.iter_mut() {
-                for v in t.iter_mut() {
-                    *v /= b as f32;
-                }
-            }
-            opt.step(&mut params, &acc);
+            gl.sharded_backward(
+                &mut params,
+                &mut opt,
+                &chunks,
+                |cap| format!("mnist_bwd_c{cap}"),
+                |chunk| {
+                    let cap = chunk.cap;
+                    let per: Vec<f32> = chunk.idx.iter().map(|&i| weights_all[i]).collect();
+                    let ident: Vec<usize> = (0..chunk.idx.len()).collect();
+                    vec![
+                        HostTensor::f32(&[cap, img], gather_rows_f32(&ctx.x, img, &chunk.idx, cap)),
+                        HostTensor::i32(&[cap], gather_i32(&actions, &chunk.idx, cap)),
+                        HostTensor::f32(&[cap], gather_f32(&per, &ident, cap)),
+                    ]
+                },
+                // average over the full batch (matches sum/B normalization)
+                b as f32,
+            )?;
         }
 
         // ---- evaluation cadence
         let last = step + 1 == cfg.steps;
         if (step + 1) % cfg.eval_every == 0 || last {
             let test_err = eval_test_error(eng, &params, &test.x, &test.y, eval_b, img, n_act)?;
+            let totals = acct.total();
             curve.push(EvalPoint {
                 step: step + 1,
-                forward_samples: ledger.forward_samples,
-                backward_kept: ledger.backward_kept,
-                backward_executed: ledger.backward_executed,
+                forward_samples: totals.forward_samples,
+                backward_kept: totals.backward_kept,
+                backward_executed: totals.backward_executed,
                 metric: train_err_window.mean(),
                 metric2: test_err,
             });
@@ -288,7 +343,8 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let final_train = curve.last().map(|p| p.metric).unwrap_or(1.0);
     Ok(MnistRunResult {
         curve,
-        ledger,
+        ledger: acct.total(),
+        shard_ledger: acct,
         gate_profiles,
         final_test_err: final_test,
         final_train_err: final_train,

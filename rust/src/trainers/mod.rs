@@ -1,12 +1,32 @@
 //! Training loops (the L3 scheduler): forward artifact -> delight -> Kondo
 //! gate -> bucketed backward -> optimizer, with the compute ledger and
 //! noise-injection hooks every experiment driver needs.
+//!
+//! `GatedLoop` is the shared parallel substrate both trainers (and future
+//! envs) run on: it owns the worker pool and the backward bucket set, and
+//! provides the two sharded phases of a gated training step --
+//! `sharded_forward` (split the batch across shard-capacity forward
+//! artifacts) and `sharded_backward` (execute packed backward chunks
+//! concurrently, then merge gradients in chunk order and step the
+//! optimizer). Batch-global work -- resolving the Kondo gate's quantile
+//! price over the merged chi scores -- stays on the caller's thread, which
+//! is what keeps `workers = N` trajectories bit-identical to `workers = 1`
+//! (the determinism contract, DESIGN.md §"L3 parallelism").
 
 pub mod mnist;
 pub mod reversal;
 
-pub use mnist::{train_mnist, MnistTrainerCfg, MnistRunResult};
-pub use reversal::{train_reversal, ReversalTrainerCfg, ReversalRunResult};
+pub use mnist::{train_mnist, MnistRunResult, MnistTrainerCfg};
+pub use reversal::{train_reversal, ReversalRunResult, ReversalTrainerCfg};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::BucketSet;
+use crate::coordinator::pool::{split_shards, Shard, WorkerPool};
+use crate::coordinator::{PackedChunk, ShardedLedger};
+use crate::model::{accumulate, ParamStore};
+use crate::optim::Optimizer;
+use crate::runtime::{Engine, HostTensor};
 
 /// One point of a learning curve, indexed by both step and compute.
 #[derive(Debug, Clone, Copy)]
@@ -19,4 +39,158 @@ pub struct EvalPoint {
     pub metric: f64,
     /// secondary metric: test error (MNIST) / unused (reversal)
     pub metric2: f64,
+}
+
+/// The shared gate->bucket->backward->optimizer substrate.
+pub struct GatedLoop<'e> {
+    eng: &'e Engine,
+    pool: WorkerPool,
+    buckets: BucketSet,
+}
+
+impl<'e> GatedLoop<'e> {
+    pub fn new(eng: &'e Engine, workers: usize, bwd_caps: Vec<usize>) -> Result<GatedLoop<'e>> {
+        Ok(GatedLoop { eng, pool: WorkerPool::new(workers), buckets: BucketSet::new(bwd_caps)? })
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    pub fn buckets(&self) -> &BucketSet {
+        &self.buckets
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Contiguous shards of an `n`-row batch for this pool.
+    pub fn shards(&self, n: usize) -> Vec<Shard> {
+        split_shards(n, self.pool.workers())
+    }
+
+    /// Sharded forward: split `rows` inputs across workers, each executing
+    /// the artifact `shard_name(cap)` at the smallest compiled capacity
+    /// `cap >= shard len` from `fwd_caps`, then stitch the f32 output rows
+    /// back in shard order. Falls back to one `full_name` call when the
+    /// pool has a single worker, no shard capacities exist, or a shard
+    /// does not fit any capacity.
+    ///
+    /// Forward work is recorded into `acct` per logical shard, with padded
+    /// capacity slots counted in `forward_executed` (mirroring the
+    /// backward executed-slot convention); `forward_samples` stays
+    /// worker-invariant.
+    ///
+    /// Bit-equality between the sharded and full paths is guaranteed by
+    /// the backend's row-independence contract (runtime/native.rs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sharded_forward<F, N>(
+        &self,
+        full_name: &str,
+        shard_name: N,
+        fwd_caps: Option<&BucketSet>,
+        rows: usize,
+        out_width: usize,
+        acct: &mut ShardedLedger,
+        build: F,
+    ) -> Result<Vec<f32>>
+    where
+        F: Fn(&Shard, usize) -> Vec<HostTensor> + Sync,
+        N: Fn(usize) -> String + Sync,
+    {
+        let shards = self.shards(rows);
+        let caps = match fwd_caps {
+            Some(caps)
+                if self.pool.workers() > 1
+                    && shards.iter().all(|s| caps.smallest_fitting(s.len()).is_some()) =>
+            {
+                caps
+            }
+            _ => {
+                // one full-batch call: no padding, and exactly one
+                // recorded call, attributed to shard 0 (that is where the
+                // work really ran)
+                let full = Shard::full(rows);
+                let out = self.eng.execute(full_name, &build(&full, rows))?;
+                acct.shard_mut(0).record_forward(rows);
+                return Ok(out[0].as_f32()?.to_vec());
+            }
+        };
+        let parts: Vec<Result<Vec<f32>>> = self.pool.run(shards.clone(), |_, shard| {
+            let cap = caps.smallest_fitting(shard.len()).unwrap();
+            let out = self.eng.execute(&shard_name(cap), &build(&shard, cap))?;
+            Ok(out[0].as_f32()?[..shard.len() * out_width].to_vec())
+        });
+        for shard in &shards {
+            let cap = caps.smallest_fitting(shard.len()).unwrap();
+            acct.shard_mut(shard.index).record_forward_padded(shard.len(), cap);
+        }
+        let mut merged = Vec::with_capacity(rows * out_width);
+        for part in parts {
+            merged.extend_from_slice(&part?);
+        }
+        Ok(merged)
+    }
+
+    /// Execute packed backward chunks across the pool, accumulate the
+    /// gradient tensors in *chunk order* (not completion order), normalize
+    /// by `denom`, and apply one optimizer step. `extra_inputs` builds the
+    /// non-parameter inputs of chunk `c` for artifact `artifact(c.cap)`;
+    /// the parameter tensors are marshalled once into a template and
+    /// cloned per chunk (each engine call needs its own input list).
+    pub fn sharded_backward<F, N>(
+        &self,
+        params: &mut ParamStore,
+        opt: &mut dyn Optimizer,
+        chunks: &[PackedChunk],
+        artifact: N,
+        extra_inputs: F,
+        denom: f32,
+    ) -> Result<()>
+    where
+        F: Fn(&PackedChunk) -> Vec<HostTensor> + Sync,
+        N: Fn(usize) -> String + Sync,
+    {
+        if chunks.is_empty() {
+            return Ok(());
+        }
+        let param_inputs = params.as_inputs();
+        let results: Vec<Result<Vec<HostTensor>>> =
+            self.pool.run(chunks.to_vec(), |_, chunk| {
+                let mut inputs = param_inputs.clone();
+                inputs.extend(extra_inputs(&chunk));
+                let out = self.eng.execute(&artifact(chunk.cap), &inputs)?;
+                // out[0] is the loss scalar; the rest are gradients
+                Ok(out.into_iter().skip(1).collect())
+            });
+        let mut acc = params.zeros_like();
+        for result in results {
+            let grads = result?;
+            accumulate(&mut acc, &grads)?;
+        }
+        for tensor in acc.iter_mut() {
+            for v in tensor.iter_mut() {
+                *v /= denom;
+            }
+        }
+        opt.step(params, &acc);
+        Ok(())
+    }
+
+    /// Record one batch's backward chunks into a shard-aware ledger
+    /// (round-robin chunk ownership; see `ShardedLedger::backward_owner`).
+    pub fn record_backward_chunks(
+        &self,
+        acct: &mut ShardedLedger,
+        chunks: &[PackedChunk],
+        slots_per_sample: usize,
+        kept_of: impl Fn(&PackedChunk) -> usize,
+    ) {
+        for (ci, chunk) in chunks.iter().enumerate() {
+            let owner = acct.backward_owner(ci);
+            acct.shard_mut(owner)
+                .record_backward(chunk.cap * slots_per_sample, kept_of(chunk));
+        }
+    }
 }

@@ -1,25 +1,32 @@
 //! Token-reversal trainer (paper §5, App D): transformer rollout fully
 //! inside the compiled artifact, per-token Kondo gating, episode-level
-//! bucketed backward.
+//! bucketed backward over the coordinator's worker pool.
 //!
 //! Gating is at TOKEN granularity (the paper gates tokens); the backward
 //! executor works at EPISODE granularity (a sequence either enters the
 //! backward batch or not), so an episode is executed iff it has at least
 //! one kept token, and its weight tensor zeroes all skipped tokens.
+//!
+//! Sharding: the rollout stays one batch-global artifact call (the
+//! autoregressive sampling loop lives inside the artifact and draws
+//! per-episode RNG streams internally), while per-token delight scoring
+//! and the bucketed backward chunks run across the pool. The gate price
+//! is resolved once over the merged token scores. At eta = 0 the
+//! trajectory is bit-identical for every `workers` value (gated_e2e.rs).
 
 use anyhow::Result;
 
 use crate::algo::baseline::grouped_baseline;
 use crate::algo::{BatchSignals, Method};
 use crate::coordinator::batcher::{gather_rows_f32, gather_rows_i32};
-use crate::coordinator::{BucketSet, Ledger};
+use crate::coordinator::{Ledger, ShardedLedger};
 use crate::envs::reversal::ReversalEnv;
-use crate::model::{accumulate, ParamStore};
-use crate::optim::{Adam, Optimizer};
+use crate::model::ParamStore;
+use crate::optim::Adam;
 use crate::runtime::{Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
-use super::EvalPoint;
+use super::{EvalPoint, GatedLoop};
 
 #[derive(Debug, Clone)]
 pub struct ReversalTrainerCfg {
@@ -34,6 +41,8 @@ pub struct ReversalTrainerCfg {
     pub eval_every: usize,
     /// PPO inner epochs (ratio updates against the rollout policy)
     pub inner_epochs: usize,
+    /// worker threads for sharded scoring/backward (1 = serial)
+    pub workers: usize,
 }
 
 impl Default for ReversalTrainerCfg {
@@ -47,6 +56,7 @@ impl Default for ReversalTrainerCfg {
             seed: 0,
             eval_every: 10,
             inner_epochs: 1,
+            workers: 1,
         }
     }
 }
@@ -54,7 +64,11 @@ impl Default for ReversalTrainerCfg {
 #[derive(Debug, Clone)]
 pub struct ReversalRunResult {
     pub curve: Vec<EvalPoint>,
+    /// batch totals; always equals `shard_ledger.total()` (derived once at
+    /// the end of the run -- the shard ledger is the single source)
     pub ledger: Ledger,
+    /// per-shard attribution of the same work (diagnostics / load balance)
+    pub shard_ledger: ShardedLedger,
     pub final_reward: f64,
     /// mean reward over the whole run (the paper's "solved" statistic)
     pub mean_reward: f64,
@@ -62,8 +76,8 @@ pub struct ReversalRunResult {
 
 pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<ReversalRunResult> {
     let man = eng.manifest();
-    // pick the smallest compiled shape set that fits H (two sets are
-    // compiled; masks carve out the active problem inside the artifact)
+    // pick the smallest compiled shape set that fits H (masks carve out
+    // the active problem inside the artifact)
     let h_max = *man
         .constants
         .rev_sets
@@ -81,10 +95,10 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let rules = man.model(&format!("reversal{h_max}"))?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x2545) ^ 0xcafe);
     let mut opt = Adam::new(cfg.lr, &params);
-    let buckets = BucketSet::new(man.constants.rev_bwd_caps.clone())?;
+    let gl = GatedLoop::new(eng, cfg.workers, man.constants.rev_bwd_caps.clone())?;
 
     let mut rng = Pcg32::new(cfg.seed, 0x7265_76);
-    let mut ledger = Ledger::new();
+    let mut acct = ShardedLedger::new(gl.workers());
     let mut curve = Vec::new();
     let mut reward_sum = 0.0;
     let mut reward_window = Vec::new();
@@ -105,24 +119,37 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
         let out = eng.execute(&format!("{prefix}_rollout"), &inputs)?;
         let actions = out[0].as_i32()?.to_vec();
         let logp = out[1].as_f32()?.to_vec();
-        ledger.record_forward(batch * cfg.h);
+        // the rollout is one batch-global call: one recorded call, on
+        // shard 0 (forward_calls must not depend on the worker count)
+        acct.shard_mut(0).record_forward(batch * cfg.h);
 
-        // ---- rewards, grouped baseline, per-token signals
+        // ---- rewards, grouped baseline, per-token signals (sharded over
+        // episodes; pure math, so sharding cannot change the values)
         let rewards = env.rewards(&prompts, &actions);
         let base = grouped_baseline(&rewards, 10);
         reward_sum += crate::utils::stats::mean(&rewards);
         reward_window.push(crate::utils::stats::mean(&rewards));
 
         let n_tok = batch * cfg.h;
-        let mut u = vec![0.0f64; n_tok];
-        let mut ell = vec![0.0f64; n_tok];
-        for ep in 0..batch {
-            let adv = rewards[ep] - base[ep];
-            for j in 0..cfg.h {
-                let t = ep * cfg.h + j;
-                u[t] = adv;
-                ell[t] = -(logp[ep * h_max + j] as f64);
-            }
+        let h = cfg.h;
+        let signals_per_shard: Vec<(Vec<f64>, Vec<f64>)> =
+            gl.pool().run(gl.shards(batch), |_, shard| {
+                let mut u = Vec::with_capacity(shard.len() * h);
+                let mut ell = Vec::with_capacity(shard.len() * h);
+                for ep in shard.range() {
+                    let adv = rewards[ep] - base[ep];
+                    for j in 0..h {
+                        u.push(adv);
+                        ell.push(-(logp[ep * h_max + j] as f64));
+                    }
+                }
+                (u, ell)
+            });
+        let mut u = Vec::with_capacity(n_tok);
+        let mut ell = Vec::with_capacity(n_tok);
+        for (su, sell) in signals_per_shard {
+            u.extend(su);
+            ell.extend(sell);
         }
 
         let logp_roll: Vec<f64> = ell.iter().map(|&e| -e).collect();
@@ -139,7 +166,7 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 finputs.push(m_t.clone());
                 let fout = eng.execute(&format!("{prefix}_fwd"), &finputs)?;
                 let lp_new = fout[0].as_f32()?;
-                ledger.record_forward(batch * cfg.h);
+                acct.shard_mut(0).record_forward(batch * cfg.h);
                 let mut e = vec![0.0f64; n_tok];
                 for ep in 0..batch {
                     for j in 0..cfg.h {
@@ -149,6 +176,7 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 (e, Some(logp_roll.as_slice()))
             };
 
+            // one batch-global gate decision over the merged token scores
             let signals =
                 BatchSignals { u: &u, ell: &ell_cur, logp_old: lp_old, chi_override: None };
             let decision = cfg.method.decide(&signals, &mut rng);
@@ -168,41 +196,51 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
             let episodes: Vec<usize> = (0..batch).filter(|&e| ep_has[e]).collect();
             let kept_tokens = decision.keep.len();
 
-            let mut acc = params.zeros_like();
-            for chunk in buckets.pack(&episodes) {
-                let cap = chunk.cap;
-                let p_rows = gather_rows_i32(&prompts.tokens, h_max, &chunk.idx, cap);
-                let a_rows = gather_rows_i32(&actions, h_max, &chunk.idx, cap);
-                let w_rows = gather_rows_f32(&ep_weights, h_max, &chunk.idx, cap);
-                let mut binputs = params.as_inputs();
-                binputs.push(HostTensor::i32(&[cap, h_max], p_rows));
-                binputs.push(HostTensor::i32(&[cap, h_max], a_rows));
-                binputs.push(HostTensor::f32(&[cap, h_max], w_rows));
-                binputs.push(h_t.clone());
-                binputs.push(m_t.clone());
-                let bout = eng.execute(&format!("{prefix}_bwd_c{cap}"), &binputs)?;
-                accumulate(&mut acc, &bout[1..])?;
-                // token-denominated ledger: kept tokens vs executed slots
-                let share = chunk.idx.len() as f64 / episodes.len() as f64;
-                ledger.record_backward(cap * cfg.h, (kept_tokens as f64 * share) as usize);
-            }
-            for t in acc.iter_mut() {
-                for v in t.iter_mut() {
-                    *v /= batch as f32;
-                }
-            }
-            opt.step(&mut params, &acc);
+            let chunks = gl.buckets().pack(&episodes);
+            // token-denominated ledger: kept tokens vs executed slots
+            let n_episodes = episodes.len();
+            gl.record_backward_chunks(&mut acct, &chunks, cfg.h, |c| {
+                let share = c.idx.len() as f64 / n_episodes as f64;
+                (kept_tokens as f64 * share) as usize
+            });
+            gl.sharded_backward(
+                &mut params,
+                &mut opt,
+                &chunks,
+                |cap| format!("{prefix}_bwd_c{cap}"),
+                |chunk| {
+                    let cap = chunk.cap;
+                    vec![
+                        HostTensor::i32(
+                            &[cap, h_max],
+                            gather_rows_i32(&prompts.tokens, h_max, &chunk.idx, cap),
+                        ),
+                        HostTensor::i32(
+                            &[cap, h_max],
+                            gather_rows_i32(&actions, h_max, &chunk.idx, cap),
+                        ),
+                        HostTensor::f32(
+                            &[cap, h_max],
+                            gather_rows_f32(&ep_weights, h_max, &chunk.idx, cap),
+                        ),
+                        h_t.clone(),
+                        m_t.clone(),
+                    ]
+                },
+                batch as f32,
+            )?;
         }
 
         let last = step + 1 == cfg.steps;
         if (step + 1) % cfg.eval_every == 0 || last {
             let recent = reward_window.iter().rev().take(10).sum::<f64>()
                 / reward_window.iter().rev().take(10).count().max(1) as f64;
+            let totals = acct.total();
             curve.push(EvalPoint {
                 step: step + 1,
-                forward_samples: ledger.forward_samples,
-                backward_kept: ledger.backward_kept,
-                backward_executed: ledger.backward_executed,
+                forward_samples: totals.forward_samples,
+                backward_kept: totals.backward_kept,
+                backward_executed: totals.backward_executed,
                 metric: recent,
                 metric2: 0.0,
             });
@@ -212,7 +250,8 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let final_reward = curve.last().map(|p| p.metric).unwrap_or(0.0);
     Ok(ReversalRunResult {
         curve,
-        ledger,
+        ledger: acct.total(),
+        shard_ledger: acct,
         final_reward,
         mean_reward: reward_sum / cfg.steps.max(1) as f64,
     })

@@ -1,0 +1,239 @@
+//! Determinism-locked end-to-end tests for the sharded training
+//! coordinator, on the native testbed backend (always available -- no
+//! compiled artifacts needed).
+//!
+//! The contract under test (DESIGN.md §"L3 parallelism"): with the hard
+//! Kondo gate (eta = 0) a training run is a pure function of the seed --
+//! re-running it, and running it sharded across any number of workers,
+//! must emit a bit-identical `EvalPoint` trajectory and identical compute
+//! ledger totals. The trajectories are compared field by field with exact
+//! bit equality on the f64 metrics (no tolerances: "roughly equal" curves
+//! would mean the shard merge reordered floating-point work).
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::runtime::Engine;
+use kondo::trainers::{
+    train_mnist, train_reversal, EvalPoint, MnistTrainerCfg, ReversalTrainerCfg,
+};
+
+/// Exact (bitwise) equality of two learning curves.
+fn assert_curves_bit_identical(a: &[EvalPoint], b: &[EvalPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.step, pb.step, "{what}[{i}].step");
+        assert_eq!(pa.forward_samples, pb.forward_samples, "{what}[{i}].forward_samples");
+        assert_eq!(pa.backward_kept, pb.backward_kept, "{what}[{i}].backward_kept");
+        assert_eq!(pa.backward_executed, pb.backward_executed, "{what}[{i}].backward_executed");
+        assert_eq!(
+            pa.metric.to_bits(),
+            pb.metric.to_bits(),
+            "{what}[{i}].metric: {} vs {}",
+            pa.metric,
+            pb.metric
+        );
+        assert_eq!(
+            pa.metric2.to_bits(),
+            pb.metric2.to_bits(),
+            "{what}[{i}].metric2: {} vs {}",
+            pa.metric2,
+            pb.metric2
+        );
+    }
+}
+
+fn mnist_cfg(workers: usize) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        // hard gate (eta = 0) at rho = 0.25: the determinism-contract case
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        lr: 1e-3,
+        steps: 24,
+        eval_every: 8,
+        eval_size: 64,
+        seed: 11,
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mnist_sharded_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch as u64;
+
+    let serial_a = train_mnist(&eng, &mnist_cfg(1)).unwrap();
+    let serial_b = train_mnist(&eng, &mnist_cfg(1)).unwrap();
+    assert_curves_bit_identical(&serial_a.curve, &serial_b.curve, "mnist serial reproducibility");
+
+    for workers in [2, 4, 7] {
+        let sharded = train_mnist(&eng, &mnist_cfg(workers)).unwrap();
+        assert_curves_bit_identical(
+            &serial_a.curve,
+            &sharded.curve,
+            &format!("mnist workers={workers}"),
+        );
+        // ledger totals agree exactly (calls may differ: shards vs batch)
+        assert_eq!(serial_a.ledger.forward_samples, sharded.ledger.forward_samples);
+        assert_eq!(serial_a.ledger.backward_kept, sharded.ledger.backward_kept);
+        assert_eq!(serial_a.ledger.backward_executed, sharded.ledger.backward_executed);
+        assert_eq!(serial_a.ledger.bucket_hist, sharded.ledger.bucket_hist);
+        // shard attribution covers the same totals
+        let t = sharded.shard_ledger.total();
+        assert_eq!(t.forward_samples, sharded.ledger.forward_samples);
+        assert_eq!(t.backward_kept, sharded.ledger.backward_kept);
+        assert_eq!(sharded.shard_ledger.n_shards(), workers);
+        // executed forward slots include shard padding: outside the
+        // determinism contract, but never below the logical sample count
+        assert!(sharded.ledger.forward_executed >= sharded.ledger.forward_samples);
+    }
+
+    // unsharded forward has no padding
+    assert_eq!(serial_a.ledger.forward_executed, serial_a.ledger.forward_samples);
+
+    // the trajectory is also structurally exact for this fixed cfg
+    assert_eq!(serial_a.curve.len(), 3);
+    assert_eq!(
+        serial_a.curve.iter().map(|p| p.step).collect::<Vec<_>>(),
+        vec![8, 16, 24]
+    );
+    for point in &serial_a.curve {
+        assert_eq!(point.forward_samples, b * point.step as u64);
+    }
+    // the gate really gates: rho = 0.25 keeps well under half the batch
+    let last = serial_a.curve.last().unwrap();
+    assert!(last.backward_kept * 2 < last.forward_samples);
+    assert!(last.backward_executed >= last.backward_kept);
+}
+
+#[test]
+fn ungated_multi_chunk_backward_is_bit_identical() {
+    // DG keeps every sample: the batch splits across SEVERAL backward
+    // chunks (native caps top out below the batch), so this pins the
+    // chunk-order gradient merge, not just the gated single-chunk path.
+    let eng = Engine::native_testbed();
+    let mk = |workers| MnistTrainerCfg {
+        method: Method::Dg,
+        steps: 10,
+        eval_every: 5,
+        eval_size: 64,
+        seed: 21,
+        workers,
+        ..Default::default()
+    };
+    let serial = train_mnist(&eng, &mk(1)).unwrap();
+    let sharded = train_mnist(&eng, &mk(4)).unwrap();
+    assert_curves_bit_identical(&serial.curve, &sharded.curve, "mnist DG workers=4");
+    // every step really executed more than one chunk
+    let max_cap = *eng.manifest().constants.mnist_bwd_caps.iter().max().unwrap() as u64;
+    let b = eng.manifest().constants.mnist_batch as u64;
+    assert!(b > max_cap, "native caps should force chunk splits");
+    assert_eq!(serial.ledger.backward_calls, 10 * ((b + max_cap - 1) / max_cap));
+
+    let rk = |workers| ReversalTrainerCfg { method: Method::Dg, workers, ..rev_cfg(workers) };
+    let rs = train_reversal(&eng, &rk(1)).unwrap();
+    let rp = train_reversal(&eng, &rk(4)).unwrap();
+    assert_curves_bit_identical(&rs.curve, &rp.curve, "reversal DG workers=4");
+    assert!(rs.ledger.backward_calls >= 2 * 12, "expected >= 2 chunks per step");
+}
+
+#[test]
+fn mnist_oversubscribed_workers_match_serial() {
+    // more workers than samples per shard-capacity: shards degenerate to
+    // tiny slices; the trajectory must not move
+    let eng = Engine::native_testbed();
+    let serial = train_mnist(&eng, &mnist_cfg(1)).unwrap();
+    let over = train_mnist(&eng, &mnist_cfg(64)).unwrap();
+    assert_curves_bit_identical(&serial.curve, &over.curve, "mnist workers=64");
+}
+
+#[test]
+fn mnist_seeds_actually_differ() {
+    // guard against the degenerate "deterministic because constant" case
+    let eng = Engine::native_testbed();
+    let a = train_mnist(&eng, &mnist_cfg(4)).unwrap();
+    let mut cfg = mnist_cfg(4);
+    cfg.seed = 12;
+    let b = train_mnist(&eng, &cfg).unwrap();
+    let same = a.curve.iter().zip(&b.curve).all(|(x, y)| {
+        x.metric.to_bits() == y.metric.to_bits() && x.backward_kept == y.backward_kept
+    });
+    assert!(!same, "different seeds produced identical trajectories");
+}
+
+fn rev_cfg(workers: usize) -> ReversalTrainerCfg {
+    ReversalTrainerCfg {
+        // lambda = 0 adaptive hard gate (Prop 1): eta = 0 determinism case
+        method: Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight },
+        lr: 3e-4,
+        steps: 12,
+        h: 4,
+        m: 2,
+        seed: 7,
+        eval_every: 4,
+        inner_epochs: 1,
+        workers,
+    }
+}
+
+#[test]
+fn reversal_sharded_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let batch = eng.manifest().constants.rev_batch as u64;
+
+    let serial_a = train_reversal(&eng, &rev_cfg(1)).unwrap();
+    let serial_b = train_reversal(&eng, &rev_cfg(1)).unwrap();
+    assert_curves_bit_identical(&serial_a.curve, &serial_b.curve, "reversal serial");
+
+    for workers in [2, 4] {
+        let sharded = train_reversal(&eng, &rev_cfg(workers)).unwrap();
+        assert_curves_bit_identical(
+            &serial_a.curve,
+            &sharded.curve,
+            &format!("reversal workers={workers}"),
+        );
+        assert_eq!(serial_a.ledger.forward_samples, sharded.ledger.forward_samples);
+        assert_eq!(serial_a.ledger.backward_kept, sharded.ledger.backward_kept);
+        assert_eq!(serial_a.ledger.backward_executed, sharded.ledger.backward_executed);
+        assert_eq!(serial_a.ledger.bucket_hist, sharded.ledger.bucket_hist);
+    }
+
+    // structural exactness: 12 steps, eval every 4 -> 3 points; each
+    // rollout is batch * h token-forwards
+    assert_eq!(serial_a.curve.len(), 3);
+    assert_eq!(
+        serial_a.curve.iter().map(|p| p.step).collect::<Vec<_>>(),
+        vec![4, 8, 12]
+    );
+    for point in &serial_a.curve {
+        assert_eq!(point.forward_samples, batch * 4 * point.step as u64);
+    }
+    // the zero-price gate keeps only positive-delight tokens
+    let last = serial_a.curve.last().unwrap();
+    assert!(last.backward_kept < last.forward_samples);
+}
+
+#[test]
+fn sharded_run_still_learns() {
+    // determinism would be vacuous if the sharded loop broke learning:
+    // a short DG-K run must beat the 10% random-guess error by a margin
+    let eng = Engine::native_testbed();
+    let cfg = MnistTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        lr: 3e-3,
+        steps: 150,
+        eval_every: 50,
+        eval_size: 128,
+        seed: 3,
+        workers: 4,
+        ..Default::default()
+    };
+    let res = train_mnist(&eng, &cfg).unwrap();
+    let first = res.curve.first().unwrap().metric2;
+    let last = res.final_test_err;
+    assert!(
+        last < first - 0.03 || last < 0.6,
+        "no learning signal: test err {first:.3} -> {last:.3}"
+    );
+}
