@@ -1,5 +1,8 @@
 //! Minimal bench harness (criterion is not in the offline vendor set):
-//! warmup + timed iterations, reporting mean / p50 / p99 per op.
+//! warmup + timed iterations, reporting mean / p50 / p99 per op, plus a
+//! machine-readable JSON sink so the repo's perf trajectory is recorded
+//! PR-over-PR (`BENCH_e2e.json`) instead of living only in scrollback.
+#![allow(dead_code)] // each bench target compiles its own subset
 
 use std::time::Instant;
 
@@ -41,6 +44,97 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, warmup: usize, mut f: F) -> B
         fmt_ns(r.p99_ns)
     );
     r
+}
+
+/// One machine-readable bench entry: a (section, method, workers) cell of
+/// the e2e matrix with its per-step latency and throughput.
+pub struct BenchEntry {
+    pub section: String,
+    pub method: String,
+    pub workers: usize,
+    pub mean_ns_per_step: f64,
+    pub throughput_per_sec: f64,
+    /// what `throughput_per_sec` counts ("samples" for MNIST rows,
+    /// "tokens" for reversal) -- keeps cross-section comparisons honest
+    pub unit: String,
+}
+
+/// Collects bench entries and writes them as a JSON report. The format is
+/// intentionally flat (one object per (section, method, workers) cell) so
+/// PR-over-PR diffs and plots need no schema gymnastics.
+pub struct JsonReport {
+    bench: String,
+    platform: String,
+    entries: Vec<BenchEntry>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str, platform: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), platform: platform.to_string(), entries: Vec::new() }
+    }
+
+    pub fn record(
+        &mut self,
+        section: &str,
+        method: &str,
+        workers: usize,
+        mean_ns_per_step: f64,
+        throughput_per_sec: f64,
+        unit: &str,
+    ) {
+        self.entries.push(BenchEntry {
+            section: section.to_string(),
+            method: method.to_string(),
+            workers,
+            mean_ns_per_step,
+            throughput_per_sec,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Serialize to pretty-printed JSON. Strings here are simple
+    /// identifiers (method/section names), so escaping is limited to the
+    /// characters they could plausibly contain.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str(&format!("  \"platform\": \"{}\",\n", esc(&self.platform)));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let per_worker = e.throughput_per_sec / e.workers.max(1) as f64;
+            s.push_str(&format!(
+                "    {{\"section\": \"{}\", \"method\": \"{}\", \"workers\": {}, \
+                 \"mean_ns_per_step\": {:.1}, \"unit\": \"{}\", \
+                 \"samples_per_s\": {:.1}, \"samples_per_s_per_worker\": {:.1}}}{}\n",
+                esc(&e.section),
+                esc(&e.method),
+                e.workers,
+                e.mean_ns_per_step,
+                esc(&e.unit),
+                e.throughput_per_sec,
+                per_worker,
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the report to `path`, replacing any previous trajectory
+    /// point. Errors are reported, not fatal: a read-only checkout must
+    /// not fail the bench run itself.
+    pub fn write(&self, path: &str) {
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("\nwrote {path} ({} entries)", self.entries.len()),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 pub fn fmt_ns(ns: f64) -> String {

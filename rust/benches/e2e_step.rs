@@ -5,16 +5,45 @@
 //! coordinator: per-step latency, sample throughput, and per-worker
 //! throughput as `workers` grows. Runs on compiled artifacts when
 //! `artifacts/` exists, otherwise on the native testbed backend.
+//!
+//! The worker axis is derived from `std::thread::available_parallelism()`
+//! (powers of two up to the core count, core count included); set
+//! `KONDO_BENCH_WORKERS=1,2,8` to override it. Besides the human-readable
+//! table, the run emits `BENCH_e2e.json` (override the path with
+//! `KONDO_BENCH_JSON`) so the repo's perf trajectory is recorded
+//! PR-over-PR.
 
 mod bench_util;
 
-use bench_util::{bench, fmt_ns};
+use bench_util::{bench, fmt_ns, JsonReport};
 use kondo::algo::{baseline::Baseline, Method};
 use kondo::coordinator::{KondoGate, Priority};
 use kondo::runtime::Engine;
 use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
 
-const WORKER_AXIS: [usize; 3] = [1, 2, 4];
+/// Worker counts to sweep: `KONDO_BENCH_WORKERS` (comma-separated) if set,
+/// else 1, 2, 4, ... up to and including `available_parallelism()`.
+fn worker_axis() -> Vec<usize> {
+    if let Ok(spec) = std::env::var("KONDO_BENCH_WORKERS") {
+        let axis: Vec<usize> =
+            spec.split(',').filter_map(|t| t.trim().parse().ok()).filter(|&w| w > 0).collect();
+        if !axis.is_empty() {
+            return axis;
+        }
+        eprintln!("KONDO_BENCH_WORKERS='{spec}' has no usable counts; using the derived axis");
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut axis = vec![1];
+    let mut w = 2;
+    while w < cores {
+        axis.push(w);
+        w *= 2;
+    }
+    if cores > 1 {
+        axis.push(cores);
+    }
+    axis
+}
 
 fn main() {
     let eng = match Engine::new("artifacts") {
@@ -25,7 +54,10 @@ fn main() {
         }
     };
     println!("platform: {}", eng.platform());
+    let axis = worker_axis();
+    println!("worker axis: {axis:?}");
     let batch = eng.manifest().constants.mnist_batch;
+    let mut report = JsonReport::new("e2e_step", &eng.platform());
 
     let methods: Vec<(&str, Method)> = vec![
         ("pg", Method::Pg),
@@ -41,7 +73,7 @@ fn main() {
     let mut pg_serial_ns = 0.0;
     let mut dgk_serial_ns = 0.0;
     for (name, m) in &methods {
-        for workers in WORKER_AXIS {
+        for &workers in &axis {
             let r = bench(&format!("mnist step [{name} w{workers}]"), 3, 1, || {
                 let cfg = MnistTrainerCfg {
                     method: *m,
@@ -58,6 +90,7 @@ fn main() {
             });
             let step_ns = r.mean_ns / mnist_steps as f64;
             let samples_per_sec = batch as f64 * 1e9 / step_ns;
+            report.record("mnist", name, workers, step_ns, samples_per_sec, "samples");
             println!(
                 "  [{name} w{workers}] per-step {:>10}  {:>10.0} samples/s  \
                  {:>10.0} samples/s/worker",
@@ -73,7 +106,7 @@ fn main() {
             }
         }
     }
-    if dgk_serial_ns > 0.0 {
+    if pg_serial_ns > 0.0 && dgk_serial_ns > 0.0 {
         println!("  step-time speedup DG-K vs PG (serial): {:.2}x", pg_serial_ns / dgk_serial_ns);
     }
 
@@ -82,7 +115,7 @@ fn main() {
     let rev_batch = eng.manifest().constants.rev_batch;
     let h = 5.min(eng.manifest().constants.h_max);
     for (name, m) in &methods {
-        for workers in WORKER_AXIS {
+        for &workers in &axis {
             let r = bench(&format!("reversal step [{name} w{workers}]"), 2, 1, || {
                 let cfg = ReversalTrainerCfg {
                     method: *m,
@@ -99,6 +132,7 @@ fn main() {
             });
             let step_ns = r.mean_ns / rev_steps as f64;
             let tokens_per_sec = (rev_batch * h) as f64 * 1e9 / step_ns;
+            report.record("reversal", name, workers, step_ns, tokens_per_sec, "tokens");
             println!(
                 "  [{name} w{workers}] per-step {:>10}  {:>10.0} tokens/s  \
                  {:>10.0} tokens/s/worker",
@@ -108,6 +142,13 @@ fn main() {
             );
         }
     }
+
+    // default to the workspace root (cargo runs bench binaries with CWD =
+    // package dir, i.e. rust/), where the trajectory file is committed
+    let json_path = std::env::var("KONDO_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e.json").to_string());
+    report.write(&json_path);
+
     println!("\nexpected shape: DG-K per-step latency well below PG/DG (skipped backward");
     println!("passes are real wall-clock savings), and samples/s growing with workers");
     println!("while the learning trajectory stays bit-identical (see gated_e2e.rs).");

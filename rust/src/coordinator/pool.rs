@@ -1,9 +1,16 @@
 //! Worker pool: the sharded execution substrate of the L3 coordinator.
 //!
-//! A batch is split into contiguous shards; workers (std::thread + mpsc
-//! channels) run forward execution, delight scoring, and bucketed backward
-//! chunks concurrently. Everything here is built around one invariant,
-//! the **determinism contract** (DESIGN.md §"L3 parallelism"):
+//! A batch is split into contiguous shards; workers run forward execution,
+//! delight scoring, and bucketed backward chunks concurrently. The pool is
+//! **persistent**: `WorkerPool::new(workers)` spawns `workers` long-lived
+//! threads once (owned by `trainers::GatedLoop`, so they live for a whole
+//! training run); every `run` call feeds them type-erased jobs over a
+//! shared mpsc channel, and `Drop` closes the channel and joins every
+//! thread. Spawn cost is therefore paid once per run, not three times per
+//! training step (the PR-1 scoped-thread pool's hot-path churn).
+//!
+//! Everything here is built around one invariant, the **determinism
+//! contract** (DESIGN.md §"L3 parallelism"):
 //!
 //!   the training trajectory is a pure function of the seed, independent
 //!   of the `workers` knob.
@@ -17,10 +24,20 @@
 //!    generator -- shard boundaries cannot shift anybody's draws.
 //! 3. Batch-global decisions (the Kondo gate's quantile price) are taken
 //!    on the merged score vector, never per shard.
+//!
+//! A task that panics does not kill its worker thread or hang the caller:
+//! the panic payload is captured, the remaining queue is cancelled, and
+//! `run` re-raises the panic on the calling thread once every in-flight
+//! task has finished.
 
+use std::any::Any;
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::{mpsc, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::utils::rng::Pcg32;
 
@@ -53,7 +70,9 @@ impl Shard {
 
 /// Deterministic contiguous split of `n` items into at most `workers`
 /// shards (sizes differ by at most one, larger shards first). Depends only
-/// on `(n, workers)`.
+/// on `(n, workers)`. For `n = 0` this returns a single empty shard (the
+/// split always covers the batch); dispatch layers must skip empty shards
+/// rather than hand them to workers as tasks (`GatedLoop::shards`).
 pub fn split_shards(n: usize, workers: usize) -> Vec<Shard> {
     let w = workers.max(1).min(n.max(1));
     let base = n / w;
@@ -77,18 +96,149 @@ pub fn unit_rng(seed: u64, step: u64, unit: u64) -> Pcg32 {
     Pcg32::new(seed ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15), stream)
 }
 
-/// Fixed-size worker pool over scoped threads. Stateless between calls:
-/// each `run` spawns up to `workers` scoped threads that drain a shared
-/// task queue and send `(index, result)` pairs back over an mpsc channel;
-/// the caller reassembles results in task order.
-#[derive(Debug, Clone)]
+/// A type-erased unit of work shipped to a persistent worker thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared state of one `run` call. Lives on the caller's stack; workers
+/// reach it through the lifetime-erased job closures, which is sound
+/// because `run` blocks on the completion barrier (`finished` /
+/// `all_done`) until every dispatched job has finished touching it.
+struct RunState<T, R, F> {
+    /// unclaimed `(task_index, task)` pairs, drained by workers
+    queue: Mutex<VecDeque<(usize, T)>>,
+    /// results slotted by task index -- the task-order merge
+    out: Mutex<Vec<Option<R>>>,
+    /// first captured panic payload from a task, re-raised by the caller
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    /// how many dispatched jobs have fully finished (completion barrier)
+    finished: Mutex<usize>,
+    all_done: Condvar,
+    f: F,
+}
+
+impl<T, R, F> RunState<T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    /// Worker-side body of one job: drain the task queue until empty. A
+    /// panicking task records its payload, cancels the remaining queue,
+    /// and keeps the worker thread alive for future runs. The `Finish`
+    /// guard bumps the completion barrier even if this frame unwinds, so
+    /// the caller can never be left waiting on a dead job.
+    fn drain(&self) {
+        struct Finish<'a>(&'a Mutex<usize>, &'a Condvar);
+        impl Drop for Finish<'_> {
+            fn drop(&mut self) {
+                let mut fin = match self.0.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                *fin += 1;
+                self.1.notify_all();
+            }
+        }
+        let _finish = Finish(&self.finished, &self.all_done);
+
+        loop {
+            let task = self.queue.lock().unwrap().pop_front();
+            let Some((i, t)) = task else { break };
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(i, t))) {
+                Ok(r) => {
+                    self.out.lock().unwrap()[i] = Some(r);
+                }
+                Err(payload) => {
+                    // cancel undispatched tasks; keep the first payload
+                    self.queue.lock().unwrap().clear();
+                    let mut slot = match self.panic.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fixed-size pool of persistent worker threads. Threads are spawned once
+/// in `new`, blocked on a shared job channel between `run` calls, and
+/// joined when the pool drops. `workers = 1` spawns no threads at all --
+/// every `run` degenerates to an inline loop on the caller's thread, the
+/// serial baseline that sharded runs must reproduce bit for bit.
 pub struct WorkerPool {
     workers: usize,
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    /// worker threads currently running (observability + drop-join tests)
+    alive: Arc<AtomicUsize>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("threads", &self.handles.len())
+            .field("alive", &self.alive.load(Ordering::SeqCst))
+            .finish()
+    }
+}
+
+thread_local! {
+    /// True on pool worker threads. A nested `run` (a task that itself
+    /// calls `run` on some pool) executes inline on the worker instead of
+    /// queueing jobs behind workers that are all busy running its parent
+    /// -- the scoped-thread pool tolerated reentrancy and the persistent
+    /// pool must not turn it into a silent deadlock.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Job>>>, alive: Arc<AtomicUsize>) {
+    IN_POOL_WORKER.with(|flag| flag.set(true));
+    alive.fetch_add(1, Ordering::SeqCst);
+    loop {
+        // hold the receiver lock only to pull one job; execution runs
+        // unlocked so idle workers can grab the next job immediately
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break,
+        };
+        match job {
+            // jobs capture their own panics (RunState::drain); this outer
+            // catch is a belt-and-braces guard keeping the thread alive
+            Ok(job) => {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            // channel closed: the pool is dropping
+            Err(_) => break,
+        }
+    }
+    alive.fetch_sub(1, Ordering::SeqCst);
 }
 
 impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
-        WorkerPool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let alive = Arc::new(AtomicUsize::new(0));
+        if workers == 1 {
+            return WorkerPool { workers, tx: None, handles: Vec::new(), alive };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            let alive = Arc::clone(&alive);
+            let handle = std::thread::Builder::new()
+                .name(format!("kondo-pool-{i}"))
+                .spawn(move || worker_main(rx, alive))
+                .expect("spawning persistent pool worker");
+            handles.push(handle);
+        }
+        WorkerPool { workers, tx: Some(tx), handles, alive }
     }
 
     pub fn workers(&self) -> usize {
@@ -96,9 +246,18 @@ impl WorkerPool {
     }
 
     /// Run `f` over every task, returning results in task order. With one
-    /// worker (or at most one task) this degenerates to an inline loop on
-    /// the caller's thread -- the `workers = 1` baseline path that sharded
-    /// runs must reproduce bit for bit.
+    /// worker (or at most one task) this is an inline loop on the caller's
+    /// thread -- the `workers = 1` baseline path that sharded runs must
+    /// reproduce bit for bit. Otherwise up to `workers` persistent threads
+    /// drain a shared queue and slot results by task index; the caller
+    /// blocks until every dispatched job has finished. If a task panicked,
+    /// the panic is re-raised here (on the calling thread) after all
+    /// in-flight tasks completed, and the pool remains usable.
+    ///
+    /// A nested `run` -- called from inside a task already executing on a
+    /// pool worker -- runs inline on that worker (same results, task
+    /// order preserved) rather than queueing behind workers that may all
+    /// be busy with its parent, which would deadlock.
     pub fn run<T, R, F>(&self, tasks: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -106,42 +265,83 @@ impl WorkerPool {
         F: Fn(usize, T) -> R + Sync,
     {
         let n = tasks.len();
-        if self.workers == 1 || n <= 1 {
+        if self.handles.is_empty() || n <= 1 || IN_POOL_WORKER.with(|flag| flag.get()) {
             return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
 
-        let queue: Mutex<VecDeque<(usize, T)>> =
-            Mutex::new(tasks.into_iter().enumerate().collect());
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
-        let n_threads = self.workers.min(n);
-        std::thread::scope(|scope| {
-            for _ in 0..n_threads {
-                let tx = tx.clone();
-                let queue = &queue;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let task = queue.lock().unwrap().pop_front();
-                    let Some((i, t)) = task else { break };
-                    if tx.send((i, f(i, t))).is_err() {
+        let n_jobs = self.handles.len().min(n);
+        let state = RunState {
+            queue: Mutex::new(tasks.into_iter().enumerate().collect()),
+            out: Mutex::new((0..n).map(|_| None).collect()),
+            panic: Mutex::new(None),
+            finished: Mutex::new(0usize),
+            all_done: Condvar::new(),
+            f,
+        };
+        let send_failed = {
+            let state_ref = &state;
+            let tx = self.tx.as_ref().expect("pool with threads must hold its channel");
+            let mut sent = 0usize;
+            let mut send_failed = false;
+            for _ in 0..n_jobs {
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || state_ref.drain());
+                // SAFETY: the job borrows `state`, which lives on this
+                // stack frame. The barrier below blocks until every job
+                // actually sent has bumped `finished` (guaranteed even on
+                // task unwind by the `Finish` drop guard), and nothing on
+                // this path between the first send and the barrier can
+                // unwind (send failure is counted, poison is absorbed), so
+                // no worker can touch `state` after `run` returns; erasing
+                // the lifetime to ship the box through the 'static channel
+                // is therefore sound.
+                let job: Job = unsafe { std::mem::transmute(job) };
+                match tx.send(job) {
+                    Ok(()) => sent += 1,
+                    // all workers gone (cannot happen while the pool is
+                    // alive, but never leave borrowed jobs unaccounted):
+                    // the unsent job was dropped inside the SendError
+                    Err(_) => {
+                        send_failed = true;
                         break;
                     }
-                });
+                }
             }
-            drop(tx);
-            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-            for (i, r) in rx {
-                out[i] = Some(r);
+            let mut fin = state.finished.lock().unwrap_or_else(|e| e.into_inner());
+            while *fin < sent {
+                fin = state.all_done.wait(fin).unwrap_or_else(|e| e.into_inner());
             }
-            out.into_iter()
-                .map(|r| r.expect("pool worker terminated before returning its result"))
-                .collect()
-        })
+            send_failed
+        };
+        if send_failed {
+            panic!("persistent pool channel closed with live workers expected");
+        }
+        if let Some(payload) = state.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+        state
+            .out
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("pool worker terminated before returning its result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel wakes every idle worker with RecvError
+        drop(self.tx.take());
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -168,6 +368,8 @@ mod tests {
 
     #[test]
     fn split_shards_empty_batch() {
+        // contract: the split always covers the batch, so n = 0 yields one
+        // empty shard; dispatch layers (GatedLoop::shards) must skip it
         let shards = split_shards(0, 4);
         assert_eq!(shards.len(), 1);
         assert!(shards[0].is_empty());
@@ -189,6 +391,7 @@ mod tests {
     #[test]
     fn run_single_worker_is_inline() {
         let pool = WorkerPool::new(1);
+        assert!(pool.handles.is_empty(), "workers = 1 must not spawn threads");
         let tid = std::thread::current().id();
         let out = pool.run(vec![1, 2, 3], |_, t| {
             assert_eq!(std::thread::current().id(), tid);
@@ -222,6 +425,78 @@ mod tests {
         let c = WorkerPool::new(16).run(tasks, f);
         assert_eq!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn pool_threads_persist_across_runs() {
+        // the tentpole property: many run() calls reuse the same threads.
+        // The scoped-spawn pool minted fresh ThreadIds every call; the
+        // persistent pool's id set stays bounded by the worker count.
+        let pool = WorkerPool::new(4);
+        let mut ids: HashSet<std::thread::ThreadId> = HashSet::new();
+        for _ in 0..10 {
+            let out = pool.run((0..16).collect::<Vec<usize>>(), |_, _t| {
+                std::thread::current().id()
+            });
+            assert_eq!(out.len(), 16);
+            ids.extend(out);
+        }
+        assert!(
+            ids.len() <= 4,
+            "10 runs used {} distinct threads; persistent workers must reuse threads",
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn run_returns_correct_results_across_many_reuses() {
+        let pool = WorkerPool::new(4);
+        for round in 0..25usize {
+            let out = pool.run((0..20).collect::<Vec<usize>>(), |i, t| {
+                assert_eq!(i, t);
+                t * 3 + round
+            });
+            assert_eq!(out, (0..20).map(|t| t * 3 + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_worker_threads() {
+        let pool = WorkerPool::new(6);
+        let alive = Arc::clone(&pool.alive);
+        let out = pool.run((0..32).collect::<Vec<usize>>(), |_, t| t);
+        assert_eq!(out.len(), 32);
+        drop(pool);
+        // drop joined every handle, and each worker decrements `alive` on
+        // exit, so a nonzero count here means a leaked thread
+        assert_eq!(alive.load(Ordering::SeqCst), 0, "worker threads leaked past Drop");
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run((0..8).collect::<Vec<usize>>(), |_, t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+                t
+            })
+        }));
+        let payload = result.expect_err("a panicking task must propagate, not hang");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("<non-str payload>");
+        assert_eq!(msg, "boom");
+        // the panic cancelled the run but not the pool: workers survive
+        // and later runs are correct
+        let out = pool.run((0..8).collect::<Vec<usize>>(), |_, t| t * 2);
+        assert_eq!(out, (0..8).map(|t| t * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_with_no_tasks_is_empty() {
+        let pool = WorkerPool::new(4);
+        let out = pool.run(Vec::<usize>::new(), |_, t| t);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -63,13 +63,35 @@ impl ParamStore {
             .map(|i| self.tensors[i].as_slice())
     }
 
-    /// Parameters as the leading artifact inputs.
+    /// Parameters as the leading artifact inputs (fresh allocation).
     pub fn as_inputs(&self) -> Vec<HostTensor> {
         self.rules
             .iter()
             .zip(&self.tensors)
             .map(|(r, t)| HostTensor::f32(&r.shape, t.clone()))
             .collect()
+    }
+
+    /// Refresh a reusable marshalling buffer with the current parameter
+    /// values. When `out` already has the right layout (the steady state:
+    /// one buffer per training run, refreshed after each optimizer step)
+    /// this is a pure `copy_from_slice` with no allocation; otherwise the
+    /// buffer is (re)built from scratch.
+    pub fn marshal_into(&self, out: &mut Vec<HostTensor>) {
+        if out.len() != self.tensors.len() {
+            *out = self.as_inputs();
+            return;
+        }
+        for ((rule, src), dst) in self.rules.iter().zip(&self.tensors).zip(out.iter_mut()) {
+            match dst {
+                HostTensor::F32 { shape, data }
+                    if shape.as_slice() == rule.shape.as_slice() && data.len() == src.len() =>
+                {
+                    data.copy_from_slice(src);
+                }
+                _ => *dst = HostTensor::f32(&rule.shape, src.clone()),
+            }
+        }
     }
 
     /// Validate a gradient tensor list (bwd artifact outputs after the loss).
@@ -157,6 +179,21 @@ mod tests {
         let var: f64 =
             p.tensor(0).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / 10_000.0;
         assert!((var.sqrt() - 0.02).abs() < 0.002, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn marshal_into_reuses_buffer_and_tracks_updates() {
+        let mut p = ParamStore::init(&rules(), 7);
+        let mut buf = Vec::new();
+        p.marshal_into(&mut buf);
+        assert_eq!(buf, p.as_inputs());
+        // mutate a parameter; the refreshed buffer must match, reusing the
+        // existing tensor allocations (same layout, no reallocation path)
+        p.tensor_mut(0)[0] += 1.0;
+        let before_ptr = buf[0].as_f32().unwrap().as_ptr();
+        p.marshal_into(&mut buf);
+        assert_eq!(buf, p.as_inputs());
+        assert_eq!(buf[0].as_f32().unwrap().as_ptr(), before_ptr);
     }
 
     #[test]

@@ -148,11 +148,26 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute an artifact with host tensors; validates the input
+    /// Execute an artifact with owned host tensors. Thin wrapper over
+    /// [`Engine::execute_refs`] for call sites that already hold a
+    /// `Vec<HostTensor>`; the hot path (trainer forward/backward chunks)
+    /// uses `execute_refs` directly so the marshalled parameter tensors
+    /// can be shared across calls instead of cloned per call.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.execute_refs(name, &refs)
+    }
+
+    /// Execute an artifact with borrowed host tensors; validates the input
     /// signature against the manifest and unpacks the output tuple.
     /// Thread-safe: called concurrently from coordinator pool workers.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let sig = self.manifest.artifact(name)?.clone();
+    ///
+    /// Taking `&[&HostTensor]` keeps the hot path zero-copy: one marshal
+    /// of the parameter tensors serves every backward chunk and forward
+    /// shard of a step, with only a pointer list built per call.
+    pub fn execute_refs(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        // borrow the signature (no per-call clone of shapes/names)
+        let sig = self.manifest.artifact(name)?;
         if inputs.len() != sig.inputs.len() {
             bail!(
                 "artifact '{name}': got {} inputs, manifest says {}",
@@ -256,6 +271,27 @@ mod tests {
         // stats recorded
         assert_eq!(eng.stats().len(), 1);
         assert!(eng.mean_secs("mnist_fwd").is_some());
+    }
+
+    #[test]
+    fn execute_refs_shares_marshalled_params_across_calls() {
+        // the hot-path contract: one marshalled parameter list serves many
+        // calls by reference, each with its own extra inputs appended
+        let eng = Engine::native_testbed();
+        let man = eng.manifest();
+        let rules = man.model("mnist").unwrap().to_vec();
+        let params = crate::model::ParamStore::init(&rules, 1);
+        let param_inputs = params.as_inputs();
+        let b = man.constants.mnist_batch;
+        let x = HostTensor::zeros_f32(&[b, man.constants.mnist_in]);
+        let noise = HostTensor::zeros_f32(&[b, man.constants.mnist_actions]);
+        let mut refs: Vec<&HostTensor> = param_inputs.iter().collect();
+        refs.push(&x);
+        refs.push(&noise);
+        let first = eng.execute_refs("mnist_fwd", &refs).unwrap();
+        let second = eng.execute_refs("mnist_fwd", &refs).unwrap();
+        assert_eq!(first[0].as_f32().unwrap(), second[0].as_f32().unwrap());
+        assert_eq!(eng.stats()[0].1.calls, 2);
     }
 
     #[test]

@@ -209,7 +209,9 @@ impl NativeTestbed {
 
     /// Execute one artifact. Inputs are already validated against the
     /// manifest signature by the engine, so shapes can be trusted here.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    /// Borrowed inputs keep the engine hot path zero-copy: parameter
+    /// tensors marshalled once per step are shared across every call.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         if name == "mnist_fwd" {
             return mnist_forward(inputs, MNIST_BATCH, true);
         }
@@ -240,42 +242,88 @@ fn suffix_cap(name: &str, prefix: &str) -> Option<usize> {
 }
 
 // ---- MNIST MLP: x[784] -> tanh(32) -> log-softmax(10) ----
+//
+// Matmul loops run input-dimension-outer so the weight matrix is streamed
+// row-contiguously (one pass over w1 per sample instead of one strided
+// pass per hidden unit). Per output element the f64 accumulation order is
+// unchanged -- bias first, then contributions in ascending input index --
+// so results are bit-identical to the unit-at-a-time formulation and the
+// row-independence/determinism contract is untouched.
 
-/// Hidden activations for one input row (f64 accumulation, fixed order).
-fn mlp_hidden(w1: &[f32], b1: &[f32], xi: &[f32]) -> Vec<f32> {
-    let mut h = vec![0.0f32; MNIST_HIDDEN];
-    for (j, hj) in h.iter_mut().enumerate() {
-        let mut acc = b1[j] as f64;
-        for (d, &x) in xi.iter().enumerate() {
-            acc += x as f64 * w1[d * MNIST_HIDDEN + j] as f64;
-        }
-        *hj = acc.tanh() as f32;
+/// Hidden activations for one input row, written into `h` (f64
+/// accumulation in `acc`, fixed order: b1[j], then d ascending).
+fn mlp_hidden_into(w1: &[f32], b1: &[f32], xi: &[f32], acc: &mut [f64], h: &mut [f32]) {
+    for (a, &b) in acc.iter_mut().zip(b1) {
+        *a = b as f64;
     }
-    h
+    for (&x, wrow) in xi.iter().zip(w1.chunks_exact(MNIST_HIDDEN)) {
+        let xf = x as f64;
+        for (a, &w) in acc.iter_mut().zip(wrow) {
+            *a += xf * w as f64;
+        }
+    }
+    for (hj, &a) in h.iter_mut().zip(acc.iter()) {
+        *hj = a.tanh() as f32;
+    }
 }
 
-/// Logits for one row given its hidden activations.
-fn mlp_logits(w2: &[f32], b2: &[f32], h: &[f32], noise_row: Option<&[f32]>) -> Vec<f32> {
-    let mut logits = vec![0.0f32; MNIST_ACTIONS];
-    for (k, lk) in logits.iter_mut().enumerate() {
-        let mut acc = b2[k] as f64;
-        for (j, &hj) in h.iter().enumerate() {
-            acc += hj as f64 * w2[j * MNIST_ACTIONS + k] as f64;
-        }
-        if let Some(n) = noise_row {
-            acc += n[k] as f64;
-        }
-        *lk = acc as f32;
+/// Logits for one row given its hidden activations, written into `logits`
+/// (fixed order: b2[k], then j ascending, then optional noise).
+fn mlp_logits_into(
+    w2: &[f32],
+    b2: &[f32],
+    h: &[f32],
+    noise_row: Option<&[f32]>,
+    acc: &mut [f64],
+    logits: &mut [f32],
+) {
+    for (a, &b) in acc.iter_mut().zip(b2) {
+        *a = b as f64;
     }
-    logits
+    for (&hj, wrow) in h.iter().zip(w2.chunks_exact(MNIST_ACTIONS)) {
+        let hf = hj as f64;
+        for (a, &w) in acc.iter_mut().zip(wrow) {
+            *a += hf * w as f64;
+        }
+    }
+    if let Some(n) = noise_row {
+        for (a, &nv) in acc.iter_mut().zip(n) {
+            *a += nv as f64;
+        }
+    }
+    for (l, &a) in logits.iter_mut().zip(acc.iter()) {
+        *l = a as f32;
+    }
 }
 
-fn log_softmax(logits: &[f32]) -> Vec<f32> {
+fn log_softmax_into(logits: &[f32], out: &mut [f32]) {
     let lse = logsumexp(logits);
-    logits.iter().map(|&l| l - lse).collect()
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = l - lse;
+    }
 }
 
-fn mnist_forward(inputs: &[HostTensor], cap: usize, with_noise: bool) -> Result<Vec<HostTensor>> {
+/// Scratch buffers for one MLP row, reused across the rows of a call (the
+/// old per-row `Vec` allocations were measurable on the forward path).
+struct MlpScratch {
+    acc_h: Vec<f64>,
+    acc_l: Vec<f64>,
+    h: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl MlpScratch {
+    fn new() -> MlpScratch {
+        MlpScratch {
+            acc_h: vec![0.0f64; MNIST_HIDDEN],
+            acc_l: vec![0.0f64; MNIST_ACTIONS],
+            h: vec![0.0f32; MNIST_HIDDEN],
+            logits: vec![0.0f32; MNIST_ACTIONS],
+        }
+    }
+}
+
+fn mnist_forward(inputs: &[&HostTensor], cap: usize, with_noise: bool) -> Result<Vec<HostTensor>> {
     let w1 = inputs[0].as_f32()?;
     let b1 = inputs[1].as_f32()?;
     let w2 = inputs[2].as_f32()?;
@@ -284,12 +332,13 @@ fn mnist_forward(inputs: &[HostTensor], cap: usize, with_noise: bool) -> Result<
     let noise = if with_noise { Some(inputs[5].as_f32()?) } else { None };
 
     let mut logp = vec![0.0f32; cap * MNIST_ACTIONS];
+    let mut s = MlpScratch::new();
     for i in 0..cap {
         let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
-        let h = mlp_hidden(w1, b1, xi);
+        mlp_hidden_into(w1, b1, xi, &mut s.acc_h, &mut s.h);
         let nrow = noise.map(|n| &n[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS]);
-        let logits = mlp_logits(w2, b2, &h, nrow);
-        logp[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS].copy_from_slice(&log_softmax(&logits));
+        mlp_logits_into(w2, b2, &s.h, nrow, &mut s.acc_l, &mut s.logits);
+        log_softmax_into(&s.logits, &mut logp[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS]);
     }
     Ok(vec![HostTensor::f32(&[cap, MNIST_ACTIONS], logp)])
 }
@@ -297,7 +346,12 @@ fn mnist_forward(inputs: &[HostTensor], cap: usize, with_noise: bool) -> Result<
 /// Weighted score-function backward: L = -sum_i w_i log pi(a_i); outputs
 /// [loss, g_w1, g_b1, g_w2, g_b2]. Zero-weight (padding) rows are skipped,
 /// which is exact because every contribution scales with w_i.
-fn mnist_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
+///
+/// The g_w1 update runs input-dimension-outer (row-contiguous writes into
+/// the 784x32 gradient) with the per-unit deltas `dpre` staged first; each
+/// g_w1 element still receives exactly one contribution per sample, in
+/// sample order, so the result is bit-identical to the unit-outer loop.
+fn mnist_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
     let w1 = inputs[0].as_f32()?;
     let b1 = inputs[1].as_f32()?;
     let w2 = inputs[2].as_f32()?;
@@ -311,6 +365,10 @@ fn mnist_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> 
     let mut gb1 = vec![0.0f32; MNIST_HIDDEN];
     let mut gw2 = vec![0.0f32; MNIST_HIDDEN * MNIST_ACTIONS];
     let mut gb2 = vec![0.0f32; MNIST_ACTIONS];
+    let mut s = MlpScratch::new();
+    let mut logp = vec![0.0f32; MNIST_ACTIONS];
+    let mut dl = vec![0.0f32; MNIST_ACTIONS];
+    let mut dpre = vec![0.0f32; MNIST_HIDDEN];
 
     for i in 0..cap {
         let wi = w[i];
@@ -322,12 +380,12 @@ fn mnist_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> 
             bail!("mnist_bwd: action {a} out of range");
         }
         let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
-        let h = mlp_hidden(w1, b1, xi);
-        let logp = log_softmax(&mlp_logits(w2, b2, &h, None));
+        mlp_hidden_into(w1, b1, xi, &mut s.acc_h, &mut s.h);
+        mlp_logits_into(w2, b2, &s.h, None, &mut s.acc_l, &mut s.logits);
+        log_softmax_into(&s.logits, &mut logp);
         loss += wi as f64 * (-(logp[a] as f64));
 
         // dL/dlogits = w * (softmax - onehot(a))
-        let mut dl = vec![0.0f32; MNIST_ACTIONS];
         for (k, dlk) in dl.iter_mut().enumerate() {
             let p = logp[k].exp();
             *dlk = wi * (p - if k == a { 1.0 } else { 0.0 });
@@ -335,16 +393,21 @@ fn mnist_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> 
         for k in 0..MNIST_ACTIONS {
             gb2[k] += dl[k];
         }
-        for (j, &hj) in h.iter().enumerate() {
+        for (j, &hj) in s.h.iter().enumerate() {
+            let wrow = &w2[j * MNIST_ACTIONS..(j + 1) * MNIST_ACTIONS];
+            let grow = &mut gw2[j * MNIST_ACTIONS..(j + 1) * MNIST_ACTIONS];
             let mut dh = 0.0f64;
             for (k, &dlk) in dl.iter().enumerate() {
-                gw2[j * MNIST_ACTIONS + k] += hj * dlk;
-                dh += w2[j * MNIST_ACTIONS + k] as f64 * dlk as f64;
+                grow[k] += hj * dlk;
+                dh += wrow[k] as f64 * dlk as f64;
             }
-            let dpre = ((1.0 - hj as f64 * hj as f64) * dh) as f32;
-            gb1[j] += dpre;
-            for (d, &xd) in xi.iter().enumerate() {
-                gw1[d * MNIST_HIDDEN + j] += xd * dpre;
+            let dp = ((1.0 - hj as f64 * hj as f64) * dh) as f32;
+            gb1[j] += dp;
+            dpre[j] = dp;
+        }
+        for (&xd, grow) in xi.iter().zip(gw1.chunks_exact_mut(MNIST_HIDDEN)) {
+            for (g, &dp) in grow.iter_mut().zip(dpre.iter()) {
+                *g += xd * dp;
             }
         }
     }
@@ -378,22 +441,35 @@ fn rev_alpha(attn: &[f32]) -> Vec<f32> {
     alpha
 }
 
-/// Masked logits for one (episode, position): full vocab length, inactive
-/// tokens at -1e30.
-fn rev_logits(alpha: &[f32], emit: &[f32], prow: &[i32], j: usize, m: usize) -> Vec<f32> {
-    let mut logits = vec![NEG; REV_VOCAB];
-    for (v, lv) in logits.iter_mut().enumerate().take(m) {
-        let mut acc = 0.0f64;
-        for k in 0..REV_HMAX {
-            let t = prow[k] as usize;
-            acc += alpha[j * REV_HMAX + k] as f64 * emit[t * REV_VOCAB + v] as f64;
+/// Masked logits for one (episode, position) written into `logits` (full
+/// vocab length, inactive tokens at -1e30). The attention mix runs
+/// prompt-position-outer so each emit row is streamed contiguously; per
+/// logit element the f64 accumulation order is still k ascending, so the
+/// result is bit-identical to the vocab-outer formulation.
+fn rev_logits_into(
+    alpha_row: &[f32],
+    emit: &[f32],
+    trow: &[usize],
+    m: usize,
+    acc: &mut [f64],
+    logits: &mut [f32],
+) {
+    logits.fill(NEG);
+    let acc = &mut acc[..m];
+    acc.fill(0.0);
+    for (&ak, &t) in alpha_row.iter().zip(trow) {
+        let af = ak as f64;
+        let erow = &emit[t * REV_VOCAB..t * REV_VOCAB + m];
+        for (a, &e) in acc.iter_mut().zip(erow) {
+            *a += af * e as f64;
         }
-        *lv = acc as f32;
     }
-    logits
+    for (l, &a) in logits[..m].iter_mut().zip(acc.iter()) {
+        *l = a as f32;
+    }
 }
 
-fn rev_scalars(inputs: &[HostTensor], h_idx: usize) -> Result<(usize, usize)> {
+fn rev_scalars(inputs: &[&HostTensor], h_idx: usize) -> Result<(usize, usize)> {
     let h = inputs[h_idx].as_i32()?[0] as usize;
     let m = inputs[h_idx + 1].as_i32()?[0] as usize;
     if h == 0 || h > REV_HMAX || m < 2 || m > REV_VOCAB {
@@ -410,7 +486,17 @@ fn check_token(t: i32) -> Result<usize> {
     Ok(t)
 }
 
-fn rev_rollout(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+/// Check and widen one episode's prompt tokens into `trow` (reused across
+/// episodes; gathering the token ids once hoists the per-(position, vocab)
+/// bounds checks out of the attention inner loops).
+fn gather_tokens(prow: &[i32], trow: &mut [usize]) -> Result<()> {
+    for (t, &p) in trow.iter_mut().zip(prow) {
+        *t = check_token(p)?;
+    }
+    Ok(())
+}
+
+fn rev_rollout(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
     let attn = inputs[0].as_f32()?;
     let emit = inputs[1].as_f32()?;
     let prompt = inputs[2].as_i32()?;
@@ -420,17 +506,19 @@ fn rev_rollout(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
     let alpha = rev_alpha(attn);
     let mut actions = vec![REV_PAD as i32; REV_BATCH * REV_HMAX];
     let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
+    let mut trow = vec![0usize; REV_HMAX];
+    let mut acc = vec![0.0f64; REV_VOCAB];
+    let mut logits = vec![NEG; REV_VOCAB];
     for ep in 0..REV_BATCH {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
-        for &t in prow {
-            check_token(t)?;
-        }
+        gather_tokens(prow, &mut trow)?;
         // per-episode stream: sampling is independent of how the batch
         // would be sharded (rollout runs whole-batch today, but the
         // contract keeps this future-proof)
         let mut rng = Pcg32::new(seed, ep as u64);
         for j in 0..h {
-            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
+            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
             let a = rng.categorical_from_logits(&logits);
             let lse = logsumexp(&logits);
             actions[ep * REV_HMAX + j] = a as i32;
@@ -443,7 +531,7 @@ fn rev_rollout(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
     ])
 }
 
-fn rev_forward(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn rev_forward(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
     let attn = inputs[0].as_f32()?;
     let emit = inputs[1].as_f32()?;
     let prompt = inputs[2].as_i32()?;
@@ -452,17 +540,19 @@ fn rev_forward(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
 
     let alpha = rev_alpha(attn);
     let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
+    let mut trow = vec![0usize; REV_HMAX];
+    let mut acc = vec![0.0f64; REV_VOCAB];
+    let mut logits = vec![NEG; REV_VOCAB];
     for ep in 0..REV_BATCH {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
-        for &t in prow {
-            check_token(t)?;
-        }
+        gather_tokens(prow, &mut trow)?;
         for j in 0..h {
             let a = actions[ep * REV_HMAX + j] as usize;
             if a >= m {
                 bail!("rev_fwd: action {a} outside active vocab {m}");
             }
-            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
+            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
             let lse = logsumexp(&logits);
             logp[ep * REV_HMAX + j] = logits[a] - lse;
         }
@@ -473,7 +563,13 @@ fn rev_forward(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
 /// Episode-bucketed backward: L = -sum_{ep,j} w[ep,j] log pi(a[ep,j]);
 /// outputs [loss, g_attn, g_emit]. Zero-weight tokens (skipped by the
 /// gate, or whole padding episodes) contribute nothing.
-fn rev_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
+///
+/// The gradient scatter runs prompt-position-outer (contiguous emit /
+/// g_emit row access, token ids checked once per episode instead of per
+/// (vocab, position) pair). Per gradient element the f32 accumulation
+/// order is unchanged -- (episode, position, then ascending inner index) --
+/// so results are bit-identical to the vocab-outer loop.
+fn rev_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
     let attn = inputs[0].as_f32()?;
     let emit = inputs[1].as_f32()?;
     let prompt = inputs[2].as_i32()?;
@@ -485,12 +581,14 @@ fn rev_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
     let mut loss = 0.0f64;
     let mut dalpha = vec![0.0f32; REV_HMAX * REV_HMAX];
     let mut gemit = vec![0.0f32; (REV_VOCAB + 1) * REV_VOCAB];
+    let mut trow = vec![0usize; REV_HMAX];
+    let mut acc = vec![0.0f64; REV_VOCAB];
+    let mut logits = vec![NEG; REV_VOCAB];
+    let mut dl = vec![0.0f32; REV_VOCAB];
 
     for ep in 0..cap {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
-        for &t in prow {
-            check_token(t)?;
-        }
+        gather_tokens(prow, &mut trow)?;
         for j in 0..h {
             let wij = w[ep * REV_HMAX + j];
             if wij == 0.0 {
@@ -500,17 +598,26 @@ fn rev_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
             if a >= m {
                 bail!("rev_bwd: action {a} outside active vocab {m}");
             }
-            let logits = rev_logits(&alpha, emit, prow, j, m);
+            let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
+            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
             let lse = logsumexp(&logits);
             loss += wij as f64 * ((lse - logits[a]) as f64);
-            for v in 0..m {
+            // dL/dlogits = w * (softmax - onehot(a))
+            for (v, dv) in dl.iter_mut().enumerate().take(m) {
                 let p = (logits[v] - lse).exp();
-                let d = wij * (p - if v == a { 1.0 } else { 0.0 });
-                for k in 0..REV_HMAX {
-                    let t = check_token(prow[k])?;
-                    gemit[t * REV_VOCAB + v] += alpha[j * REV_HMAX + k] * d;
-                    dalpha[j * REV_HMAX + k] += d * emit[t * REV_VOCAB + v];
+                *dv = wij * (p - if v == a { 1.0 } else { 0.0 });
+            }
+            let darow = &mut dalpha[j * REV_HMAX..(j + 1) * REV_HMAX];
+            for (k, &t) in trow.iter().enumerate() {
+                let ak = alpha_row[k];
+                let erow = &emit[t * REV_VOCAB..t * REV_VOCAB + m];
+                let grow = &mut gemit[t * REV_VOCAB..t * REV_VOCAB + m];
+                let mut da = darow[k];
+                for ((&d, g), &e) in dl[..m].iter().zip(grow.iter_mut()).zip(erow) {
+                    *g += ak * d;
+                    da += d * e;
                 }
+                darow[k] = da;
             }
         }
     }
@@ -539,6 +646,11 @@ fn rev_backward(inputs: &[HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
 mod tests {
     use super::*;
     use crate::model::ParamStore;
+
+    /// Borrow a tensor list the way the engine hands it to the backend.
+    fn refs(v: &[HostTensor]) -> Vec<&HostTensor> {
+        v.iter().collect()
+    }
 
     fn mnist_inputs(cap: usize, with_noise: bool) -> Vec<HostTensor> {
         let params = ParamStore::init(&mnist_rules(), 7);
@@ -569,7 +681,7 @@ mod tests {
 
     #[test]
     fn mnist_forward_rows_are_normalized_logprobs() {
-        let out = mnist_forward(&mnist_inputs(MNIST_BATCH, true), MNIST_BATCH, true).unwrap();
+        let out = mnist_forward(&refs(&mnist_inputs(MNIST_BATCH, true)), MNIST_BATCH, true).unwrap();
         let logp = out[0].as_f32().unwrap();
         for row in logp.chunks(MNIST_ACTIONS) {
             let s: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
@@ -582,7 +694,7 @@ mod tests {
         // the determinism contract: row i is the same whether computed in
         // a full batch or alone in a padded shard
         let full_in = mnist_inputs(MNIST_BATCH, true);
-        let full = mnist_forward(&full_in, MNIST_BATCH, true).unwrap();
+        let full = mnist_forward(&refs(&full_in), MNIST_BATCH, true).unwrap();
         let logp_full = full[0].as_f32().unwrap();
 
         let x = full_in[4].as_f32().unwrap();
@@ -592,7 +704,7 @@ mod tests {
         xs[..MNIST_IN].copy_from_slice(&x[i * MNIST_IN..(i + 1) * MNIST_IN]);
         shard_in.push(HostTensor::f32(&[4, MNIST_IN], xs));
         shard_in.push(HostTensor::zeros_f32(&[4, MNIST_ACTIONS]));
-        let shard = mnist_forward(&shard_in, 4, true).unwrap();
+        let shard = mnist_forward(&refs(&shard_in), 4, true).unwrap();
         let logp_shard = shard[0].as_f32().unwrap();
         assert_eq!(
             &logp_full[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS],
@@ -614,14 +726,14 @@ mod tests {
             inp.push(HostTensor::f32(&[cap, MNIST_IN], x.clone()));
             inp.push(HostTensor::i32(&[cap], actions.clone()));
             inp.push(HostTensor::f32(&[cap], w.clone()));
-            mnist_backward(&inp, cap).unwrap()[0].as_f32().unwrap()[0] as f64
+            mnist_backward(&refs(&inp), cap).unwrap()[0].as_f32().unwrap()[0] as f64
         };
 
         let mut inp = params.as_inputs();
         inp.push(HostTensor::f32(&[cap, MNIST_IN], x.clone()));
         inp.push(HostTensor::i32(&[cap], actions.clone()));
         inp.push(HostTensor::f32(&[cap], w.clone()));
-        let out = mnist_backward(&inp, cap).unwrap();
+        let out = mnist_backward(&refs(&inp), cap).unwrap();
 
         // probe a few coordinates of each gradient tensor
         for (ti, n_probe) in [(1usize, 3usize), (2, 2), (3, 3), (4, 2)] {
@@ -658,7 +770,7 @@ mod tests {
             inp.push(HostTensor::f32(&[cap, MNIST_IN], x.to_vec()));
             inp.push(HostTensor::i32(&[cap], actions.to_vec()));
             inp.push(HostTensor::f32(&[cap], w.to_vec()));
-            mnist_backward(&inp, cap).unwrap()
+            mnist_backward(&refs(&inp), cap).unwrap()
         };
         let full = run(&x, &actions, &w, cap);
         // same single sample packed alone into the cap-4 bucket
@@ -685,7 +797,7 @@ mod tests {
             inp.push(HostTensor::scalar_i32(4));
             inp.push(HostTensor::scalar_i32(2));
             inp.push(HostTensor::scalar_i32(1234));
-            rev_rollout(&inp).unwrap()
+            rev_rollout(&refs(&inp)).unwrap()
         };
         let a = mk();
         let b = mk();
@@ -723,7 +835,7 @@ mod tests {
             inp.push(HostTensor::f32(&[cap, REV_HMAX], w.clone()));
             inp.push(HostTensor::scalar_i32(h as i32));
             inp.push(HostTensor::scalar_i32(2));
-            rev_backward(&inp, cap).unwrap()[0].as_f32().unwrap()[0] as f64
+            rev_backward(&refs(&inp), cap).unwrap()[0].as_f32().unwrap()[0] as f64
         };
         let mut inp = params.as_inputs();
         inp.push(HostTensor::i32(&[cap, REV_HMAX], prompt.clone()));
@@ -731,7 +843,7 @@ mod tests {
         inp.push(HostTensor::f32(&[cap, REV_HMAX], w.clone()));
         inp.push(HostTensor::scalar_i32(h as i32));
         inp.push(HostTensor::scalar_i32(2));
-        let out = rev_backward(&inp, cap).unwrap();
+        let out = rev_backward(&refs(&inp), cap).unwrap();
 
         for (ti, n_probe) in [(1usize, 4usize), (2, 4)] {
             let g = out[ti].as_f32().unwrap();

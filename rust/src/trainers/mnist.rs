@@ -129,7 +129,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let rules = man.model("mnist")?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x51ed) ^ 0xbeef);
     let mut opt = Adam::new(cfg.lr, &params);
-    let gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?;
+    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?;
+    // reusable parameter marshalling buffer: refreshed once per step and
+    // shared by reference across forward shards and backward chunks
+    let mut param_inputs: Vec<HostTensor> = Vec::new();
     // forward shard capacities are part of the manifest contract; an
     // empty list (older artifact sets) disables forward sharding
     let fwd_buckets = if man.constants.mnist_fwd_caps.is_empty() {
@@ -168,8 +171,11 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
         };
 
         // ---- forward pass, one shard per worker (the only place the
-        // policy is evaluated on the training path)
+        // policy is evaluated on the training path); the parameter
+        // tensors are marshalled once here and shared across shards
+        params.marshal_into(&mut param_inputs);
         let logp: Vec<f32> = gl.sharded_forward(
+            &param_inputs,
             "mnist_fwd",
             |cap| format!("mnist_fwd_c{cap}"),
             fwd_buckets.as_ref(),
@@ -180,10 +186,7 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 let idx: Vec<usize> = shard.range().collect();
                 let xs = gather_rows_f32(&ctx.x, img, &idx, cap);
                 let ns = gather_rows_f32(&noise, n_act, &idx, cap);
-                let mut inputs = params.as_inputs();
-                inputs.push(HostTensor::f32(&[cap, img], xs));
-                inputs.push(HostTensor::f32(&[cap, n_act], ns));
-                inputs
+                vec![HostTensor::f32(&[cap, img], xs), HostTensor::f32(&[cap, n_act], ns)]
             },
         )?;
 
@@ -303,8 +306,11 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             let chunks = gl.buckets().pack(&decision.keep);
             gl.record_backward_chunks(&mut acct, &chunks, 1, |c| c.idx.len());
             let weights_all = &decision.weights;
+            // params are unchanged since the forward marshal above, so the
+            // same buffer serves every backward chunk
             gl.sharded_backward(
                 &mut params,
+                &param_inputs,
                 &mut opt,
                 &chunks,
                 |cap| format!("mnist_bwd_c{cap}"),
@@ -369,6 +375,8 @@ pub fn eval_test_error(
     let n = ys.len();
     let mut wrong = 0usize;
     let mut done = 0usize;
+    // marshal the parameters once for the whole evaluation sweep
+    let param_inputs = params.as_inputs();
     while done < n {
         let take = eval_b.min(n - done);
         // pad the final chunk up to eval_b with repeats
@@ -377,9 +385,10 @@ pub fn eval_test_error(
             let src = (done + i.min(take - 1)).min(n - 1);
             chunk[i * img..(i + 1) * img].copy_from_slice(&xs[src * img..(src + 1) * img]);
         }
-        let mut inputs = params.as_inputs();
-        inputs.push(HostTensor::f32(&[eval_b, img], chunk));
-        let out = eng.execute("mnist_fwd_eval", &inputs)?;
+        let chunk_t = HostTensor::f32(&[eval_b, img], chunk);
+        let mut inputs: Vec<&HostTensor> = param_inputs.iter().collect();
+        inputs.push(&chunk_t);
+        let out = eng.execute_refs("mnist_fwd_eval", &inputs)?;
         let logp = out[0].as_f32()?;
         for i in 0..take {
             let row = &logp[i * n_act..(i + 1) * n_act];

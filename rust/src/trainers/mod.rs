@@ -3,15 +3,25 @@
 //! noise-injection hooks every experiment driver needs.
 //!
 //! `GatedLoop` is the shared parallel substrate both trainers (and future
-//! envs) run on: it owns the worker pool and the backward bucket set, and
-//! provides the two sharded phases of a gated training step --
-//! `sharded_forward` (split the batch across shard-capacity forward
-//! artifacts) and `sharded_backward` (execute packed backward chunks
-//! concurrently, then merge gradients in chunk order and step the
-//! optimizer). Batch-global work -- resolving the Kondo gate's quantile
-//! price over the merged chi scores -- stays on the caller's thread, which
-//! is what keeps `workers = N` trajectories bit-identical to `workers = 1`
-//! (the determinism contract, DESIGN.md §"L3 parallelism").
+//! envs) run on: it owns the **persistent** worker pool (threads spawned
+//! once in `new`, alive for the whole training run, joined when the loop
+//! drops) and the backward bucket set, and provides the two sharded phases
+//! of a gated training step -- `sharded_forward` (split the batch across
+//! shard-capacity forward artifacts) and `sharded_backward` (execute
+//! packed backward chunks concurrently, then merge the per-chunk partial
+//! gradients in chunk order and step the optimizer).
+//!
+//! The hot path is zero-copy: trainers marshal the parameter tensors once
+//! per step into a reusable buffer (`ParamStore::marshal_into`) and both
+//! sharded phases share that buffer across every chunk/shard by reference
+//! (`Engine::execute_refs`) instead of cloning the full parameter list per
+//! call; the gradient accumulator is preallocated once per run and reused
+//! every step.
+//!
+//! Batch-global work -- resolving the Kondo gate's quantile price over the
+//! merged chi scores -- stays on the caller's thread, which is what keeps
+//! `workers = N` trajectories bit-identical to `workers = 1` (the
+//! determinism contract, DESIGN.md §"L3 parallelism").
 
 pub mod mnist;
 pub mod reversal;
@@ -46,11 +56,18 @@ pub struct GatedLoop<'e> {
     eng: &'e Engine,
     pool: WorkerPool,
     buckets: BucketSet,
+    /// gradient accumulator reused across steps (sized on first backward)
+    grad_acc: Vec<Vec<f32>>,
 }
 
 impl<'e> GatedLoop<'e> {
     pub fn new(eng: &'e Engine, workers: usize, bwd_caps: Vec<usize>) -> Result<GatedLoop<'e>> {
-        Ok(GatedLoop { eng, pool: WorkerPool::new(workers), buckets: BucketSet::new(bwd_caps)? })
+        Ok(GatedLoop {
+            eng,
+            pool: WorkerPool::new(workers),
+            buckets: BucketSet::new(bwd_caps)?,
+            grad_acc: Vec::new(),
+        })
     }
 
     pub fn pool(&self) -> &WorkerPool {
@@ -65,9 +82,11 @@ impl<'e> GatedLoop<'e> {
         self.pool.workers()
     }
 
-    /// Contiguous shards of an `n`-row batch for this pool.
+    /// Contiguous shards of an `n`-row batch for this pool. This is the
+    /// dispatch layer: empty shards (`split_shards(0, w)` yields one) are
+    /// skipped here so they are never handed to workers as tasks.
     pub fn shards(&self, n: usize) -> Vec<Shard> {
-        split_shards(n, self.pool.workers())
+        split_shards(n, self.pool.workers()).into_iter().filter(|s| !s.is_empty()).collect()
     }
 
     /// Sharded forward: split `rows` inputs across workers, each executing
@@ -76,6 +95,10 @@ impl<'e> GatedLoop<'e> {
     /// back in shard order. Falls back to one `full_name` call when the
     /// pool has a single worker, no shard capacities exist, or a shard
     /// does not fit any capacity.
+    ///
+    /// `param_inputs` is the step's marshalled parameter list, shared by
+    /// reference across every shard call; `build` returns only the
+    /// non-parameter inputs of a shard.
     ///
     /// Forward work is recorded into `acct` per logical shard, with padded
     /// capacity slots counted in `forward_executed` (mirroring the
@@ -87,6 +110,7 @@ impl<'e> GatedLoop<'e> {
     #[allow(clippy::too_many_arguments)]
     pub fn sharded_forward<F, N>(
         &self,
+        param_inputs: &[HostTensor],
         full_name: &str,
         shard_name: N,
         fwd_caps: Option<&BucketSet>,
@@ -99,6 +123,7 @@ impl<'e> GatedLoop<'e> {
         F: Fn(&Shard, usize) -> Vec<HostTensor> + Sync,
         N: Fn(usize) -> String + Sync,
     {
+        let eng = self.eng;
         let shards = self.shards(rows);
         let caps = match fwd_caps {
             Some(caps)
@@ -112,15 +137,27 @@ impl<'e> GatedLoop<'e> {
                 // recorded call, attributed to shard 0 (that is where the
                 // work really ran)
                 let full = Shard::full(rows);
-                let out = self.eng.execute(full_name, &build(&full, rows))?;
+                let extras = build(&full, rows);
+                let mut inputs: Vec<&HostTensor> =
+                    Vec::with_capacity(param_inputs.len() + extras.len());
+                inputs.extend(param_inputs.iter());
+                inputs.extend(extras.iter());
+                let mut out = eng.execute_refs(full_name, &inputs)?;
                 acct.shard_mut(0).record_forward(rows);
-                return Ok(out[0].as_f32()?.to_vec());
+                return out.remove(0).into_f32();
             }
         };
         let parts: Vec<Result<Vec<f32>>> = self.pool.run(shards.clone(), |_, shard| {
             let cap = caps.smallest_fitting(shard.len()).unwrap();
-            let out = self.eng.execute(&shard_name(cap), &build(&shard, cap))?;
-            Ok(out[0].as_f32()?[..shard.len() * out_width].to_vec())
+            let extras = build(&shard, cap);
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(param_inputs.len() + extras.len());
+            inputs.extend(param_inputs.iter());
+            inputs.extend(extras.iter());
+            let mut out = eng.execute_refs(&shard_name(cap), &inputs)?;
+            let mut rows_out = out.remove(0).into_f32()?;
+            rows_out.truncate(shard.len() * out_width);
+            Ok(rows_out)
         });
         for shard in &shards {
             let cap = caps.smallest_fitting(shard.len()).unwrap();
@@ -133,15 +170,22 @@ impl<'e> GatedLoop<'e> {
         Ok(merged)
     }
 
-    /// Execute packed backward chunks across the pool, accumulate the
-    /// gradient tensors in *chunk order* (not completion order), normalize
-    /// by `denom`, and apply one optimizer step. `extra_inputs` builds the
-    /// non-parameter inputs of chunk `c` for artifact `artifact(c.cap)`;
-    /// the parameter tensors are marshalled once into a template and
-    /// cloned per chunk (each engine call needs its own input list).
+    /// Execute packed backward chunks across the pool and apply one
+    /// optimizer step. Each worker produces its chunk's partial gradient
+    /// buffers (the backward artifact's output tensors); the caller merges
+    /// them into the run-persistent accumulator in **chunk order** (the
+    /// pool returns results in task order, never completion order), so the
+    /// f32 reduction order is identical to the serial `workers = 1` path.
+    /// The merged gradient is normalized by `denom` before the step.
+    ///
+    /// `param_inputs` is the step's marshalled parameter list, shared by
+    /// reference across every chunk call; `extra_inputs` builds only the
+    /// non-parameter inputs of chunk `c` for artifact `artifact(c.cap)`.
+    #[allow(clippy::too_many_arguments)]
     pub fn sharded_backward<F, N>(
-        &self,
+        &mut self,
         params: &mut ParamStore,
+        param_inputs: &[HostTensor],
         opt: &mut dyn Optimizer,
         chunks: &[PackedChunk],
         artifact: N,
@@ -155,26 +199,52 @@ impl<'e> GatedLoop<'e> {
         if chunks.is_empty() {
             return Ok(());
         }
-        let param_inputs = params.as_inputs();
-        let results: Vec<Result<Vec<HostTensor>>> =
-            self.pool.run(chunks.to_vec(), |_, chunk| {
-                let mut inputs = param_inputs.clone();
-                inputs.extend(extra_inputs(&chunk));
-                let out = self.eng.execute(&artifact(chunk.cap), &inputs)?;
-                // out[0] is the loss scalar; the rest are gradients
-                Ok(out.into_iter().skip(1).collect())
-            });
-        let mut acc = params.zeros_like();
+        // the zero-copy contract: callers re-marshal after every optimizer
+        // step. Cheap to get wrong silently, so verify under debug builds
+        // (the dev-profile test runs keep this armed).
+        debug_assert!(
+            param_inputs.len() == params.n_tensors()
+                && (0..params.n_tensors()).all(|i| {
+                    param_inputs[i].as_f32().map(|d| d == params.tensor(i)).unwrap_or(false)
+                }),
+            "sharded_backward: param_inputs is stale relative to params \
+             (re-marshal after every optimizer step)"
+        );
+        let eng = self.eng;
+        let tasks: Vec<&PackedChunk> = chunks.iter().collect();
+        let results: Vec<Result<Vec<HostTensor>>> = self.pool.run(tasks, |_, chunk| {
+            let extras = extra_inputs(chunk);
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(param_inputs.len() + extras.len());
+            inputs.extend(param_inputs.iter());
+            inputs.extend(extras.iter());
+            let out = eng.execute_refs(&artifact(chunk.cap), &inputs)?;
+            // out[0] is the loss scalar; the rest are gradients
+            Ok(out.into_iter().skip(1).collect())
+        });
+        // reuse the run-persistent accumulator when the layout matches
+        // (steady state after the first backward of a run)
+        let n = params.n_tensors();
+        if self.grad_acc.len() == n
+            && (0..n).all(|i| self.grad_acc[i].len() == params.tensor(i).len())
+        {
+            for tensor in self.grad_acc.iter_mut() {
+                tensor.fill(0.0);
+            }
+        } else {
+            self.grad_acc = params.zeros_like();
+        }
+        // ordered reduction: chunk order, not completion order
         for result in results {
             let grads = result?;
-            accumulate(&mut acc, &grads)?;
+            accumulate(&mut self.grad_acc, &grads)?;
         }
-        for tensor in acc.iter_mut() {
+        for tensor in self.grad_acc.iter_mut() {
             for v in tensor.iter_mut() {
                 *v /= denom;
             }
         }
-        opt.step(params, &acc);
+        opt.step(params, &self.grad_acc);
         Ok(())
     }
 
@@ -192,5 +262,27 @@ impl<'e> GatedLoop<'e> {
             acct.shard_mut(owner)
                 .record_backward(chunk.cap * slots_per_sample, kept_of(chunk));
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_dispatch_skips_empty_batches() {
+        // regression: split_shards(0, w) returns one empty shard (the
+        // split covers the batch); the dispatch layer must drop it rather
+        // than hand workers a zero-length task
+        let eng = Engine::native_testbed();
+        let gl = GatedLoop::new(&eng, 4, vec![4]).unwrap();
+        assert!(split_shards(0, 4).iter().any(|s| s.is_empty()));
+        assert!(gl.shards(0).is_empty(), "empty batch must dispatch no shard tasks");
+        let ran = gl.pool().run(gl.shards(0), |_, s: Shard| s.len());
+        assert!(ran.is_empty());
+        // non-empty batches are unaffected
+        let sh = gl.shards(10);
+        assert_eq!(sh.iter().map(Shard::len).sum::<usize>(), 10);
+        assert!(sh.iter().all(|s| !s.is_empty()));
     }
 }

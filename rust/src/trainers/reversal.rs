@@ -95,7 +95,13 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let rules = man.model(&format!("reversal{h_max}"))?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x2545) ^ 0xcafe);
     let mut opt = Adam::new(cfg.lr, &params);
-    let gl = GatedLoop::new(eng, cfg.workers, man.constants.rev_bwd_caps.clone())?;
+    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.rev_bwd_caps.clone())?;
+    // artifact names are fixed for the whole run; build them once
+    let rollout_name = format!("{prefix}_rollout");
+    let fwd_name = format!("{prefix}_fwd");
+    // reusable parameter marshalling buffer: refreshed at each step (and
+    // after each inner-epoch optimizer step), shared across artifact calls
+    let mut param_inputs: Vec<HostTensor> = Vec::new();
 
     let mut rng = Pcg32::new(cfg.seed, 0x7265_76);
     let mut acct = ShardedLedger::new(gl.workers());
@@ -111,14 +117,17 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
         let prompt_t = HostTensor::i32(&[batch, h_max], prompts.tokens.clone());
 
         // ---- rollout (autoregressive sampling inside the artifact)
-        let mut inputs = params.as_inputs();
-        inputs.push(prompt_t.clone());
-        inputs.push(h_t.clone());
-        inputs.push(m_t.clone());
-        inputs.push(HostTensor::scalar_i32(rng.next_u32() as i32 & 0x7fffffff));
-        let out = eng.execute(&format!("{prefix}_rollout"), &inputs)?;
-        let actions = out[0].as_i32()?.to_vec();
-        let logp = out[1].as_f32()?.to_vec();
+        params.marshal_into(&mut param_inputs);
+        let seed_t = HostTensor::scalar_i32(rng.next_u32() as i32 & 0x7fffffff);
+        let mut inputs: Vec<&HostTensor> = param_inputs.iter().collect();
+        inputs.push(&prompt_t);
+        inputs.push(&h_t);
+        inputs.push(&m_t);
+        inputs.push(&seed_t);
+        let out = eng.execute_refs(&rollout_name, &inputs)?;
+        let mut out = out.into_iter();
+        let actions = out.next().unwrap().into_i32()?;
+        let logp = out.next().unwrap().into_f32()?;
         // the rollout is one batch-global call: one recorded call, on
         // shard 0 (forward_calls must not depend on the worker count)
         acct.shard_mut(0).record_forward(batch * cfg.h);
@@ -159,12 +168,16 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
             let (ell_cur, lp_old): (Vec<f64>, Option<&[f64]>) = if epoch == 0 {
                 (ell.clone(), None)
             } else {
-                let mut finputs = params.as_inputs();
-                finputs.push(prompt_t.clone());
-                finputs.push(HostTensor::i32(&[batch, h_max], actions.clone()));
-                finputs.push(h_t.clone());
-                finputs.push(m_t.clone());
-                let fout = eng.execute(&format!("{prefix}_fwd"), &finputs)?;
+                // the previous epoch's backward stepped the optimizer, so
+                // refresh the shared parameter buffer before re-scoring
+                params.marshal_into(&mut param_inputs);
+                let actions_t = HostTensor::i32(&[batch, h_max], actions.clone());
+                let mut finputs: Vec<&HostTensor> = param_inputs.iter().collect();
+                finputs.push(&prompt_t);
+                finputs.push(&actions_t);
+                finputs.push(&h_t);
+                finputs.push(&m_t);
+                let fout = eng.execute_refs(&fwd_name, &finputs)?;
                 let lp_new = fout[0].as_f32()?;
                 acct.shard_mut(0).record_forward(batch * cfg.h);
                 let mut e = vec![0.0f64; n_tok];
@@ -203,8 +216,10 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 let share = c.idx.len() as f64 / n_episodes as f64;
                 (kept_tokens as f64 * share) as usize
             });
+            // params unchanged since this epoch's marshal: share the buffer
             gl.sharded_backward(
                 &mut params,
+                &param_inputs,
                 &mut opt,
                 &chunks,
                 |cap| format!("{prefix}_bwd_c{cap}"),
