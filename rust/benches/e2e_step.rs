@@ -3,8 +3,11 @@
 //! gating collapses the per-step backward wall-clock; Figs 1b/3/8b in
 //! time rather than counts) plus the scaling axis of the sharded
 //! coordinator: per-step latency, sample throughput, and per-worker
-//! throughput as `workers` grows. Runs on compiled artifacts when
-//! `artifacts/` exists, otherwise on the native testbed backend.
+//! throughput as `workers` grows — and a **screened axis** (`dgk_rho3_s25`:
+//! the L4 two-tier gate at rho_screen = 0.25, same 3% backward budget)
+//! where skipped *forwards* must show up as wall-clock savings too. Runs
+//! on compiled artifacts when `artifacts/` exists, otherwise on the
+//! native testbed backend.
 //!
 //! The worker axis is derived from `std::thread::available_parallelism()`
 //! (powers of two up to the core count, core count included); set
@@ -17,7 +20,7 @@ mod bench_util;
 
 use bench_util::{bench, fmt_ns, JsonReport};
 use kondo::algo::{baseline::Baseline, Method};
-use kondo::coordinator::{KondoGate, Priority};
+use kondo::coordinator::{KondoGate, Priority, ScreenCfg};
 use kondo::runtime::Engine;
 use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
 
@@ -70,9 +73,22 @@ fn main() {
 
     println!("--- MNIST: 50-step runs (amortized per-step latency) ---");
     let mnist_steps = 50;
+    // the screened axis: same 3% backward budget, but tier-1 pre-gates at
+    // rho_screen = 0.25 so only a quarter of the batch pays the forward
+    // (gate rate rescaled to 0.12 over the survivors)
+    let mut mnist_variants: Vec<(String, Method, ScreenCfg)> = methods
+        .iter()
+        .map(|(n, m)| (n.to_string(), *m, ScreenCfg::default()))
+        .collect();
+    mnist_variants.push((
+        "dgk_rho3_s25".into(),
+        Method::DgK { gate: KondoGate::rate(0.12), priority: Priority::Delight },
+        ScreenCfg { rho_screen: 0.25, draft_lr: 1e-3, warmup_batches: 10 },
+    ));
     let mut pg_serial_ns = 0.0;
     let mut dgk_serial_ns = 0.0;
-    for (name, m) in &methods {
+    let mut screened_serial_ns = 0.0;
+    for (name, m, screen) in &mnist_variants {
         for &workers in &axis {
             let r = bench(&format!("mnist step [{name} w{workers}]"), 3, 1, || {
                 let cfg = MnistTrainerCfg {
@@ -83,6 +99,7 @@ fn main() {
                     eval_every: 1000, // no eval inside the timed region
                     eval_size: 128,
                     seed: 0,
+                    screen: *screen,
                     workers,
                     ..Default::default()
                 };
@@ -98,16 +115,25 @@ fn main() {
                 samples_per_sec,
                 samples_per_sec / workers as f64
             );
-            if workers == 1 && *name == "pg" {
+            if workers == 1 && name.as_str() == "pg" {
                 pg_serial_ns = step_ns;
             }
-            if workers == 1 && *name == "dgk_rho3" {
+            if workers == 1 && name.as_str() == "dgk_rho3" {
                 dgk_serial_ns = step_ns;
+            }
+            if workers == 1 && name.as_str() == "dgk_rho3_s25" {
+                screened_serial_ns = step_ns;
             }
         }
     }
     if pg_serial_ns > 0.0 && dgk_serial_ns > 0.0 {
         println!("  step-time speedup DG-K vs PG (serial): {:.2}x", pg_serial_ns / dgk_serial_ns);
+    }
+    if dgk_serial_ns > 0.0 && screened_serial_ns > 0.0 {
+        println!(
+            "  step-time speedup screened DG-K vs DG-K (serial): {:.2}x (skipped forwards)",
+            dgk_serial_ns / screened_serial_ns
+        );
     }
 
     println!("\n--- token reversal H=5 M=2: 20-step runs ---");
@@ -127,6 +153,7 @@ fn main() {
                     eval_every: 1000,
                     inner_epochs: 1,
                     workers,
+                    ..Default::default()
                 };
                 std::hint::black_box(train_reversal(&eng, &cfg).unwrap());
             });

@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::ScreenCfg;
 use crate::utils::toml::TomlDoc;
 
 #[derive(Debug, Clone)]
@@ -30,6 +31,12 @@ pub struct ExpConfig {
     pub artifacts_dir: String,
     /// worker threads for the sharded training coordinator (1 = serial)
     pub workers: usize,
+    /// tier-1 speculative screen survival rate in (0, 1]; 1 = screening off
+    pub rho_screen: f64,
+    /// learning rate of the online linear draft behind the screen
+    pub draft_lr: f64,
+    /// batches of exact surprisal the draft absorbs before screening
+    pub screen_warmup: usize,
 }
 
 impl Default for ExpConfig {
@@ -45,6 +52,9 @@ impl Default for ExpConfig {
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
             workers: 1,
+            rho_screen: 1.0,
+            draft_lr: 1e-3,
+            screen_warmup: 20,
         }
     }
 }
@@ -82,6 +92,26 @@ impl ExpConfig {
         if let Some(v) = doc.i64("exp.workers") {
             self.workers = (v.max(1)) as usize;
         }
+        if let Some(v) = doc.f64("exp.rho_screen") {
+            // out-of-range rates disable screening rather than panic a run
+            self.rho_screen = if v > 0.0 && v <= 1.0 { v } else { 1.0 };
+        }
+        if let Some(v) = doc.f64("exp.draft_lr") {
+            self.draft_lr = v;
+        }
+        if let Some(v) = doc.i64("exp.screen_warmup") {
+            self.screen_warmup = v.max(0) as usize;
+        }
+    }
+
+    /// The screen configuration these knobs describe (threaded into both
+    /// trainer configs by the CLI and the experiment drivers).
+    pub fn screen_cfg(&self) -> ScreenCfg {
+        ScreenCfg {
+            rho_screen: self.rho_screen,
+            draft_lr: self.draft_lr,
+            warmup_batches: self.screen_warmup as u64,
+        }
     }
 
     /// Load a preset file on top of defaults.
@@ -95,9 +125,21 @@ impl ExpConfig {
     }
 
     /// Apply `key=value` CLI overrides (same keys as the TOML, without the
-    /// `exp.` prefix).
+    /// `exp.` prefix). Values of the string-valued keys are auto-quoted so
+    /// `artifacts_dir=native` works from a shell without TOML quoting
+    /// gymnastics (`artifacts_dir='"native"'`); numeric keys keep strict
+    /// parsing so typos (`workers=eight`) still error instead of silently
+    /// falling back to defaults.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
-        let doc = TomlDoc::parse(&format!("[exp]\n{key} = {value}"))
+        const STR_KEYS: &[&str] = &["out_dir", "artifacts_dir"];
+        let quoted;
+        let value_toml = if STR_KEYS.contains(&key) && !value.starts_with('"') {
+            quoted = format!("\"{value}\"");
+            quoted.as_str()
+        } else {
+            value
+        };
+        let doc = TomlDoc::parse(&format!("[exp]\n{key} = {value_toml}"))
             .map_err(|e| anyhow::anyhow!("bad override {key}={value}: {e}"))?;
         self.apply_doc(&doc);
         Ok(())
@@ -132,9 +174,48 @@ mod tests {
     }
 
     #[test]
+    fn screen_knobs_thread_through() {
+        let mut cfg = ExpConfig::default();
+        assert!(!cfg.screen_cfg().active(), "screening is off by default");
+        cfg.apply_override("rho_screen", "0.25").unwrap();
+        cfg.apply_override("draft_lr", "0.01").unwrap();
+        cfg.apply_override("screen_warmup", "5").unwrap();
+        let sc = cfg.screen_cfg();
+        assert!(sc.active());
+        assert_eq!(sc.rho_screen, 0.25);
+        assert_eq!(sc.draft_lr, 0.01);
+        assert_eq!(sc.warmup_batches, 5);
+        // out-of-range rates fall back to off instead of panicking a run
+        cfg.apply_override("rho_screen", "1.5").unwrap();
+        assert!(!cfg.screen_cfg().active());
+        cfg.apply_override("rho_screen", "0.0").unwrap();
+        assert!(!cfg.screen_cfg().active());
+    }
+
+    #[test]
     fn string_override() {
         let mut cfg = ExpConfig::default();
         cfg.apply_override("out_dir", "\"/tmp/r\"").unwrap();
         assert_eq!(cfg.out_dir, "/tmp/r");
+    }
+
+    #[test]
+    fn bare_string_override_is_auto_quoted() {
+        // the CLI (and CI smoke) pass artifacts_dir=native unquoted; the
+        // TOML subset only knows quoted strings, so the override layer
+        // must quote bare values for the string-valued keys itself
+        let mut cfg = ExpConfig::default();
+        cfg.apply_override("artifacts_dir", "native").unwrap();
+        assert_eq!(cfg.artifacts_dir, "native");
+        cfg.apply_override("out_dir", "/tmp/spec-smoke").unwrap();
+        assert_eq!(cfg.out_dir, "/tmp/spec-smoke");
+        // numbers still parse as numbers, not strings
+        cfg.apply_override("workers", "3").unwrap();
+        assert_eq!(cfg.workers, 3);
+        // ...and numeric typos still ERROR instead of silently becoming
+        // strings that apply_doc drops on the floor
+        assert!(cfg.apply_override("workers", "eight").is_err());
+        assert!(cfg.apply_override("mnist_steps", "5oo").is_err());
+        assert_eq!(cfg.workers, 3, "failed override must not change state");
     }
 }

@@ -6,6 +6,14 @@
 //! the paper's idealized x-axis) and `backward_executed` (sample-slots the
 //! bucketed executor actually ran, including padding -- the honest cost on
 //! real hardware).
+//!
+//! The L4 screening pipeline (coordinator/pipeline.rs) adds two more:
+//! `screen_samples` (draft dot products the tier-1 screen evaluated) and
+//! `forward_skipped` (samples the screen spared from the full forward),
+//! plus the three-term cost model total = s*screen + forward + r*backward.
+//! Both screen counters are batch-global decisions and therefore
+//! worker-invariant -- inside the determinism contract, unlike
+//! `forward_executed`.
 
 use std::collections::BTreeMap;
 
@@ -18,6 +26,14 @@ pub struct Ledger {
     /// it legitimately varies with the worker count.
     pub forward_executed: u64,
     pub forward_calls: u64,
+    /// draft dot products evaluated by the tier-1 speculative screen
+    /// (worker-invariant: every screened batch screens every sample)
+    pub screen_samples: u64,
+    /// samples the screen spared from the full forward (worker-invariant;
+    /// only counted when forwards were actually avoided -- a screened
+    /// batch with no capacity ladder still forwards everything and
+    /// records nothing here)
+    pub forward_skipped: u64,
     pub backward_kept: u64,
     pub backward_executed: u64,
     pub backward_calls: u64,
@@ -51,6 +67,16 @@ impl Ledger {
         *self.bucket_hist.entry(cap).or_insert(0) += 1;
     }
 
+    /// Tier-1 screen work: one draft dot product per sample.
+    pub fn record_screen(&mut self, samples: usize) {
+        self.screen_samples += samples as u64;
+    }
+
+    /// Samples the screen spared from the full forward.
+    pub fn record_forward_skipped(&mut self, samples: usize) {
+        self.forward_skipped += samples as u64;
+    }
+
     /// Fig 3 cost model in forward-sample equivalents, using the gate's
     /// idealized backward count.
     pub fn total_compute(&self, cost_ratio: f64) -> f64 {
@@ -60,6 +86,33 @@ impl Ledger {
     /// Same but charging the padded slots the executor actually ran.
     pub fn total_compute_executed(&self, cost_ratio: f64) -> f64 {
         self.forward_samples as f64 + cost_ratio * self.backward_executed as f64
+    }
+
+    /// Three-term cost model of the screening pipeline, idealized:
+    /// `screen_ratio * screen + forward + cost_ratio * backward_kept`,
+    /// where `screen_ratio` is the cost of one draft dot product in
+    /// forward-sample equivalents (one [D]-dot vs the full forward's
+    /// FLOPs). Degenerates to `total_compute` on unscreened runs.
+    pub fn total_compute_screened(&self, screen_ratio: f64, cost_ratio: f64) -> f64 {
+        screen_ratio * self.screen_samples as f64 + self.total_compute(cost_ratio)
+    }
+
+    /// Same three-term model but charging the padded slots both executors
+    /// actually ran (`forward_executed`, `backward_executed`) -- the
+    /// honest fixed-shape hardware cost of a screened run.
+    pub fn total_compute_screened_executed(&self, screen_ratio: f64, cost_ratio: f64) -> f64 {
+        screen_ratio * self.screen_samples as f64
+            + self.forward_executed as f64
+            + cost_ratio * self.backward_executed as f64
+    }
+
+    /// Fraction of screened samples the tier-1 gate spared from the full
+    /// forward (0 when nothing was screened).
+    pub fn screen_skip_rate(&self) -> f64 {
+        if self.screen_samples == 0 {
+            return 0.0;
+        }
+        self.forward_skipped as f64 / self.screen_samples as f64
     }
 
     /// Fraction of executed backward slots that were padding.
@@ -82,6 +135,8 @@ impl Ledger {
         self.forward_samples += other.forward_samples;
         self.forward_executed += other.forward_executed;
         self.forward_calls += other.forward_calls;
+        self.screen_samples += other.screen_samples;
+        self.forward_skipped += other.forward_skipped;
         self.backward_kept += other.backward_kept;
         self.backward_executed += other.backward_executed;
         self.backward_calls += other.backward_calls;
@@ -119,9 +174,16 @@ impl ShardedLedger {
         &mut self.shards[i]
     }
 
+    /// Shard that owns packed chunk `chunk_index` (round-robin; shared by
+    /// the packed forward path of the screening pipeline and the bucketed
+    /// backward executor).
+    pub fn chunk_owner(&self, chunk_index: usize) -> usize {
+        chunk_index % self.shards.len()
+    }
+
     /// Shard that owns backward chunk `chunk_index` (round-robin).
     pub fn backward_owner(&self, chunk_index: usize) -> usize {
-        chunk_index % self.shards.len()
+        self.chunk_owner(chunk_index)
     }
 
     /// Merge all shards into one total ledger, in shard order.
@@ -213,6 +275,71 @@ mod tests {
         let mut t = Ledger::new();
         t.merge(&l);
         assert_eq!(t.forward_executed, 16);
+    }
+
+    #[test]
+    fn screen_counters_accumulate_and_merge() {
+        let mut l = Ledger::new();
+        l.record_screen(32);
+        l.record_forward_skipped(24);
+        l.record_forward_padded(8, 8);
+        assert_eq!(l.screen_samples, 32);
+        assert_eq!(l.forward_skipped, 24);
+        // the screened-batch invariant: survivors + skipped = batch
+        assert_eq!(l.forward_samples + l.forward_skipped, 32);
+        assert!((l.screen_skip_rate() - 0.75).abs() < 1e-12);
+        let mut t = Ledger::new();
+        t.merge(&l);
+        t.merge(&l);
+        assert_eq!(t.screen_samples, 64);
+        assert_eq!(t.forward_skipped, 48);
+        // an unscreened ledger has rate 0, not NaN
+        assert_eq!(Ledger::new().screen_skip_rate(), 0.0);
+    }
+
+    #[test]
+    fn three_term_cost_model_screened_vs_unscreened() {
+        // screened batch of 32: 32 screen dots, 8 survivors forwarded in a
+        // capacity-8 chunk, 3 kept backward in a capacity-4 bucket
+        let mut s = Ledger::new();
+        s.record_screen(32);
+        s.record_forward_skipped(24);
+        s.record_forward_padded(8, 8);
+        s.record_backward(4, 3);
+        // idealized: 0.05 * 32 + 8 + 4 * 3 = 21.6
+        assert!((s.total_compute_screened(0.05, 4.0) - 21.6).abs() < 1e-12);
+        // padded/executed: 0.05 * 32 + 8 + 4 * 4 = 25.6
+        assert!((s.total_compute_screened_executed(0.05, 4.0) - 25.6).abs() < 1e-12);
+
+        // the unscreened equivalent pays the full 32-sample forward
+        let mut u = Ledger::new();
+        u.record_forward(32);
+        u.record_backward(4, 3);
+        assert_eq!(u.total_compute(4.0), 44.0);
+        // with no screen work the three-term model degenerates exactly
+        assert_eq!(u.total_compute_screened(0.05, 4.0), u.total_compute(4.0));
+        assert_eq!(
+            u.total_compute_screened_executed(0.05, 4.0),
+            u.total_compute_executed(4.0)
+        );
+        // and the screened run is cheaper end to end
+        assert!(s.total_compute_screened_executed(0.05, 4.0) < u.total_compute_executed(4.0));
+    }
+
+    #[test]
+    fn sharded_ledger_screen_counters_merge_in_totals() {
+        let mut sl = ShardedLedger::new(3);
+        // a 10-sample batch screened across 3 shards (4 + 3 + 3)
+        sl.shard_mut(0).record_screen(4);
+        sl.shard_mut(1).record_screen(3);
+        sl.shard_mut(2).record_screen(3);
+        sl.shard_mut(0).record_forward_skipped(7);
+        let t = sl.total();
+        assert_eq!(t.screen_samples, 10);
+        assert_eq!(t.forward_skipped, 7);
+        // chunk ownership is shared by packed forward and backward paths
+        assert_eq!(sl.chunk_owner(4), 1);
+        assert_eq!(sl.backward_owner(4), sl.chunk_owner(4));
     }
 
     #[test]

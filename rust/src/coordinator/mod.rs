@@ -5,13 +5,16 @@
 //! samples into compiled capacity buckets so skipped compute is real
 //! skipped compute, `accounting` keeps the (shard-aware) forward/backward
 //! ledger every paper axis is drawn from, `quantile` provides the
-//! streaming-price variant of the adaptive gate, and `pool` is the worker
+//! streaming-price variant of the adaptive gate, `pool` is the worker
 //! pool that shards each batch across threads under the determinism
-//! contract of DESIGN.md §"L3 parallelism".
+//! contract of DESIGN.md §"L3 parallelism", and `pipeline` structures the
+//! gated step into the explicit Screen -> Forward -> Gate -> Backward
+//! stages of the L4 speculative screening pipeline (DESIGN.md §8).
 
 pub mod accounting;
 pub mod batcher;
 pub mod gate;
+pub mod pipeline;
 pub mod pool;
 pub mod priority;
 pub mod quantile;
@@ -20,7 +23,10 @@ pub mod speculative;
 pub use accounting::{Ledger, ShardedLedger};
 pub use batcher::{BucketSet, PackedChunk};
 pub use gate::{GateDecision, KondoGate, Pricing};
-pub use pool::{split_shards, unit_rng, Shard, WorkerPool};
+pub use pipeline::{
+    BackwardStage, ForwardPlan, ForwardStage, GateStage, ScreenCfg, ScreenStage, ScreenVerdict,
+};
+pub use pool::{non_empty_shards, split_shards, unit_rng, Shard, WorkerPool};
 pub use priority::Priority;
 pub use quantile::{EwQuantile, P2Quantile};
 pub use speculative::{rank_correlation, screening_precision, DraftScreen};

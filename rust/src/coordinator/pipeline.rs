@@ -1,0 +1,763 @@
+//! L4 speculative screening pipeline: the gated training step as four
+//! explicit stages, Screen -> Forward -> Gate -> Backward (DESIGN.md §8).
+//!
+//! The paper's closing claim (§3.2/§7) is that the Kondo gate tolerates
+//! approximate delight, so *a cheap forward pass can screen samples before
+//! expensive backpropagation* -- speculative decoding for training. Here
+//! that becomes a first-class **two-tier gate**:
+//!
+//! - **Tier 1, `ScreenStage`** -- a warm [`DraftScreen`] pre-gates the
+//!   batch at rate `rho_screen` using one dot product per sample. Only the
+//!   survivors get the full forward. Cold-draft batches (and degenerate
+//!   all-tied score batches) fall back to the full-forward path, and the
+//!   draft trains online on whatever exact surprisals the surviving
+//!   forwards produce.
+//! - **Tier 2, `GateStage`** -- exact delight is computed on survivors and
+//!   the Kondo gate prices the backward exactly as before.
+//!
+//! `ForwardStage` turns the survivor set into an execution plan: the
+//! unscreened batch keeps the contiguous-shard path, while a screened
+//! survivor set is packed densely through the forward capacity ladder
+//! (the same `BucketSet` machinery the backward has always used), so
+//! skipped forwards are *real* skipped compute on fixed-shape hardware.
+//! `BackwardStage` owns the bucketed backward executor and the
+//! run-persistent gradient accumulator.
+//!
+//! Determinism contract extension (DESIGN.md §8): every screen decision is
+//! a pure function of the draft state and the merged score vector -- the
+//! per-sample dot products are sharded across the pool but merged in batch
+//! order, the `(1 - rho_screen)` quantile threshold is resolved once on
+//! the caller's thread, and the draft updates on worker-invariant exact
+//! surprisals -- so at `eta = 0` screened trajectories stay bit-identical
+//! for every worker count (locked by rust/tests/gated_e2e.rs).
+
+use anyhow::Result;
+
+use crate::algo::{delight, BatchSignals, Method, WeightDecision};
+use crate::coordinator::accounting::ShardedLedger;
+use crate::coordinator::batcher::{BucketSet, PackedChunk};
+use crate::coordinator::gate::{KondoGate, Pricing};
+use crate::coordinator::pool::{non_empty_shards, Shard, WorkerPool};
+use crate::coordinator::quantile::EwQuantile;
+use crate::coordinator::speculative::DraftScreen;
+use crate::model::{accumulate, ParamStore};
+use crate::optim::Optimizer;
+use crate::runtime::{Engine, HostTensor};
+use crate::utils::rng::Pcg32;
+use crate::utils::stats::quantile;
+
+/// Knobs of the tier-1 speculative screen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScreenCfg {
+    /// fraction of the batch surviving the screen; screening engages only
+    /// for rates in (0, 1) -- 1.0 (the default) and any out-of-range
+    /// value disable it (the tier-2 gate then sees the whole batch),
+    /// matching the config layer's disable-don't-panic policy
+    pub rho_screen: f64,
+    /// SGD learning rate of the online linear draft
+    pub draft_lr: f64,
+    /// batches of exact surprisal the draft must absorb before it screens
+    /// (the cold-start guard: a zero-initialized draft ranks nothing)
+    pub warmup_batches: u64,
+}
+
+impl Default for ScreenCfg {
+    fn default() -> Self {
+        ScreenCfg { rho_screen: 1.0, draft_lr: 1e-3, warmup_batches: 20 }
+    }
+}
+
+impl ScreenCfg {
+    /// Screening at `rho_screen` with default draft knobs.
+    pub fn at_rate(rho_screen: f64) -> ScreenCfg {
+        ScreenCfg { rho_screen, ..Default::default() }
+    }
+
+    /// Does this configuration screen at all? Only rates strictly inside
+    /// (0, 1) screen; everything else -- including a (nonsensical)
+    /// non-positive rate -- is treated as "screening off", the same rule
+    /// `ExpConfig` applies, so no layer can panic on an out-of-range knob.
+    pub fn active(&self) -> bool {
+        self.rho_screen > 0.0 && self.rho_screen < 1.0
+    }
+}
+
+/// Tier-1 outcome for one batch.
+#[derive(Debug, Clone)]
+pub enum ScreenVerdict {
+    /// No screening applied: screening off, draft still cold, or the score
+    /// distribution was degenerate (all tied). Every sample proceeds to
+    /// the forward -- the current full-forward path.
+    Full,
+    /// The warm draft pre-gated the batch: only `survivors` (original
+    /// batch indices, ascending) proceed to the full forward. `scores` is
+    /// the full batch's predicted-delight vector (diagnostics / precision
+    /// tracking) and `lambda` the tier-1 quantile price actually used.
+    Screened { survivors: Vec<usize>, scores: Vec<f64>, lambda: f64 },
+}
+
+impl ScreenVerdict {
+    pub fn is_screened(&self) -> bool {
+        matches!(self, ScreenVerdict::Screened { .. })
+    }
+
+    /// Survivor indices, or the identity `0..n` when nothing was screened.
+    pub fn survivors_or_all(&self, n: usize) -> Vec<usize> {
+        match self {
+            ScreenVerdict::Full => (0..n).collect(),
+            ScreenVerdict::Screened { survivors, .. } => survivors.clone(),
+        }
+    }
+
+    /// The full batch's predicted scores, when a screen actually ran.
+    pub fn scores(&self) -> Option<&[f64]> {
+        match self {
+            ScreenVerdict::Full => None,
+            ScreenVerdict::Screened { scores, .. } => Some(scores),
+        }
+    }
+}
+
+/// Stage 1: the speculative pre-gate (tier 1 of the two-tier gate).
+pub struct ScreenStage {
+    cfg: ScreenCfg,
+    draft: DraftScreen,
+    /// samples per batch, the unit of the warm-up threshold
+    unit: usize,
+}
+
+impl ScreenStage {
+    pub fn new(dim: usize, unit: usize, cfg: ScreenCfg) -> ScreenStage {
+        assert!(
+            cfg.rho_screen > 0.0 && cfg.rho_screen <= 1.0,
+            "rho_screen must be in (0,1]"
+        );
+        assert!(dim > 0, "draft feature dimension must be positive");
+        ScreenStage {
+            cfg,
+            draft: DraftScreen::new(dim, cfg.draft_lr as f32),
+            unit: unit.max(1),
+        }
+    }
+
+    pub fn cfg(&self) -> &ScreenCfg {
+        &self.cfg
+    }
+
+    pub fn draft(&self) -> &DraftScreen {
+        &self.draft
+    }
+
+    /// Has the draft absorbed enough exact surprisal to screen?
+    pub fn warm(&self) -> bool {
+        self.draft.seen() >= self.cfg.warmup_batches * self.unit as u64
+    }
+
+    /// Tier-1 verdict for one batch of `n` draft-feature rows (`feats` is
+    /// `[n, dim]` row-major). `u_hint` supplies advantages known *before*
+    /// the full forward (reversal: the grouped baseline), weighting the
+    /// predicted surprisal into predicted delight `u * ell_hat`; `None`
+    /// screens on predicted surprisal alone (MNIST, where U needs the
+    /// forward). One dot product per sample, sharded across the pool and
+    /// merged in batch order; the quantile threshold is resolved on the
+    /// caller's thread, so the decision is batch-global and
+    /// worker-invariant.
+    pub fn screen(
+        &self,
+        pool: &WorkerPool,
+        shards: &[Shard],
+        feats: &[f32],
+        n: usize,
+        u_hint: Option<&[f64]>,
+        acct: &mut ShardedLedger,
+    ) -> ScreenVerdict {
+        if !self.cfg.active() || n == 0 || !self.warm() {
+            return ScreenVerdict::Full;
+        }
+        let d = self.draft.dim();
+        debug_assert_eq!(feats.len(), n * d, "screen features must be [n, dim]");
+        let parts: Vec<Vec<f64>> = pool.run(shards.to_vec(), |_, shard: Shard| {
+            shard
+                .range()
+                .map(|i| {
+                    let ell_hat = self.draft.predict(&feats[i * d..(i + 1) * d]);
+                    match u_hint {
+                        Some(u) => u[i] * ell_hat,
+                        None => ell_hat,
+                    }
+                })
+                .collect()
+        });
+        let mut scores = Vec::with_capacity(n);
+        for part in parts {
+            scores.extend(part);
+        }
+        for shard in shards {
+            acct.shard_mut(shard.index).record_screen(shard.len());
+        }
+        // a diverged draft (inf/NaN predictions) must degrade to the
+        // full-forward path, never poison the survivor set or panic the
+        // run -- the same batch-global, worker-invariant fallback as a
+        // degenerate score distribution
+        if scores.iter().any(|s| !s.is_finite()) {
+            return ScreenVerdict::Full;
+        }
+        let lambda = quantile(&scores, 1.0 - self.cfg.rho_screen);
+        let survivors: Vec<usize> = (0..n).filter(|&i| scores[i] > lambda).collect();
+        if survivors.is_empty() || survivors.len() == n {
+            // degenerate score distribution (ties at the threshold): the
+            // screen cannot pick a strict top set, so fall back whole
+            return ScreenVerdict::Full;
+        }
+        ScreenVerdict::Screened { survivors, scores, lambda }
+    }
+
+    /// Online draft update on the exact surprisals the surviving forwards
+    /// produced: `rows[s]` is the batch index of survivor slot `s`,
+    /// `ell[s]` its exact surprisal.
+    pub fn observe(&mut self, feats: &[f32], rows: &[usize], ell: &[f64]) {
+        debug_assert_eq!(rows.len(), ell.len());
+        let d = self.draft.dim();
+        for (s, &i) in rows.iter().enumerate() {
+            self.draft.update_row(&feats[i * d..(i + 1) * d], ell[s]);
+        }
+    }
+}
+
+/// Stage 2 plan: how the survivor set executes on the forward artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ForwardPlan {
+    /// One full-batch artifact call over every row. Used for the serial
+    /// unscreened path, and as the fallback when a screened batch has no
+    /// capacity ladder to pack into (the forward then runs whole and the
+    /// survivor rows are gathered from its output -- nothing is skipped,
+    /// and nothing is recorded as skipped).
+    FullBatch,
+    /// Unscreened multi-worker path: contiguous shards, each executed at
+    /// its smallest fitting capacity.
+    Sharded(Vec<(Shard, usize)>),
+    /// Screened path: survivors packed densely through the forward
+    /// capacity ladder, exactly like the backward bucket executor. This is
+    /// where skipped forwards become real skipped compute.
+    Packed(Vec<PackedChunk>),
+}
+
+/// Stage 2: forward execution planning over the (possibly screened) batch.
+pub struct ForwardStage {
+    caps: Option<BucketSet>,
+}
+
+impl ForwardStage {
+    pub fn new(caps: Option<BucketSet>) -> ForwardStage {
+        ForwardStage { caps }
+    }
+
+    pub fn caps(&self) -> Option<&BucketSet> {
+        self.caps.as_ref()
+    }
+
+    /// Choose the execution plan for `survivors` out of a `batch_n`-row
+    /// batch on a `workers`-wide pool. Pure function of its arguments (and
+    /// the capacity ladder), so the plan -- like every other batch-global
+    /// decision -- cannot depend on scheduling. The plan's chunking (and
+    /// hence executed padding) legitimately varies with `workers`, exactly
+    /// like the unscreened shard path; the survivor/sample counts it
+    /// records do not.
+    pub fn plan(&self, survivors: &[usize], batch_n: usize, workers: usize) -> ForwardPlan {
+        let screened = survivors.len() < batch_n;
+        match &self.caps {
+            Some(caps) if screened => {
+                // slice the survivor set across the pool, then pack each
+                // slice through the ladder -- screened forwards must
+                // parallelize like backward chunks, not serialize into one
+                // big capacity call that idles every other worker
+                let mut chunks = Vec::new();
+                for shard in non_empty_shards(survivors.len(), workers) {
+                    chunks.extend(caps.pack(&survivors[shard.range()]));
+                }
+                ForwardPlan::Packed(chunks)
+            }
+            Some(caps) if workers > 1 => {
+                let shards = non_empty_shards(batch_n, workers);
+                match shards
+                    .iter()
+                    .map(|s| caps.smallest_fitting(s.len()).map(|c| (*s, c)))
+                    .collect::<Option<Vec<_>>>()
+                {
+                    Some(pairs) => ForwardPlan::Sharded(pairs),
+                    None => ForwardPlan::FullBatch,
+                }
+            }
+            _ => ForwardPlan::FullBatch,
+        }
+    }
+}
+
+/// Stage 3: the exact-delight Kondo decision over the survivor set,
+/// including the streaming-lambda pricing ablation that previously lived
+/// inside the MNIST trainer.
+pub struct GateStage {
+    /// cross-batch EW quantile price tracker (ablation of Alg 1 line 5)
+    stream: Option<EwQuantile>,
+    /// tracked scores required before the streaming price applies (one
+    /// full batch; until then the gate keeps nothing)
+    min_count: usize,
+}
+
+impl GateStage {
+    /// `streaming_lambda` only engages for rate-priced DG-K methods; every
+    /// other configuration is a pass-through to `Method::decide`.
+    pub fn new(method: &Method, streaming_lambda: bool, min_count: usize) -> GateStage {
+        let stream = match (streaming_lambda, method) {
+            (true, Method::DgK { gate, .. }) => match gate.pricing {
+                Pricing::Rate(rho) => Some(EwQuantile::new(1.0 - rho, 0.05)),
+                Pricing::Price(_) => None,
+            },
+            _ => None,
+        };
+        GateStage { stream, min_count }
+    }
+
+    /// Inert stage: plain `Method::decide` pass-through.
+    pub fn passthrough() -> GateStage {
+        GateStage { stream: None, min_count: 0 }
+    }
+
+    /// Decide which survivors get a backward pass. Indices in the returned
+    /// decision are relative to the signal vectors (survivor slots when a
+    /// screen is active -- the caller maps them back to batch indices).
+    pub fn decide(
+        &mut self,
+        method: &Method,
+        signals: &BatchSignals,
+        rng: &mut Pcg32,
+    ) -> WeightDecision {
+        if let (Some(tracker), Method::DgK { priority, .. }) = (self.stream.as_mut(), method) {
+            // price from the cross-batch tracker (hard gate), then feed
+            // this batch's delight into the tracker
+            let gate_chi = delight(signals);
+            let lam =
+                if tracker.count() >= self.min_count { tracker.value() } else { f64::INFINITY };
+            let m = Method::DgK { gate: KondoGate::price(lam), priority: *priority };
+            let d = m.decide(signals, rng);
+            for &c in &gate_chi {
+                tracker.update(c);
+            }
+            d
+        } else {
+            method.decide(signals, rng)
+        }
+    }
+}
+
+/// Stage 4: the bucketed backward executor and optimizer step. Owns the
+/// backward capacity ladder and the run-persistent gradient accumulator.
+pub struct BackwardStage {
+    buckets: BucketSet,
+    /// gradient accumulator reused across steps (sized on first backward)
+    grad_acc: Vec<Vec<f32>>,
+}
+
+impl BackwardStage {
+    pub fn new(bwd_caps: Vec<usize>) -> Result<BackwardStage> {
+        Ok(BackwardStage { buckets: BucketSet::new(bwd_caps)?, grad_acc: Vec::new() })
+    }
+
+    pub fn buckets(&self) -> &BucketSet {
+        &self.buckets
+    }
+
+    /// Execute packed backward chunks across the pool and apply one
+    /// optimizer step. Each worker produces its chunk's partial gradient
+    /// buffers (the backward artifact's output tensors); the caller merges
+    /// them into the run-persistent accumulator in **chunk order** (the
+    /// pool returns results in task order, never completion order), so the
+    /// f32 reduction order is identical to the serial `workers = 1` path.
+    /// The merged gradient is normalized by `denom` before the step.
+    ///
+    /// `param_inputs` is the step's marshalled parameter list, shared by
+    /// reference across every chunk call; `extra_inputs` builds only the
+    /// non-parameter inputs of chunk `c` for artifact `artifact(c.cap)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run<F, N>(
+        &mut self,
+        eng: &Engine,
+        pool: &WorkerPool,
+        params: &mut ParamStore,
+        param_inputs: &[HostTensor],
+        opt: &mut dyn Optimizer,
+        chunks: &[PackedChunk],
+        artifact: N,
+        extra_inputs: F,
+        denom: f32,
+    ) -> Result<()>
+    where
+        F: Fn(&PackedChunk) -> Vec<HostTensor> + Sync,
+        N: Fn(usize) -> String + Sync,
+    {
+        if chunks.is_empty() {
+            return Ok(());
+        }
+        // the zero-copy contract: callers re-marshal after every optimizer
+        // step. Cheap to get wrong silently, so verify under debug builds
+        // (the dev-profile test runs keep this armed).
+        debug_assert!(
+            param_inputs.len() == params.n_tensors()
+                && (0..params.n_tensors()).all(|i| {
+                    param_inputs[i].as_f32().map(|d| d == params.tensor(i)).unwrap_or(false)
+                }),
+            "BackwardStage::run: param_inputs is stale relative to params \
+             (re-marshal after every optimizer step)"
+        );
+        let tasks: Vec<&PackedChunk> = chunks.iter().collect();
+        let results: Vec<Result<Vec<HostTensor>>> = pool.run(tasks, |_, chunk| {
+            let extras = extra_inputs(chunk);
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(param_inputs.len() + extras.len());
+            inputs.extend(param_inputs.iter());
+            inputs.extend(extras.iter());
+            let out = eng.execute_refs(&artifact(chunk.cap), &inputs)?;
+            // out[0] is the loss scalar; the rest are gradients
+            Ok(out.into_iter().skip(1).collect())
+        });
+        // reuse the run-persistent accumulator when the layout matches
+        // (steady state after the first backward of a run)
+        let n = params.n_tensors();
+        if self.grad_acc.len() == n
+            && (0..n).all(|i| self.grad_acc[i].len() == params.tensor(i).len())
+        {
+            for tensor in self.grad_acc.iter_mut() {
+                tensor.fill(0.0);
+            }
+        } else {
+            self.grad_acc = params.zeros_like();
+        }
+        // ordered reduction: chunk order, not completion order
+        for result in results {
+            let grads = result?;
+            accumulate(&mut self.grad_acc, &grads)?;
+        }
+        for tensor in self.grad_acc.iter_mut() {
+            for v in tensor.iter_mut() {
+                *v /= denom;
+            }
+        }
+        opt.step(params, &self.grad_acc);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Priority;
+
+    fn shards_of(n: usize, w: usize) -> Vec<Shard> {
+        non_empty_shards(n, w)
+    }
+
+    // ---- ForwardStage planning ----
+
+    #[test]
+    fn plan_unscreened_serial_is_full_batch() {
+        let f = ForwardStage::new(Some(BucketSet::new(vec![4, 8, 16]).unwrap()));
+        let all: Vec<usize> = (0..32).collect();
+        assert_eq!(f.plan(&all, 32, 1), ForwardPlan::FullBatch);
+    }
+
+    #[test]
+    fn plan_unscreened_sharded_resolves_capacities() {
+        let f = ForwardStage::new(Some(BucketSet::new(vec![4, 8, 16]).unwrap()));
+        let all: Vec<usize> = (0..32).collect();
+        match f.plan(&all, 32, 4) {
+            ForwardPlan::Sharded(pairs) => {
+                assert_eq!(pairs.len(), 4);
+                for (shard, cap) in &pairs {
+                    assert_eq!(shard.len(), 8);
+                    assert_eq!(*cap, 8);
+                }
+            }
+            other => panic!("expected sharded plan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_screened_packs_survivors_through_the_ladder() {
+        let f = ForwardStage::new(Some(BucketSet::new(vec![4, 8, 16]).unwrap()));
+        let survivors = vec![3, 7, 11, 20, 21];
+        match f.plan(&survivors, 32, 1) {
+            ForwardPlan::Packed(chunks) => {
+                assert_eq!(chunks.len(), 1);
+                assert_eq!(chunks[0].cap, 8);
+                assert_eq!(chunks[0].idx, survivors);
+            }
+            other => panic!("expected packed plan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_screened_slices_survivors_across_workers() {
+        // the screened forward must parallelize: a multi-worker pool gets
+        // one (or more) chunks per survivor slice, never a single big
+        // capacity call that idles the other workers
+        let f = ForwardStage::new(Some(BucketSet::new(vec![4, 8, 16]).unwrap()));
+        let survivors: Vec<usize> = (0..16).map(|i| 2 * i).collect();
+        match f.plan(&survivors, 32, 4) {
+            ForwardPlan::Packed(chunks) => {
+                assert_eq!(chunks.len(), 4, "16 survivors on 4 workers -> 4 chunks");
+                assert!(chunks.iter().all(|c| c.cap == 4));
+                // chunk order preserves survivor order end to end
+                let merged: Vec<usize> = chunks.iter().flat_map(|c| c.idx.clone()).collect();
+                assert_eq!(merged, survivors);
+            }
+            other => panic!("expected packed plan, got {other:?}"),
+        }
+        // the survivor count (the worker-invariant ledger axis) is the
+        // same for every worker count; only the chunking varies
+        for w in [1, 2, 4, 7] {
+            match f.plan(&survivors, 32, w) {
+                ForwardPlan::Packed(chunks) => {
+                    let merged: Vec<usize> =
+                        chunks.iter().flat_map(|c| c.idx.clone()).collect();
+                    assert_eq!(merged, survivors, "workers={w}");
+                }
+                other => panic!("expected packed plan, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_without_caps_falls_back_to_full_batch() {
+        let f = ForwardStage::new(None);
+        let survivors = vec![1, 2];
+        assert_eq!(f.plan(&survivors, 32, 4), ForwardPlan::FullBatch);
+        let all: Vec<usize> = (0..32).collect();
+        assert_eq!(f.plan(&all, 32, 4), ForwardPlan::FullBatch);
+    }
+
+    #[test]
+    fn plan_oversized_shard_falls_back_to_full_batch() {
+        // a shard bigger than the largest capacity cannot run sharded
+        let f = ForwardStage::new(Some(BucketSet::new(vec![4]).unwrap()));
+        let all: Vec<usize> = (0..32).collect();
+        assert_eq!(f.plan(&all, 32, 2), ForwardPlan::FullBatch);
+        // but the screened path splits greedily instead of falling back
+        let survivors: Vec<usize> = (0..9).collect();
+        match f.plan(&survivors, 32, 2) {
+            ForwardPlan::Packed(chunks) => {
+                assert_eq!(chunks.iter().map(|c| c.cap).collect::<Vec<_>>(), vec![4, 4, 4]);
+            }
+            other => panic!("expected packed plan, got {other:?}"),
+        }
+    }
+
+    // ---- ScreenStage ----
+
+    fn warm_stage(dim: usize, unit: usize, rho: f64) -> ScreenStage {
+        let cfg = ScreenCfg { rho_screen: rho, draft_lr: 0.05, warmup_batches: 1 };
+        let mut st = ScreenStage::new(dim, unit, cfg);
+        // teach the draft ell = x0 exactly (identity on the first feature)
+        let mut rng = crate::utils::rng::Pcg32::seeded(7);
+        for _ in 0..400 {
+            let xs: Vec<f32> = (0..unit * dim).map(|_| rng.normal() as f32).collect();
+            let ell: Vec<f64> = (0..unit).map(|i| xs[i * dim] as f64).collect();
+            let rows: Vec<usize> = (0..unit).collect();
+            st.observe(&xs, &rows, &ell);
+        }
+        assert!(st.warm());
+        st
+    }
+
+    #[test]
+    fn cold_screen_passes_everything_and_records_nothing() {
+        let st = ScreenStage::new(4, 8, ScreenCfg { warmup_batches: 5, ..ScreenCfg::at_rate(0.5) });
+        assert!(!st.warm());
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        let feats = vec![0.0f32; 8 * 4];
+        let v = st.screen(&pool, &shards_of(8, 1), &feats, 8, None, &mut acct);
+        assert!(!v.is_screened());
+        assert_eq!(v.survivors_or_all(8), (0..8).collect::<Vec<_>>());
+        assert_eq!(acct.total().screen_samples, 0, "cold batches pay no screen dots");
+    }
+
+    #[test]
+    fn inactive_screen_cfg_never_screens() {
+        let st = ScreenStage::new(4, 8, ScreenCfg::default());
+        assert!(!st.cfg().active());
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        let v = st.screen(&pool, &shards_of(8, 1), &vec![0.0; 32], 8, None, &mut acct);
+        assert!(!v.is_screened());
+        // out-of-range rates are "off", not a panic waiting to happen:
+        // active() is the single gate every attach site checks
+        assert!(!ScreenCfg::at_rate(0.0).active());
+        assert!(!ScreenCfg::at_rate(-0.5).active());
+        assert!(!ScreenCfg::at_rate(1.0).active());
+        assert!(!ScreenCfg::at_rate(1.5).active());
+        assert!(ScreenCfg::at_rate(0.25).active());
+    }
+
+    #[test]
+    fn warm_screen_keeps_the_top_rho_set_in_batch_order() {
+        let dim = 3;
+        let n = 16;
+        let st = warm_stage(dim, n, 0.25);
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        // feature x0 = i scrambled so the top set is not a suffix
+        let order = [5usize, 12, 0, 9, 3, 15, 7, 1, 11, 4, 13, 2, 8, 6, 14, 10];
+        let mut feats = vec![0.0f32; n * dim];
+        for (i, &rank) in order.iter().enumerate() {
+            feats[i * dim] = rank as f32;
+        }
+        let v = st.screen(&pool, &shards_of(n, 1), &feats, n, None, &mut acct);
+        let ScreenVerdict::Screened { survivors, scores, lambda } = v else {
+            panic!("warm screen must engage")
+        };
+        // survivors are the rank >= 12 rows, in ascending batch order
+        let expect: Vec<usize> =
+            (0..n).filter(|&i| order[i] >= 12).collect();
+        assert_eq!(survivors, expect);
+        assert!(survivors.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(scores.len(), n);
+        assert!(survivors.iter().all(|&i| scores[i] > lambda));
+        assert_eq!(acct.total().screen_samples, n as u64);
+    }
+
+    #[test]
+    fn screen_verdict_is_worker_invariant() {
+        let dim = 2;
+        let n = 24;
+        let st = warm_stage(dim, n, 0.5);
+        let mut rng = crate::utils::rng::Pcg32::seeded(3);
+        let feats: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let survivors_at = |w: usize| {
+            let pool = WorkerPool::new(w);
+            let mut acct = ShardedLedger::new(w);
+            let v = st.screen(&pool, &shards_of(n, w), &feats, n, None, &mut acct);
+            assert_eq!(acct.total().screen_samples, n as u64);
+            v.survivors_or_all(n)
+        };
+        let s1 = survivors_at(1);
+        assert_eq!(s1, survivors_at(2));
+        assert_eq!(s1, survivors_at(7));
+    }
+
+    #[test]
+    fn u_hint_weights_predictions_into_delight() {
+        let dim = 2;
+        let n = 8;
+        let st = warm_stage(dim, n, 0.25);
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        // all rows predict the same surprisal; u alone decides survival
+        let mut feats = vec![0.0f32; n * dim];
+        for i in 0..n {
+            feats[i * dim] = 1.0;
+        }
+        let u: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
+        let v = st.screen(&pool, &shards_of(n, 1), &feats, n, Some(&u), &mut acct);
+        let ScreenVerdict::Screened { survivors, .. } = v else {
+            panic!("screen must engage")
+        };
+        assert_eq!(survivors, vec![6, 7], "largest advantages must survive");
+    }
+
+    #[test]
+    fn degenerate_tied_scores_fall_back_to_full() {
+        let dim = 2;
+        let n = 8;
+        let st = warm_stage(dim, n, 0.5);
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        // identical rows -> identical predictions -> no strict top set
+        let feats = vec![1.0f32; n * dim];
+        let v = st.screen(&pool, &shards_of(n, 1), &feats, n, None, &mut acct);
+        assert!(!v.is_screened(), "tied scores must fall back to the full path");
+    }
+
+    #[test]
+    fn diverged_draft_falls_back_to_full_instead_of_panicking() {
+        // regression: a draft pushed to inf/NaN weights (unbounded
+        // draft_lr is CLI-exposed) must not panic the quantile sort or
+        // emit a poisoned survivor set -- it degrades to the full path
+        let cfg = ScreenCfg { rho_screen: 0.5, draft_lr: 1e12, warmup_batches: 1 };
+        let mut st = ScreenStage::new(2, 4, cfg);
+        let feats = vec![1.0e3f32; 4 * 2];
+        let rows = [0usize, 1, 2, 3];
+        // two huge-lr updates blow the weights out to inf/NaN
+        st.observe(&feats, &rows, &[1.0, -1.0, 2.0, -2.0]);
+        st.observe(&feats, &rows, &[1.0, -1.0, 2.0, -2.0]);
+        assert!(st.warm());
+        assert!(
+            !st.draft().predict(&feats[0..2]).is_finite(),
+            "setup failed to diverge the draft"
+        );
+        let pool = WorkerPool::new(1);
+        let mut acct = ShardedLedger::new(1);
+        let v = st.screen(&pool, &shards_of(4, 1), &feats, 4, None, &mut acct);
+        assert!(!v.is_screened(), "non-finite scores must fall back to the full path");
+        // the u_hint path (0 * inf = NaN) degrades the same way
+        let u = [0.0f64; 4];
+        let v = st.screen(&pool, &shards_of(4, 1), &feats, 4, Some(&u), &mut acct);
+        assert!(!v.is_screened());
+    }
+
+    #[test]
+    fn observe_warms_the_draft() {
+        let cfg = ScreenCfg { warmup_batches: 2, ..ScreenCfg::at_rate(0.5) };
+        let mut st = ScreenStage::new(2, 4, cfg);
+        assert!(!st.warm());
+        let feats = vec![0.5f32; 4 * 2];
+        let rows = [0usize, 1, 2, 3];
+        st.observe(&feats, &rows, &[1.0, 2.0, 0.5, 0.0]);
+        assert!(!st.warm(), "one batch of four is below the two-batch warmup");
+        st.observe(&feats, &rows, &[1.0, 2.0, 0.5, 0.0]);
+        assert!(st.warm());
+        assert_eq!(st.draft().seen(), 8);
+    }
+
+    // ---- GateStage ----
+
+    #[test]
+    fn passthrough_gate_stage_matches_method_decide() {
+        let mut gs = GateStage::passthrough();
+        let m = Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight };
+        let u = [0.5, -0.3, 0.2];
+        let ell = [1.0, 2.0, 0.1];
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+        let mut r1 = Pcg32::seeded(9);
+        let mut r2 = Pcg32::seeded(9);
+        let a = gs.decide(&m, &s, &mut r1);
+        let b = m.decide(&s, &mut r2);
+        assert_eq!(a.keep, b.keep);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn streaming_gate_stage_warms_up_then_prices() {
+        let m = Method::DgK { gate: KondoGate::rate(0.5), priority: Priority::Delight };
+        let mut gs = GateStage::new(&m, true, 4);
+        let mut rng = Pcg32::seeded(1);
+        let u = [1.0, 1.0, 1.0, 1.0];
+        let ell = [1.0, 2.0, 3.0, 4.0];
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+        // batch 1: tracker below min_count -> infinite price, keep nothing
+        let d1 = gs.decide(&m, &s, &mut rng);
+        assert!(d1.keep.is_empty());
+        // batch 2: tracker warm -> finite price, keeps the high-chi tail
+        let d2 = gs.decide(&m, &s, &mut rng);
+        assert!(!d2.keep.is_empty());
+        assert!(d2.keep.len() < 4);
+    }
+
+    #[test]
+    fn streaming_gate_stage_is_inert_for_price_mode_and_ungated() {
+        let price = Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight };
+        let gs = GateStage::new(&price, true, 4);
+        assert!(gs.stream.is_none());
+        let gs = GateStage::new(&Method::Pg, true, 4);
+        assert!(gs.stream.is_none());
+    }
+}

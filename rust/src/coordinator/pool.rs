@@ -87,6 +87,14 @@ pub fn split_shards(n: usize, workers: usize) -> Vec<Shard> {
     shards
 }
 
+/// The dispatch-layer view of `split_shards`: empty shards (n = 0 yields
+/// one) are dropped so they are never handed to workers as tasks. This is
+/// THE rule every dispatch/planning site shares (`GatedLoop::shards`,
+/// `ForwardStage::plan`); change it here, not in copies.
+pub fn non_empty_shards(n: usize, workers: usize) -> Vec<Shard> {
+    split_shards(n, workers).into_iter().filter(|s| !s.is_empty()).collect()
+}
+
 /// Per-(seed, step, unit) RNG stream. All per-sample randomness (action
 /// sampling, reward noise) draws from these streams so that the draw a
 /// sample sees is a function of its batch index alone -- the heart of the

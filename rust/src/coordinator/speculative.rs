@@ -3,13 +3,14 @@
 //! before the expensive forward/backward, mirroring speculative decoding
 //! but for training.
 //!
-//! The draft here is an online linear probe on raw inputs trained to
-//! regress the full model's per-sample surprisal ell (and hence delight
-//! chi_hat = U * ell_hat). It costs one [D]·[D] dot per sample — orders
-//! of magnitude below the policy forward — and §3.2 of the paper shows the
-//! gate tolerates exactly this kind of approximation. `agreement`
-//! quantifies screening quality as precision of the draft's top-rho set
-//! against the true top-rho set.
+//! The draft here is an online linear probe trained to regress the full
+//! model's per-sample surprisal ell. It costs one [D]·[D] dot per sample
+//! — orders of magnitude below the policy forward — and §3.2 of the paper
+//! shows the gate tolerates exactly this kind of approximation. The
+//! production consumer is `pipeline::ScreenStage` (tier 1 of the two-tier
+//! gate), which owns the warm-up policy and the advantage weighting;
+//! `screening_precision` quantifies screening quality as precision of the
+//! draft's top-rho set against the true top-rho set.
 
 use crate::utils::rng::Pcg32;
 use crate::utils::stats::quantile;
@@ -48,33 +49,25 @@ impl DraftScreen {
         acc
     }
 
-    /// Predicted delight chi_hat = U * ell_hat for a batch ([n, dim] rows).
-    pub fn predict_delight(&self, xs: &[f32], u: &[f64]) -> Vec<f64> {
-        let d = self.w.len();
-        u.iter()
-            .enumerate()
-            .map(|(i, &ui)| ui * self.predict(&xs[i * d..(i + 1) * d]))
-            .collect()
+    /// One SGD step against a single observed surprisal.
+    pub fn update_row(&mut self, row: &[f32], target: f64) {
+        let err = (self.predict(row) - target) as f32;
+        let g = self.lr * err;
+        for (w, &v) in self.w.iter_mut().zip(row) {
+            *w -= g * v;
+        }
+        self.b -= g;
+        self.seen += 1;
     }
 
-    /// One SGD pass against observed surprisals.
+    /// One SGD pass against observed surprisals. (Warm-up policy and
+    /// delight weighting live in `pipeline::ScreenStage`, the only
+    /// production consumer -- not here.)
     pub fn update(&mut self, xs: &[f32], ell: &[f64]) {
         let d = self.w.len();
         for (i, &target) in ell.iter().enumerate() {
-            let row = &xs[i * d..(i + 1) * d];
-            let err = (self.predict(row) - target) as f32;
-            let g = self.lr * err;
-            for (w, &v) in self.w.iter_mut().zip(row) {
-                *w -= g * v;
-            }
-            self.b -= g;
-            self.seen += 1;
+            self.update_row(&xs[i * d..(i + 1) * d], target);
         }
-    }
-
-    /// Is the draft warm enough to screen with? (one epoch of batches)
-    pub fn warmed_up(&self, batch: usize) -> bool {
-        self.seen >= 20 * batch as u64
     }
 }
 
@@ -89,7 +82,9 @@ pub fn screening_precision(chi_true: &[f64], chi_hat: &[f64], rho: f64) -> f64 {
     let k = ((rho * n as f64).ceil() as usize).clamp(1, n);
     let top = |xs: &[f64]| -> std::collections::HashSet<usize> {
         let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        // total_cmp: NaN chi (a diverged draft or poisoned advantage) must
+        // order deterministically instead of panicking mid-run
+        idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
         idx[..k].iter().copied().collect()
     };
     let t = top(chi_true);
@@ -107,7 +102,8 @@ pub fn rank_correlation(a: &[f64], b: &[f64]) -> f64 {
     }
     let ranks = |xs: &[f64]| -> Vec<f64> {
         let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): NaN must rank, not panic
+        idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
         let mut r = vec![0.0; n];
         for (rank, &i) in idx.iter().enumerate() {
             r[i] = rank as f64;
@@ -154,18 +150,7 @@ mod tests {
         }
         let x = [1.0f32, 1.0];
         assert!((draft.predict(&x) - 1.5).abs() < 0.05, "{}", draft.predict(&x));
-        assert!(draft.warmed_up(20));
-    }
-
-    #[test]
-    fn predict_delight_multiplies_advantage() {
-        let mut d = DraftScreen::new(1, 0.1);
-        d.w[0] = 1.0; // ell_hat = x
-        let xs = [2.0f32, 3.0];
-        let u = [0.5, -1.0];
-        let chi = d.predict_delight(&xs, &u);
-        assert!((chi[0] - 1.0).abs() < 1e-9);
-        assert!((chi[1] + 3.0).abs() < 1e-9);
+        assert_eq!(draft.seen(), 300 * 20);
     }
 
     #[test]
@@ -190,6 +175,39 @@ mod tests {
         assert_eq!(p0, 1.0);
         assert!(p1 > 0.3 && p1 < 1.0, "p1 = {p1}");
         assert!(p2 < p1, "p2 = {p2}");
+    }
+
+    #[test]
+    fn screening_stats_tolerate_nan_chi() {
+        // regression: the old partial_cmp(..).unwrap() sorts panicked the
+        // moment a NaN chi reached a diagnostic (diverged draft, 0 * inf
+        // advantage); total_cmp must rank NaN deterministically instead
+        let chi = vec![1.0, f64::NAN, 0.5, 2.0, f64::NAN, -1.0];
+        let hat = vec![0.9, 0.4, f64::NAN, 1.8, -0.5, f64::NAN];
+        let p = screening_precision(&chi, &hat, 0.5);
+        assert!((0.0..=1.0).contains(&p), "precision {p} out of range");
+        // deterministic under repetition (total order, no tie-break races)
+        assert_eq!(p.to_bits(), screening_precision(&chi, &hat, 0.5).to_bits());
+        let r = rank_correlation(&chi, &hat);
+        assert!(r.is_finite(), "rank correlation {r} not finite");
+        assert_eq!(r.to_bits(), rank_correlation(&chi, &hat).to_bits());
+        // all-NaN input is the worst case and must still not panic
+        let nan = vec![f64::NAN; 4];
+        let _ = screening_precision(&nan, &nan, 0.25);
+        let _ = rank_correlation(&nan, &nan);
+    }
+
+    #[test]
+    fn update_row_matches_batched_update() {
+        let mut a = DraftScreen::new(2, 0.05);
+        let mut b = DraftScreen::new(2, 0.05);
+        let xs = [1.0f32, -0.5, 0.25, 2.0];
+        let ell = [0.7, -0.2];
+        a.update(&xs, &ell);
+        b.update_row(&xs[0..2], ell[0]);
+        b.update_row(&xs[2..4], ell[1]);
+        assert_eq!(a.seen(), b.seen());
+        assert_eq!(a.predict(&[0.3, 0.9]).to_bits(), b.predict(&[0.3, 0.9]).to_bits());
     }
 
     #[test]

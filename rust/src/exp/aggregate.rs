@@ -94,6 +94,8 @@ mod tests {
         EvalPoint {
             step,
             forward_samples: (step * 100) as u64,
+            screen_samples: 0,
+            forward_skipped: 0,
             backward_kept: (step * 3) as u64,
             backward_executed: (step * 4) as u64,
             metric: m,

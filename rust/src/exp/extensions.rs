@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::algo::baseline::Baseline;
 use crate::algo::Method;
 use crate::coordinator::speculative::precision_under_noise;
-use crate::coordinator::{BucketSet, KondoGate, Priority};
+use crate::coordinator::{BucketSet, KondoGate, Priority, ScreenCfg};
 use crate::metrics::{ascii_table, CsvWriter};
 use crate::trainers::{train_mnist, MnistTrainerCfg};
 use crate::utils::rng::Pcg32;
@@ -29,46 +29,118 @@ fn cfg_of(ctx: &ExpCtx, method: Method, seed: u64) -> MnistTrainerCfg {
         eval_size: ctx.cfg.eval_size,
         seed,
         workers: ctx.cfg.workers,
+        screen: ctx.cfg.screen_cfg(),
         ..Default::default()
     }
 }
 
-/// `spec`: speculative-decoding-for-training (paper §3.2/§7). An online
-/// linear draft predicts delight; the gate screens on the prediction.
-/// Reports learning quality, backward budget, and screening precision of
-/// the draft against exact delight.
+/// Cost of one draft dot product in forward-sample equivalents: a [784]
+/// dot against the testbed MLP forward's ~25k multiplies (784*32 + 32*10).
+const SCREEN_COST: f64 = 0.03;
+/// The paper's "typical" backward/forward cost ratio (Fig 3).
+const COST_RATIO: f64 = 4.0;
+
+/// `spec`: the two-tier speculative screening pipeline (paper §3.2/§7,
+/// DESIGN.md §8). A warm online linear draft pre-gates the batch at
+/// `rho_screen` so only survivors pay the full forward; the Kondo gate
+/// then prices the backward over the survivors' exact delight. The tier-2
+/// rate is rescaled by 1/rho_screen so every variant targets the SAME
+/// backward budget -- the sweep isolates the forward-compute axis and
+/// reports its Pareto frontier under the three-term cost model
+/// `screen + forward + r * backward`.
 pub fn spec(ctx: &ExpCtx) -> Result<String> {
     let mut w = CsvWriter::create(
         format!("{}/spec/speculative.csv", ctx.cfg.out_dir),
-        &["variant", "seed", "final_test_err", "bwd_kept", "draft_precision"],
+        &[
+            "variant", "seed", "final_test_err", "fwd_samples", "fwd_executed",
+            "fwd_skipped", "screen_samples", "bwd_kept", "total_compute",
+            "draft_precision",
+        ],
     )?;
-    let mut rows = Vec::new();
-    for (name, draft) in [("exact_delight", false), ("draft_screen", true)] {
+    let rho_bwd = 0.03;
+    let variants: [(&str, f64); 4] =
+        [("unscreened", 1.0), ("screen_50", 0.5), ("screen_25", 0.25), ("screen_10", 0.1)];
+    // (name, mean err, mean executed total compute) per variant, for the
+    // frontier marking below
+    let mut summary: Vec<(String, f64, f64, Vec<String>)> = Vec::new();
+    for (name, rho_screen) in variants {
+        let gate_rho = (rho_bwd / rho_screen).min(1.0);
         let mut errs = Vec::new();
         let mut precs = Vec::new();
-        let mut bwd = 0u64;
+        let mut totals = Vec::new();
+        // counters are per-seed (gate/screen decisions are seeded), so the
+        // summary reports their means like every other column
+        let mut fwd = Vec::new();
+        let mut fwd_exec = Vec::new();
+        let mut skipped = Vec::new();
+        let mut bwd = Vec::new();
         for s in 0..ctx.cfg.seeds {
-            let mut c = cfg_of(ctx, dgk(0.03), s as u64);
-            c.draft_screen = draft;
+            let mut c = cfg_of(ctx, dgk(gate_rho), s as u64);
+            c.screen = ScreenCfg {
+                rho_screen,
+                draft_lr: ctx.cfg.draft_lr,
+                // warm fast enough that short smoke configs still screen
+                warmup_batches: (ctx.cfg.screen_warmup as u64).min(ctx.cfg.mnist_steps as u64 / 4),
+            };
             let res = train_mnist(ctx.eng, &c)?;
+            let total = res.ledger.total_compute_screened_executed(SCREEN_COST, COST_RATIO);
             w.row(&[
                 name.into(),
                 s.to_string(),
                 format!("{:.4}", res.final_test_err),
+                res.ledger.forward_samples.to_string(),
+                res.ledger.forward_executed.to_string(),
+                res.ledger.forward_skipped.to_string(),
+                res.ledger.screen_samples.to_string(),
                 res.ledger.backward_kept.to_string(),
+                format!("{total:.0}"),
                 format!("{:.3}", res.draft_precision),
             ])?;
             errs.push(res.final_test_err);
             precs.push(res.draft_precision);
-            bwd = res.ledger.backward_kept;
+            totals.push(total);
+            fwd.push(res.ledger.forward_samples as f64);
+            fwd_exec.push(res.ledger.forward_executed as f64);
+            skipped.push(res.ledger.forward_skipped as f64);
+            bwd.push(res.ledger.backward_kept as f64);
         }
-        rows.push(vec![
-            name.into(),
-            format!("{:.4}", stats::mean(&errs)),
-            format!("{:.3}", stats::mean(&precs)),
-            bwd.to_string(),
-        ]);
+        let mean_err = stats::mean(&errs);
+        let mean_total = stats::mean(&totals);
+        summary.push((
+            name.to_string(),
+            mean_err,
+            mean_total,
+            vec![
+                name.to_string(),
+                format!("{mean_err:.4}"),
+                format!("{:.0}", stats::mean(&fwd)),
+                format!("{:.0}", stats::mean(&fwd_exec)),
+                format!("{:.0}", stats::mean(&skipped)),
+                format!("{:.0}", stats::mean(&bwd)),
+                format!("{mean_total:.0}"),
+                format!("{:.3}", stats::mean(&precs)),
+            ],
+        ));
     }
+    // Pareto frontier over (total compute, test error): a variant is on
+    // the frontier iff no other variant is at least as good on both axes
+    // and strictly better on one
+    let mut rows = Vec::new();
+    for (i, (_, err, total, cells)) in summary.iter().enumerate() {
+        let dominated = summary.iter().enumerate().any(|(j, (_, e2, t2, _))| {
+            j != i && *e2 <= *err && *t2 <= *total && (*e2 < *err || *t2 < *total)
+        });
+        let mut cells = cells.clone();
+        cells.push(if dominated { "".into() } else { "*".into() });
+        rows.push(cells);
+    }
+    let mut out = ascii_table(
+        &[
+            "variant", "final test err", "fwd samples", "fwd executed", "fwd skipped",
+            "bwd kept", "total compute", "screen precision", "pareto",
+        ],
+        &rows,
+    );
     // synthetic precision-vs-noise curve (how approximate may the draft be?)
     let mut rng = Pcg32::seeded(31);
     let mut noise_rows = Vec::new();
@@ -77,12 +149,11 @@ pub fn spec(ctx: &ExpCtx) -> Result<String> {
             (0..50).map(|_| precision_under_noise(100, 0.03, nl, &mut rng)).collect();
         noise_rows.push(vec![format!("{nl}"), format!("{:.3}", stats::mean(&ps))]);
     }
-    let mut out = ascii_table(
-        &["screen", "final test err", "screen precision", "bwd kept"],
-        &rows,
-    );
     out.push_str(&ascii_table(&["rel noise on chi", "top-3% precision"], &noise_rows));
-    out.push_str("paper 3.2: approximate delight preserves most of the gate's value — the draft screen should trade a little error for zero-cost screening\n");
+    out.push_str(&format!(
+        "three-term cost: {SCREEN_COST} * screen + fwd_executed + {COST_RATIO} * bwd_executed; all variants target the same backward budget (rho_bwd = {rho_bwd})\n\
+         paper 3.2/7: the gate tolerates approximate delight, so a one-dot draft screen can spare most full forwards — '*' marks the compute/error Pareto frontier\n"
+    ));
     Ok(out)
 }
 

@@ -48,7 +48,7 @@ pub fn describe(id: &str) -> &'static str {
         "fig11" => "MNIST: learning-rate sweep",
         "fig13" => "MNIST: baseline robustness (+Fig 14 bwd-space twin)",
         "fig15" => "MNIST: gate selection profile, kept vs skipped (+Fig 16 exemplars)",
-        "spec" => "EXT: speculative delight screening via an online linear draft (paper 3.2/7)",
+        "spec" => "EXT: two-tier speculative screening pipeline, fwd-compute Pareto frontier (paper 3.2/7)",
         "abl_pricing" => "EXT: per-batch quantile vs streaming EW pricing of lambda",
         "abl_eta" => "EXT: gate temperature sweep (hard threshold <-> constant gate)",
         "abl_buckets" => "EXT: backward bucket granularity vs padding overhead",

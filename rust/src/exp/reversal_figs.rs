@@ -47,6 +47,7 @@ fn base_cfg(ctx: &ExpCtx, method: Method, h: usize, m: usize, seed: u64) -> Reve
         seed,
         eval_every: (ctx.cfg.rev_steps / 20).max(1),
         inner_epochs: 1,
+        screen: ctx.cfg.screen_cfg(),
         workers: ctx.cfg.workers,
     }
 }

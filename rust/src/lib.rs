@@ -15,7 +15,12 @@
 //! Kondo gate resolves one batch-global quantile price over the merged
 //! chi scores, and the bucketed backward chunks execute concurrently with
 //! gradients merged in chunk order. [`trainers::GatedLoop`] is the shared
-//! substrate both trainers run on.
+//! substrate both trainers run on, structured as the explicit L4
+//! screening pipeline ([`coordinator::pipeline`], DESIGN.md §8): a warm
+//! draft model pre-gates each batch at `rho_screen` with one dot product
+//! per sample, only the survivors pay the full forward (packed through
+//! the forward capacity ladder), and the Kondo gate then prices the
+//! backward over the survivors' exact delight -- a two-tier gate.
 //!
 //! # Determinism contract
 //!

@@ -8,8 +8,8 @@
 //!
 //! Overrides are `key=value` pairs over configs/default.toml (seeds,
 //! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
-//! out_dir, artifacts_dir), plus `preset=scaled|paper` to load
-//! configs/<preset>.toml first.
+//! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup),
+//! plus `preset=scaled|paper` to load configs/<preset>.toml first.
 
 use std::path::Path;
 
@@ -47,7 +47,8 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
     }
     const CFG_KEYS: &[&str] = &[
         "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
-        "lr_rev", "out_dir", "artifacts_dir", "workers",
+        "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
+        "screen_warmup",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -110,14 +111,17 @@ fn real_main() -> Result<()> {
                         eval_size: cfg.eval_size,
                         seed: arg_u64(rest, "seed").unwrap_or(0),
                         workers: cfg.workers,
+                        screen: cfg.screen_cfg(),
                         ..Default::default()
                     };
                     let res = train_mnist(&eng, &tcfg)?;
                     println!(
-                        "final train err {:.4} | test err {:.4} | fwd {} bwd_kept {} bwd_exec {} (gate rate {:.3}, padding {:.1}%)",
+                        "final train err {:.4} | test err {:.4} | fwd {} (skipped {} of {} screened) bwd_kept {} bwd_exec {} (gate rate {:.3}, padding {:.1}%)",
                         res.final_train_err,
                         res.final_test_err,
                         res.ledger.forward_samples,
+                        res.ledger.forward_skipped,
+                        res.ledger.screen_samples,
                         res.ledger.backward_kept,
                         res.ledger.backward_executed,
                         res.ledger.gate_rate(),
@@ -134,14 +138,16 @@ fn real_main() -> Result<()> {
                         seed: arg_u64(rest, "seed").unwrap_or(0),
                         eval_every: (cfg.rev_steps / 20).max(1),
                         inner_epochs: arg_u64(rest, "epochs").unwrap_or(1) as usize,
+                        screen: cfg.screen_cfg(),
                         workers: cfg.workers,
                     };
                     let res = train_reversal(&eng, &tcfg)?;
                     println!(
-                        "final reward {:.4} | mean reward {:.4} | fwd {} bwd_kept {} bwd_exec {}",
+                        "final reward {:.4} | mean reward {:.4} | fwd {} (screened {}) bwd_kept {} bwd_exec {}",
                         res.final_reward,
                         res.mean_reward,
                         res.ledger.forward_samples,
+                        res.ledger.screen_samples,
                         res.ledger.backward_kept,
                         res.ledger.backward_executed,
                     );

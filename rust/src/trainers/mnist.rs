@@ -1,17 +1,25 @@
-//! MNIST-bandit trainer (paper §3, App A): the full L3 scheduling loop,
-//! sharded across the coordinator's worker pool.
+//! MNIST-bandit trainer (paper §3, App A): the full L3/L4 scheduling
+//! loop, staged through the screening pipeline and sharded across the
+//! coordinator's worker pool.
 //!
-//! Per step: sample contexts -> forward artifact per shard (L1 fused head
-//! inside) -> per-sample action/reward/delight scoring on per-sample RNG
-//! streams -> merge chi in batch order and resolve ONE batch-global
-//! quantile price in the Kondo gate -> pack kept samples into backward
-//! buckets -> execute backward chunks across the pool -> merge gradients
-//! in chunk order -> Adam. The shard-aware ledger records the exact
-//! forward/backward sample counts that form the paper's compute axes.
+//! Per step: sample contexts -> **screen** (a warm draft pre-gates the
+//! batch at `rho_screen` on predicted surprisal, one dot per sample) ->
+//! **forward** the survivors (packed through the forward capacity ladder
+//! when screened, contiguous shards otherwise; L1 fused head inside) ->
+//! per-sample action/reward/delight scoring on per-sample RNG streams ->
+//! merge chi in batch order and resolve ONE batch-global quantile price in
+//! the Kondo **gate** -> pack kept samples into **backward** buckets ->
+//! execute backward chunks across the pool -> merge gradients in chunk
+//! order -> Adam -> train the draft on the survivors' exact surprisals.
+//! The shard-aware ledger records the exact screen/forward/backward sample
+//! counts that form the paper's compute axes plus the three-term cost
+//! model of DESIGN.md §8.
 //!
 //! Determinism contract: with `eta = 0` (hard gate) the entire trajectory
-//! is a pure function of `cfg.seed`, bit-identical for every `workers`
-//! value (locked by rust/tests/gated_e2e.rs).
+//! -- screened or not -- is a pure function of `cfg.seed`, bit-identical
+//! for every `workers` value (locked by rust/tests/gated_e2e.rs). The
+//! screen keeps this: per-sample RNG streams are keyed by the ORIGINAL
+//! batch index, so surviving a screen never shifts anybody's draws.
 
 use anyhow::Result;
 
@@ -20,7 +28,7 @@ use crate::algo::{perturb_delight_abs, perturb_delight_rel, BatchSignals, Method
 use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32, BucketSet};
 use crate::coordinator::pool::unit_rng;
 use crate::coordinator::{
-    screening_precision, DraftScreen, EwQuantile, KondoGate, Ledger, Pricing, ShardedLedger,
+    screening_precision, Ledger, Pricing, ScreenCfg, ScreenVerdict, ShardedLedger,
 };
 use crate::envs::mnist::{MnistBandit, RewardNoise};
 use crate::model::ParamStore;
@@ -52,9 +60,10 @@ pub struct MnistTrainerCfg {
     /// price lambda from a streaming EW quantile across batches instead of
     /// the per-batch quantile (ablation of Algorithm 1 line 5)
     pub streaming_lambda: bool,
-    /// speculative screening (paper 3.2/7): gate on delight predicted by
-    /// an online linear draft model instead of the exact forward-pass value
-    pub draft_screen: bool,
+    /// tier-1 speculative screen (paper 3.2/7, DESIGN.md §8): a warm
+    /// online linear draft pre-gates the batch at `rho_screen` on
+    /// predicted surprisal; only survivors pay the full forward
+    pub screen: ScreenCfg,
     /// worker threads for sharded forward/scoring/backward (1 = serial)
     pub workers: usize,
 }
@@ -75,13 +84,15 @@ impl Default for MnistTrainerCfg {
             logit_noise: 0.0,
             gate_profile_steps: vec![],
             streaming_lambda: false,
-            draft_screen: false,
+            screen: ScreenCfg::default(),
             workers: 1,
         }
     }
 }
 
 /// pi(y*) of kept vs skipped samples around one training step (Fig 15).
+/// Under an active screen the profile covers the survivors only (the
+/// screened-out rows have no forward, hence no pi).
 #[derive(Debug, Clone)]
 pub struct GateProfile {
     pub step: usize,
@@ -103,8 +114,8 @@ pub struct MnistRunResult {
     pub gate_profiles: Vec<GateProfile>,
     pub final_test_err: f64,
     pub final_train_err: f64,
-    /// mean precision of the draft screen's top-rho set vs exact delight
-    /// (1.0 when draft_screen is off or the draft is still cold)
+    /// mean precision of the screen's predicted-delight top-rho set vs the
+    /// exact delight of the survivors (1.0 when screening never engaged)
     pub draft_precision: f64,
 }
 
@@ -129,17 +140,21 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let rules = man.model("mnist")?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x51ed) ^ 0xbeef);
     let mut opt = Adam::new(cfg.lr, &params);
-    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?;
-    // reusable parameter marshalling buffer: refreshed once per step and
-    // shared by reference across forward shards and backward chunks
-    let mut param_inputs: Vec<HostTensor> = Vec::new();
     // forward shard capacities are part of the manifest contract; an
-    // empty list (older artifact sets) disables forward sharding
+    // empty list (older artifact sets) disables forward sharding AND the
+    // screened packed path (a screened batch then forwards whole)
     let fwd_buckets = if man.constants.mnist_fwd_caps.is_empty() {
         None
     } else {
         Some(BucketSet::new(man.constants.mnist_fwd_caps.clone())?)
     };
+    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?
+        .with_fwd_caps(fwd_buckets)
+        .with_screen(img, b, cfg.screen)
+        .with_gate(&cfg.method, cfg.streaming_lambda, b);
+    // reusable parameter marshalling buffer: refreshed once per step and
+    // shared by reference across forward shards and backward chunks
+    let mut param_inputs: Vec<HostTensor> = Vec::new();
 
     // the corpus is fixed across seeds (like the MNIST download); only the
     // sampling / action / gate randomness varies per seed
@@ -151,15 +166,6 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let mut curve = Vec::new();
     let mut gate_profiles = Vec::new();
     let mut train_err_window = TrainWindow::new(10);
-    // streaming price tracker (targets the (1-rho)-quantile of delight)
-    let mut stream_tracker: Option<EwQuantile> = match (cfg.streaming_lambda, &cfg.method) {
-        (true, Method::DgK { gate, .. }) => match gate.pricing {
-            Pricing::Rate(rho) => Some(EwQuantile::new(1.0 - rho, 0.05)),
-            Pricing::Price(_) => None,
-        },
-        _ => None,
-    };
-    let mut draft: Option<DraftScreen> = cfg.draft_screen.then(|| DraftScreen::new(img, 1e-3));
     let mut precisions: Vec<f64> = Vec::new();
 
     for step in 0..cfg.steps {
@@ -170,30 +176,38 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             vec![0.0f32; b * n_act]
         };
 
-        // ---- forward pass, one shard per worker (the only place the
+        // ---- stage 1: SCREEN. A warm draft pre-gates the batch on
+        // predicted surprisal (one dot per sample); cold batches pass
+        // whole. No advantage hint here: U needs the forward.
+        let verdict = gl.screen(&ctx.x, b, None, &mut acct);
+        let survivors = verdict.survivors_or_all(b);
+        let k = survivors.len();
+
+        // ---- stage 2: FORWARD, survivors only (the only place the
         // policy is evaluated on the training path); the parameter
-        // tensors are marshalled once here and shared across shards
+        // tensors are marshalled once here and shared across calls
         params.marshal_into(&mut param_inputs);
-        let logp: Vec<f32> = gl.sharded_forward(
+        let logp: Vec<f32> = gl.forward(
             &param_inputs,
             "mnist_fwd",
             |cap| format!("mnist_fwd_c{cap}"),
-            fwd_buckets.as_ref(),
+            &survivors,
             b,
             n_act,
             &mut acct,
-            |shard, cap| {
-                let idx: Vec<usize> = shard.range().collect();
-                let xs = gather_rows_f32(&ctx.x, img, &idx, cap);
-                let ns = gather_rows_f32(&noise, n_act, &idx, cap);
+            |idx, cap| {
+                let xs = gather_rows_f32(&ctx.x, img, idx, cap);
+                let ns = gather_rows_f32(&noise, n_act, idx, cap);
                 vec![HostTensor::f32(&[cap, img], xs), HostTensor::f32(&[cap, n_act], ns)]
             },
         )?;
 
-        // ---- act, observe rewards, build signals: sharded, with
-        // per-sample RNG streams so draws are independent of sharding
+        // ---- act, observe rewards, build signals: sharded over survivor
+        // slots, with per-sample RNG streams keyed by the ORIGINAL batch
+        // index so draws are independent of sharding AND of screening
         let seed = cfg.seed;
-        let scored: Vec<ShardScore> = gl.pool().run(gl.shards(b), |_, shard| {
+        let survivors_ref = &survivors;
+        let scored: Vec<ShardScore> = gl.pool().run(gl.shards(k), |_, shard| {
             let mut sc = ShardScore {
                 actions: Vec::with_capacity(shard.len()),
                 u: Vec::with_capacity(shard.len()),
@@ -201,9 +215,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 p_star: Vec::with_capacity(shard.len()),
                 greedy_wrong: 0,
             };
-            for i in shard.range() {
+            for s in shard.range() {
+                let i = survivors_ref[s];
                 let mut srng = unit_rng(seed, step as u64, i as u64);
-                let row = &logp[i * n_act..(i + 1) * n_act];
+                let row = &logp[s * n_act..(s + 1) * n_act];
                 let a = srng.categorical_from_logits(row);
                 let pi: Vec<f32> = row.iter().map(|&l| l.exp()).collect();
                 let y = ctx.y[i];
@@ -219,10 +234,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             }
             sc
         });
-        let mut actions = Vec::with_capacity(b);
-        let mut u = Vec::with_capacity(b);
-        let mut ell = Vec::with_capacity(b);
-        let mut p_star = Vec::with_capacity(b);
+        let mut actions = Vec::with_capacity(k);
+        let mut u = Vec::with_capacity(k);
+        let mut ell = Vec::with_capacity(k);
+        let mut p_star = Vec::with_capacity(k);
         let mut greedy_wrong = 0usize;
         for sc in scored {
             actions.extend(sc.actions);
@@ -231,52 +246,35 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             p_star.extend(sc.p_star);
             greedy_wrong += sc.greedy_wrong;
         }
-        train_err_window.push(greedy_wrong as f64 / b as f64);
+        // under an active screen this is the error over the survivor set
+        // (the screened-out rows have no forward to grade)
+        train_err_window.push(greedy_wrong as f64 / k as f64);
 
-        // ---- delight (with optional screening noise) and the weight rule;
-        // chi is merged in batch order so the gate's quantile price is
-        // batch-global regardless of sharding
+        // ---- stage 3: GATE on the survivors' exact delight (with
+        // optional screening noise); chi is merged in batch order so the
+        // quantile price is batch-global regardless of sharding
         let chi: Vec<f64> = u.iter().zip(&ell).map(|(&a, &l)| a * l).collect();
-        let mut chi_noisy = if cfg.delight_noise_rel > 0.0 {
+        let chi_noisy = if cfg.delight_noise_rel > 0.0 {
             Some(perturb_delight_rel(&chi, cfg.delight_noise_rel, &mut rng))
         } else if cfg.delight_noise_abs > 0.0 {
             Some(perturb_delight_abs(&chi, cfg.delight_noise_abs, &mut rng))
         } else {
             None
         };
-        // speculative screen: gate on draft-predicted delight once the
-        // draft is warm; keep training it on the exact surprisal either way
-        if let Some(d) = draft.as_mut() {
-            if d.warmed_up(b) {
-                let chi_hat = d.predict_delight(&ctx.x, &u);
-                if let Method::DgK { gate, .. } = &cfg.method {
-                    if let Pricing::Rate(rho) = gate.pricing {
-                        precisions.push(screening_precision(&chi, &chi_hat, rho));
-                    }
-                }
-                chi_noisy = Some(chi_hat);
+        // screen quality diagnostic: the draft's predicted delight for the
+        // survivors vs their exact delight, precision at the gate's rate
+        if let (ScreenVerdict::Screened { scores, .. }, Method::DgK { gate, .. }) =
+            (&verdict, &cfg.method)
+        {
+            if let Pricing::Rate(rho) = gate.pricing {
+                let chi_hat: Vec<f64> =
+                    survivors.iter().enumerate().map(|(s, &i)| u[s] * scores[i]).collect();
+                precisions.push(screening_precision(&chi, &chi_hat, rho));
             }
-            d.update(&ctx.x, &ell);
         }
         let signals =
             BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: chi_noisy.as_deref() };
-        // streaming-lambda ablation: price from the cross-batch tracker
-        // (hard gate), then feed this batch's delight into the tracker
-        let decision = if let (Some(tracker), Method::DgK { priority, .. }) =
-            (stream_tracker.as_mut(), &cfg.method)
-        {
-            let gate_chi =
-                signals.chi_override.map(|c| c.to_vec()).unwrap_or_else(|| chi.clone());
-            let lam = if tracker.count() >= b { tracker.value() } else { f64::INFINITY };
-            let m = Method::DgK { gate: KondoGate::price(lam), priority: *priority };
-            let d = m.decide(&signals, &mut rng);
-            for &c in &gate_chi {
-                tracker.update(c);
-            }
-            d
-        } else {
-            cfg.method.decide(&signals, &mut rng)
-        };
+        let decision = gl.decide(&cfg.method, &signals, &mut rng);
 
         if cfg.gate_profile_steps.contains(&(step + 1)) {
             let keep_set: std::collections::HashSet<usize> =
@@ -288,27 +286,38 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 kept_samples: vec![],
                 skipped_samples: vec![],
             };
-            for i in 0..b {
-                let rec = (ctx.y[i], actions[i] as usize, p_star[i]);
-                if keep_set.contains(&i) {
-                    gp.kept_p.push(p_star[i]);
+            for s in 0..k {
+                let i = survivors[s];
+                let rec = (ctx.y[i], actions[s] as usize, p_star[s]);
+                if keep_set.contains(&s) {
+                    gp.kept_p.push(p_star[s]);
                     gp.kept_samples.push(rec);
                 } else {
-                    gp.skipped_p.push(p_star[i]);
+                    gp.skipped_p.push(p_star[s]);
                     gp.skipped_samples.push(rec);
                 }
             }
             gate_profiles.push(gp);
         }
 
-        // ---- bucketed backward over the kept set, chunks across workers
+        // ---- stage 4: BACKWARD over the kept set, chunks across workers.
+        // The decision indexes survivor slots; packing and row gathering
+        // use the original batch indices.
         if !decision.keep.is_empty() {
-            let chunks = gl.buckets().pack(&decision.keep);
+            let keep_orig: Vec<usize> = decision.keep.iter().map(|&s| survivors[s]).collect();
+            let chunks = gl.buckets().pack(&keep_orig);
             gl.record_backward_chunks(&mut acct, &chunks, 1, |c| c.idx.len());
-            let weights_all = &decision.weights;
+            // scatter the survivor-slot weights/actions back to batch
+            // indices so chunk gathering works exactly as it always has
+            let mut w_batch = vec![0.0f32; b];
+            let mut a_batch = vec![0i32; b];
+            for (s, &i) in survivors.iter().enumerate() {
+                w_batch[i] = decision.weights[s];
+                a_batch[i] = actions[s];
+            }
             // params are unchanged since the forward marshal above, so the
             // same buffer serves every backward chunk
-            gl.sharded_backward(
+            gl.backward(
                 &mut params,
                 &param_inputs,
                 &mut opt,
@@ -316,11 +325,11 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 |cap| format!("mnist_bwd_c{cap}"),
                 |chunk| {
                     let cap = chunk.cap;
-                    let per: Vec<f32> = chunk.idx.iter().map(|&i| weights_all[i]).collect();
+                    let per: Vec<f32> = chunk.idx.iter().map(|&i| w_batch[i]).collect();
                     let ident: Vec<usize> = (0..chunk.idx.len()).collect();
                     vec![
                         HostTensor::f32(&[cap, img], gather_rows_f32(&ctx.x, img, &chunk.idx, cap)),
-                        HostTensor::i32(&[cap], gather_i32(&actions, &chunk.idx, cap)),
+                        HostTensor::i32(&[cap], gather_i32(&a_batch, &chunk.idx, cap)),
                         HostTensor::f32(&[cap], gather_f32(&per, &ident, cap)),
                     ]
                 },
@@ -328,6 +337,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 b as f32,
             )?;
         }
+
+        // ---- the draft trains online on whatever exact surprisals the
+        // surviving forwards produced (cold batches feed the whole batch)
+        gl.observe_screen(&ctx.x, &survivors, &ell);
 
         // ---- evaluation cadence
         let last = step + 1 == cfg.steps;
@@ -337,6 +350,8 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             curve.push(EvalPoint {
                 step: step + 1,
                 forward_samples: totals.forward_samples,
+                screen_samples: totals.screen_samples,
+                forward_skipped: totals.forward_skipped,
                 backward_kept: totals.backward_kept,
                 backward_executed: totals.backward_executed,
                 metric: train_err_window.mean(),

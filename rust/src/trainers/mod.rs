@@ -1,27 +1,35 @@
-//! Training loops (the L3 scheduler): forward artifact -> delight -> Kondo
-//! gate -> bucketed backward -> optimizer, with the compute ledger and
-//! noise-injection hooks every experiment driver needs.
+//! Training loops (the L3 scheduler): screen -> forward artifact ->
+//! delight -> Kondo gate -> bucketed backward -> optimizer, with the
+//! compute ledger and noise-injection hooks every experiment driver needs.
 //!
 //! `GatedLoop` is the shared parallel substrate both trainers (and future
-//! envs) run on: it owns the **persistent** worker pool (threads spawned
+//! envs) run on. It owns the **persistent** worker pool (threads spawned
 //! once in `new`, alive for the whole training run, joined when the loop
-//! drops) and the backward bucket set, and provides the two sharded phases
-//! of a gated training step -- `sharded_forward` (split the batch across
-//! shard-capacity forward artifacts) and `sharded_backward` (execute
-//! packed backward chunks concurrently, then merge the per-chunk partial
-//! gradients in chunk order and step the optimizer).
+//! drops) and composes the four explicit stages of the L4 speculative
+//! screening pipeline (`coordinator::pipeline`, DESIGN.md §8):
+//!
+//! 1. [`ScreenStage`] -- tier 1 of the two-tier gate: a warm draft model
+//!    pre-gates the batch at `rho_screen` with one dot product per sample;
+//!    cold batches fall back to the full-forward path.
+//! 2. [`ForwardStage`] -- plans how the survivor set executes: contiguous
+//!    shards for the unscreened batch, survivors packed densely through
+//!    the forward capacity ladder when screened.
+//! 3. [`GateStage`] -- exact delight on the survivors, one batch-global
+//!    Kondo price (including the streaming-lambda pricing ablation).
+//! 4. [`BackwardStage`] -- bucketed backward chunks across the pool,
+//!    gradients merged in chunk order, one optimizer step.
 //!
 //! The hot path is zero-copy: trainers marshal the parameter tensors once
-//! per step into a reusable buffer (`ParamStore::marshal_into`) and both
+//! per step into a reusable buffer (`ParamStore::marshal_into`) and the
 //! sharded phases share that buffer across every chunk/shard by reference
 //! (`Engine::execute_refs`) instead of cloning the full parameter list per
-//! call; the gradient accumulator is preallocated once per run and reused
-//! every step.
+//! call; the gradient accumulator is preallocated once per run.
 //!
-//! Batch-global work -- resolving the Kondo gate's quantile price over the
-//! merged chi scores -- stays on the caller's thread, which is what keeps
-//! `workers = N` trajectories bit-identical to `workers = 1` (the
-//! determinism contract, DESIGN.md §"L3 parallelism").
+//! Batch-global work -- the screen's quantile threshold and the Kondo
+//! gate's quantile price, both over merged score vectors -- stays on the
+//! caller's thread, which is what keeps `workers = N` trajectories
+//! bit-identical to `workers = 1` (the determinism contract, DESIGN.md
+//! §"L3 parallelism" and §8).
 
 pub mod mnist;
 pub mod reversal;
@@ -31,18 +39,27 @@ pub use reversal::{train_reversal, ReversalRunResult, ReversalTrainerCfg};
 
 use anyhow::Result;
 
+use crate::algo::{BatchSignals, Method, WeightDecision};
 use crate::coordinator::batcher::BucketSet;
-use crate::coordinator::pool::{split_shards, Shard, WorkerPool};
+use crate::coordinator::pipeline::{
+    BackwardStage, ForwardPlan, ForwardStage, GateStage, ScreenCfg, ScreenStage, ScreenVerdict,
+};
+use crate::coordinator::pool::{non_empty_shards, split_shards, Shard, WorkerPool};
 use crate::coordinator::{PackedChunk, ShardedLedger};
-use crate::model::{accumulate, ParamStore};
+use crate::model::ParamStore;
 use crate::optim::Optimizer;
 use crate::runtime::{Engine, HostTensor};
+use crate::utils::rng::Pcg32;
 
 /// One point of a learning curve, indexed by both step and compute.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalPoint {
     pub step: usize,
     pub forward_samples: u64,
+    /// tier-1 screen dot products so far (0 on unscreened runs)
+    pub screen_samples: u64,
+    /// forwards the screen spared so far (0 on unscreened runs)
+    pub forward_skipped: u64,
     pub backward_kept: u64,
     pub backward_executed: u64,
     /// task metric: classification error (MNIST) or mean reward (reversal)
@@ -51,13 +68,14 @@ pub struct EvalPoint {
     pub metric2: f64,
 }
 
-/// The shared gate->bucket->backward->optimizer substrate.
+/// The shared screen->forward->gate->backward substrate.
 pub struct GatedLoop<'e> {
     eng: &'e Engine,
     pool: WorkerPool,
-    buckets: BucketSet,
-    /// gradient accumulator reused across steps (sized on first backward)
-    grad_acc: Vec<Vec<f32>>,
+    screen: Option<ScreenStage>,
+    fwd: ForwardStage,
+    gate: GateStage,
+    bwd: BackwardStage,
 }
 
 impl<'e> GatedLoop<'e> {
@@ -65,9 +83,34 @@ impl<'e> GatedLoop<'e> {
         Ok(GatedLoop {
             eng,
             pool: WorkerPool::new(workers),
-            buckets: BucketSet::new(bwd_caps)?,
-            grad_acc: Vec::new(),
+            screen: None,
+            fwd: ForwardStage::new(None),
+            gate: GateStage::passthrough(),
+            bwd: BackwardStage::new(bwd_caps)?,
         })
+    }
+
+    /// Attach the forward capacity ladder (enables both the unscreened
+    /// shard path and the screened packed path).
+    pub fn with_fwd_caps(mut self, caps: Option<BucketSet>) -> GatedLoop<'e> {
+        self.fwd = ForwardStage::new(caps);
+        self
+    }
+
+    /// Attach a tier-1 speculative screen over `dim`-wide draft features,
+    /// with `unit` samples per batch (the warm-up denominator). Inactive
+    /// configurations (`rho_screen = 1`) attach nothing.
+    pub fn with_screen(mut self, dim: usize, unit: usize, cfg: ScreenCfg) -> GatedLoop<'e> {
+        if cfg.active() && dim > 0 {
+            self.screen = Some(ScreenStage::new(dim, unit, cfg));
+        }
+        self
+    }
+
+    /// Configure the gate stage (streaming-lambda pricing ablation).
+    pub fn with_gate(mut self, method: &Method, streaming: bool, min_count: usize) -> GatedLoop<'e> {
+        self.gate = GateStage::new(method, streaming, min_count);
+        self
     }
 
     pub fn pool(&self) -> &WorkerPool {
@@ -75,114 +118,187 @@ impl<'e> GatedLoop<'e> {
     }
 
     pub fn buckets(&self) -> &BucketSet {
-        &self.buckets
+        self.bwd.buckets()
     }
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
     }
 
-    /// Contiguous shards of an `n`-row batch for this pool. This is the
-    /// dispatch layer: empty shards (`split_shards(0, w)` yields one) are
-    /// skipped here so they are never handed to workers as tasks.
-    pub fn shards(&self, n: usize) -> Vec<Shard> {
-        split_shards(n, self.pool.workers()).into_iter().filter(|s| !s.is_empty()).collect()
+    pub fn screen_stage(&self) -> Option<&ScreenStage> {
+        self.screen.as_ref()
     }
 
-    /// Sharded forward: split `rows` inputs across workers, each executing
-    /// the artifact `shard_name(cap)` at the smallest compiled capacity
-    /// `cap >= shard len` from `fwd_caps`, then stitch the f32 output rows
-    /// back in shard order. Falls back to one `full_name` call when the
-    /// pool has a single worker, no shard capacities exist, or a shard
-    /// does not fit any capacity.
+    /// Contiguous shards of an `n`-row batch for this pool. This is the
+    /// dispatch layer: empty shards (`split_shards(0, w)` yields one) are
+    /// skipped (`pool::non_empty_shards`) so they are never handed to
+    /// workers as tasks.
+    pub fn shards(&self, n: usize) -> Vec<Shard> {
+        non_empty_shards(n, self.pool.workers())
+    }
+
+    /// Stage 1: tier-1 verdict for one batch of `n` draft-feature rows
+    /// (`feats` is `[n, dim]`). Returns `Full` when no screen is attached,
+    /// the draft is cold, or the score distribution is degenerate. See
+    /// `ScreenStage::screen` for the `u_hint` semantics.
+    pub fn screen(
+        &self,
+        feats: &[f32],
+        n: usize,
+        u_hint: Option<&[f64]>,
+        acct: &mut ShardedLedger,
+    ) -> ScreenVerdict {
+        match &self.screen {
+            None => ScreenVerdict::Full,
+            Some(stage) => stage.screen(&self.pool, &self.shards(n), feats, n, u_hint, acct),
+        }
+    }
+
+    /// Train the draft online on the exact surprisals the surviving
+    /// forwards produced (no-op when no screen is attached).
+    pub fn observe_screen(&mut self, feats: &[f32], rows: &[usize], ell: &[f64]) {
+        if let Some(stage) = self.screen.as_mut() {
+            stage.observe(feats, rows, ell);
+        }
+    }
+
+    /// Stage 2: execute the forward over `survivors` (original batch
+    /// indices, ascending) of a `batch_n`-row batch, returning the f32
+    /// output rows **in survivor order**.
+    ///
+    /// The plan comes from `ForwardStage::plan`: the unscreened batch
+    /// keeps the contiguous-shard path (or one `full_name` call), while a
+    /// screened survivor set is packed densely through the forward
+    /// capacity ladder -- skipped forwards are recorded in
+    /// `forward_skipped` and never executed. A screened batch *without* a
+    /// capacity ladder falls back to the full-batch call and gathers the
+    /// survivor rows from its output (nothing skipped, nothing recorded).
     ///
     /// `param_inputs` is the step's marshalled parameter list, shared by
-    /// reference across every shard call; `build` returns only the
-    /// non-parameter inputs of a shard.
+    /// reference across every call; `build(idx, cap)` returns only the
+    /// non-parameter inputs for the rows `idx` padded to `cap`.
     ///
-    /// Forward work is recorded into `acct` per logical shard, with padded
-    /// capacity slots counted in `forward_executed` (mirroring the
-    /// backward executed-slot convention); `forward_samples` stays
-    /// worker-invariant.
+    /// Forward work is recorded into `acct` per logical shard/chunk, with
+    /// padded capacity slots counted in `forward_executed` (mirroring the
+    /// backward executed-slot convention); `forward_samples`,
+    /// `screen_samples`, and `forward_skipped` stay worker-invariant.
     ///
-    /// Bit-equality between the sharded and full paths is guaranteed by
-    /// the backend's row-independence contract (runtime/native.rs).
+    /// Bit-equality between the packed, sharded, and full paths is
+    /// guaranteed by the backend's row-independence contract
+    /// (runtime/native.rs).
     #[allow(clippy::too_many_arguments)]
-    pub fn sharded_forward<F, N>(
+    pub fn forward<F, N>(
         &self,
         param_inputs: &[HostTensor],
         full_name: &str,
         shard_name: N,
-        fwd_caps: Option<&BucketSet>,
-        rows: usize,
+        survivors: &[usize],
+        batch_n: usize,
         out_width: usize,
         acct: &mut ShardedLedger,
         build: F,
     ) -> Result<Vec<f32>>
     where
-        F: Fn(&Shard, usize) -> Vec<HostTensor> + Sync,
+        F: Fn(&[usize], usize) -> Vec<HostTensor> + Sync,
         N: Fn(usize) -> String + Sync,
     {
         let eng = self.eng;
-        let shards = self.shards(rows);
-        let caps = match fwd_caps {
-            Some(caps)
-                if self.pool.workers() > 1
-                    && shards.iter().all(|s| caps.smallest_fitting(s.len()).is_some()) =>
-            {
-                caps
-            }
-            _ => {
+        let k = survivors.len();
+        match self.fwd.plan(survivors, batch_n, self.pool.workers()) {
+            ForwardPlan::FullBatch => {
                 // one full-batch call: no padding, and exactly one
                 // recorded call, attributed to shard 0 (that is where the
                 // work really ran)
-                let full = Shard::full(rows);
-                let extras = build(&full, rows);
+                let all: Vec<usize> = (0..batch_n).collect();
+                let extras = build(&all, batch_n);
                 let mut inputs: Vec<&HostTensor> =
                     Vec::with_capacity(param_inputs.len() + extras.len());
                 inputs.extend(param_inputs.iter());
                 inputs.extend(extras.iter());
                 let mut out = eng.execute_refs(full_name, &inputs)?;
-                acct.shard_mut(0).record_forward(rows);
-                return out.remove(0).into_f32();
+                acct.shard_mut(0).record_forward(batch_n);
+                let rows = out.remove(0).into_f32()?;
+                if k == batch_n {
+                    return Ok(rows);
+                }
+                // screened fallback without a capacity ladder: the full
+                // forward ran, so nothing was skipped -- gather survivors
+                let mut picked = Vec::with_capacity(k * out_width);
+                for &i in survivors {
+                    picked.extend_from_slice(&rows[i * out_width..(i + 1) * out_width]);
+                }
+                Ok(picked)
             }
-        };
-        let parts: Vec<Result<Vec<f32>>> = self.pool.run(shards.clone(), |_, shard| {
-            let cap = caps.smallest_fitting(shard.len()).unwrap();
-            let extras = build(&shard, cap);
-            let mut inputs: Vec<&HostTensor> =
-                Vec::with_capacity(param_inputs.len() + extras.len());
-            inputs.extend(param_inputs.iter());
-            inputs.extend(extras.iter());
-            let mut out = eng.execute_refs(&shard_name(cap), &inputs)?;
-            let mut rows_out = out.remove(0).into_f32()?;
-            rows_out.truncate(shard.len() * out_width);
-            Ok(rows_out)
-        });
-        for shard in &shards {
-            let cap = caps.smallest_fitting(shard.len()).unwrap();
-            acct.shard_mut(shard.index).record_forward_padded(shard.len(), cap);
+            ForwardPlan::Sharded(pairs) => {
+                // tasks borrow the plan: no per-step copies on the hot path
+                let tasks: Vec<&(Shard, usize)> = pairs.iter().collect();
+                let parts: Vec<Result<Vec<f32>>> = self.pool.run(tasks, |_, &(shard, cap)| {
+                    let idx: Vec<usize> = shard.range().collect();
+                    let extras = build(&idx, cap);
+                    let mut inputs: Vec<&HostTensor> =
+                        Vec::with_capacity(param_inputs.len() + extras.len());
+                    inputs.extend(param_inputs.iter());
+                    inputs.extend(extras.iter());
+                    let mut out = eng.execute_refs(&shard_name(cap), &inputs)?;
+                    let mut rows_out = out.remove(0).into_f32()?;
+                    rows_out.truncate(shard.len() * out_width);
+                    Ok(rows_out)
+                });
+                for (shard, cap) in &pairs {
+                    acct.shard_mut(shard.index).record_forward_padded(shard.len(), *cap);
+                }
+                let mut merged = Vec::with_capacity(batch_n * out_width);
+                for part in parts {
+                    merged.extend_from_slice(&part?);
+                }
+                Ok(merged)
+            }
+            ForwardPlan::Packed(chunks) => {
+                // tasks borrow the plan: survivor index vectors are not
+                // copied per step (the backward path does the same)
+                let tasks: Vec<&PackedChunk> = chunks.iter().collect();
+                let parts: Vec<Result<Vec<f32>>> = self.pool.run(tasks, |_, chunk| {
+                    let extras = build(&chunk.idx, chunk.cap);
+                    let mut inputs: Vec<&HostTensor> =
+                        Vec::with_capacity(param_inputs.len() + extras.len());
+                    inputs.extend(param_inputs.iter());
+                    inputs.extend(extras.iter());
+                    let mut out = eng.execute_refs(&shard_name(chunk.cap), &inputs)?;
+                    let mut rows_out = out.remove(0).into_f32()?;
+                    rows_out.truncate(chunk.idx.len() * out_width);
+                    Ok(rows_out)
+                });
+                for (ci, chunk) in chunks.iter().enumerate() {
+                    acct.shard_mut(acct.chunk_owner(ci))
+                        .record_forward_padded(chunk.idx.len(), chunk.cap);
+                }
+                // the screen's win, made real: these rows never ran
+                acct.shard_mut(0).record_forward_skipped(batch_n - k);
+                let mut merged = Vec::with_capacity(k * out_width);
+                for part in parts {
+                    merged.extend_from_slice(&part?);
+                }
+                Ok(merged)
+            }
         }
-        let mut merged = Vec::with_capacity(rows * out_width);
-        for part in parts {
-            merged.extend_from_slice(&part?);
-        }
-        Ok(merged)
     }
 
-    /// Execute packed backward chunks across the pool and apply one
-    /// optimizer step. Each worker produces its chunk's partial gradient
-    /// buffers (the backward artifact's output tensors); the caller merges
-    /// them into the run-persistent accumulator in **chunk order** (the
-    /// pool returns results in task order, never completion order), so the
-    /// f32 reduction order is identical to the serial `workers = 1` path.
-    /// The merged gradient is normalized by `denom` before the step.
-    ///
-    /// `param_inputs` is the step's marshalled parameter list, shared by
-    /// reference across every chunk call; `extra_inputs` builds only the
-    /// non-parameter inputs of chunk `c` for artifact `artifact(c.cap)`.
+    /// Stage 3: the Kondo decision over the survivors' exact signals.
+    /// Indices in the returned decision are relative to the signal vectors
+    /// (survivor slots); callers map them back to batch indices.
+    pub fn decide(
+        &mut self,
+        method: &Method,
+        signals: &BatchSignals,
+        rng: &mut Pcg32,
+    ) -> WeightDecision {
+        self.gate.decide(method, signals, rng)
+    }
+
+    /// Stage 4: execute packed backward chunks across the pool and apply
+    /// one optimizer step (see `BackwardStage::run`).
     #[allow(clippy::too_many_arguments)]
-    pub fn sharded_backward<F, N>(
+    pub fn backward<F, N>(
         &mut self,
         params: &mut ParamStore,
         param_inputs: &[HostTensor],
@@ -196,60 +312,21 @@ impl<'e> GatedLoop<'e> {
         F: Fn(&PackedChunk) -> Vec<HostTensor> + Sync,
         N: Fn(usize) -> String + Sync,
     {
-        if chunks.is_empty() {
-            return Ok(());
-        }
-        // the zero-copy contract: callers re-marshal after every optimizer
-        // step. Cheap to get wrong silently, so verify under debug builds
-        // (the dev-profile test runs keep this armed).
-        debug_assert!(
-            param_inputs.len() == params.n_tensors()
-                && (0..params.n_tensors()).all(|i| {
-                    param_inputs[i].as_f32().map(|d| d == params.tensor(i)).unwrap_or(false)
-                }),
-            "sharded_backward: param_inputs is stale relative to params \
-             (re-marshal after every optimizer step)"
-        );
-        let eng = self.eng;
-        let tasks: Vec<&PackedChunk> = chunks.iter().collect();
-        let results: Vec<Result<Vec<HostTensor>>> = self.pool.run(tasks, |_, chunk| {
-            let extras = extra_inputs(chunk);
-            let mut inputs: Vec<&HostTensor> =
-                Vec::with_capacity(param_inputs.len() + extras.len());
-            inputs.extend(param_inputs.iter());
-            inputs.extend(extras.iter());
-            let out = eng.execute_refs(&artifact(chunk.cap), &inputs)?;
-            // out[0] is the loss scalar; the rest are gradients
-            Ok(out.into_iter().skip(1).collect())
-        });
-        // reuse the run-persistent accumulator when the layout matches
-        // (steady state after the first backward of a run)
-        let n = params.n_tensors();
-        if self.grad_acc.len() == n
-            && (0..n).all(|i| self.grad_acc[i].len() == params.tensor(i).len())
-        {
-            for tensor in self.grad_acc.iter_mut() {
-                tensor.fill(0.0);
-            }
-        } else {
-            self.grad_acc = params.zeros_like();
-        }
-        // ordered reduction: chunk order, not completion order
-        for result in results {
-            let grads = result?;
-            accumulate(&mut self.grad_acc, &grads)?;
-        }
-        for tensor in self.grad_acc.iter_mut() {
-            for v in tensor.iter_mut() {
-                *v /= denom;
-            }
-        }
-        opt.step(params, &self.grad_acc);
-        Ok(())
+        self.bwd.run(
+            self.eng,
+            &self.pool,
+            params,
+            param_inputs,
+            opt,
+            chunks,
+            artifact,
+            extra_inputs,
+            denom,
+        )
     }
 
     /// Record one batch's backward chunks into a shard-aware ledger
-    /// (round-robin chunk ownership; see `ShardedLedger::backward_owner`).
+    /// (round-robin chunk ownership; see `ShardedLedger::chunk_owner`).
     pub fn record_backward_chunks(
         &self,
         acct: &mut ShardedLedger,
@@ -284,5 +361,23 @@ mod tests {
         let sh = gl.shards(10);
         assert_eq!(sh.iter().map(Shard::len).sum::<usize>(), 10);
         assert!(sh.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn inactive_screen_cfg_attaches_no_stage() {
+        let eng = Engine::native_testbed();
+        let gl = GatedLoop::new(&eng, 2, vec![4])
+            .unwrap()
+            .with_screen(16, 8, ScreenCfg::default());
+        assert!(gl.screen_stage().is_none(), "rho_screen = 1 must not attach a screen");
+        let mut acct = ShardedLedger::new(2);
+        let v = gl.screen(&[], 8, None, &mut acct);
+        assert!(!v.is_screened());
+        assert_eq!(v.survivors_or_all(8), (0..8).collect::<Vec<_>>());
+
+        let gl = GatedLoop::new(&eng, 2, vec![4])
+            .unwrap()
+            .with_screen(16, 8, ScreenCfg::at_rate(0.5));
+        assert!(gl.screen_stage().is_some());
     }
 }

@@ -1,11 +1,21 @@
 //! Token-reversal trainer (paper §5, App D): transformer rollout fully
-//! inside the compiled artifact, per-token Kondo gating, episode-level
-//! bucketed backward over the coordinator's worker pool.
+//! inside the compiled artifact, per-token two-tier Kondo gating, episode-
+//! level bucketed backward over the coordinator's worker pool.
 //!
 //! Gating is at TOKEN granularity (the paper gates tokens); the backward
 //! executor works at EPISODE granularity (a sequence either enters the
 //! backward batch or not), so an episode is executed iff it has at least
 //! one kept token, and its weight tensor zeroes all skipped tokens.
+//!
+//! Screening (DESIGN.md §8): the tier-1 draft pre-gates TOKENS before the
+//! exact-delight gate, drafting on **embedded token rows** -- each token is
+//! represented by the current `emit`-table embedding of its sampled action
+//! -- weighted by the exact grouped-baseline advantage (known before the
+//! gate, unlike MNIST). The rollout itself is one fixed-shape batch-global
+//! artifact call and always runs whole, so reversal screening narrows the
+//! gate's candidate set and the backward episode set (`screen_samples`
+//! counts the dots; `forward_skipped` stays 0 -- no forward is avoidable
+//! here). Models without an `emit` tensor simply never screen.
 //!
 //! Sharding: the rollout stays one batch-global artifact call (the
 //! autoregressive sampling loop lives inside the artifact and draws
@@ -19,7 +29,7 @@ use anyhow::Result;
 use crate::algo::baseline::grouped_baseline;
 use crate::algo::{BatchSignals, Method};
 use crate::coordinator::batcher::{gather_rows_f32, gather_rows_i32};
-use crate::coordinator::{Ledger, ShardedLedger};
+use crate::coordinator::{Ledger, ScreenCfg, ShardedLedger};
 use crate::envs::reversal::ReversalEnv;
 use crate::model::ParamStore;
 use crate::optim::Adam;
@@ -41,6 +51,9 @@ pub struct ReversalTrainerCfg {
     pub eval_every: usize,
     /// PPO inner epochs (ratio updates against the rollout policy)
     pub inner_epochs: usize,
+    /// tier-1 speculative token screen on embedded token rows (DESIGN.md
+    /// §8); requires the model to expose an `emit` embedding table
+    pub screen: ScreenCfg,
     /// worker threads for sharded scoring/backward (1 = serial)
     pub workers: usize,
 }
@@ -56,6 +69,7 @@ impl Default for ReversalTrainerCfg {
             seed: 0,
             eval_every: 10,
             inner_epochs: 1,
+            screen: ScreenCfg::default(),
             workers: 1,
         }
     }
@@ -95,7 +109,17 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let rules = man.model(&format!("reversal{h_max}"))?.to_vec();
     let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x2545) ^ 0xcafe);
     let mut opt = Adam::new(cfg.lr, &params);
-    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.rev_bwd_caps.clone())?;
+    let n_tok = batch * cfg.h;
+    // the token screen drafts on embedded token rows: it needs the emit
+    // table's row width, and quietly stays off for models without one
+    let emit_width = rules
+        .iter()
+        .find(|r| r.name == "emit")
+        .and_then(|r| r.shape.last().copied())
+        .unwrap_or(0);
+    let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.rev_bwd_caps.clone())?
+        .with_screen(emit_width.max(1), n_tok, if emit_width > 0 { cfg.screen } else { ScreenCfg::default() })
+        .with_gate(&cfg.method, false, n_tok);
     // artifact names are fixed for the whole run; build them once
     let rollout_name = format!("{prefix}_rollout");
     let fwd_name = format!("{prefix}_fwd");
@@ -139,7 +163,6 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
         reward_sum += crate::utils::stats::mean(&rewards);
         reward_window.push(crate::utils::stats::mean(&rewards));
 
-        let n_tok = batch * cfg.h;
         let h = cfg.h;
         let signals_per_shard: Vec<(Vec<f64>, Vec<f64>)> =
             gl.pool().run(gl.shards(batch), |_, shard| {
@@ -159,6 +182,26 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
         for (su, sell) in signals_per_shard {
             u.extend(su);
             ell.extend(sell);
+        }
+
+        // ---- stage 1: SCREEN over tokens. Features are the CURRENT emit
+        // embeddings of the sampled action tokens; the exact advantage
+        // (known pre-gate, unlike MNIST) weights predicted surprisal into
+        // predicted delight. The rollout already ran whole -- reversal
+        // screening narrows the gate candidate set, it skips no forwards.
+        let feats = if gl.screen_stage().is_some() {
+            token_feats(&params, &actions, batch, cfg.h, h_max, emit_width)
+        } else {
+            Vec::new()
+        };
+        let verdict = gl.screen(&feats, n_tok, Some(&u), &mut acct);
+        let survivors = verdict.survivors_or_all(n_tok);
+
+        // the draft trains online on the exact surprisals the rollout
+        // produced for the surviving tokens
+        if gl.screen_stage().is_some() {
+            let sell0: Vec<f64> = survivors.iter().map(|&t| ell[t]).collect();
+            gl.observe_screen(&feats, &survivors, &sell0);
         }
 
         let logp_roll: Vec<f64> = ell.iter().map(|&e| -e).collect();
@@ -189,21 +232,31 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 (e, Some(logp_roll.as_slice()))
             };
 
-            // one batch-global gate decision over the merged token scores
-            let signals =
-                BatchSignals { u: &u, ell: &ell_cur, logp_old: lp_old, chi_override: None };
-            let decision = cfg.method.decide(&signals, &mut rng);
+            // ---- stage 3: one batch-global gate decision over the merged
+            // SURVIVOR token scores (tier 2 of the two-tier gate)
+            let su: Vec<f64> = survivors.iter().map(|&t| u[t]).collect();
+            let sell: Vec<f64> = survivors.iter().map(|&t| ell_cur[t]).collect();
+            let slp_old: Option<Vec<f64>> =
+                lp_old.map(|l| survivors.iter().map(|&t| l[t]).collect());
+            let signals = BatchSignals {
+                u: &su,
+                ell: &sell,
+                logp_old: slp_old.as_deref(),
+                chi_override: None,
+            };
+            let decision = gl.decide(&cfg.method, &signals, &mut rng);
             if decision.keep.is_empty() {
                 continue;
             }
 
-            // ---- token keep-set -> episode list + weight tensor
+            // ---- token keep-set (survivor slots) -> episode list + weights
             let mut ep_weights = vec![0.0f32; batch * h_max];
             let mut ep_has = vec![false; batch];
-            for &t in &decision.keep {
+            for &s in &decision.keep {
+                let t = survivors[s];
                 let ep = t / cfg.h;
                 let j = t % cfg.h;
-                ep_weights[ep * h_max + j] = decision.weights[t];
+                ep_weights[ep * h_max + j] = decision.weights[s];
                 ep_has[ep] = true;
             }
             let episodes: Vec<usize> = (0..batch).filter(|&e| ep_has[e]).collect();
@@ -217,7 +270,7 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 (kept_tokens as f64 * share) as usize
             });
             // params unchanged since this epoch's marshal: share the buffer
-            gl.sharded_backward(
+            gl.backward(
                 &mut params,
                 &param_inputs,
                 &mut opt,
@@ -254,6 +307,8 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
             curve.push(EvalPoint {
                 step: step + 1,
                 forward_samples: totals.forward_samples,
+                screen_samples: totals.screen_samples,
+                forward_skipped: totals.forward_skipped,
                 backward_kept: totals.backward_kept,
                 backward_executed: totals.backward_executed,
                 metric: recent,
@@ -270,4 +325,29 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
         final_reward,
         mean_reward: reward_sum / cfg.steps.max(1) as f64,
     })
+}
+
+/// Draft features for the token screen: token (ep, j) is represented by
+/// the current `emit`-table embedding row of its sampled action. Pure
+/// function of the parameters and the sampled actions, so the feature
+/// matrix -- like every screen input -- is worker-invariant.
+fn token_feats(
+    params: &ParamStore,
+    actions: &[i32],
+    batch: usize,
+    h: usize,
+    h_max: usize,
+    width: usize,
+) -> Vec<f32> {
+    let emit = params.by_name("emit").expect("token_feats requires an emit table");
+    let rows = emit.len() / width;
+    let mut feats = vec![0.0f32; batch * h * width];
+    for ep in 0..batch {
+        for j in 0..h {
+            let tok = (actions[ep * h_max + j].max(0) as usize).min(rows - 1);
+            let t = ep * h + j;
+            feats[t * width..(t + 1) * width].copy_from_slice(&emit[tok * width..(tok + 1) * width]);
+        }
+    }
+    feats
 }

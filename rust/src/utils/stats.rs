@@ -26,10 +26,13 @@ pub fn sem(xs: &[f64]) -> f64 {
 }
 
 /// q-quantile (linear interpolation on sorted copy), q in [0,1].
+/// total_cmp, not partial_cmp().unwrap(): a NaN score (diverged draft,
+/// 0 * inf delight) must order deterministically instead of panicking a
+/// training run mid-step.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -50,7 +53,7 @@ pub fn quantile_f32(xs: &[f32], q: f64) -> f32 {
 /// Empirical CDF evaluated at sorted sample points: returns (xs_sorted, F(x)).
 pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len() as f64;
     let f = (1..=v.len()).map(|i| i as f64 / n).collect();
     (v, f)
@@ -103,6 +106,23 @@ pub fn summarize(xs: &[f64]) -> Summary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn quantile_tolerates_nan() {
+        // regression: the partial_cmp().unwrap() sort panicked on NaN;
+        // total_cmp ranks NaN above every finite value deterministically
+        let xs = [1.0, f64::NAN, -2.0, 0.5];
+        let q = quantile(&xs, 0.25);
+        assert!(q.is_finite(), "low quantile must come from the finite values");
+        assert_eq!(
+            quantile(&xs, 0.0).to_bits(),
+            (-2.0f64).to_bits(),
+            "minimum is the smallest finite value"
+        );
+        // repeated calls agree bitwise (total order, no tie-break races)
+        assert_eq!(quantile(&xs, 0.5).to_bits(), quantile(&xs, 0.5).to_bits());
+        let _ = ecdf(&xs);
+    }
 
     #[test]
     fn mean_std_sem() {

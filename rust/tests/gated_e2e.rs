@@ -11,18 +11,22 @@
 //! would mean the shard merge reordered floating-point work).
 
 use kondo::algo::{baseline::Baseline, Method};
-use kondo::coordinator::{KondoGate, Priority};
+use kondo::coordinator::{KondoGate, Priority, ScreenCfg};
 use kondo::runtime::Engine;
 use kondo::trainers::{
     train_mnist, train_reversal, EvalPoint, MnistTrainerCfg, ReversalTrainerCfg,
 };
 
-/// Exact (bitwise) equality of two learning curves.
+/// Exact (bitwise) equality of two learning curves. The screen counters
+/// are inside the determinism contract (batch-global decisions), so they
+/// are compared exactly too.
 fn assert_curves_bit_identical(a: &[EvalPoint], b: &[EvalPoint], what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
     for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
         assert_eq!(pa.step, pb.step, "{what}[{i}].step");
         assert_eq!(pa.forward_samples, pb.forward_samples, "{what}[{i}].forward_samples");
+        assert_eq!(pa.screen_samples, pb.screen_samples, "{what}[{i}].screen_samples");
+        assert_eq!(pa.forward_skipped, pb.forward_skipped, "{what}[{i}].forward_skipped");
         assert_eq!(pa.backward_kept, pb.backward_kept, "{what}[{i}].backward_kept");
         assert_eq!(pa.backward_executed, pb.backward_executed, "{what}[{i}].backward_executed");
         assert_eq!(
@@ -173,6 +177,7 @@ fn rev_cfg(workers: usize) -> ReversalTrainerCfg {
         eval_every: 4,
         inner_epochs: 1,
         workers,
+        ..Default::default()
     }
 }
 
@@ -211,6 +216,140 @@ fn reversal_sharded_trajectory_is_bit_identical() {
     // the zero-price gate keeps only positive-delight tokens
     let last = serial_a.curve.last().unwrap();
     assert!(last.backward_kept < last.forward_samples);
+}
+
+// ---- L4 screening pipeline: the determinism contract extends to the
+// tier-1 screen (DESIGN.md §8) ----
+
+fn mnist_screen_cfg(workers: usize) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        // hard two-tier gate: rho_screen = 0.5 pre-gate, rho = 0.25 gate
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        lr: 1e-3,
+        steps: 30,
+        eval_every: 10,
+        eval_size: 64,
+        seed: 13,
+        screen: ScreenCfg { rho_screen: 0.5, draft_lr: 1e-3, warmup_batches: 5 },
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mnist_screened_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch as u64;
+
+    let serial_a = train_mnist(&eng, &mnist_screen_cfg(1)).unwrap();
+    let serial_b = train_mnist(&eng, &mnist_screen_cfg(1)).unwrap();
+    assert_curves_bit_identical(&serial_a.curve, &serial_b.curve, "mnist screened serial");
+
+    for workers in [2, 4, 7] {
+        let sharded = train_mnist(&eng, &mnist_screen_cfg(workers)).unwrap();
+        assert_curves_bit_identical(
+            &serial_a.curve,
+            &sharded.curve,
+            &format!("mnist screened workers={workers}"),
+        );
+        // exact ledger totals, screen counters included: every screen
+        // decision is batch-global, hence worker-invariant
+        assert_eq!(serial_a.ledger.forward_samples, sharded.ledger.forward_samples);
+        assert_eq!(serial_a.ledger.screen_samples, sharded.ledger.screen_samples);
+        assert_eq!(serial_a.ledger.forward_skipped, sharded.ledger.forward_skipped);
+        assert_eq!(serial_a.ledger.backward_kept, sharded.ledger.backward_kept);
+        assert_eq!(serial_a.ledger.backward_executed, sharded.ledger.backward_executed);
+        assert_eq!(serial_a.ledger.bucket_hist, sharded.ledger.bucket_hist);
+        // shard attribution still covers the same totals
+        let t = sharded.shard_ledger.total();
+        assert_eq!(t.screen_samples, sharded.ledger.screen_samples);
+        assert_eq!(t.forward_skipped, sharded.ledger.forward_skipped);
+    }
+
+    // the screen really engaged after warm-up and really skipped forwards
+    let l = &serial_a.ledger;
+    assert!(l.screen_samples > 0, "warm draft never screened");
+    assert!(l.forward_skipped > 0, "screen skipped no forwards");
+    // warm-up: 5 batches pass whole before the draft screens
+    assert!(l.screen_samples <= (30 - 5) * b, "cold batches must not screen");
+    // every sample is either forwarded or skipped -- nothing double-counted
+    assert_eq!(l.forward_samples + l.forward_skipped, 30 * b);
+    // and the forward axis really drops below the unscreened run's
+    assert!(l.forward_samples < 30 * b);
+    // screened survivor chunks are padded to the capacity ladder, so the
+    // executed forward slots also stay below the unscreened full batches
+    assert!(l.forward_executed < 30 * b);
+}
+
+#[test]
+fn mnist_screened_vs_unscreened_trajectories_differ() {
+    // guard against a vacuously-passing screen: with the same seed, the
+    // screened run must actually change the trajectory and skip forwards
+    let eng = Engine::native_testbed();
+    let screened = train_mnist(&eng, &mnist_screen_cfg(4)).unwrap();
+    let mut cfg = mnist_screen_cfg(4);
+    cfg.screen = ScreenCfg::default();
+    let unscreened = train_mnist(&eng, &cfg).unwrap();
+    assert_eq!(unscreened.ledger.forward_skipped, 0);
+    assert_eq!(unscreened.ledger.screen_samples, 0);
+    assert!(screened.ledger.forward_samples < unscreened.ledger.forward_samples);
+    // the two-tier gate prices over survivors, so the kept backward set
+    // genuinely differs from the single-tier run
+    let same = screened
+        .curve
+        .iter()
+        .zip(&unscreened.curve)
+        .all(|(x, y)| {
+            x.metric2.to_bits() == y.metric2.to_bits() && x.backward_kept == y.backward_kept
+        });
+    assert!(!same, "screening changed nothing");
+}
+
+fn rev_screen_cfg(workers: usize) -> ReversalTrainerCfg {
+    ReversalTrainerCfg {
+        screen: ScreenCfg { rho_screen: 0.5, draft_lr: 1e-3, warmup_batches: 2 },
+        ..rev_cfg(workers)
+    }
+}
+
+#[test]
+fn reversal_screened_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let serial = train_reversal(&eng, &rev_screen_cfg(1)).unwrap();
+    for workers in [2, 4] {
+        let sharded = train_reversal(&eng, &rev_screen_cfg(workers)).unwrap();
+        assert_curves_bit_identical(
+            &serial.curve,
+            &sharded.curve,
+            &format!("reversal screened workers={workers}"),
+        );
+        assert_eq!(serial.ledger.screen_samples, sharded.ledger.screen_samples);
+        assert_eq!(serial.ledger.backward_kept, sharded.ledger.backward_kept);
+        assert_eq!(serial.ledger.bucket_hist, sharded.ledger.bucket_hist);
+    }
+    // the token screen engaged (embedded-token-row draft over the emit
+    // table), but the fixed-shape rollout always runs whole
+    let n_tok = (eng.manifest().constants.rev_batch * 4) as u64;
+    assert!(serial.ledger.screen_samples > 0, "token screen never engaged");
+    assert_eq!(
+        serial.ledger.screen_samples % n_tok,
+        0,
+        "screened batches screen every token exactly once"
+    );
+    assert_eq!(serial.ledger.forward_skipped, 0, "reversal has no skippable forward");
+    // the two-tier gate still gates: kept tokens well below the rollout
+    assert!(serial.ledger.backward_kept > 0);
+    assert!(serial.ledger.backward_kept < serial.ledger.forward_samples);
+    // and the screened trajectory is a genuinely different run than the
+    // unscreened one (the tier-1 pre-gate has teeth)
+    let unscreened = train_reversal(&eng, &rev_cfg(1)).unwrap();
+    let same = serial
+        .curve
+        .iter()
+        .zip(&unscreened.curve)
+        .all(|(x, y)| x.metric.to_bits() == y.metric.to_bits() && x.backward_kept == y.backward_kept);
+    assert!(!same, "token screening changed nothing");
 }
 
 #[test]
