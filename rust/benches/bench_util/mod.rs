@@ -4,7 +4,10 @@
 //! PR-over-PR (`BENCH_e2e.json`) instead of living only in scrollback.
 #![allow(dead_code)] // each bench target compiles its own subset
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use kondo::utils::json::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -46,22 +49,28 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, warmup: usize, mut f: F) -> B
     r
 }
 
-/// One machine-readable bench entry: a (section, method, workers) cell of
-/// the e2e matrix with its per-step latency and throughput.
+/// One machine-readable bench entry: a (section, method, workers) cell
+/// of a bench matrix with its per-call latency and throughput. The
+/// `unit` names what `throughput_per_sec` counts ("samples" for MNIST
+/// rows, "tokens" for reversal, "gflops" for kernel microbenchmarks) --
+/// keeps cross-section comparisons honest.
 pub struct BenchEntry {
     pub section: String,
     pub method: String,
     pub workers: usize,
     pub mean_ns_per_step: f64,
     pub throughput_per_sec: f64,
-    /// what `throughput_per_sec` counts ("samples" for MNIST rows,
-    /// "tokens" for reversal) -- keeps cross-section comparisons honest
     pub unit: String,
 }
 
-/// Collects bench entries and writes them as a JSON report. The format is
-/// intentionally flat (one object per (section, method, workers) cell) so
-/// PR-over-PR diffs and plots need no schema gymnastics.
+/// Collects bench entries and merge-writes them into the shared
+/// `BENCH_e2e.json` trajectory file (schema 2): the file holds one
+/// section per bench binary under `"benches"`, and each bench run
+/// replaces only its own section, so `e2e_step` and `kernels` results
+/// coexist in one committed trajectory point. The entry format is flat
+/// (one object per (section, method, workers) cell) so PR-over-PR diffs
+/// and plots need no schema gymnastics; `rust/tests/bench_schema.rs`
+/// validates the committed file against this schema in tier-1.
 pub struct JsonReport {
     bench: String,
     platform: String,
@@ -92,49 +101,82 @@ impl JsonReport {
         });
     }
 
-    /// Serialize to pretty-printed JSON. Strings here are simple
-    /// identifiers (method/section names), so escaping is limited to the
-    /// characters they could plausibly contain.
-    pub fn to_json(&self) -> String {
-        let mut s = String::new();
-        s.push_str("{\n");
-        s.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
-        s.push_str("  \"schema\": 1,\n");
-        s.push_str(&format!("  \"platform\": \"{}\",\n", esc(&self.platform)));
-        s.push_str("  \"entries\": [\n");
-        for (i, e) in self.entries.iter().enumerate() {
+    /// This report's section as a Json value:
+    /// `{"platform": ..., "entries": [...]}`.
+    fn section_json(&self) -> Json {
+        let mut entries = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let mut o = BTreeMap::new();
+            o.insert("section".to_string(), Json::Str(e.section.clone()));
+            o.insert("method".to_string(), Json::Str(e.method.clone()));
+            o.insert("workers".to_string(), Json::Num(e.workers as f64));
+            o.insert(
+                "mean_ns_per_step".to_string(),
+                Json::Num((e.mean_ns_per_step * 10.0).round() / 10.0),
+            );
+            o.insert("unit".to_string(), Json::Str(e.unit.clone()));
+            o.insert(
+                "throughput_per_s".to_string(),
+                Json::Num((e.throughput_per_sec * 10.0).round() / 10.0),
+            );
             let per_worker = e.throughput_per_sec / e.workers.max(1) as f64;
-            s.push_str(&format!(
-                "    {{\"section\": \"{}\", \"method\": \"{}\", \"workers\": {}, \
-                 \"mean_ns_per_step\": {:.1}, \"unit\": \"{}\", \
-                 \"samples_per_s\": {:.1}, \"samples_per_s_per_worker\": {:.1}}}{}\n",
-                esc(&e.section),
-                esc(&e.method),
-                e.workers,
-                e.mean_ns_per_step,
-                esc(&e.unit),
-                e.throughput_per_sec,
-                per_worker,
-                if i + 1 == self.entries.len() { "" } else { "," }
-            ));
+            o.insert(
+                "throughput_per_s_per_worker".to_string(),
+                Json::Num((per_worker * 10.0).round() / 10.0),
+            );
+            entries.push(Json::Obj(o));
         }
-        s.push_str("  ]\n}\n");
-        s
+        let mut sec = BTreeMap::new();
+        sec.insert("platform".to_string(), Json::Str(self.platform.clone()));
+        sec.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(sec)
     }
 
-    /// Write the report to `path`, replacing any previous trajectory
-    /// point. Errors are reported, not fatal: a read-only checkout must
-    /// not fail the bench run itself.
+    fn merged_doc(&self, existing: Option<Json>) -> Json {
+        // start from the existing benches map when the file is already
+        // schema 2; anything else (schema 1, corrupt, missing) is
+        // replaced wholesale
+        let mut benches = match existing.as_ref().and_then(|j| j.get("benches")) {
+            Some(Json::Obj(m))
+                if existing.as_ref().and_then(|j| j.get("schema")).and_then(Json::as_f64)
+                    == Some(2.0) =>
+            {
+                m.clone()
+            }
+            _ => BTreeMap::new(),
+        };
+        benches.insert(self.bench.clone(), self.section_json());
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Num(2.0));
+        doc.insert(
+            "note".to_string(),
+            Json::Str(
+                "Perf trajectory, one section per bench binary; each run of a bench \
+                 replaces its own section only. Populate with `cargo bench --bench \
+                 e2e_step` and `cargo bench --bench kernels` from the repo root."
+                    .to_string(),
+            ),
+        );
+        doc.insert("benches".to_string(), Json::Obj(benches));
+        Json::Obj(doc)
+    }
+
+    /// Merge-write the report into `path`: sections owned by other
+    /// benches survive, this bench's section is replaced. Errors are
+    /// reported, not fatal: a read-only checkout must not fail the bench
+    /// run itself.
     pub fn write(&self, path: &str) {
-        match std::fs::write(path, self.to_json()) {
-            Ok(()) => println!("\nwrote {path} ({} entries)", self.entries.len()),
+        let existing = std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok());
+        let doc = self.merged_doc(existing);
+        match std::fs::write(path, doc.dump()) {
+            Ok(()) => println!(
+                "\nwrote {path} ({} entries in section '{}')",
+                self.entries.len(),
+                self.bench
+            ),
             Err(e) => eprintln!("\nfailed to write {path}: {e}"),
         }
     }
-}
-
-fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 pub fn fmt_ns(ns: f64) -> String {

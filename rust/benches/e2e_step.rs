@@ -12,9 +12,10 @@
 //! The worker axis is derived from `std::thread::available_parallelism()`
 //! (powers of two up to the core count, core count included); set
 //! `KONDO_BENCH_WORKERS=1,2,8` to override it. Besides the human-readable
-//! table, the run emits `BENCH_e2e.json` (override the path with
-//! `KONDO_BENCH_JSON`) so the repo's perf trajectory is recorded
-//! PR-over-PR.
+//! table, the run merge-writes its section of `BENCH_e2e.json` (schema 2,
+//! one section per bench binary — the `kernels` microbench owns the
+//! other; override the path with `KONDO_BENCH_JSON`) so the repo's perf
+//! trajectory is recorded PR-over-PR.
 
 mod bench_util;
 

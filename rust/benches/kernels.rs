@@ -1,0 +1,152 @@
+//! Kernel-layer microbenchmarks: GFLOP/s per kernel of the native
+//! compute spine (DESIGN.md §9) — the MNIST forward/backward GEMMs, the
+//! reversal attention kernels, and log-softmax — at the exact shapes the
+//! testbed artifacts run. Results merge into `BENCH_e2e.json` (section
+//! `kernels`) alongside the `e2e_step` entries, so the per-kernel and
+//! end-to-end trajectories live in one committed file; override the path
+//! with `KONDO_BENCH_JSON`.
+//!
+//! Entry convention: `mean_ns_per_step` is the mean wall-clock of ONE
+//! kernel call at the stated shape, `throughput_per_s` is GFLOP/s
+//! (`unit: "gflops"`), `workers` is always 1 (kernels are single-thread
+//! primitives; parallelism lives a layer up in the worker pool).
+
+mod bench_util;
+
+use bench_util::{bench, JsonReport};
+use kondo::runtime::kernels::{
+    gather_mix_masked, gemm_bias_logsoftmax, gemm_bias_tanh, log_softmax_rows, outer_acc,
+    softmax_jacobian_rows, softmax_rows, WeightPack,
+};
+use kondo::runtime::native::{
+    MNIST_ACTIONS, MNIST_BATCH, MNIST_HIDDEN, MNIST_IN, REV_HMAX, REV_VOCAB,
+};
+use kondo::utils::math::LANES;
+use kondo::utils::rng::Pcg32;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Record one kernel cell: per-call latency plus GFLOP/s from the
+/// analytic flop count of the benched shape.
+fn record(report: &mut JsonReport, section: &str, method: &str, mean_ns: f64, flops: f64) {
+    let gflops = flops / mean_ns; // flops per ns == GFLOP/s
+    report.record(section, method, 1, mean_ns, gflops, "gflops");
+    println!("    -> {gflops:.3} GFLOP/s");
+}
+
+fn main() {
+    let mut report = JsonReport::new("kernels", "native");
+    let iters = 200;
+    let warmup = 20;
+
+    // ---- MNIST forward GEMM: [32, 784] x [784, 32], fused bias+tanh
+    {
+        let x = randv(MNIST_BATCH * MNIST_IN, 1);
+        let w = randv(MNIST_IN * MNIST_HIDDEN, 2);
+        let bias = randv(MNIST_HIDDEN, 3);
+        let pack = WeightPack::new(&w, MNIST_IN, MNIST_HIDDEN, 0);
+        let mut out = vec![0.0f32; MNIST_BATCH * MNIST_HIDDEN];
+        let r = bench("mnist fwd gemm+tanh [32x784x32]", iters, warmup, || {
+            gemm_bias_tanh(&x, MNIST_BATCH, &pack, &bias, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        let flops = 2.0 * (MNIST_BATCH * MNIST_IN * MNIST_HIDDEN) as f64;
+        record(&mut report, "mnist_fwd", "gemm_bias_tanh_32x784x32", r.mean_ns, flops);
+    }
+
+    // ---- MNIST head GEMM: [32, 32] x [32, 10], fused bias+log-softmax
+    {
+        let h = randv(MNIST_BATCH * MNIST_HIDDEN, 4);
+        let w = randv(MNIST_HIDDEN * MNIST_ACTIONS, 5);
+        let bias = randv(MNIST_ACTIONS, 6);
+        let pack = WeightPack::new(&w, MNIST_HIDDEN, MNIST_ACTIONS, 0);
+        let mut scratch = vec![0.0f32; MNIST_ACTIONS];
+        let mut out = vec![0.0f32; MNIST_BATCH * MNIST_ACTIONS];
+        let r = bench("mnist head gemm+logsoftmax [32x32x10]", iters, warmup, || {
+            gemm_bias_logsoftmax(&h, MNIST_BATCH, &pack, &bias, None, &mut scratch, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        let flops = 2.0 * (MNIST_BATCH * MNIST_HIDDEN * MNIST_ACTIONS) as f64;
+        record(&mut report, "mnist_fwd", "gemm_bias_logsoftmax_32x32x10", r.mean_ns, flops);
+    }
+
+    // ---- MNIST backward GEMM: the rank-1 g_w1 scatter, one batch of
+    // per-sample outer products at the forward's shape
+    {
+        let xs = randv(MNIST_BATCH * MNIST_IN, 7);
+        let dpre = randv(MNIST_HIDDEN, 8);
+        let mut gw1 = vec![0.0f32; MNIST_IN * MNIST_HIDDEN];
+        let r = bench("mnist bwd outer_acc x32 [784x32]", iters, warmup, || {
+            for i in 0..MNIST_BATCH {
+                outer_acc(&xs[i * MNIST_IN..(i + 1) * MNIST_IN], &dpre, &mut gw1);
+            }
+            std::hint::black_box(&mut gw1);
+        });
+        let flops = 2.0 * (MNIST_BATCH * MNIST_IN * MNIST_HIDDEN) as f64;
+        record(&mut report, "mnist_bwd", "outer_acc_batch32_784x32", r.mean_ns, flops);
+    }
+
+    // ---- reversal attention: gather-mix logits over a full episode
+    // (h_max positions) plus the batched softmax-Jacobian backward
+    {
+        let attn = randv(REV_HMAX * REV_HMAX, 9);
+        let mut alpha = vec![0.0f32; REV_HMAX * REV_HMAX];
+        softmax_rows(&attn, REV_HMAX, REV_HMAX, &mut alpha);
+        let emit = randv((REV_VOCAB + 1) * REV_VOCAB, 10);
+        let idx: Vec<usize> = (0..REV_HMAX).map(|k| (k * 3) % (REV_VOCAB + 1)).collect();
+        let mut acc = vec![0.0f64; REV_VOCAB * LANES];
+        let mut logits = vec![0.0f32; REV_VOCAB];
+        let r = bench("rev attention gather_mix x8 [8x8]", iters, warmup, || {
+            for j in 0..REV_HMAX {
+                gather_mix_masked(
+                    &alpha[j * REV_HMAX..(j + 1) * REV_HMAX],
+                    &emit,
+                    REV_VOCAB,
+                    &idx,
+                    REV_VOCAB,
+                    -1.0e30,
+                    &mut acc,
+                    &mut logits,
+                );
+                std::hint::black_box(&mut logits);
+            }
+        });
+        let flops = 2.0 * (REV_HMAX * REV_HMAX * REV_VOCAB) as f64;
+        record(&mut report, "rev_attention", "gather_mix_8pos_8x8", r.mean_ns, flops);
+
+        let dalpha = randv(REV_HMAX * REV_HMAX, 11);
+        let mut gattn = vec![0.0f32; REV_HMAX * REV_HMAX];
+        let r = bench("rev attention softmax_jacobian [8x8]", iters, warmup, || {
+            softmax_jacobian_rows(&alpha, &dalpha, REV_HMAX, REV_HMAX, &mut gattn);
+            std::hint::black_box(&mut gattn);
+        });
+        // per row: a dot (2n) + n multiply-subtracts (2n)
+        let flops = 4.0 * (REV_HMAX * REV_HMAX) as f64;
+        record(&mut report, "rev_attention", "softmax_jacobian_8x8", r.mean_ns, flops);
+    }
+
+    // ---- log-softmax rows (single-pass logsumexp epilogue) at the MNIST
+    // head shape
+    {
+        let logits = randv(MNIST_BATCH * MNIST_ACTIONS, 12);
+        let mut out = vec![0.0f32; MNIST_BATCH * MNIST_ACTIONS];
+        let r = bench("log_softmax_rows [32x10]", iters, warmup, || {
+            log_softmax_rows(&logits, MNIST_BATCH, MNIST_ACTIONS, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        // per element: one exp-accumulate in the lse sweep + one subtract
+        let flops = 3.0 * (MNIST_BATCH * MNIST_ACTIONS) as f64;
+        record(&mut report, "log_softmax", "log_softmax_rows_32x10", r.mean_ns, flops);
+    }
+
+    let json_path = std::env::var("KONDO_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e.json").to_string());
+    report.write(&json_path);
+
+    println!("\nexpected shape: the fwd GEMM dominated by the 784-wide reduction should");
+    println!("sit within a small factor of scalar-f64 peak; the e2e_step bench tells");
+    println!("whether those GFLOP/s survive the full Screen -> Forward -> Gate -> Backward path.");
+}

@@ -10,6 +10,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::runtime::tensor;
+
 /// A set of compiled backward capacities, ascending.
 #[derive(Debug, Clone)]
 pub struct BucketSet {
@@ -89,9 +91,13 @@ impl BucketSet {
 }
 
 /// Gather rows of a flat [n, row] matrix into a padded [cap, row] buffer.
+/// The buffer comes from the tensor arena (zero-filled, so padding slots
+/// stay exact zeros); the per-chunk consumers recycle it after the
+/// artifact call, which is what keeps chunk gathering allocation-free in
+/// the steady state.
 pub fn gather_rows_f32(src: &[f32], row: usize, idx: &[usize], cap: usize) -> Vec<f32> {
     assert!(idx.len() <= cap);
-    let mut out = vec![0.0f32; cap * row];
+    let mut out = tensor::take_f32_zeroed(cap * row);
     for (slot, &i) in idx.iter().enumerate() {
         out[slot * row..(slot + 1) * row].copy_from_slice(&src[i * row..(i + 1) * row]);
     }
@@ -101,7 +107,7 @@ pub fn gather_rows_f32(src: &[f32], row: usize, idx: &[usize], cap: usize) -> Ve
 /// Same for i32 rows (tokens / actions).
 pub fn gather_rows_i32(src: &[i32], row: usize, idx: &[usize], cap: usize) -> Vec<i32> {
     assert!(idx.len() <= cap);
-    let mut out = vec![0i32; cap * row];
+    let mut out = tensor::take_i32_zeroed(cap * row);
     for (slot, &i) in idx.iter().enumerate() {
         out[slot * row..(slot + 1) * row].copy_from_slice(&src[i * row..(i + 1) * row]);
     }

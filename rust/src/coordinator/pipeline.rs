@@ -40,9 +40,9 @@ use crate::coordinator::gate::{KondoGate, Pricing};
 use crate::coordinator::pool::{non_empty_shards, Shard, WorkerPool};
 use crate::coordinator::quantile::EwQuantile;
 use crate::coordinator::speculative::DraftScreen;
-use crate::model::{accumulate, ParamStore};
+use crate::model::{accumulate_recycle, ParamStore};
 use crate::optim::Optimizer;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 use crate::utils::stats::quantile;
 
@@ -400,14 +400,20 @@ impl BackwardStage {
         }
         // the zero-copy contract: callers re-marshal after every optimizer
         // step. Cheap to get wrong silently, so verify under debug builds
-        // (the dev-profile test runs keep this armed).
+        // (the dev-profile test runs keep this armed). The same check
+        // covers the pack cache: a weight pack built at an older param
+        // version means the marshal (which refills packs) was skipped.
         debug_assert!(
             param_inputs.len() == params.n_tensors()
                 && (0..params.n_tensors()).all(|i| {
                     param_inputs[i].as_f32().map(|d| d == params.tensor(i)).unwrap_or(false)
+                        && param_inputs[i]
+                            .pack()
+                            .map(|p| p.version() == params.version())
+                            .unwrap_or(true)
                 }),
-            "BackwardStage::run: param_inputs is stale relative to params \
-             (re-marshal after every optimizer step)"
+            "BackwardStage::run: param_inputs (or its weight packs) is stale relative to \
+             params (re-marshal after every optimizer step)"
         );
         let tasks: Vec<&PackedChunk> = chunks.iter().collect();
         let results: Vec<Result<Vec<HostTensor>>> = pool.run(tasks, |_, chunk| {
@@ -417,8 +423,17 @@ impl BackwardStage {
             inputs.extend(param_inputs.iter());
             inputs.extend(extras.iter());
             let out = eng.execute_refs(&artifact(chunk.cap), &inputs)?;
+            // the gathered chunk inputs were taken from this worker's
+            // arena; hand them straight back now that the call is done
+            for t in extras {
+                tensor::recycle_tensor(t);
+            }
             // out[0] is the loss scalar; the rest are gradients
-            Ok(out.into_iter().skip(1).collect())
+            let mut out = out.into_iter();
+            if let Some(loss) = out.next() {
+                tensor::recycle_tensor(loss);
+            }
+            Ok(out.collect())
         });
         // reuse the run-persistent accumulator when the layout matches
         // (steady state after the first backward of a run)
@@ -432,10 +447,11 @@ impl BackwardStage {
         } else {
             self.grad_acc = params.zeros_like();
         }
-        // ordered reduction: chunk order, not completion order
+        // ordered reduction: chunk order, not completion order; the
+        // accumulator hands each gradient buffer back to the arena pool
         for result in results {
             let grads = result?;
-            accumulate(&mut self.grad_acc, &grads)?;
+            accumulate_recycle(&mut self.grad_acc, grads)?;
         }
         for tensor in self.grad_acc.iter_mut() {
             for v in tensor.iter_mut() {

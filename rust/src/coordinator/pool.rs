@@ -224,6 +224,10 @@ fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Job>>>, alive: Arc<AtomicUsize>) {
             Err(_) => break,
         }
     }
+    // park this worker's tensor-arena freelist in the shared pool so the
+    // buffers a finished run warmed up serve the next run's (fresh)
+    // worker threads instead of dying with this one
+    crate::runtime::tensor::flush_local_arena_to_shared();
     alive.fetch_sub(1, Ordering::SeqCst);
 }
 

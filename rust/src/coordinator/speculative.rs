@@ -39,14 +39,14 @@ impl DraftScreen {
         self.seen
     }
 
-    /// Predict surprisal for one input row.
+    /// Predict surprisal for one input row. This is the per-screened-
+    /// sample dot of the tier-1 screen, routed through the shared
+    /// lane-reduced `utils::math::dot` (the same fixed reduction tree the
+    /// kernel layer uses, so the screen's scores carry the same
+    /// shape-only ordering guarantee as every other reduction).
     pub fn predict(&self, x: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), self.w.len());
-        let mut acc = self.b as f64;
-        for (w, &v) in self.w.iter().zip(x) {
-            acc += (*w as f64) * v as f64;
-        }
-        acc
+        self.b as f64 + crate::utils::math::dot(&self.w, x)
     }
 
     /// One SGD step against a single observed surprisal.

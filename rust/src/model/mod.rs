@@ -4,15 +4,22 @@
 //! init rules in the manifest); every training step marshals them as the
 //! leading artifact inputs and applies optimizer updates to the host copy.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
-use crate::runtime::{HostTensor, InitKind, InitRule};
+use crate::runtime::{kernels::WeightPack, tensor, HostTensor, InitKind, InitRule};
 use crate::utils::rng::Pcg32;
 
 #[derive(Debug, Clone)]
 pub struct ParamStore {
     rules: Vec<InitRule>,
     tensors: Vec<Vec<f32>>,
+    /// bumped on every mutable tensor access — the pack-cache key: a
+    /// `WeightPack` built at version v is valid exactly while the store
+    /// stays at v (checked by `BackwardStage`'s stale-marshal guard in
+    /// debug builds)
+    version: u64,
 }
 
 impl ParamStore {
@@ -33,7 +40,12 @@ impl ParamStore {
                 }
             })
             .collect();
-        ParamStore { rules: rules.to_vec(), tensors }
+        ParamStore { rules: rules.to_vec(), tensors, version: 0 }
+    }
+
+    /// The pack-cache key: increments on every mutable tensor access.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     pub fn n_tensors(&self) -> usize {
@@ -53,6 +65,7 @@ impl ParamStore {
     }
 
     pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
+        self.version += 1;
         &mut self.tensors[i]
     }
 
@@ -64,11 +77,22 @@ impl ParamStore {
     }
 
     /// Parameters as the leading artifact inputs (fresh allocation).
+    /// Two-dimensional tensors get their GEMM [`WeightPack`] built here,
+    /// so every consumer of a marshalled parameter list — including the
+    /// eval path, which marshals once per sweep — hands the native
+    /// kernels pre-packed weights.
     pub fn as_inputs(&self) -> Vec<HostTensor> {
         self.rules
             .iter()
             .zip(&self.tensors)
-            .map(|(r, t)| HostTensor::f32(&r.shape, t.clone()))
+            .map(|(r, t)| match r.shape.as_slice() {
+                &[k, n] => HostTensor::f32_packed(
+                    &r.shape,
+                    t.clone(),
+                    Arc::new(WeightPack::new(t, k, n, self.version)),
+                ),
+                _ => HostTensor::f32(&r.shape, t.clone()),
+            })
             .collect()
     }
 
@@ -77,6 +101,19 @@ impl ParamStore {
     /// one buffer per training run, refreshed after each optimizer step)
     /// this is a pure `copy_from_slice` with no allocation; otherwise the
     /// buffer is (re)built from scratch.
+    ///
+    /// Packing happens here, beside marshalling: each 2-D tensor's
+    /// [`WeightPack`] is refilled in place (`Arc::get_mut` — nobody holds
+    /// the pack between steps, so the steady state never allocates),
+    /// keyed by the current [`ParamStore::version`]. One pack per weight
+    /// matrix per step, shared by reference across every forward shard
+    /// and backward chunk — never packed per call.
+    ///
+    /// The rule is deliberately uniform ("every 2-D tensor"), not
+    /// consumer-aware: the reversal model's `attn` (8x8) and `emit`
+    /// (9x8) tables get packs no kernel reads, but refilling those 136
+    /// elements per step is noise next to the step itself, and the
+    /// uniform rule keeps marshalling free of per-model knowledge.
     pub fn marshal_into(&self, out: &mut Vec<HostTensor>) {
         if out.len() != self.tensors.len() {
             *out = self.as_inputs();
@@ -84,12 +121,27 @@ impl ParamStore {
         }
         for ((rule, src), dst) in self.rules.iter().zip(&self.tensors).zip(out.iter_mut()) {
             match dst {
-                HostTensor::F32 { shape, data }
+                HostTensor::F32 { shape, data, pack }
                     if shape.as_slice() == rule.shape.as_slice() && data.len() == src.len() =>
                 {
                     data.copy_from_slice(src);
+                    if let &[k, n] = rule.shape.as_slice() {
+                        match pack.as_mut().and_then(Arc::get_mut) {
+                            Some(p) if p.k() == k && p.n() == n => p.refill(src, self.version),
+                            _ => *pack = Some(Arc::new(WeightPack::new(src, k, n, self.version))),
+                        }
+                    }
                 }
-                _ => *dst = HostTensor::f32(&rule.shape, src.clone()),
+                _ => {
+                    *dst = match rule.shape.as_slice() {
+                        &[k, n] => HostTensor::f32_packed(
+                            &rule.shape,
+                            src.clone(),
+                            Arc::new(WeightPack::new(src, k, n, self.version)),
+                        ),
+                        _ => HostTensor::f32(&rule.shape, src.clone()),
+                    }
+                }
             }
         }
     }
@@ -127,6 +179,29 @@ pub fn accumulate(acc: &mut [Vec<f32>], grads: &[HostTensor]) -> Result<()> {
         for (x, &y) in a.iter_mut().zip(gs) {
             *x += y;
         }
+    }
+    Ok(())
+}
+
+/// Hot-path variant of [`accumulate`]: consumes the gradient tensors and
+/// hands their buffers back to the tensor arena once summed — this is
+/// where per-chunk gradient allocations return to the pool, closing the
+/// take/recycle cycle of the backward stage.
+pub fn accumulate_recycle(acc: &mut [Vec<f32>], grads: Vec<HostTensor>) -> Result<()> {
+    if acc.len() != grads.len() {
+        bail!("accumulator arity mismatch");
+    }
+    for (a, g) in acc.iter_mut().zip(grads) {
+        {
+            let gs = g.as_f32()?;
+            if a.len() != gs.len() {
+                bail!("accumulator length mismatch");
+            }
+            for (x, &y) in a.iter_mut().zip(gs) {
+                *x += y;
+            }
+        }
+        tensor::recycle_tensor(g);
     }
     Ok(())
 }
@@ -197,6 +272,40 @@ mod tests {
     }
 
     #[test]
+    fn marshal_packs_2d_tensors_and_refills_in_place() {
+        let mut p = ParamStore::init(&rules(), 7);
+        let mut buf = Vec::new();
+        p.marshal_into(&mut buf);
+        // the [4,3] matrix is packed; the 1-D tensors are not
+        let pack = buf[0].pack().expect("2-D tensor must carry a pack");
+        assert_eq!(pack.unpack(), p.tensor(0));
+        assert_eq!(pack.version(), p.version());
+        assert!(buf[1].pack().is_none() && buf[2].pack().is_none());
+        // a refresh after mutation refills the same pack allocation
+        // (Arc refcount 1 between steps) and tracks the new version
+        p.tensor_mut(0)[0] += 2.0;
+        let v = p.version();
+        p.marshal_into(&mut buf);
+        let pack = buf[0].pack().unwrap();
+        assert_eq!(pack.version(), v);
+        assert_eq!(pack.unpack(), p.tensor(0));
+        // as_inputs packs identically
+        let fresh = p.as_inputs();
+        assert_eq!(fresh[0].pack().unwrap().unpack(), p.tensor(0));
+    }
+
+    #[test]
+    fn version_bumps_on_mutable_access_only() {
+        let mut p = ParamStore::init(&rules(), 7);
+        let v0 = p.version();
+        let _ = p.tensor(0);
+        let _ = p.by_name("w");
+        assert_eq!(p.version(), v0, "read access must not bump the version");
+        p.tensor_mut(1);
+        assert_eq!(p.version(), v0 + 1);
+    }
+
+    #[test]
     fn accumulate_adds() {
         let p = ParamStore::init(&rules(), 1);
         let mut acc = p.zeros_like();
@@ -208,6 +317,21 @@ mod tests {
         accumulate(&mut acc, &g).unwrap();
         accumulate(&mut acc, &g).unwrap();
         assert!(acc[0].iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn accumulate_recycle_matches_accumulate() {
+        let p = ParamStore::init(&rules(), 1);
+        let g: Vec<HostTensor> = p
+            .rules()
+            .iter()
+            .map(|r| HostTensor::f32(&r.shape, vec![2.0; r.numel()]))
+            .collect();
+        let mut a = p.zeros_like();
+        let mut b = p.zeros_like();
+        accumulate(&mut a, &g).unwrap();
+        accumulate_recycle(&mut b, g).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

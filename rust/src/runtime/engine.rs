@@ -13,6 +13,12 @@
 //!   reference backend of `runtime/native.rs`, with the same artifact
 //!   names/signatures over small models. It is deterministic and
 //!   row-independent, which is what the sharded-coordinator tests lock.
+//!   Its compute runs on the shared kernel layer (`runtime/kernels.rs`:
+//!   blocked GEMM over packed weight panels attached to the marshalled
+//!   parameter tensors, fused epilogues, fixed lane-tree reductions) and
+//!   its outputs are tensor-arena buffers (`runtime/tensor.rs`) that
+//!   consumers recycle — callers treat them as ordinary `HostTensor`s;
+//!   recycling is an optimization, never a requirement.
 //!
 //! The engine is `Sync` and `execute` takes `&self`: worker threads of the
 //! coordinator pool call it concurrently. Executable lookup holds the

@@ -1,0 +1,637 @@
+//! Native kernel layer: the shared compute primitives behind both native
+//! artifact families (DESIGN.md §9).
+//!
+//! Everything the native backend used to do with per-sample scalar loops
+//! routes through here: a cache-blocked GEMM microkernel over packed
+//! weight panels with fused epilogues (bias+tanh, bias+noise+log-softmax),
+//! a single-pass logsumexp, the gather-mix kernel behind the reversal
+//! pointer-attention logits, a batched softmax-Jacobian, and the
+//! elementwise update kernels (`axpy`, `outer_acc`) the backwards scatter
+//! through.
+//!
+//! **Determinism rule (the redefined contract).** Every reduction in this
+//! module accumulates element `i` into lane `i % LANES` in ascending
+//! index order and combines the lanes with the fixed tree
+//! `(l0 + l1) + (l2 + l3)` (`utils::math::lane_reduce` — the same scheme
+//! `utils::math::dot` uses). The reduction order is therefore a pure
+//! function of the operand *shapes*, never of worker count, thread,
+//! blocking, or batching: computing a row alone, in a shard, or in a
+//! padded capacity call yields bit-identical values, which is what keeps
+//! the gated_e2e worker-invariance guarantee intact on these kernels.
+//! Epilogue terms enter in a fixed order too: lane tree, then bias, then
+//! optional noise, all in f64, cast to f32 once at the end.
+//!
+//! **Pack cache.** GEMM weights are consumed as [`WeightPack`]s —
+//! row-panel-contiguous layouts built **once per optimizer step** beside
+//! parameter marshalling (`ParamStore::marshal_into`) and shared by
+//! reference (an `Arc` inside the marshalled `HostTensor`) across every
+//! forward shard and backward chunk of the step. The pack is keyed by the
+//! `ParamStore` version so a stale pack is detectable in debug builds;
+//! [`packs_built`] counts builds so tests can assert exactly one pack per
+//! weight matrix per step regardless of worker count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::utils::math::{lane_reduce, LANES};
+
+/// Columns per packed weight panel (the register-tile width of the GEMM
+/// microkernel). With `LANES` f64 accumulators per column the inner loop
+/// keeps `PANEL * LANES = 16` accumulators live — sized for the vector
+/// register file, and fixed so the packed layout is a pure function of
+/// the weight shape.
+pub const PANEL: usize = 4;
+
+/// Global count of weight-pack builds (fresh packs and in-place refills).
+/// Tests assert the once-per-step pack contract against deltas of this
+/// counter; it is not used for control flow.
+static PACKS_BUILT: AtomicU64 = AtomicU64::new(0);
+
+pub fn packs_built() -> u64 {
+    PACKS_BUILT.load(Ordering::Relaxed)
+}
+
+/// A `[k, n]` weight matrix repacked row-panel-contiguous for the GEMM
+/// microkernel: panel `p` holds columns `[p*PANEL, (p+1)*PANEL)` for all
+/// `k` rows contiguously (`data[(p*k + kk)*PANEL + j] = w[kk*n + p*PANEL
+/// + j]`, zero-padded past column `n`). Streaming a panel touches one
+/// contiguous `k * PANEL` block per output tile instead of `PANEL`
+/// strided columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightPack {
+    k: usize,
+    n: usize,
+    version: u64,
+    data: Vec<f32>,
+}
+
+impl WeightPack {
+    pub fn new(w: &[f32], k: usize, n: usize, version: u64) -> WeightPack {
+        let panels = n.div_ceil(PANEL);
+        let mut pack = WeightPack { k, n, version, data: vec![0.0; panels * k * PANEL] };
+        pack.refill(w, version);
+        pack
+    }
+
+    /// Refresh the pack in place from updated weights (same shape). This
+    /// is the steady-state per-step path: no allocation, one pass over
+    /// the matrix, counted in [`packs_built`].
+    pub fn refill(&mut self, w: &[f32], version: u64) {
+        assert_eq!(w.len(), self.k * self.n, "weight pack shape mismatch");
+        PACKS_BUILT.fetch_add(1, Ordering::Relaxed);
+        self.version = version;
+        let (k, n) = (self.k, self.n);
+        for p in 0..n.div_ceil(PANEL) {
+            let base = p * k * PANEL;
+            for kk in 0..k {
+                for j in 0..PANEL {
+                    let col = p * PANEL + j;
+                    self.data[base + kk * PANEL + j] =
+                        if col < n { w[kk * n + col] } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The `ParamStore` version this pack was built from (stale-pack
+    /// debug checks).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(PANEL)
+    }
+
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * PANEL..(p + 1) * self.k * PANEL]
+    }
+
+    /// Reconstruct the row-major matrix (tests / debugging).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.k * self.n];
+        for p in 0..self.n_panels() {
+            let panel = self.panel(p);
+            for kk in 0..self.k {
+                for j in 0..PANEL {
+                    let col = p * PANEL + j;
+                    if col < self.n {
+                        w[kk * self.n + col] = panel[kk * PANEL + j];
+                    }
+                }
+            }
+        }
+        w
+    }
+}
+
+/// One register tile of the microkernel: `acc[j][l]` accumulates
+/// `x[kk] * panel[kk][j]` for `kk ≡ l (mod LANES)`, ascending — the fixed
+/// lane assignment of the determinism rule.
+#[inline]
+fn panel_dot(xr: &[f32], panel: &[f32], k: usize, acc: &mut [[f64; LANES]; PANEL]) {
+    *acc = [[0.0; LANES]; PANEL];
+    let chunks = k / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let xv = xr[base + l] as f64;
+            let prow = &panel[(base + l) * PANEL..(base + l + 1) * PANEL];
+            for (j, &pv) in prow.iter().enumerate() {
+                acc[j][l] += xv * pv as f64;
+            }
+        }
+    }
+    let base = chunks * LANES;
+    for l in 0..(k - base) {
+        let xv = xr[base + l] as f64;
+        let prow = &panel[(base + l) * PANEL..(base + l + 1) * PANEL];
+        for (j, &pv) in prow.iter().enumerate() {
+            acc[j][l] += xv * pv as f64;
+        }
+    }
+}
+
+/// Blocked GEMM with fused bias + tanh epilogue:
+/// `out[r, c] = tanh(bias[c] + sum_k x[r, k] * W[k, c])`, `x` row-major
+/// `[rows, k]`, `out` `[rows, n]`. Row `r` of the output is a pure
+/// function of row `r` of `x` and the pack — batching rows changes
+/// nothing (row independence), and the per-element reduction is the
+/// fixed lane tree.
+pub fn gemm_bias_tanh(x: &[f32], rows: usize, w: &WeightPack, bias: &[f32], out: &mut [f32]) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
+    let mut acc = [[0.0f64; LANES]; PANEL];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for p in 0..w.n_panels() {
+            panel_dot(xr, w.panel(p), k, &mut acc);
+            let j0 = p * PANEL;
+            for j in 0..PANEL.min(n - j0) {
+                orow[j0 + j] = (bias[j0 + j] as f64 + lane_reduce(&acc[j])).tanh() as f32;
+            }
+        }
+    }
+}
+
+/// Blocked GEMM with fused bias (+ optional per-row additive noise) +
+/// log-softmax epilogue: `logits[r, c] = bias[c] + sum_k x[r, k]*W[k, c]
+/// (+ noise[r, c])`, `out[r, c] = logits[r, c] - logsumexp(logits[r, :])`.
+/// `scratch` stages one row of logits (`len >= n`); callers on the hot
+/// path hand in a stack buffer so the kernel allocates nothing.
+pub fn gemm_bias_logsoftmax(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    noise: Option<&[f32]>,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
+    debug_assert!(scratch.len() >= n);
+    let mut acc = [[0.0f64; LANES]; PANEL];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let logits = &mut scratch[..n];
+        for p in 0..w.n_panels() {
+            panel_dot(xr, w.panel(p), k, &mut acc);
+            let j0 = p * PANEL;
+            for j in 0..PANEL.min(n - j0) {
+                let c = j0 + j;
+                // fixed epilogue order: lane tree, bias, then noise
+                let mut v = bias[c] as f64 + lane_reduce(&acc[j]);
+                if let Some(nz) = noise {
+                    v += nz[r * n + c] as f64;
+                }
+                logits[c] = v as f32;
+            }
+        }
+        let lse = logsumexp_1pass(logits);
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (o, &l) in orow.iter_mut().zip(logits.iter()) {
+            *o = l - lse;
+        }
+    }
+}
+
+/// Single-pass logsumexp: one sweep maintaining the running max `m` and
+/// the rescaled sum `s = sum exp(x_i - m)` (when a new max arrives the
+/// sum is rescaled by `exp(m_old - m_new)`). f64-accumulated, sequential
+/// in index order — a pure function of the row.
+pub fn logsumexp_1pass(xs: &[f32]) -> f32 {
+    let mut m = f64::NEG_INFINITY;
+    let mut s = 0.0f64;
+    for &x in xs {
+        let x = x as f64;
+        // a -inf term contributes exp(-inf) = 0; skipping it also keeps
+        // the -inf - -inf = NaN case out of the running-max update
+        if x == f64::NEG_INFINITY {
+            continue;
+        }
+        if x <= m {
+            s += (x - m).exp();
+        } else {
+            // m = -inf gives exp(-inf) = 0 and s starts clean at 1
+            s = s * (m - x).exp() + 1.0;
+            m = x;
+        }
+    }
+    if !m.is_finite() {
+        // empty input or all -inf (fully masked row): the max is the
+        // answer, matching utils::math::logsumexp
+        return m as f32;
+    }
+    (m + s.ln()) as f32
+}
+
+/// Row-wise softmax: `out[r, :] = exp(x[r, :] - logsumexp(x[r, :]))`.
+pub fn softmax_rows(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let row = &x[r * n..(r + 1) * n];
+        let lse = logsumexp_1pass(row);
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - lse).exp();
+        }
+    }
+}
+
+/// Row-wise log-softmax (no GEMM): `out[r, :] = x[r, :] - lse(x[r, :])`.
+pub fn log_softmax_rows(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let row = &x[r * n..(r + 1) * n];
+        let lse = logsumexp_1pass(row);
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v - lse;
+        }
+    }
+}
+
+/// Gather-mix kernel behind the reversal pointer-attention logits:
+/// `out[v] = sum_k coef[k] * table[idx[k], v]` for `v < m`, every slot
+/// `>= m` set to `fill` (the mask). `acc` is caller scratch (`len >=
+/// m * LANES`, stack array on the hot path). Accumulation assigns term
+/// `k` to lane `k % LANES`, ascending, then the fixed tree — shapes
+/// only, per the determinism rule.
+pub fn gather_mix_masked(
+    coef: &[f32],
+    table: &[f32],
+    width: usize,
+    idx: &[usize],
+    m: usize,
+    fill: f32,
+    acc: &mut [f64],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(coef.len(), idx.len());
+    debug_assert!(m <= width && out.len() >= m && acc.len() >= m * LANES);
+    out.fill(fill);
+    let acc = &mut acc[..m * LANES];
+    acc.fill(0.0);
+    for (kk, (&c, &t)) in coef.iter().zip(idx).enumerate() {
+        let l = kk % LANES;
+        let cv = c as f64;
+        let trow = &table[t * width..t * width + m];
+        for (v, &e) in trow.iter().enumerate() {
+            acc[v * LANES + l] += cv * e as f64;
+        }
+    }
+    for v in 0..m {
+        let lanes = [
+            acc[v * LANES],
+            acc[v * LANES + 1],
+            acc[v * LANES + 2],
+            acc[v * LANES + 3],
+        ];
+        out[v] = lane_reduce(&lanes) as f32;
+    }
+}
+
+/// Row-major matrix-vector product, one lane-reduced dot per row:
+/// `out[r] = <w[r, :], v>` in f64.
+pub fn matvec_rows(w: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f64]) {
+    debug_assert!(w.len() >= rows * cols && v.len() >= cols && out.len() >= rows);
+    for r in 0..rows {
+        out[r] = crate::utils::math::dot(&w[r * cols..(r + 1) * cols], v);
+    }
+}
+
+/// `y += a * x`, elementwise f32. No reduction — each element receives
+/// exactly one contribution per call, so ordering is owned by the caller
+/// (sample order inside a chunk, chunk order across the batch).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Rank-1 accumulate `out[d, :] += x[d] * y[:]` over a row-major `[len(x),
+/// len(y)]` buffer — the gradient scatter of both backwards, streaming
+/// the output row-contiguously.
+pub fn outer_acc(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len() * y.len());
+    for (&xv, orow) in x.iter().zip(out.chunks_exact_mut(y.len())) {
+        axpy(xv, y, orow);
+    }
+}
+
+/// Batched softmax-Jacobian: per row `r`,
+/// `out[r, :] = alpha[r, :] * (dalpha[r, :] - <alpha[r, :], dalpha[r, :]>)`
+/// with the lane-reduced dot. This is the attention backward of the
+/// reversal model, applied to all `rows` attention rows in one call.
+pub fn softmax_jacobian_rows(
+    alpha: &[f32],
+    dalpha: &[f32],
+    rows: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let a = &alpha[r * n..(r + 1) * n];
+        let da = &dalpha[r * n..(r + 1) * n];
+        let d = crate::utils::math::dot(a, da) as f32;
+        let orow = &mut out[r * n..(r + 1) * n];
+        for i in 0..n {
+            orow[i] = a[i] * (da[i] - d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::math::logsumexp;
+    use crate::utils::rng::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Naive row-major reference GEMM (sequential f64 accumulation).
+    fn gemm_ref(x: &[f32], rows: usize, w: &[f32], k: usize, n: usize, bias: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0f64; rows * n];
+        for r in 0..rows {
+            for c in 0..n {
+                let mut acc = bias[c] as f64;
+                for kk in 0..k {
+                    acc += x[r * k + kk] as f64 * w[kk * n + c] as f64;
+                }
+                out[r * n + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_is_exact() {
+        for (k, n) in [(784usize, 32usize), (32, 10), (7, 5), (3, 4), (1, 1)] {
+            let w = randv(k * n, 9);
+            let pack = WeightPack::new(&w, k, n, 3);
+            assert_eq!(pack.unpack(), w, "k={k} n={n}");
+            assert_eq!(pack.version(), 3);
+        }
+    }
+
+    #[test]
+    fn refill_updates_in_place_without_resizing() {
+        let w = randv(12, 1);
+        let mut pack = WeightPack::new(&w, 4, 3, 0);
+        let cap = pack.data.capacity();
+        let w2 = randv(12, 2);
+        pack.refill(&w2, 7);
+        assert_eq!(pack.unpack(), w2);
+        assert_eq!(pack.version(), 7);
+        assert_eq!(pack.data.capacity(), cap);
+    }
+
+    #[test]
+    fn packs_built_counts_builds_and_refills() {
+        // >= not ==: lib tests run in parallel threads and others pack
+        // too; the exact once-per-step accounting is locked in isolation
+        // by rust/tests/kernel_contracts.rs
+        let before = packs_built();
+        let w = randv(6, 4);
+        let mut pack = WeightPack::new(&w, 2, 3, 0);
+        pack.refill(&w, 1);
+        assert!(packs_built() - before >= 2);
+    }
+
+    #[test]
+    fn gemm_bias_tanh_matches_reference() {
+        for (rows, k, n) in [(4usize, 784usize, 32usize), (3, 32, 10), (2, 7, 5)] {
+            let x = randv(rows * k, 11);
+            let w = randv(k * n, 12);
+            let bias = randv(n, 13);
+            let pack = WeightPack::new(&w, k, n, 0);
+            let mut out = vec![0.0f32; rows * n];
+            gemm_bias_tanh(&x, rows, &pack, &bias, &mut out);
+            let reference = gemm_ref(&x, rows, &w, k, n, &bias);
+            for i in 0..rows * n {
+                let want = reference[i].tanh();
+                assert!(
+                    (out[i] as f64 - want).abs() < 1e-5,
+                    "({rows},{k},{n})[{i}]: {} vs {}",
+                    out[i],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rows_are_independent_of_batching() {
+        // the row-independence half of the determinism contract: a row
+        // computed alone is bit-identical to the same row in a batch
+        let (rows, k, n) = (8usize, 33usize, 10usize);
+        let x = randv(rows * k, 21);
+        let w = randv(k * n, 22);
+        let bias = randv(n, 23);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut batched = vec![0.0f32; rows * n];
+        gemm_bias_tanh(&x, rows, &pack, &bias, &mut batched);
+        for r in 0..rows {
+            let mut single = vec![0.0f32; n];
+            gemm_bias_tanh(&x[r * k..(r + 1) * k], 1, &pack, &bias, &mut single);
+            assert_eq!(&batched[r * n..(r + 1) * n], &single[..], "row {r}");
+        }
+        // and log-softmax epilogue the same way
+        let mut scratch = vec![0.0f32; n];
+        let mut batched_ls = vec![0.0f32; rows * n];
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, None, &mut scratch, &mut batched_ls);
+        for r in 0..rows {
+            let mut single = vec![0.0f32; n];
+            gemm_bias_logsoftmax(
+                &x[r * k..(r + 1) * k],
+                1,
+                &pack,
+                &bias,
+                None,
+                &mut scratch,
+                &mut single,
+            );
+            assert_eq!(&batched_ls[r * n..(r + 1) * n], &single[..], "ls row {r}");
+        }
+    }
+
+    #[test]
+    fn gemm_is_pack_instance_invariant() {
+        // fresh pack vs refilled pack vs another fresh pack: bit-identical
+        let (rows, k, n) = (2usize, 50usize, 6usize);
+        let x = randv(rows * k, 31);
+        let w = randv(k * n, 32);
+        let bias = vec![0.0f32; n];
+        let a = WeightPack::new(&w, k, n, 0);
+        let mut b = WeightPack::new(&randv(k * n, 33), k, n, 0);
+        b.refill(&w, 1);
+        let mut out_a = vec![0.0f32; rows * n];
+        let mut out_b = vec![0.0f32; rows * n];
+        gemm_bias_tanh(&x, rows, &a, &bias, &mut out_a);
+        gemm_bias_tanh(&x, rows, &b, &bias, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn gemm_logsoftmax_rows_normalize_and_take_noise() {
+        let (rows, k, n) = (3usize, 20usize, 7usize);
+        let x = randv(rows * k, 41);
+        let w = randv(k * n, 42);
+        let bias = randv(n, 43);
+        let noise = randv(rows * n, 44);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f32; rows * n];
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, Some(&noise), &mut scratch, &mut out);
+        let reference = gemm_ref(&x, rows, &w, k, n, &bias);
+        for r in 0..rows {
+            let s: f64 = out[r * n..(r + 1) * n].iter().map(|&l| (l as f64).exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+            // noise shifts the logits before normalization
+            let noisy: Vec<f64> = (0..n)
+                .map(|c| reference[r * n + c] + noise[r * n + c] as f64)
+                .collect();
+            let m = noisy.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + noisy.iter().map(|&v| (v - m).exp()).sum::<f64>().ln();
+            for c in 0..n {
+                assert!((out[r * n + c] as f64 - (noisy[c] - lse)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn logsumexp_1pass_matches_two_pass() {
+        let cases: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.0, 0.0],
+            vec![1000.0, 1000.0],
+            vec![-1.0, 2.0, 0.5, -3.0],
+            vec![5.0],
+            vec![-1.0e30, -1.0e30, 1.5, 0.2], // masked slots
+            randv(64, 51),
+        ];
+        for xs in &cases {
+            let one = logsumexp_1pass(xs);
+            let two = logsumexp(xs);
+            assert!(
+                (one - two).abs() < 1e-4 * (1.0 + two.abs()),
+                "{one} vs {two} on {xs:?}"
+            );
+        }
+        assert_eq!(
+            logsumexp_1pass(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            f32::NEG_INFINITY
+        );
+        assert_eq!(logsumexp_1pass(&[]), f32::NEG_INFINITY);
+        // a literal -inf mixed into a finite row contributes exactly zero
+        assert_eq!(logsumexp_1pass(&[f32::NEG_INFINITY, 5.0]), logsumexp_1pass(&[5.0]));
+    }
+
+    #[test]
+    fn gather_mix_matches_naive() {
+        let width = 8;
+        let m = 5;
+        let table = randv(9 * width, 61);
+        let coef = randv(8, 62);
+        let idx: Vec<usize> = vec![3, 0, 8, 1, 7, 2, 5, 4];
+        let mut acc = vec![0.0f64; m * LANES];
+        let mut out = vec![0.0f32; width];
+        gather_mix_masked(&coef, &table, width, &idx, m, -1.0e30, &mut acc, &mut out);
+        for v in 0..m {
+            let want: f64 = coef
+                .iter()
+                .zip(&idx)
+                .map(|(&c, &t)| c as f64 * table[t * width + v] as f64)
+                .sum();
+            assert!((out[v] as f64 - want).abs() < 1e-6, "v={v}");
+        }
+        for v in m..width {
+            assert_eq!(out[v], -1.0e30, "masked slot {v}");
+        }
+    }
+
+    #[test]
+    fn softmax_jacobian_matches_naive() {
+        let (rows, n) = (8usize, 8usize);
+        let alpha_logits = randv(rows * n, 71);
+        let mut alpha = vec![0.0f32; rows * n];
+        softmax_rows(&alpha_logits, rows, n, &mut alpha);
+        let dalpha = randv(rows * n, 72);
+        let mut out = vec![0.0f32; rows * n];
+        softmax_jacobian_rows(&alpha, &dalpha, rows, n, &mut out);
+        for r in 0..rows {
+            let dot: f64 = (0..n)
+                .map(|i| alpha[r * n + i] as f64 * dalpha[r * n + i] as f64)
+                .sum();
+            for i in 0..n {
+                let want = alpha[r * n + i] as f64 * (dalpha[r * n + i] as f64 - dot);
+                assert!(
+                    (out[r * n + i] as f64 - want).abs() < 1e-5,
+                    "({r},{i}): {} vs {want}",
+                    out[r * n + i]
+                );
+            }
+        }
+        // softmax rows themselves normalize
+        for r in 0..rows {
+            let s: f32 = alpha[r * n..(r + 1) * n].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn outer_and_axpy_accumulate() {
+        let x = [2.0f32, -1.0];
+        let y = [1.0f32, 0.5, 3.0];
+        let mut out = vec![1.0f32; 6];
+        outer_acc(&x, &y, &mut out);
+        assert_eq!(out, vec![3.0, 2.0, 7.0, 0.0, 0.5, -2.0]);
+        let mut acc = vec![1.0f32, 1.0, 1.0];
+        axpy(2.0, &y, &mut acc);
+        assert_eq!(acc, vec![3.0, 2.0, 7.0]);
+    }
+
+    #[test]
+    fn matvec_rows_is_lane_dot_per_row() {
+        let w = randv(3 * 10, 81);
+        let v = randv(10, 82);
+        let mut out = vec![0.0f64; 3];
+        matvec_rows(&w, 3, 10, &v, &mut out);
+        for r in 0..3 {
+            assert_eq!(
+                out[r].to_bits(),
+                crate::utils::math::dot(&w[r * 10..(r + 1) * 10], &v).to_bits()
+            );
+        }
+    }
+}

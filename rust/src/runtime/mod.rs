@@ -1,4 +1,7 @@
-//! Runtime layer: execution engine, artifact manifest, host tensors.
+//! Runtime layer: execution engine, artifact manifest, host tensors, the
+//! native kernel layer (`kernels` — blocked GEMM over packed weight
+//! panels, fused epilogues, lane-reduced reductions), and the tensor
+//! arena that keeps the gated hot path allocation-free.
 //!
 //! Two interchangeable backends sit behind one artifact namespace: the
 //! PJRT engine over HLO-text artifacts built by `make artifacts` (python
@@ -8,11 +11,13 @@
 //! coordinator's determinism tests run on.
 
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 pub mod tensor;
 
 pub use engine::Engine;
+pub use kernels::WeightPack;
 pub use manifest::{ArtifactSig, Constants, DType, InitKind, InitRule, Manifest, TensorSig};
 pub use native::NativeTestbed;
-pub use tensor::HostTensor;
+pub use tensor::{arena_stats, ArenaStats, HostTensor, TensorArena};

@@ -9,20 +9,36 @@
 //! x token-emission table) for token reversal. The trainers, gate,
 //! batcher, and worker pool run unmodified against it.
 //!
-//! Determinism contract (DESIGN.md §"L3 parallelism"): every artifact here
-//! is **row-independent** -- output row i is a pure function of input row
-//! i and the parameters, with all reductions taken in a fixed sequential
-//! order inside the row. Executing a batch whole, in shards, or padded to
-//! a larger capacity therefore yields bit-identical rows, which is what
-//! makes `workers=N` training trajectories bit-equal to `workers=1`.
+//! All inner math routes through the shared kernel layer
+//! (`runtime/kernels.rs`, DESIGN.md §9): the MLP runs as a blocked GEMM
+//! over packed weight panels with fused bias+tanh and
+//! logits+log-softmax epilogues, the reversal logits through the
+//! gather-mix kernel, the attention backward through the batched
+//! softmax-Jacobian kernel. This module keeps only the orchestration
+//! loops (rows, episodes, positions) and the artifact plumbing. Outputs
+//! are written into tensor-arena buffers (`runtime/tensor.rs`) instead of
+//! fresh allocations; consumers recycle them.
+//!
+//! Determinism contract (DESIGN.md §"L3 parallelism" + §9): every
+//! artifact here is **row-independent** -- output row i is a pure
+//! function of input row i and the parameters -- and every reduction
+//! inside a row uses the kernels' fixed index-ordered lane tree, a
+//! function of operand shapes only. Executing a batch whole, in shards,
+//! or padded to a larger capacity therefore yields bit-identical rows,
+//! which is what makes `workers=N` training trajectories bit-equal to
+//! `workers=1`.
 
 use anyhow::{bail, Result};
 
-use crate::utils::math::logsumexp;
+use crate::utils::math::LANES;
 use crate::utils::rng::Pcg32;
 
+use super::kernels::{
+    self, gather_mix_masked, gemm_bias_logsoftmax, gemm_bias_tanh, logsumexp_1pass, softmax_rows,
+    WeightPack,
+};
 use super::manifest::{ArtifactSig, Constants, DType, InitKind, InitRule, Manifest, TensorSig};
-use super::tensor::HostTensor;
+use super::tensor::{self, HostTensor};
 
 // ---- testbed shape constants (small: tests train in seconds) ----
 pub const MNIST_BATCH: usize = 32;
@@ -241,105 +257,60 @@ fn suffix_cap(name: &str, prefix: &str) -> Option<usize> {
     name.strip_prefix(prefix).and_then(|s| s.parse().ok())
 }
 
+/// A GEMM-ready view of a weight input: the pack the marshalling layer
+/// attached (the once-per-step shared pack), or -- for callers that hand
+/// in bare tensors, e.g. direct backend tests -- a pack built on the
+/// spot. Both layouts are identical functions of the weights, so the
+/// two paths are bit-equal.
+enum PackRef<'a> {
+    Shared(&'a WeightPack),
+    Owned(WeightPack),
+}
+
+impl std::ops::Deref for PackRef<'_> {
+    type Target = WeightPack;
+    fn deref(&self) -> &WeightPack {
+        match self {
+            PackRef::Shared(p) => p,
+            PackRef::Owned(p) => p,
+        }
+    }
+}
+
+fn pack_of<'a>(t: &'a HostTensor) -> Result<PackRef<'a>> {
+    if let Some(p) = t.pack() {
+        return Ok(PackRef::Shared(p));
+    }
+    let s = t.shape();
+    if s.len() != 2 {
+        bail!("expected a 2-D weight tensor, got shape {s:?}");
+    }
+    Ok(PackRef::Owned(WeightPack::new(t.as_f32()?, s[0], s[1], 0)))
+}
+
 // ---- MNIST MLP: x[784] -> tanh(32) -> log-softmax(10) ----
 //
-// Matmul loops run input-dimension-outer so the weight matrix is streamed
-// row-contiguously (one pass over w1 per sample instead of one strided
-// pass per hidden unit). Per output element the f64 accumulation order is
-// unchanged -- bias first, then contributions in ascending input index --
-// so results are bit-identical to the unit-at-a-time formulation and the
-// row-independence/determinism contract is untouched.
-
-/// Hidden activations for one input row, written into `h` (f64
-/// accumulation in `acc`, fixed order: b1[j], then d ascending).
-fn mlp_hidden_into(w1: &[f32], b1: &[f32], xi: &[f32], acc: &mut [f64], h: &mut [f32]) {
-    for (a, &b) in acc.iter_mut().zip(b1) {
-        *a = b as f64;
-    }
-    for (&x, wrow) in xi.iter().zip(w1.chunks_exact(MNIST_HIDDEN)) {
-        let xf = x as f64;
-        for (a, &w) in acc.iter_mut().zip(wrow) {
-            *a += xf * w as f64;
-        }
-    }
-    for (hj, &a) in h.iter_mut().zip(acc.iter()) {
-        *hj = a.tanh() as f32;
-    }
-}
-
-/// Logits for one row given its hidden activations, written into `logits`
-/// (fixed order: b2[k], then j ascending, then optional noise).
-fn mlp_logits_into(
-    w2: &[f32],
-    b2: &[f32],
-    h: &[f32],
-    noise_row: Option<&[f32]>,
-    acc: &mut [f64],
-    logits: &mut [f32],
-) {
-    for (a, &b) in acc.iter_mut().zip(b2) {
-        *a = b as f64;
-    }
-    for (&hj, wrow) in h.iter().zip(w2.chunks_exact(MNIST_ACTIONS)) {
-        let hf = hj as f64;
-        for (a, &w) in acc.iter_mut().zip(wrow) {
-            *a += hf * w as f64;
-        }
-    }
-    if let Some(n) = noise_row {
-        for (a, &nv) in acc.iter_mut().zip(n) {
-            *a += nv as f64;
-        }
-    }
-    for (l, &a) in logits.iter_mut().zip(acc.iter()) {
-        *l = a as f32;
-    }
-}
-
-fn log_softmax_into(logits: &[f32], out: &mut [f32]) {
-    let lse = logsumexp(logits);
-    for (o, &l) in out.iter_mut().zip(logits) {
-        *o = l - lse;
-    }
-}
-
-/// Scratch buffers for one MLP row, reused across the rows of a call (the
-/// old per-row `Vec` allocations were measurable on the forward path).
-struct MlpScratch {
-    acc_h: Vec<f64>,
-    acc_l: Vec<f64>,
-    h: Vec<f32>,
-    logits: Vec<f32>,
-}
-
-impl MlpScratch {
-    fn new() -> MlpScratch {
-        MlpScratch {
-            acc_h: vec![0.0f64; MNIST_HIDDEN],
-            acc_l: vec![0.0f64; MNIST_ACTIONS],
-            h: vec![0.0f32; MNIST_HIDDEN],
-            logits: vec![0.0f32; MNIST_ACTIONS],
-        }
-    }
-}
+// One fused kernel call per layer: `gemm_bias_tanh` produces the hidden
+// activations, `gemm_bias_logsoftmax` the normalized log-probabilities
+// (bias, optional exploration noise, and the single-pass logsumexp all
+// inside the epilogue). Per output element the reduction is the kernels'
+// fixed lane tree over the input dimension -- a function of shapes only,
+// identical whether the row runs in a full batch, a shard, or alone.
 
 fn mnist_forward(inputs: &[&HostTensor], cap: usize, with_noise: bool) -> Result<Vec<HostTensor>> {
-    let w1 = inputs[0].as_f32()?;
+    let w1p = pack_of(inputs[0])?;
     let b1 = inputs[1].as_f32()?;
-    let w2 = inputs[2].as_f32()?;
+    let w2p = pack_of(inputs[2])?;
     let b2 = inputs[3].as_f32()?;
     let x = inputs[4].as_f32()?;
     let noise = if with_noise { Some(inputs[5].as_f32()?) } else { None };
 
-    let mut logp = vec![0.0f32; cap * MNIST_ACTIONS];
-    let mut s = MlpScratch::new();
-    for i in 0..cap {
-        let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
-        mlp_hidden_into(w1, b1, xi, &mut s.acc_h, &mut s.h);
-        let nrow = noise.map(|n| &n[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS]);
-        mlp_logits_into(w2, b2, &s.h, nrow, &mut s.acc_l, &mut s.logits);
-        log_softmax_into(&s.logits, &mut logp[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS]);
-    }
+    let mut hidden = tensor::take_f32_zeroed(cap * MNIST_HIDDEN);
+    let mut logp = tensor::take_f32_zeroed(cap * MNIST_ACTIONS);
+    let mut row_scratch = [0.0f32; MNIST_ACTIONS];
+    gemm_bias_tanh(x, cap, &w1p, b1, &mut hidden);
+    gemm_bias_logsoftmax(&hidden, cap, &w2p, b2, noise, &mut row_scratch, &mut logp);
+    tensor::recycle_f32(hidden);
     Ok(vec![HostTensor::f32(&[cap, MNIST_ACTIONS], logp)])
 }
 
@@ -347,28 +318,33 @@ fn mnist_forward(inputs: &[&HostTensor], cap: usize, with_noise: bool) -> Result
 /// [loss, g_w1, g_b1, g_w2, g_b2]. Zero-weight (padding) rows are skipped,
 /// which is exact because every contribution scales with w_i.
 ///
-/// The g_w1 update runs input-dimension-outer (row-contiguous writes into
-/// the 784x32 gradient) with the per-unit deltas `dpre` staged first; each
-/// g_w1 element still receives exactly one contribution per sample, in
-/// sample order, so the result is bit-identical to the unit-outer loop.
+/// The recomputation runs through the same GEMM kernels as the forward
+/// (one-row calls -- bit-identical to the batched form by row
+/// independence); the gradient scatter is `outer_acc`/`axpy` (one
+/// contribution per element per sample, in sample order) and the hidden
+/// backprop one `matvec_rows` of lane-reduced dots. Gradients accumulate
+/// into arena buffers the accumulator recycles.
 fn mnist_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
-    let w1 = inputs[0].as_f32()?;
+    let w1p = pack_of(inputs[0])?;
     let b1 = inputs[1].as_f32()?;
     let w2 = inputs[2].as_f32()?;
+    let w2p = pack_of(inputs[2])?;
     let b2 = inputs[3].as_f32()?;
     let x = inputs[4].as_f32()?;
     let actions = inputs[5].as_i32()?;
     let w = inputs[6].as_f32()?;
 
     let mut loss = 0.0f64;
-    let mut gw1 = vec![0.0f32; MNIST_IN * MNIST_HIDDEN];
-    let mut gb1 = vec![0.0f32; MNIST_HIDDEN];
-    let mut gw2 = vec![0.0f32; MNIST_HIDDEN * MNIST_ACTIONS];
-    let mut gb2 = vec![0.0f32; MNIST_ACTIONS];
-    let mut s = MlpScratch::new();
-    let mut logp = vec![0.0f32; MNIST_ACTIONS];
-    let mut dl = vec![0.0f32; MNIST_ACTIONS];
-    let mut dpre = vec![0.0f32; MNIST_HIDDEN];
+    let mut gw1 = tensor::take_f32_zeroed(MNIST_IN * MNIST_HIDDEN);
+    let mut gb1 = tensor::take_f32_zeroed(MNIST_HIDDEN);
+    let mut gw2 = tensor::take_f32_zeroed(MNIST_HIDDEN * MNIST_ACTIONS);
+    let mut gb2 = tensor::take_f32_zeroed(MNIST_ACTIONS);
+    let mut h = [0.0f32; MNIST_HIDDEN];
+    let mut logp = [0.0f32; MNIST_ACTIONS];
+    let mut row_scratch = [0.0f32; MNIST_ACTIONS];
+    let mut dl = [0.0f32; MNIST_ACTIONS];
+    let mut dh = [0.0f64; MNIST_HIDDEN];
+    let mut dpre = [0.0f32; MNIST_HIDDEN];
 
     for i in 0..cap {
         let wi = w[i];
@@ -380,9 +356,8 @@ fn mnist_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>>
             bail!("mnist_bwd: action {a} out of range");
         }
         let xi = &x[i * MNIST_IN..(i + 1) * MNIST_IN];
-        mlp_hidden_into(w1, b1, xi, &mut s.acc_h, &mut s.h);
-        mlp_logits_into(w2, b2, &s.h, None, &mut s.acc_l, &mut s.logits);
-        log_softmax_into(&s.logits, &mut logp);
+        gemm_bias_tanh(xi, 1, &w1p, b1, &mut h);
+        gemm_bias_logsoftmax(&h, 1, &w2p, b2, None, &mut row_scratch, &mut logp);
         loss += wi as f64 * (-(logp[a] as f64));
 
         // dL/dlogits = w * (softmax - onehot(a))
@@ -390,30 +365,21 @@ fn mnist_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>>
             let p = logp[k].exp();
             *dlk = wi * (p - if k == a { 1.0 } else { 0.0 });
         }
-        for k in 0..MNIST_ACTIONS {
-            gb2[k] += dl[k];
-        }
-        for (j, &hj) in s.h.iter().enumerate() {
-            let wrow = &w2[j * MNIST_ACTIONS..(j + 1) * MNIST_ACTIONS];
-            let grow = &mut gw2[j * MNIST_ACTIONS..(j + 1) * MNIST_ACTIONS];
-            let mut dh = 0.0f64;
-            for (k, &dlk) in dl.iter().enumerate() {
-                grow[k] += hj * dlk;
-                dh += wrow[k] as f64 * dlk as f64;
-            }
-            let dp = ((1.0 - hj as f64 * hj as f64) * dh) as f32;
+        kernels::axpy(1.0, &dl, &mut gb2);
+        kernels::outer_acc(&h, &dl, &mut gw2);
+        kernels::matvec_rows(w2, MNIST_HIDDEN, MNIST_ACTIONS, &dl, &mut dh);
+        for j in 0..MNIST_HIDDEN {
+            let dp = ((1.0 - h[j] as f64 * h[j] as f64) * dh[j]) as f32;
             gb1[j] += dp;
             dpre[j] = dp;
         }
-        for (&xd, grow) in xi.iter().zip(gw1.chunks_exact_mut(MNIST_HIDDEN)) {
-            for (g, &dp) in grow.iter_mut().zip(dpre.iter()) {
-                *g += xd * dp;
-            }
-        }
+        kernels::outer_acc(xi, &dpre, &mut gw1);
     }
 
+    let mut loss_t = tensor::take_f32_zeroed(1);
+    loss_t[0] = loss as f32;
     Ok(vec![
-        HostTensor::f32(&[1], vec![loss as f32]),
+        HostTensor::f32(&[1], loss_t),
         HostTensor::f32(&[MNIST_IN, MNIST_HIDDEN], gw1),
         HostTensor::f32(&[MNIST_HIDDEN], gb1),
         HostTensor::f32(&[MNIST_HIDDEN, MNIST_ACTIONS], gw2),
@@ -427,47 +393,10 @@ fn mnist_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>>
 // output position j to prompt position k; logits[ep, j, v] =
 // sum_k alpha[j, k] * emit[prompt[ep, k], v], masked to the active
 // vocabulary m. Solving reversal means learning alpha[j, .] ->
-// onehot(h_max - 1 - j + offset) and emit -> identity.
-
-fn rev_alpha(attn: &[f32]) -> Vec<f32> {
-    let mut alpha = vec![0.0f32; REV_HMAX * REV_HMAX];
-    for j in 0..REV_HMAX {
-        let row = &attn[j * REV_HMAX..(j + 1) * REV_HMAX];
-        let lse = logsumexp(row);
-        for k in 0..REV_HMAX {
-            alpha[j * REV_HMAX + k] = (row[k] - lse).exp();
-        }
-    }
-    alpha
-}
-
-/// Masked logits for one (episode, position) written into `logits` (full
-/// vocab length, inactive tokens at -1e30). The attention mix runs
-/// prompt-position-outer so each emit row is streamed contiguously; per
-/// logit element the f64 accumulation order is still k ascending, so the
-/// result is bit-identical to the vocab-outer formulation.
-fn rev_logits_into(
-    alpha_row: &[f32],
-    emit: &[f32],
-    trow: &[usize],
-    m: usize,
-    acc: &mut [f64],
-    logits: &mut [f32],
-) {
-    logits.fill(NEG);
-    let acc = &mut acc[..m];
-    acc.fill(0.0);
-    for (&ak, &t) in alpha_row.iter().zip(trow) {
-        let af = ak as f64;
-        let erow = &emit[t * REV_VOCAB..t * REV_VOCAB + m];
-        for (a, &e) in acc.iter_mut().zip(erow) {
-            *a += af * e as f64;
-        }
-    }
-    for (l, &a) in logits[..m].iter_mut().zip(acc.iter()) {
-        *l = a as f32;
-    }
-}
+// onehot(h_max - 1 - j + offset) and emit -> identity. The softmax rows,
+// the masked attention mix, and the attention backward all run through
+// the kernel layer (`softmax_rows`, `gather_mix_masked`,
+// `softmax_jacobian_rows`).
 
 fn rev_scalars(inputs: &[&HostTensor], h_idx: usize) -> Result<(usize, usize)> {
     let h = inputs[h_idx].as_i32()?[0] as usize;
@@ -503,12 +432,13 @@ fn rev_rollout(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
     let (h, m) = rev_scalars(inputs, 3)?;
     let seed = inputs[5].as_i32()?[0] as u64;
 
-    let alpha = rev_alpha(attn);
-    let mut actions = vec![REV_PAD as i32; REV_BATCH * REV_HMAX];
-    let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
-    let mut trow = vec![0usize; REV_HMAX];
-    let mut acc = vec![0.0f64; REV_VOCAB];
-    let mut logits = vec![NEG; REV_VOCAB];
+    let mut alpha = [0.0f32; REV_HMAX * REV_HMAX];
+    softmax_rows(attn, REV_HMAX, REV_HMAX, &mut alpha);
+    let mut actions = tensor::take_i32_filled(REV_BATCH * REV_HMAX, REV_PAD as i32);
+    let mut logp = tensor::take_f32_zeroed(REV_BATCH * REV_HMAX);
+    let mut trow = [0usize; REV_HMAX];
+    let mut acc = [0.0f64; REV_VOCAB * LANES];
+    let mut logits = [NEG; REV_VOCAB];
     for ep in 0..REV_BATCH {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
         gather_tokens(prow, &mut trow)?;
@@ -518,9 +448,9 @@ fn rev_rollout(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let mut rng = Pcg32::new(seed, ep as u64);
         for j in 0..h {
             let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
-            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
+            gather_mix_masked(alpha_row, emit, REV_VOCAB, &trow, m, NEG, &mut acc, &mut logits);
             let a = rng.categorical_from_logits(&logits);
-            let lse = logsumexp(&logits);
+            let lse = logsumexp_1pass(&logits);
             actions[ep * REV_HMAX + j] = a as i32;
             logp[ep * REV_HMAX + j] = logits[a] - lse;
         }
@@ -538,11 +468,12 @@ fn rev_forward(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
     let actions = inputs[3].as_i32()?;
     let (h, m) = rev_scalars(inputs, 4)?;
 
-    let alpha = rev_alpha(attn);
-    let mut logp = vec![0.0f32; REV_BATCH * REV_HMAX];
-    let mut trow = vec![0usize; REV_HMAX];
-    let mut acc = vec![0.0f64; REV_VOCAB];
-    let mut logits = vec![NEG; REV_VOCAB];
+    let mut alpha = [0.0f32; REV_HMAX * REV_HMAX];
+    softmax_rows(attn, REV_HMAX, REV_HMAX, &mut alpha);
+    let mut logp = tensor::take_f32_zeroed(REV_BATCH * REV_HMAX);
+    let mut trow = [0usize; REV_HMAX];
+    let mut acc = [0.0f64; REV_VOCAB * LANES];
+    let mut logits = [NEG; REV_VOCAB];
     for ep in 0..REV_BATCH {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
         gather_tokens(prow, &mut trow)?;
@@ -552,8 +483,8 @@ fn rev_forward(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
                 bail!("rev_fwd: action {a} outside active vocab {m}");
             }
             let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
-            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
-            let lse = logsumexp(&logits);
+            gather_mix_masked(alpha_row, emit, REV_VOCAB, &trow, m, NEG, &mut acc, &mut logits);
+            let lse = logsumexp_1pass(&logits);
             logp[ep * REV_HMAX + j] = logits[a] - lse;
         }
     }
@@ -564,11 +495,11 @@ fn rev_forward(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 /// outputs [loss, g_attn, g_emit]. Zero-weight tokens (skipped by the
 /// gate, or whole padding episodes) contribute nothing.
 ///
-/// The gradient scatter runs prompt-position-outer (contiguous emit /
-/// g_emit row access, token ids checked once per episode instead of per
-/// (vocab, position) pair). Per gradient element the f32 accumulation
-/// order is unchanged -- (episode, position, then ascending inner index) --
-/// so results are bit-identical to the vocab-outer loop.
+/// The emit-gradient scatter is one `axpy` per prompt position
+/// (contiguous emit / g_emit row access, one contribution per element per
+/// token, in (episode, position) order); the alpha gradient is one
+/// lane-reduced dot per position, and the final attention backward is
+/// the batched `softmax_jacobian_rows` kernel over all attention rows.
 fn rev_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
     let attn = inputs[0].as_f32()?;
     let emit = inputs[1].as_f32()?;
@@ -577,14 +508,15 @@ fn rev_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
     let w = inputs[4].as_f32()?;
     let (h, m) = rev_scalars(inputs, 5)?;
 
-    let alpha = rev_alpha(attn);
+    let mut alpha = [0.0f32; REV_HMAX * REV_HMAX];
+    softmax_rows(attn, REV_HMAX, REV_HMAX, &mut alpha);
     let mut loss = 0.0f64;
-    let mut dalpha = vec![0.0f32; REV_HMAX * REV_HMAX];
-    let mut gemit = vec![0.0f32; (REV_VOCAB + 1) * REV_VOCAB];
-    let mut trow = vec![0usize; REV_HMAX];
-    let mut acc = vec![0.0f64; REV_VOCAB];
-    let mut logits = vec![NEG; REV_VOCAB];
-    let mut dl = vec![0.0f32; REV_VOCAB];
+    let mut dalpha = [0.0f32; REV_HMAX * REV_HMAX];
+    let mut gemit = tensor::take_f32_zeroed((REV_VOCAB + 1) * REV_VOCAB);
+    let mut trow = [0usize; REV_HMAX];
+    let mut acc = [0.0f64; REV_VOCAB * LANES];
+    let mut logits = [NEG; REV_VOCAB];
+    let mut dl = [0.0f32; REV_VOCAB];
 
     for ep in 0..cap {
         let prow = &prompt[ep * REV_HMAX..(ep + 1) * REV_HMAX];
@@ -599,8 +531,8 @@ fn rev_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
                 bail!("rev_bwd: action {a} outside active vocab {m}");
             }
             let alpha_row = &alpha[j * REV_HMAX..(j + 1) * REV_HMAX];
-            rev_logits_into(alpha_row, emit, &trow, m, &mut acc, &mut logits);
-            let lse = logsumexp(&logits);
+            gather_mix_masked(alpha_row, emit, REV_VOCAB, &trow, m, NEG, &mut acc, &mut logits);
+            let lse = logsumexp_1pass(&logits);
             loss += wij as f64 * ((lse - logits[a]) as f64);
             // dL/dlogits = w * (softmax - onehot(a))
             for (v, dv) in dl.iter_mut().enumerate().take(m) {
@@ -609,34 +541,23 @@ fn rev_backward(inputs: &[&HostTensor], cap: usize) -> Result<Vec<HostTensor>> {
             }
             let darow = &mut dalpha[j * REV_HMAX..(j + 1) * REV_HMAX];
             for (k, &t) in trow.iter().enumerate() {
-                let ak = alpha_row[k];
                 let erow = &emit[t * REV_VOCAB..t * REV_VOCAB + m];
                 let grow = &mut gemit[t * REV_VOCAB..t * REV_VOCAB + m];
-                let mut da = darow[k];
-                for ((&d, g), &e) in dl[..m].iter().zip(grow.iter_mut()).zip(erow) {
-                    *g += ak * d;
-                    da += d * e;
-                }
-                darow[k] = da;
+                kernels::axpy(alpha_row[k], &dl[..m], grow);
+                darow[k] += crate::utils::math::dot(&dl[..m], erow) as f32;
             }
         }
     }
 
-    // softmax Jacobian per attention row: d attn = alpha * (d alpha - <alpha, d alpha>)
-    let mut gattn = vec![0.0f32; REV_HMAX * REV_HMAX];
-    for j in 0..REV_HMAX {
-        let mut dot = 0.0f64;
-        for k in 0..REV_HMAX {
-            dot += alpha[j * REV_HMAX + k] as f64 * dalpha[j * REV_HMAX + k] as f64;
-        }
-        for k in 0..REV_HMAX {
-            let i = j * REV_HMAX + k;
-            gattn[i] = alpha[i] * (dalpha[i] - dot as f32);
-        }
-    }
+    // batched softmax Jacobian over all attention rows:
+    // d attn = alpha * (d alpha - <alpha, d alpha>)
+    let mut gattn = tensor::take_f32_zeroed(REV_HMAX * REV_HMAX);
+    kernels::softmax_jacobian_rows(&alpha, &dalpha, REV_HMAX, REV_HMAX, &mut gattn);
 
+    let mut loss_t = tensor::take_f32_zeroed(1);
+    loss_t[0] = loss as f32;
     Ok(vec![
-        HostTensor::f32(&[1], vec![loss as f32]),
+        HostTensor::f32(&[1], loss_t),
         HostTensor::f32(&[REV_HMAX, REV_HMAX], gattn),
         HostTensor::f32(&[REV_VOCAB + 1, REV_VOCAB], gemit),
     ])
@@ -710,6 +631,23 @@ mod tests {
             &logp_full[i * MNIST_ACTIONS..(i + 1) * MNIST_ACTIONS],
             &logp_shard[..MNIST_ACTIONS]
         );
+    }
+
+    #[test]
+    fn packed_and_unpacked_inputs_are_bit_identical() {
+        // the pack-cache fallback contract: a bare weight tensor (no
+        // attached pack) produces exactly what the marshalled, packed
+        // tensor produces
+        let packed_in = mnist_inputs(8, true);
+        assert!(packed_in[0].pack().is_some(), "as_inputs must attach packs");
+        let mut bare_in = packed_in.clone();
+        for t in bare_in.iter_mut().take(4) {
+            *t = HostTensor::f32(t.shape(), t.as_f32().unwrap().to_vec());
+        }
+        assert!(bare_in[0].pack().is_none());
+        let a = mnist_forward(&refs(&packed_in), 8, true).unwrap();
+        let b = mnist_forward(&refs(&bare_in), 8, true).unwrap();
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::coordinator::{
 use crate::envs::mnist::{MnistBandit, RewardNoise};
 use crate::model::ParamStore;
 use crate::optim::Adam;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
 use super::{EvalPoint, GatedLoop};
@@ -167,14 +167,19 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let mut gate_profiles = Vec::new();
     let mut train_err_window = TrainWindow::new(10);
     let mut precisions: Vec<f64> = Vec::new();
+    // step-persistent scratch: the noise matrix and the survivor-slot ->
+    // batch-index scatter buffers are refilled per step, never reallocated
+    let mut noise = vec![0.0f32; b * n_act];
+    let mut w_batch = vec![0.0f32; b];
+    let mut a_batch = vec![0i32; b];
 
     for step in 0..cfg.steps {
         let ctx = env.sample_contexts(&mut rng);
-        let noise: Vec<f32> = if cfg.logit_noise > 0.0 {
-            (0..b * n_act).map(|_| (cfg.logit_noise * rng.normal()) as f32).collect()
-        } else {
-            vec![0.0f32; b * n_act]
-        };
+        if cfg.logit_noise > 0.0 {
+            for nz in noise.iter_mut() {
+                *nz = (cfg.logit_noise * rng.normal()) as f32;
+            }
+        }
 
         // ---- stage 1: SCREEN. A warm draft pre-gates the batch on
         // predicted surprisal (one dot per sample); cold batches pass
@@ -309,8 +314,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
             gl.record_backward_chunks(&mut acct, &chunks, 1, |c| c.idx.len());
             // scatter the survivor-slot weights/actions back to batch
             // indices so chunk gathering works exactly as it always has
-            let mut w_batch = vec![0.0f32; b];
-            let mut a_batch = vec![0i32; b];
+            // (step-persistent buffers; chunks only ever gather kept
+            // indices, all freshly written below, but clear anyway)
+            w_batch.fill(0.0);
+            a_batch.fill(0);
             for (s, &i) in survivors.iter().enumerate() {
                 w_batch[i] = decision.weights[s];
                 a_batch[i] = actions[s];
@@ -325,12 +332,10 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 |cap| format!("mnist_bwd_c{cap}"),
                 |chunk| {
                     let cap = chunk.cap;
-                    let per: Vec<f32> = chunk.idx.iter().map(|&i| w_batch[i]).collect();
-                    let ident: Vec<usize> = (0..chunk.idx.len()).collect();
                     vec![
                         HostTensor::f32(&[cap, img], gather_rows_f32(&ctx.x, img, &chunk.idx, cap)),
                         HostTensor::i32(&[cap], gather_i32(&a_batch, &chunk.idx, cap)),
-                        HostTensor::f32(&[cap], gather_f32(&per, &ident, cap)),
+                        HostTensor::f32(&[cap], gather_f32(&w_batch, &chunk.idx, cap)),
                     ]
                 },
                 // average over the full batch (matches sum/B normalization)
@@ -341,6 +346,9 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
         // ---- the draft trains online on whatever exact surprisals the
         // surviving forwards produced (cold batches feed the whole batch)
         gl.observe_screen(&ctx.x, &survivors, &ell);
+
+        // the step is done with the forward rows: back to the arena
+        tensor::recycle_f32(logp);
 
         // ---- evaluation cadence
         let last = step + 1 == cfg.steps;
@@ -390,12 +398,14 @@ pub fn eval_test_error(
     let n = ys.len();
     let mut wrong = 0usize;
     let mut done = 0usize;
-    // marshal the parameters once for the whole evaluation sweep
+    // marshal the parameters once for the whole evaluation sweep (packs
+    // included — as_inputs attaches them)
     let param_inputs = params.as_inputs();
     while done < n {
         let take = eval_b.min(n - done);
-        // pad the final chunk up to eval_b with repeats
-        let mut chunk = vec![0.0f32; eval_b * img];
+        // pad the final chunk up to eval_b with repeats; the buffer
+        // cycles through the arena across eval chunks and eval sweeps
+        let mut chunk = tensor::take_f32_zeroed(eval_b * img);
         for i in 0..eval_b {
             let src = (done + i.min(take - 1)).min(n - 1);
             chunk[i * img..(i + 1) * img].copy_from_slice(&xs[src * img..(src + 1) * img]);
@@ -410,6 +420,10 @@ pub fn eval_test_error(
             if argmax(row) != ys[done + i] {
                 wrong += 1;
             }
+        }
+        tensor::recycle_tensor(chunk_t);
+        for t in out {
+            tensor::recycle_tensor(t);
         }
         done += take;
     }

@@ -19,11 +19,17 @@
 //! 4. [`BackwardStage`] -- bucketed backward chunks across the pool,
 //!    gradients merged in chunk order, one optimizer step.
 //!
-//! The hot path is zero-copy: trainers marshal the parameter tensors once
-//! per step into a reusable buffer (`ParamStore::marshal_into`) and the
-//! sharded phases share that buffer across every chunk/shard by reference
-//! (`Engine::execute_refs`) instead of cloning the full parameter list per
-//! call; the gradient accumulator is preallocated once per run.
+//! The hot path is zero-copy *and* allocation-free in the steady state:
+//! trainers marshal the parameter tensors once per step into a reusable
+//! buffer (`ParamStore::marshal_into`, which also rebuilds each weight
+//! matrix's GEMM pack exactly once per step — the pack cache of
+//! DESIGN.md §9) and the sharded phases share that buffer across every
+//! chunk/shard by reference (`Engine::execute_refs`) instead of cloning
+//! the full parameter list per call; the gradient accumulator is
+//! preallocated once per run, and every per-call tensor buffer (gathered
+//! chunk inputs, kernel outputs, merged rows) cycles through the tensor
+//! arena (`runtime::tensor`), recycled by its consumer instead of
+//! reallocated.
 //!
 //! Batch-global work -- the screen's quantile threshold and the Kondo
 //! gate's quantile price, both over merged score vectors -- stays on the
@@ -48,7 +54,7 @@ use crate::coordinator::pool::{non_empty_shards, split_shards, Shard, WorkerPool
 use crate::coordinator::{PackedChunk, ShardedLedger};
 use crate::model::ParamStore;
 use crate::optim::Optimizer;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
 /// One point of a learning curve, indexed by both step and compute.
@@ -164,7 +170,9 @@ impl<'e> GatedLoop<'e> {
 
     /// Stage 2: execute the forward over `survivors` (original batch
     /// indices, ascending) of a `batch_n`-row batch, returning the f32
-    /// output rows **in survivor order**.
+    /// output rows **in survivor order**. The returned buffer is arena-
+    /// backed; the trainer recycles it at the end of the step
+    /// (`tensor::recycle_f32`) so steady-state steps allocate nothing.
     ///
     /// The plan comes from `ForwardStage::plan`: the unscreened batch
     /// keeps the contiguous-shard path (or one `full_name` call), while a
@@ -217,16 +225,20 @@ impl<'e> GatedLoop<'e> {
                 inputs.extend(extras.iter());
                 let mut out = eng.execute_refs(full_name, &inputs)?;
                 acct.shard_mut(0).record_forward(batch_n);
+                for t in extras {
+                    tensor::recycle_tensor(t);
+                }
                 let rows = out.remove(0).into_f32()?;
                 if k == batch_n {
                     return Ok(rows);
                 }
                 // screened fallback without a capacity ladder: the full
                 // forward ran, so nothing was skipped -- gather survivors
-                let mut picked = Vec::with_capacity(k * out_width);
+                let mut picked = tensor::take_f32_empty(k * out_width);
                 for &i in survivors {
                     picked.extend_from_slice(&rows[i * out_width..(i + 1) * out_width]);
                 }
+                tensor::recycle_f32(rows);
                 Ok(picked)
             }
             ForwardPlan::Sharded(pairs) => {
@@ -240,6 +252,10 @@ impl<'e> GatedLoop<'e> {
                     inputs.extend(param_inputs.iter());
                     inputs.extend(extras.iter());
                     let mut out = eng.execute_refs(&shard_name(cap), &inputs)?;
+                    // gathered inputs go straight back to this worker's arena
+                    for t in extras {
+                        tensor::recycle_tensor(t);
+                    }
                     let mut rows_out = out.remove(0).into_f32()?;
                     rows_out.truncate(shard.len() * out_width);
                     Ok(rows_out)
@@ -247,9 +263,11 @@ impl<'e> GatedLoop<'e> {
                 for (shard, cap) in &pairs {
                     acct.shard_mut(shard.index).record_forward_padded(shard.len(), *cap);
                 }
-                let mut merged = Vec::with_capacity(batch_n * out_width);
+                let mut merged = tensor::take_f32_empty(batch_n * out_width);
                 for part in parts {
-                    merged.extend_from_slice(&part?);
+                    let part = part?;
+                    merged.extend_from_slice(&part);
+                    tensor::recycle_f32(part);
                 }
                 Ok(merged)
             }
@@ -264,6 +282,10 @@ impl<'e> GatedLoop<'e> {
                     inputs.extend(param_inputs.iter());
                     inputs.extend(extras.iter());
                     let mut out = eng.execute_refs(&shard_name(chunk.cap), &inputs)?;
+                    // gathered inputs go straight back to this worker's arena
+                    for t in extras {
+                        tensor::recycle_tensor(t);
+                    }
                     let mut rows_out = out.remove(0).into_f32()?;
                     rows_out.truncate(chunk.idx.len() * out_width);
                     Ok(rows_out)
@@ -274,9 +296,11 @@ impl<'e> GatedLoop<'e> {
                 }
                 // the screen's win, made real: these rows never ran
                 acct.shard_mut(0).record_forward_skipped(batch_n - k);
-                let mut merged = Vec::with_capacity(k * out_width);
+                let mut merged = tensor::take_f32_empty(k * out_width);
                 for part in parts {
-                    merged.extend_from_slice(&part?);
+                    let part = part?;
+                    merged.extend_from_slice(&part);
+                    tensor::recycle_f32(part);
                 }
                 Ok(merged)
             }

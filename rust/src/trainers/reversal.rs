@@ -33,7 +33,7 @@ use crate::coordinator::{Ledger, ScreenCfg, ShardedLedger};
 use crate::envs::reversal::ReversalEnv;
 use crate::model::ParamStore;
 use crate::optim::Adam;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
 use super::{EvalPoint, GatedLoop};
@@ -135,10 +135,18 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
 
     let h_t = HostTensor::scalar_i32(cfg.h as i32);
     let m_t = HostTensor::scalar_i32(cfg.m as i32);
+    // step-persistent scratch: the token-keep -> episode-weight scatter
+    // buffers are refilled per epoch, never reallocated
+    let mut ep_weights = vec![0.0f32; batch * h_max];
+    let mut ep_has = vec![false; batch];
 
     for step in 0..cfg.steps {
         let prompts = env.sample_prompts(&mut rng);
-        let prompt_t = HostTensor::i32(&[batch, h_max], prompts.tokens.clone());
+        let prompt_t = {
+            let mut buf = tensor::take_i32_zeroed(batch * h_max);
+            buf.copy_from_slice(&prompts.tokens);
+            HostTensor::i32(&[batch, h_max], buf)
+        };
 
         // ---- rollout (autoregressive sampling inside the artifact)
         params.marshal_into(&mut param_inputs);
@@ -203,6 +211,8 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
             let sell0: Vec<f64> = survivors.iter().map(|&t| ell[t]).collect();
             gl.observe_screen(&feats, &survivors, &sell0);
         }
+        // the screen is done with the embedded token rows
+        tensor::recycle_f32(feats);
 
         let logp_roll: Vec<f64> = ell.iter().map(|&e| -e).collect();
         for epoch in 0..cfg.inner_epochs.max(1) {
@@ -214,7 +224,11 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 // the previous epoch's backward stepped the optimizer, so
                 // refresh the shared parameter buffer before re-scoring
                 params.marshal_into(&mut param_inputs);
-                let actions_t = HostTensor::i32(&[batch, h_max], actions.clone());
+                let actions_t = {
+                    let mut buf = tensor::take_i32_zeroed(batch * h_max);
+                    buf.copy_from_slice(&actions);
+                    HostTensor::i32(&[batch, h_max], buf)
+                };
                 let mut finputs: Vec<&HostTensor> = param_inputs.iter().collect();
                 finputs.push(&prompt_t);
                 finputs.push(&actions_t);
@@ -228,6 +242,10 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                     for j in 0..cfg.h {
                         e[ep * cfg.h + j] = -(lp_new[ep * h_max + j] as f64);
                     }
+                }
+                tensor::recycle_tensor(actions_t);
+                for t in fout {
+                    tensor::recycle_tensor(t);
                 }
                 (e, Some(logp_roll.as_slice()))
             };
@@ -250,8 +268,9 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
             }
 
             // ---- token keep-set (survivor slots) -> episode list + weights
-            let mut ep_weights = vec![0.0f32; batch * h_max];
-            let mut ep_has = vec![false; batch];
+            // (step-persistent buffers, cleared per epoch)
+            ep_weights.fill(0.0);
+            ep_has.fill(false);
             for &s in &decision.keep {
                 let t = survivors[s];
                 let ep = t / cfg.h;
@@ -278,6 +297,15 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 |cap| format!("{prefix}_bwd_c{cap}"),
                 |chunk| {
                     let cap = chunk.cap;
+                    // the h/m scalars are arena-sourced (not clones of
+                    // h_t/m_t): the backward stage recycles every extra,
+                    // and a recycled clone would grow the freelists by
+                    // one fresh allocation per chunk forever
+                    let scalar = |v: i32| {
+                        let mut buf = tensor::take_i32_zeroed(1);
+                        buf[0] = v;
+                        HostTensor::i32(&[1], buf)
+                    };
                     vec![
                         HostTensor::i32(
                             &[cap, h_max],
@@ -291,8 +319,8 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                             &[cap, h_max],
                             gather_rows_f32(&ep_weights, h_max, &chunk.idx, cap),
                         ),
-                        h_t.clone(),
-                        m_t.clone(),
+                        scalar(cfg.h as i32),
+                        scalar(cfg.m as i32),
                     ]
                 },
                 batch as f32,
@@ -315,6 +343,12 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 metric2: 0.0,
             });
         }
+
+        // step teardown: rollout outputs and the prompt copy return to
+        // the arena for the next step
+        tensor::recycle_tensor(prompt_t);
+        tensor::recycle_i32(actions);
+        tensor::recycle_f32(logp);
     }
 
     let final_reward = curve.last().map(|p| p.metric).unwrap_or(0.0);
@@ -341,7 +375,7 @@ fn token_feats(
 ) -> Vec<f32> {
     let emit = params.by_name("emit").expect("token_feats requires an emit table");
     let rows = emit.len() / width;
-    let mut feats = vec![0.0f32; batch * h * width];
+    let mut feats = tensor::take_f32_zeroed(batch * h * width);
     for ep in 0..batch {
         for j in 0..h {
             let tok = (actions[ep * h_max + j].max(0) as usize).min(rows - 1);

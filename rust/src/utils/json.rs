@@ -80,6 +80,85 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
     }
+
+    /// Serialize with 2-space indentation (the emit half of the parser's
+    /// subset: used by the bench JSON sink to merge-write `BENCH_e2e.json`
+    /// without clobbering sections other benches own).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.dump_into(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn dump_into(&self, s: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        let pad_in = "  ".repeat(indent + 1);
+        match self {
+            Json::Null => s.push_str("null"),
+            Json::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // integers print without a trailing ".0" so round-trips
+                // are stable for counters and schema versions
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    s.push_str(&format!("{}", *n as i64));
+                } else {
+                    s.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(v) => {
+                s.push('"');
+                for c in v.chars() {
+                    match c {
+                        '"' => s.push_str("\\\""),
+                        '\\' => s.push_str("\\\\"),
+                        '\n' => s.push_str("\\n"),
+                        '\t' => s.push_str("\\t"),
+                        '\r' => s.push_str("\\r"),
+                        c if (c as u32) < 0x20 => s.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => s.push(c),
+                    }
+                }
+                s.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    s.push_str("[]");
+                    return;
+                }
+                s.push_str("[\n");
+                for (i, it) in items.iter().enumerate() {
+                    s.push_str(&pad_in);
+                    it.dump_into(s, indent + 1);
+                    s.push_str(if i + 1 == items.len() { "\n" } else { ",\n" });
+                }
+                s.push_str(&pad);
+                s.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    s.push_str("{}");
+                    return;
+                }
+                s.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    s.push_str(&pad_in);
+                    s.push_str(&Json::Str(k.clone()).to_dumped_key());
+                    s.push_str(": ");
+                    v.dump_into(s, indent + 1);
+                    s.push_str(if i + 1 == m.len() { "\n" } else { ",\n" });
+                }
+                s.push_str(&pad);
+                s.push('}');
+            }
+        }
+    }
+
+    fn to_dumped_key(&self) -> String {
+        let mut s = String::new();
+        self.dump_into(&mut s, 0);
+        s
+    }
 }
 
 struct Parser<'a> {
@@ -293,5 +372,19 @@ mod tests {
     fn negative_exponent_shapes() {
         let j = Json::parse(r#"{"neg_inf": -1e+30}"#).unwrap();
         assert_eq!(j.get("neg_inf").unwrap().as_f64(), Some(-1e30));
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let doc = r#"{"schema": 2, "note": "a \"quoted\" note\nline2",
+            "benches": {"e2e_step": {"platform": "native", "entries": []},
+                        "kernels": {"entries": [{"gflops": 1.25, "n": 3}]}},
+            "flags": [true, false, null, -1.5e3]}"#;
+        let parsed = Json::parse(doc).unwrap();
+        let dumped = parsed.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), parsed, "roundtrip drift:\n{dumped}");
+        // integers stay integer-shaped, floats keep their fraction
+        assert!(dumped.contains("\"schema\": 2"));
+        assert!(dumped.contains("1.25"));
     }
 }

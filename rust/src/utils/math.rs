@@ -1,4 +1,27 @@
 //! Numerics shared across the coordinator and the tabular analysis.
+//!
+//! The reductions here (`dot`, `norm`, `perp_norm2`) use the same
+//! **fixed-width lane reduction** as the native kernel layer
+//! (`runtime/kernels.rs`): element `i` accumulates into lane `i % LANES`
+//! in ascending order, and the lanes are combined by the fixed tree
+//! `(l0 + l1) + (l2 + l3)`. The reduction order is a pure function of the
+//! input length — never of worker count, thread, or blocking — which is
+//! the determinism rule DESIGN.md §9 states for every reduction on the
+//! training path (the tier-1 `DraftScreen` dot is one of these per
+//! screened sample).
+
+/// Fixed lane width shared by every lane-reduced kernel in the crate.
+/// Changing this changes the accumulation tree (and therefore golden
+/// values) everywhere at once; it must never vary per call site.
+pub const LANES: usize = 4;
+
+/// The fixed lane-combination tree: `(l0 + l1) + (l2 + l3)`. A pure
+/// function of the lane values — the final stage of every lane-reduced
+/// sum in the crate.
+#[inline]
+pub fn lane_reduce(acc: &[f64; LANES]) -> f64 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
 
 /// Numerically stable log-sum-exp.
 pub fn logsumexp(xs: &[f32]) -> f32 {
@@ -43,9 +66,25 @@ pub fn binary_entropy(w: f64) -> f64 {
     -w * w.ln() - (1.0 - w) * (1.0 - w).ln()
 }
 
-/// Dot product.
+/// Dot product, f64-accumulated over `LANES` fixed-width lanes (element
+/// `i` goes to lane `i % LANES`, ascending) and combined by
+/// [`lane_reduce`]. The value is a pure function of the inputs and their
+/// length; see the module docs for why the order is fixed.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f64; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[base + l] as f64 * b[base + l] as f64;
+        }
+    }
+    let base = chunks * LANES;
+    for l in 0..(n - base) {
+        acc[l] += a[base + l] as f64 * b[base + l] as f64;
+    }
+    lane_reduce(&acc)
 }
 
 /// L2 norm.
@@ -63,20 +102,30 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     dot(a, b) / (na * nb)
 }
 
-/// Component of `a` perpendicular to `dir` (returns squared norm).
+/// Component of `a` perpendicular to `dir` (returns squared norm). Same
+/// fixed lane reduction as [`dot`].
 pub fn perp_norm2(a: &[f32], dir: &[f32]) -> f64 {
     let nd2 = dot(dir, dir);
     if nd2 < 1e-300 {
         return dot(a, a);
     }
     let proj = dot(a, dir) / nd2;
-    a.iter()
-        .zip(dir)
-        .map(|(&x, &d)| {
-            let p = x as f64 - proj * d as f64;
-            p * p
-        })
-        .sum()
+    let n = a.len().min(dir.len());
+    let mut acc = [0.0f64; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let p = a[base + l] as f64 - proj * dir[base + l] as f64;
+            acc[l] += p * p;
+        }
+    }
+    let base = chunks * LANES;
+    for l in 0..(n - base) {
+        let p = a[base + l] as f64 - proj * dir[base + l] as f64;
+        acc[l] += p * p;
+    }
+    lane_reduce(&acc)
 }
 
 /// Standard normal CDF Phi(x) via erf.
@@ -143,6 +192,64 @@ mod tests {
         assert!(cosine(&a, &b).abs() < 1e-9);
         assert!((perp_norm2(&b, &a) - 4.0).abs() < 1e-9);
         assert!(perp_norm2(&a, &a) < 1e-12);
+    }
+
+    /// Sequential scalar reference the lane-reduced `dot` must agree with
+    /// (up to reassociation error: both are exact-f64-product sums, so the
+    /// difference is bounded by a few ulps of the running magnitude).
+    fn dot_seq(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn lane_dot_matches_scalar_reference() {
+        let mut state = 0x1234_5678u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+        };
+        // lengths straddling every tail case of the LANES blocking
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 784] {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            let lane = dot(&a, &b);
+            let seq = dot_seq(&a, &b);
+            let scale = 1.0 + a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum::<f64>();
+            assert!(
+                (lane - seq).abs() <= 1e-12 * scale,
+                "n={n}: lane {lane} vs seq {seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_dot_is_deterministic_and_length_keyed() {
+        // the determinism rule: the value depends only on the inputs, and
+        // repeated evaluation is bit-identical
+        let a: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+        assert_eq!(
+            perp_norm2(&a, &b).to_bits(),
+            perp_norm2(&a, &b).to_bits()
+        );
+    }
+
+    #[test]
+    fn lane_perp_norm2_matches_scalar_reference() {
+        let a: Vec<f32> = (0..29).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let d: Vec<f32> = (0..29).map(|i| ((i * 5 % 11) as f32) - 5.0).collect();
+        let nd2 = dot_seq(&d, &d);
+        let proj = dot_seq(&a, &d) / nd2;
+        let seq: f64 = a
+            .iter()
+            .zip(&d)
+            .map(|(&x, &v)| {
+                let p = x as f64 - proj * v as f64;
+                p * p
+            })
+            .sum();
+        assert!((perp_norm2(&a, &d) - seq).abs() < 1e-9 * (1.0 + seq));
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Tier-1 schema lock on the committed `BENCH_e2e.json` perf-trajectory
+//! file: a hand-edited, truncated, or stale (schema-1) file fails the
+//! test suite instead of silently corrupting the PR-over-PR record.
+//!
+//! Schema 2:
+//! ```json
+//! {
+//!   "schema": 2,
+//!   "note": "...",
+//!   "benches": {
+//!     "<bench>": {
+//!       "platform": "<string>",
+//!       "entries": [
+//!         {"section": s, "method": s, "workers": int >= 1,
+//!          "mean_ns_per_step": num > 0, "unit": s,
+//!          "throughput_per_s": num >= 0,
+//!          "throughput_per_s_per_worker": num >= 0}
+//!       ]
+//!     }
+//!   }
+//! }
+//! ```
+//! Sections may have empty `entries` only while `platform` is the
+//! `"unmeasured"` skeleton (no toolchain has populated the file yet); a
+//! measured platform with no entries is a stale or hand-gutted file.
+
+use kondo::utils::json::Json;
+
+fn load() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("BENCH_e2e.json must exist at the repo root: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("BENCH_e2e.json is not valid JSON: {e}"))
+}
+
+fn require_num(entry: &Json, key: &str, what: &str) -> f64 {
+    entry
+        .get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("{what}: missing or non-numeric '{key}'"))
+}
+
+fn require_str<'j>(entry: &'j Json, key: &str, what: &str) -> &'j str {
+    let s = entry
+        .get(key)
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("{what}: missing or non-string '{key}'"));
+    assert!(!s.is_empty(), "{what}: '{key}' is empty");
+    s
+}
+
+#[test]
+fn bench_json_matches_schema_2() {
+    let doc = load();
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_f64),
+        Some(2.0),
+        "BENCH_e2e.json must be schema 2 (a schema-1 or unversioned file is stale)"
+    );
+    require_str(&doc, "note", "top level");
+    let benches = doc
+        .get("benches")
+        .and_then(Json::as_obj)
+        .expect("top level must hold a 'benches' object");
+    for required in ["e2e_step", "kernels"] {
+        assert!(
+            benches.contains_key(required),
+            "'benches' must keep a '{required}' section (benches merge-write; \
+             losing a section means the file was hand-edited or clobbered)"
+        );
+    }
+
+    let known_units = ["samples", "tokens", "gflops"];
+    for (name, section) in benches {
+        let what = format!("bench section '{name}'");
+        let platform = require_str(section, "platform", &what);
+        let entries = section
+            .get("entries")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{what}: missing 'entries' array"));
+        if platform != "unmeasured" {
+            assert!(
+                !entries.is_empty(),
+                "{what}: measured platform '{platform}' with zero entries — stale file"
+            );
+        }
+        for (i, entry) in entries.iter().enumerate() {
+            let what = format!("bench '{name}' entry {i}");
+            require_str(entry, "section", &what);
+            require_str(entry, "method", &what);
+            let unit = require_str(entry, "unit", &what);
+            assert!(
+                known_units.contains(&unit),
+                "{what}: unknown unit '{unit}' (expected one of {known_units:?})"
+            );
+            let workers = require_num(entry, "workers", &what);
+            assert!(
+                workers >= 1.0 && workers.fract() == 0.0,
+                "{what}: workers must be a positive integer, got {workers}"
+            );
+            let ns = require_num(entry, "mean_ns_per_step", &what);
+            assert!(ns > 0.0 && ns.is_finite(), "{what}: mean_ns_per_step {ns} not positive");
+            let tput = require_num(entry, "throughput_per_s", &what);
+            assert!(tput >= 0.0 && tput.is_finite(), "{what}: bad throughput {tput}");
+            let per_worker = require_num(entry, "throughput_per_s_per_worker", &what);
+            assert!(
+                per_worker >= 0.0 && per_worker <= tput * 1.0001 + 1e-9,
+                "{what}: per-worker throughput {per_worker} exceeds total {tput}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bench_json_skeleton_is_what_a_report_would_write() {
+    // the committed skeleton and the bench sink must agree on shape: a
+    // fresh report writing over the skeleton yields schema-2 again and
+    // keeps the other section (the merge contract the benches rely on)
+    let doc = load();
+    let benches = doc.get("benches").and_then(Json::as_obj).unwrap();
+    // every section a report writes is exactly {platform, entries}
+    for (name, section) in benches {
+        let obj = section
+            .as_obj()
+            .unwrap_or_else(|| panic!("section '{name}' must be an object"));
+        assert_eq!(
+            obj.keys().map(String::as_str).collect::<Vec<_>>(),
+            vec!["entries", "platform"],
+            "section '{name}' must hold exactly entries + platform"
+        );
+    }
+}

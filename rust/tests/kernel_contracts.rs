@@ -1,0 +1,151 @@
+//! Integration locks on the two resource contracts of the kernel layer
+//! (DESIGN.md §9), measured over real training runs:
+//!
+//! - **Pack cache:** each weight matrix is packed exactly once per
+//!   optimizer step (beside the marshal), never per call — so the pack
+//!   count is a function of steps alone, identical for every worker
+//!   count.
+//! - **Tensor arena:** per-step buffers cycle through the arena, so a
+//!   warm process runs whole training runs with zero (serial) or
+//!   near-zero (sharded) fresh allocations.
+//!
+//! Both contracts are asserted against process-global counters
+//! (`kernels::packs_built`, `tensor::arena_stats`), so the tests live in
+//! their own test binary and serialize on a local mutex — nothing else
+//! in this process touches the counters between measurements.
+
+use std::sync::Mutex;
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::runtime::kernels::packs_built;
+use kondo::runtime::{arena_stats, Engine};
+use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn mnist_cfg(steps: usize, workers: usize) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        lr: 1e-3,
+        steps,
+        eval_every: 10_000, // only the mandatory last-step eval runs
+        eval_size: 128,
+        seed: 3,
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn weights_pack_once_per_step_for_any_worker_count() {
+    let _lock = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::native_testbed();
+    let steps = 5;
+    // expected per run: 2 packs per step (w1, w2 refilled beside the
+    // marshal) + 2 for the single end-of-run eval marshal (as_inputs)
+    let expected = (steps as u64) * 2 + 2;
+    for workers in [1usize, 2, 4] {
+        let before = packs_built();
+        train_mnist(&eng, &mnist_cfg(steps, workers)).unwrap();
+        let built = packs_built() - before;
+        assert_eq!(
+            built, expected,
+            "workers={workers}: {built} packs built over {steps} steps, expected {expected} \
+             (per-call packing would scale with chunk count, not steps)"
+        );
+    }
+
+    // reversal: attn + emit, one marshal per step, no eval marshal
+    let rev = ReversalTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.2), priority: Priority::Delight },
+        steps: 4,
+        h: 5,
+        m: 2,
+        seed: 1,
+        eval_every: 10_000,
+        inner_epochs: 1,
+        workers: 2,
+        ..Default::default()
+    };
+    let before = packs_built();
+    train_reversal(&eng, &rev).unwrap();
+    assert_eq!(packs_built() - before, 4 * 2, "reversal packs attn+emit once per step");
+}
+
+#[test]
+fn arena_recycles_serial_steady_state_to_zero_fresh_allocations() {
+    let _lock = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::native_testbed();
+    // run A warms the arena from empty; run B re-runs the identical
+    // trajectory (same seed => same buffer sequence) on the warm arena
+    let cfg = mnist_cfg(6, 1);
+    train_mnist(&eng, &cfg).unwrap();
+    let warm = arena_stats();
+    train_mnist(&eng, &cfg).unwrap();
+    let after = arena_stats();
+    assert_eq!(
+        after.total() - warm.total(),
+        0,
+        "warm serial run must serve every take from the freelists \
+         (fresh f32 {} -> {}, i32 {} -> {})",
+        warm.fresh_f32,
+        after.fresh_f32,
+        warm.fresh_i32,
+        after.fresh_i32
+    );
+}
+
+#[test]
+fn arena_recycles_across_sharded_runs() {
+    let _lock = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::native_testbed();
+    // sharded: worker threads allocate, the caller recycles, exited
+    // workers flush their freelists to the shared pool — so repeated
+    // runs converge to (near-)zero fresh allocations. Exact zero is not
+    // guaranteed (scheduling decides which worker serves which chunk),
+    // and a cold/warm ratio would be order-dependent (another test in
+    // this binary may already have warmed the process-global shared
+    // pool), so the lock is an absolute bound on a run that is warm no
+    // matter which test ran first: two warm-up runs, then the measured
+    // run must stay an order of magnitude below what the ~20 takes/step
+    // x 6 steps would allocate without recycling (> 100).
+    let cfg = mnist_cfg(6, 2);
+    train_mnist(&eng, &cfg).unwrap();
+    train_mnist(&eng, &cfg).unwrap();
+    let warm_before = arena_stats();
+    train_mnist(&eng, &cfg).unwrap();
+    let warm = arena_stats().total() - warm_before.total();
+    assert!(
+        warm <= 12,
+        "sharded warm run still allocating: {warm} fresh buffers in a 6-step run \
+         (an unrecycled hot path would allocate > 100)"
+    );
+}
+
+#[test]
+fn reversal_arena_reaches_steady_state() {
+    let _lock = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::native_testbed();
+    let cfg = ReversalTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.2), priority: Priority::Delight },
+        steps: 4,
+        h: 5,
+        m: 2,
+        seed: 2,
+        eval_every: 10_000,
+        inner_epochs: 2, // exercises the re-scoring forward path too
+        workers: 1,
+        ..Default::default()
+    };
+    train_reversal(&eng, &cfg).unwrap();
+    let warm = arena_stats();
+    train_reversal(&eng, &cfg).unwrap();
+    let after = arena_stats();
+    assert_eq!(
+        after.total() - warm.total(),
+        0,
+        "warm serial reversal run must allocate nothing fresh"
+    );
+}
