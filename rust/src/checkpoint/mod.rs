@@ -1,0 +1,729 @@
+//! Durable training snapshots with a bit-identity resume contract
+//! (DESIGN.md §10).
+//!
+//! A checkpoint serializes *every* piece of state the deterministic
+//! trajectory depends on — `ParamStore` tensors, Adam moments, the
+//! tier-1 `DraftScreen` weights and warm-up counter, the streaming gate
+//! price tracker, the trainer's master PCG32 stream, the merged compute
+//! ledger, the eval curve, and a trainer-specific `extra` blob — through
+//! `utils::json`, whose float encoding is bit-exact (including NaN, ±inf
+//! and -0.0; see the json round-trip tests). Everything *not* in the
+//! trajectory contract (worker count, gate profiles, scratch buffers,
+//! the arena) is deliberately excluded: it is reconstructed fresh on
+//! resume, which is exactly what lets a checkpoint taken under
+//! `workers=1` resume under `workers=4` bit-identically.
+//!
+//! File format: one header line
+//!
+//! ```text
+//! KONDO-CKPT v1 len=<body bytes> fnv=<16-hex FNV-1a-64 of body>
+//! ```
+//!
+//! followed by the canonical JSON dump (`BTreeMap` keys ⇒ deterministic
+//! byte layout, so identical state ⇒ identical file). `len` catches
+//! truncation, the checksum catches corruption, the version gate catches
+//! format drift, and the stored config fingerprint catches resuming into
+//! the wrong run — each with a clean error, never a panic or a silent
+//! wrong resume. Writes are atomic: serialize to `<path>.tmp` in the
+//! same directory, fsync, then `rename` over the target, so a crash
+//! mid-write leaves the previous checkpoint intact.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::accounting::{Ledger, ShardedLedger};
+use crate::model::ParamStore;
+use crate::optim::Adam;
+use crate::trainers::{EvalPoint, GatedLoop};
+use crate::utils::json::Json;
+use crate::utils::rng::Pcg32;
+
+pub const MAGIC: &str = "KONDO-CKPT";
+pub const VERSION: u32 = 1;
+
+/// Checkpointing knobs threaded from `ExpConfig` into the trainer cfgs.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// target file; saves go through atomic write-rename
+    pub path: String,
+    /// save after every `every`-th optimizer step (0 = never)
+    pub every: usize,
+}
+
+/// Tier-1 draft screen state (weights + warm-up counter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScreenState {
+    pub w: Vec<f32>,
+    pub b: f32,
+    pub seen: u64,
+}
+
+/// Streaming gate price tracker state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamState {
+    pub lam: f64,
+    pub mad: f64,
+    pub count: u64,
+}
+
+/// The full serialized training state.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// config identity of the run that wrote this checkpoint; validated
+    /// key-by-key on resume (see [`validate_fingerprint`])
+    pub fingerprint: Json,
+    /// optimizer steps completed (resume continues at this step index)
+    pub step: u64,
+    pub params: Vec<Vec<f32>>,
+    pub opt_t: u64,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+    /// master RNG stream: `(state, inc, gauss_spare)`
+    pub rng: (u64, u64, Option<f64>),
+    pub screen: Option<ScreenState>,
+    pub stream: Option<StreamState>,
+    /// merged ledger totals at save time
+    pub ledger: Ledger,
+    pub curve: Vec<EvalPoint>,
+    /// trainer-specific state (train-error window, reward sums, ...)
+    pub extra: Json,
+}
+
+// ---- json building/parsing helpers (pub: trainers and tests use them) ----
+
+/// Build a `Json::Obj` from key/value pairs.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// u64 as a decimal string. `Json::Num` is an f64, which silently loses
+/// integers above 2^53 — RNG states and sample counters live up there.
+pub fn ju64(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// Parse a [`ju64`]-encoded value.
+pub fn pu64(j: &Json, what: &str) -> Result<u64> {
+    let Json::Str(s) = j else {
+        bail!("checkpoint field '{what}': expected a u64 string, got {}", j.dump().trim());
+    };
+    s.parse::<u64>().with_context(|| format!("checkpoint field '{what}': bad u64 '{s}'"))
+}
+
+/// Look up a required object field.
+pub fn field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.as_obj()
+        .and_then(|o| o.get(k))
+        .with_context(|| format!("checkpoint missing field '{k}'"))
+}
+
+pub fn pf64(j: &Json, what: &str) -> Result<f64> {
+    j.as_f64().with_context(|| format!("checkpoint field '{what}': expected a number"))
+}
+
+pub fn jf64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+pub fn pf64_arr(j: &Json, what: &str) -> Result<Vec<f64>> {
+    let Json::Arr(a) = j else {
+        bail!("checkpoint field '{what}': expected an array");
+    };
+    a.iter().map(|v| pf64(v, what)).collect()
+}
+
+/// f32 slice as an f64 array (f32 -> f64 is exact, so the round trip is
+/// lossless given the json layer's bit-exact f64 encoding).
+pub fn jf32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+pub fn pf32_arr(j: &Json, what: &str) -> Result<Vec<f32>> {
+    Ok(pf64_arr(j, what)?.into_iter().map(|x| x as f32).collect())
+}
+
+fn jf32_tensors(ts: &[Vec<f32>]) -> Json {
+    Json::Arr(ts.iter().map(|t| jf32_arr(t)).collect())
+}
+
+fn pf32_tensors(j: &Json, what: &str) -> Result<Vec<Vec<f32>>> {
+    let Json::Arr(a) = j else {
+        bail!("checkpoint field '{what}': expected an array of tensors");
+    };
+    a.iter().map(|t| pf32_arr(t, what)).collect()
+}
+
+/// FNV-1a 64-bit (the repo needs no cryptographic strength here — the
+/// checksum guards against torn writes and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---- ledger / curve codecs ----
+
+fn ledger_to_json(l: &Ledger) -> Json {
+    let hist: BTreeMap<String, Json> =
+        l.bucket_hist.iter().map(|(&cap, &n)| (cap.to_string(), ju64(n))).collect();
+    obj(vec![
+        ("forward_samples", ju64(l.forward_samples)),
+        ("forward_executed", ju64(l.forward_executed)),
+        ("forward_calls", ju64(l.forward_calls)),
+        ("screen_samples", ju64(l.screen_samples)),
+        ("forward_skipped", ju64(l.forward_skipped)),
+        ("backward_kept", ju64(l.backward_kept)),
+        ("backward_executed", ju64(l.backward_executed)),
+        ("backward_calls", ju64(l.backward_calls)),
+        ("bucket_hist", Json::Obj(hist)),
+    ])
+}
+
+fn ledger_from_json(j: &Json) -> Result<Ledger> {
+    let mut l = Ledger::new();
+    l.forward_samples = pu64(field(j, "forward_samples")?, "ledger.forward_samples")?;
+    l.forward_executed = pu64(field(j, "forward_executed")?, "ledger.forward_executed")?;
+    l.forward_calls = pu64(field(j, "forward_calls")?, "ledger.forward_calls")?;
+    l.screen_samples = pu64(field(j, "screen_samples")?, "ledger.screen_samples")?;
+    l.forward_skipped = pu64(field(j, "forward_skipped")?, "ledger.forward_skipped")?;
+    l.backward_kept = pu64(field(j, "backward_kept")?, "ledger.backward_kept")?;
+    l.backward_executed = pu64(field(j, "backward_executed")?, "ledger.backward_executed")?;
+    l.backward_calls = pu64(field(j, "backward_calls")?, "ledger.backward_calls")?;
+    let Json::Obj(hist) = field(j, "bucket_hist")? else {
+        bail!("checkpoint field 'ledger.bucket_hist': expected an object");
+    };
+    for (cap, n) in hist {
+        let cap: usize = cap
+            .parse()
+            .with_context(|| format!("ledger.bucket_hist: bad capacity key '{cap}'"))?;
+        l.bucket_hist.insert(cap, pu64(n, "ledger.bucket_hist")?);
+    }
+    Ok(l)
+}
+
+fn curve_to_json(curve: &[EvalPoint]) -> Json {
+    Json::Arr(
+        curve
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("step", ju64(p.step as u64)),
+                    ("forward_samples", ju64(p.forward_samples)),
+                    ("screen_samples", ju64(p.screen_samples)),
+                    ("forward_skipped", ju64(p.forward_skipped)),
+                    ("backward_kept", ju64(p.backward_kept)),
+                    ("backward_executed", ju64(p.backward_executed)),
+                    ("metric", Json::Num(p.metric)),
+                    ("metric2", Json::Num(p.metric2)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn curve_from_json(j: &Json) -> Result<Vec<EvalPoint>> {
+    let Json::Arr(a) = j else {
+        bail!("checkpoint field 'curve': expected an array");
+    };
+    a.iter()
+        .map(|p| {
+            Ok(EvalPoint {
+                step: pu64(field(p, "step")?, "curve.step")? as usize,
+                forward_samples: pu64(field(p, "forward_samples")?, "curve.forward_samples")?,
+                screen_samples: pu64(field(p, "screen_samples")?, "curve.screen_samples")?,
+                forward_skipped: pu64(field(p, "forward_skipped")?, "curve.forward_skipped")?,
+                backward_kept: pu64(field(p, "backward_kept")?, "curve.backward_kept")?,
+                backward_executed: pu64(
+                    field(p, "backward_executed")?,
+                    "curve.backward_executed",
+                )?,
+                metric: pf64(field(p, "metric")?, "curve.metric")?,
+                metric2: pf64(field(p, "metric2")?, "curve.metric2")?,
+            })
+        })
+        .collect()
+}
+
+// ---- encode / decode ----
+
+fn to_json(ck: &TrainCheckpoint) -> Json {
+    let (state, inc, spare) = ck.rng;
+    obj(vec![
+        ("fingerprint", ck.fingerprint.clone()),
+        ("step", ju64(ck.step)),
+        ("params", jf32_tensors(&ck.params)),
+        ("opt_t", ju64(ck.opt_t)),
+        ("opt_m", jf32_tensors(&ck.opt_m)),
+        ("opt_v", jf32_tensors(&ck.opt_v)),
+        (
+            "rng",
+            obj(vec![
+                ("state", ju64(state)),
+                ("inc", ju64(inc)),
+                ("gauss_spare", spare.map_or(Json::Null, Json::Num)),
+            ]),
+        ),
+        (
+            "screen",
+            match &ck.screen {
+                None => Json::Null,
+                Some(s) => obj(vec![
+                    ("w", jf32_arr(&s.w)),
+                    ("b", Json::Num(s.b as f64)),
+                    ("seen", ju64(s.seen)),
+                ]),
+            },
+        ),
+        (
+            "stream",
+            match &ck.stream {
+                None => Json::Null,
+                Some(s) => obj(vec![
+                    ("lam", Json::Num(s.lam)),
+                    ("mad", Json::Num(s.mad)),
+                    ("count", ju64(s.count)),
+                ]),
+            },
+        ),
+        ("ledger", ledger_to_json(&ck.ledger)),
+        ("curve", curve_to_json(&ck.curve)),
+        ("extra", ck.extra.clone()),
+    ])
+}
+
+fn from_json(j: &Json) -> Result<TrainCheckpoint> {
+    let rng = field(j, "rng")?;
+    let spare = match field(rng, "gauss_spare")? {
+        Json::Null => None,
+        v => Some(pf64(v, "rng.gauss_spare")?),
+    };
+    let screen = match field(j, "screen")? {
+        Json::Null => None,
+        s => Some(ScreenState {
+            w: pf32_arr(field(s, "w")?, "screen.w")?,
+            b: pf64(field(s, "b")?, "screen.b")? as f32,
+            seen: pu64(field(s, "seen")?, "screen.seen")?,
+        }),
+    };
+    let stream = match field(j, "stream")? {
+        Json::Null => None,
+        s => Some(StreamState {
+            lam: pf64(field(s, "lam")?, "stream.lam")?,
+            mad: pf64(field(s, "mad")?, "stream.mad")?,
+            count: pu64(field(s, "count")?, "stream.count")?,
+        }),
+    };
+    Ok(TrainCheckpoint {
+        fingerprint: field(j, "fingerprint")?.clone(),
+        step: pu64(field(j, "step")?, "step")?,
+        params: pf32_tensors(field(j, "params")?, "params")?,
+        opt_t: pu64(field(j, "opt_t")?, "opt_t")?,
+        opt_m: pf32_tensors(field(j, "opt_m")?, "opt_m")?,
+        opt_v: pf32_tensors(field(j, "opt_v")?, "opt_v")?,
+        rng: (
+            pu64(field(rng, "state")?, "rng.state")?,
+            pu64(field(rng, "inc")?, "rng.inc")?,
+            spare,
+        ),
+        screen,
+        stream,
+        ledger: ledger_from_json(field(j, "ledger")?)?,
+        curve: curve_from_json(field(j, "curve")?)?,
+        extra: field(j, "extra")?.clone(),
+    })
+}
+
+/// Serialize with the versioned, checksummed header.
+pub fn encode(ck: &TrainCheckpoint) -> String {
+    let body = to_json(ck).dump();
+    format!("{MAGIC} v{VERSION} len={} fnv={:016x}\n{body}", body.len(), fnv1a64(body.as_bytes()))
+}
+
+/// Parse and validate a serialized checkpoint (header, length, checksum,
+/// then the body). Every failure mode is an error, never a panic.
+pub fn decode(text: &str) -> Result<TrainCheckpoint> {
+    let Some((header, body)) = text.split_once('\n') else {
+        bail!("truncated checkpoint: no header line");
+    };
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.first().copied() != Some(MAGIC) {
+        bail!("not a checkpoint file: header starts with {:?}", toks.first().unwrap_or(&""));
+    }
+    if toks.len() != 4 {
+        bail!("malformed checkpoint header: {header:?}");
+    }
+    let ver: u32 = toks[1]
+        .strip_prefix('v')
+        .and_then(|v| v.parse().ok())
+        .with_context(|| format!("malformed checkpoint version token {:?}", toks[1]))?;
+    if ver != VERSION {
+        bail!("unsupported checkpoint version v{ver} (this build reads v{VERSION})");
+    }
+    let len: usize = toks[2]
+        .strip_prefix("len=")
+        .and_then(|v| v.parse().ok())
+        .with_context(|| format!("malformed checkpoint length token {:?}", toks[2]))?;
+    let fnv: u64 = toks[3]
+        .strip_prefix("fnv=")
+        .and_then(|v| u64::from_str_radix(v, 16).ok())
+        .with_context(|| format!("malformed checkpoint checksum token {:?}", toks[3]))?;
+    if body.len() != len {
+        bail!("truncated checkpoint: body is {} bytes, header promises {len}", body.len());
+    }
+    if fnv1a64(body.as_bytes()) != fnv {
+        bail!("corrupt checkpoint: FNV-1a checksum mismatch");
+    }
+    let json = Json::parse(body).map_err(|e| anyhow::anyhow!("corrupt checkpoint body: {e}"))?;
+    from_json(&json)
+}
+
+// ---- filesystem ----
+
+/// The staging file a save writes before renaming over `path`.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".tmp");
+    PathBuf::from(p)
+}
+
+/// Atomic write: stage in the same directory, fsync, rename. A failure at
+/// any point leaves the previous file at `path` untouched.
+pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+        }
+    }
+    let tmp = tmp_path(path);
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(contents.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+impl TrainCheckpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &encode(self))
+    }
+
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        decode(&text).with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+}
+
+/// Resume-time config validation: every key present in either fingerprint
+/// must match bit-for-bit (values compared by their canonical json dump,
+/// so floats compare exactly). The fingerprint deliberately excludes
+/// knobs outside the trajectory contract — step budget, worker count,
+/// checkpoint settings — so run extension and cross-worker resume pass.
+pub fn validate_fingerprint(stored: &Json, current: &Json) -> Result<()> {
+    let (Some(s), Some(c)) = (stored.as_obj(), current.as_obj()) else {
+        bail!("config fingerprint must be an object");
+    };
+    for k in s.keys().chain(c.keys()) {
+        let sv = s.get(k).map(Json::dump);
+        let cv = c.get(k).map(Json::dump);
+        if sv != cv {
+            bail!(
+                "checkpoint config mismatch at '{k}': checkpoint has {}, this run has {}",
+                sv.map_or("<absent>".into(), |v| v.trim().to_string()),
+                cv.map_or("<absent>".into(), |v| v.trim().to_string()),
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---- capture / restore against the live training state ----
+
+/// Snapshot the full training state between optimizer steps. `step` is
+/// the number of completed steps; everything else is read through the
+/// state owners' accessors.
+#[allow(clippy::too_many_arguments)]
+pub fn capture(
+    fingerprint: Json,
+    step: u64,
+    params: &ParamStore,
+    opt: &Adam,
+    rng: &Pcg32,
+    gl: &GatedLoop<'_>,
+    acct: &ShardedLedger,
+    curve: &[EvalPoint],
+    extra: Json,
+) -> TrainCheckpoint {
+    let (m, v) = opt.moments();
+    let screen = gl.screen_stage().map(|st| {
+        let (w, b) = st.draft().weights();
+        ScreenState { w: w.to_vec(), b, seen: st.draft().seen() }
+    });
+    let stream = gl.gate_stage().stream().map(|tr| {
+        let (lam, mad, count) = tr.snapshot();
+        StreamState { lam, mad, count: count as u64 }
+    });
+    TrainCheckpoint {
+        fingerprint,
+        step,
+        params: (0..params.n_tensors()).map(|i| params.tensor(i).to_vec()).collect(),
+        opt_t: opt.t(),
+        opt_m: m.to_vec(),
+        opt_v: v.to_vec(),
+        rng: rng.snapshot(),
+        screen,
+        stream,
+        ledger: acct.total(),
+        curve: curve.to_vec(),
+        extra,
+    }
+}
+
+/// Restore a loaded checkpoint into freshly-constructed training state.
+/// The ledger totals land in shard 0 of the *current* pool's sharded
+/// ledger — totals are what the contract covers, and this is what makes
+/// cross-worker resume work. Structural mismatches (tensor shapes, draft
+/// dim, screen/stream presence) are clean errors.
+pub fn restore(
+    ck: &TrainCheckpoint,
+    params: &mut ParamStore,
+    opt: &mut Adam,
+    rng: &mut Pcg32,
+    gl: &mut GatedLoop<'_>,
+    acct: &mut ShardedLedger,
+    curve: &mut Vec<EvalPoint>,
+) -> Result<()> {
+    params.restore_tensors(&ck.params)?;
+    opt.restore(ck.opt_t, ck.opt_m.clone(), ck.opt_v.clone())?;
+    *rng = Pcg32::from_snapshot(ck.rng.0, ck.rng.1, ck.rng.2);
+    match (gl.screen_stage_mut(), &ck.screen) {
+        (Some(stage), Some(s)) => stage.draft_mut().restore(&s.w, s.b, s.seen)?,
+        (None, None) => {}
+        (Some(_), None) => bail!("this run screens but the checkpoint has no draft state"),
+        (None, Some(_)) => bail!("checkpoint has draft state but this run does not screen"),
+    }
+    match (gl.gate_stage_mut().stream_mut(), &ck.stream) {
+        (Some(tracker), Some(s)) => tracker.restore(s.lam, s.mad, s.count as usize),
+        (None, None) => {}
+        (Some(_), None) => {
+            bail!("this run streams the gate price but the checkpoint has no tracker state")
+        }
+        (None, Some(_)) => {
+            bail!("checkpoint has a gate price tracker but this run does not stream")
+        }
+    }
+    *acct = ShardedLedger::new(acct.n_shards());
+    acct.shard_mut(0).merge(&ck.ledger);
+    *curve = ck.curve.clone();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("kondo_ckpt_test_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_ckpt() -> TrainCheckpoint {
+        let mut ledger = Ledger::new();
+        ledger.record_forward(64);
+        ledger.record_backward(8, 5);
+        ledger.record_screen(64);
+        ledger.record_forward_skipped(32);
+        TrainCheckpoint {
+            fingerprint: obj(vec![
+                ("trainer", Json::Str("unit".into())),
+                ("seed", ju64(7)),
+                ("lr", Json::Num(1e-3)),
+            ]),
+            step: 12,
+            // deliberately awkward values: ±0.0, inf, subnormals, NaN-free
+            params: vec![vec![1.5, -0.0, f32::INFINITY, 1.0e-40], vec![0.25]],
+            opt_t: 12,
+            opt_m: vec![vec![0.1, -0.2, 0.3, 0.4], vec![-1.0e-30]],
+            opt_v: vec![vec![0.01, 0.02, 0.03, 0.04], vec![5.0e20]],
+            rng: (u64::MAX - 3, 0xda3e39cb94b95bdb, Some(-1.25e-7)),
+            screen: Some(ScreenState { w: vec![0.5, -0.5, 0.125], b: -0.75, seen: 640 }),
+            stream: Some(StreamState { lam: 0.031415, mad: 1.0e-9, count: u64::from(u32::MAX) }),
+            ledger,
+            curve: vec![EvalPoint {
+                step: 7,
+                forward_samples: 512,
+                screen_samples: 512,
+                forward_skipped: 200,
+                backward_kept: 30,
+                backward_executed: 32,
+                metric: 0.11,
+                metric2: f64::NAN,
+            }],
+            extra: obj(vec![("reward_sum", Json::Num(-3.5))]),
+        }
+    }
+
+    fn assert_ckpt_eq(a: &TrainCheckpoint, b: &TrainCheckpoint) {
+        assert_eq!(a.fingerprint.dump(), b.fingerprint.dump());
+        assert_eq!(a.step, b.step);
+        for (x, y) in a.params.iter().flatten().zip(b.params.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.opt_t, b.opt_t);
+        assert_eq!(a.opt_m, b.opt_m);
+        assert_eq!(a.opt_v, b.opt_v);
+        assert_eq!(a.rng.0, b.rng.0);
+        assert_eq!(a.rng.1, b.rng.1);
+        assert_eq!(a.rng.2.map(f64::to_bits), b.rng.2.map(f64::to_bits));
+        assert_eq!(a.screen, b.screen);
+        assert_eq!(a.stream, b.stream);
+        assert_eq!(ledger_to_json(&a.ledger).dump(), ledger_to_json(&b.ledger).dump());
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (p, q) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(p.step, q.step);
+            assert_eq!(p.forward_samples, q.forward_samples);
+            assert_eq!(p.metric.to_bits(), q.metric.to_bits());
+            assert!(p.metric2.is_nan() == q.metric2.is_nan());
+        }
+        assert_eq!(a.extra.dump(), b.extra.dump());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bit_exact() {
+        let ck = sample_ckpt();
+        let text = encode(&ck);
+        let back = decode(&text).unwrap();
+        assert_ckpt_eq(&ck, &back);
+        // canonical layout: re-encoding the decoded state is byte-identical
+        assert_eq!(text, encode(&back));
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = test_dir("roundtrip");
+        let path = dir.join("ck.ckpt");
+        let ck = sample_ckpt();
+        ck.save(&path).unwrap();
+        let back = TrainCheckpoint::load(&path).unwrap();
+        assert_ckpt_eq(&ck, &back);
+        // the staging file does not linger after a successful save
+        assert!(!tmp_path(&path).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_creates_parent_dirs() {
+        let dir = test_dir("mkdirs");
+        let path = dir.join("a/b/c/ck.ckpt");
+        sample_ckpt().save(&path).unwrap();
+        assert!(TrainCheckpoint::load(&path).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_is_clean_error() {
+        let full = encode(&sample_ckpt());
+        // cut at several depths: inside the body, inside the header, empty
+        for cut in [full.len() - 1, full.len() / 2, 40, 10, 0] {
+            let err = decode(&full[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("malformed") || err.contains("not a"),
+                "cut at {cut}: unexpected error {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn flipped_byte_is_clean_error() {
+        let full = encode(&sample_ckpt());
+        let header_end = full.find('\n').unwrap();
+        // flip one byte in the body (past the header)
+        let mut bytes = full.clone().into_bytes();
+        let i = header_end + 1 + (bytes.len() - header_end) / 2;
+        bytes[i] = bytes[i].wrapping_add(1);
+        let err = decode(std::str::from_utf8(&bytes).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error {err:?}");
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_clean_errors() {
+        let full = encode(&sample_ckpt());
+        let bumped = full.replacen("v1 ", "v2 ", 1);
+        let err = decode(&bumped).unwrap_err().to_string();
+        assert!(err.contains("version v2"), "unexpected error {err:?}");
+        let err = decode(&full.replacen(MAGIC, "OTHER-FMT", 1)).unwrap_err().to_string();
+        assert!(err.contains("not a checkpoint"), "unexpected error {err:?}");
+        assert!(decode("garbage with no newline").is_err());
+        assert!(decode("").is_err());
+    }
+
+    #[test]
+    fn interrupted_write_leaves_previous_checkpoint_intact() {
+        let dir = test_dir("atomic");
+        let path = dir.join("ck.ckpt");
+        let v1 = sample_ckpt();
+        v1.save(&path).unwrap();
+        // simulate a crash mid-write: a partial staging file appears, the
+        // rename never happens
+        fs::write(tmp_path(&path), &encode(&v1)[..50]).unwrap();
+        let back = TrainCheckpoint::load(&path).unwrap();
+        assert_ckpt_eq(&v1, &back);
+        // the next save replaces the stale staging file and the target
+        let mut v2 = sample_ckpt();
+        v2.step = 99;
+        v2.save(&path).unwrap();
+        assert_eq!(TrainCheckpoint::load(&path).unwrap().step, 99);
+        assert!(!tmp_path(&path).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_the_key() {
+        let a = obj(vec![("seed", ju64(7)), ("rho", Json::Num(0.25))]);
+        let b = obj(vec![("seed", ju64(7)), ("rho", Json::Num(0.5))]);
+        let err = validate_fingerprint(&a, &b).unwrap_err().to_string();
+        assert!(err.contains("'rho'"), "unexpected error {err:?}");
+        // a key absent on one side is also a mismatch
+        let c = obj(vec![("seed", ju64(7))]);
+        assert!(validate_fingerprint(&a, &c).is_err());
+        assert!(validate_fingerprint(&c, &a).is_err());
+        // identity passes, including exact float comparison
+        assert!(validate_fingerprint(&a, &a.clone()).is_ok());
+    }
+
+    #[test]
+    fn u64_codec_covers_the_full_range() {
+        for x in [0u64, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX] {
+            assert_eq!(pu64(&ju64(x), "t").unwrap(), x);
+        }
+        assert!(pu64(&Json::Num(5.0), "t").is_err(), "raw numbers are rejected");
+        assert!(pu64(&Json::Str("-1".into()), "t").is_err());
+        assert!(pu64(&Json::Str("huge999999999999999999999".into()), "t").is_err());
+    }
+
+    #[test]
+    fn corrupt_body_shapes_are_errors_not_panics() {
+        // structurally valid header+json, semantically wrong bodies
+        let wrap = |body: &str| format!("{MAGIC} v1 len={} fnv={:016x}\n{body}", body.len(), fnv1a64(body.as_bytes()));
+        for body in [
+            "null", "5", "[]", "{}", r#"{"step": "3"}"#,
+        ] {
+            assert!(decode(&wrap(body)).is_err(), "body {body:?} must not decode");
+        }
+    }
+}

@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::CheckpointCfg;
 use crate::coordinator::ScreenCfg;
 use crate::utils::toml::TomlDoc;
 
@@ -37,6 +38,12 @@ pub struct ExpConfig {
     pub draft_lr: f64,
     /// batches of exact surprisal the draft absorbs before screening
     pub screen_warmup: usize,
+    /// save a training checkpoint every N optimizer steps (0 = never)
+    pub checkpoint_every: usize,
+    /// checkpoint file path; empty = `<out_dir>/kondo.ckpt` when enabled
+    pub checkpoint_path: String,
+    /// resume training from this checkpoint file (empty = fresh run)
+    pub resume_from: String,
 }
 
 impl Default for ExpConfig {
@@ -55,6 +62,9 @@ impl Default for ExpConfig {
             rho_screen: 1.0,
             draft_lr: 1e-3,
             screen_warmup: 20,
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+            resume_from: String::new(),
         }
     }
 }
@@ -102,6 +112,15 @@ impl ExpConfig {
         if let Some(v) = doc.i64("exp.screen_warmup") {
             self.screen_warmup = v.max(0) as usize;
         }
+        if let Some(v) = doc.i64("exp.checkpoint_every") {
+            self.checkpoint_every = v.max(0) as usize;
+        }
+        if let Some(v) = doc.str("exp.checkpoint_path") {
+            self.checkpoint_path = v.to_string();
+        }
+        if let Some(v) = doc.str("exp.resume_from") {
+            self.resume_from = v.to_string();
+        }
     }
 
     /// The screen configuration these knobs describe (threaded into both
@@ -112,6 +131,25 @@ impl ExpConfig {
             draft_lr: self.draft_lr,
             warmup_batches: self.screen_warmup as u64,
         }
+    }
+
+    /// The checkpointing configuration these knobs describe, or `None`
+    /// when checkpointing is off. An empty path defaults into `out_dir`.
+    pub fn checkpoint_cfg(&self) -> Option<CheckpointCfg> {
+        if self.checkpoint_every == 0 {
+            return None;
+        }
+        let path = if self.checkpoint_path.is_empty() {
+            format!("{}/kondo.ckpt", self.out_dir)
+        } else {
+            self.checkpoint_path.clone()
+        };
+        Some(CheckpointCfg { path, every: self.checkpoint_every })
+    }
+
+    /// The resume source, or `None` for a fresh run.
+    pub fn resume_from_opt(&self) -> Option<String> {
+        if self.resume_from.is_empty() { None } else { Some(self.resume_from.clone()) }
     }
 
     /// Load a preset file on top of defaults.
@@ -131,7 +169,7 @@ impl ExpConfig {
     /// parsing so typos (`workers=eight`) still error instead of silently
     /// falling back to defaults.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
-        const STR_KEYS: &[&str] = &["out_dir", "artifacts_dir"];
+        const STR_KEYS: &[&str] = &["out_dir", "artifacts_dir", "checkpoint_path", "resume_from"];
         let quoted;
         let value_toml = if STR_KEYS.contains(&key) && !value.starts_with('"') {
             quoted = format!("\"{value}\"");
@@ -190,6 +228,25 @@ mod tests {
         assert!(!cfg.screen_cfg().active());
         cfg.apply_override("rho_screen", "0.0").unwrap();
         assert!(!cfg.screen_cfg().active());
+    }
+
+    #[test]
+    fn checkpoint_knobs_thread_through() {
+        let mut cfg = ExpConfig::default();
+        assert!(cfg.checkpoint_cfg().is_none(), "checkpointing is off by default");
+        assert!(cfg.resume_from_opt().is_none());
+        cfg.apply_override("checkpoint_every", "50").unwrap();
+        let ck = cfg.checkpoint_cfg().unwrap();
+        assert_eq!(ck.every, 50);
+        assert_eq!(ck.path, "results/kondo.ckpt", "empty path defaults into out_dir");
+        // explicit path wins (bare value auto-quoted like other str keys)
+        cfg.apply_override("checkpoint_path", "/tmp/run7.ckpt").unwrap();
+        assert_eq!(cfg.checkpoint_cfg().unwrap().path, "/tmp/run7.ckpt");
+        cfg.apply_override("resume_from", "/tmp/run7.ckpt").unwrap();
+        assert_eq!(cfg.resume_from_opt().as_deref(), Some("/tmp/run7.ckpt"));
+        // negative cadence clamps to off, matching the other numeric knobs
+        cfg.apply_override("checkpoint_every", "-3").unwrap();
+        assert!(cfg.checkpoint_cfg().is_none());
     }
 
     #[test]

@@ -148,6 +148,11 @@ impl ScreenStage {
         &self.draft
     }
 
+    /// Mutable draft access for checkpoint restore.
+    pub fn draft_mut(&mut self) -> &mut DraftScreen {
+        &mut self.draft
+    }
+
     /// Has the draft absorbed enough exact surprisal to screen?
     pub fn warm(&self) -> bool {
         self.draft.seen() >= self.cfg.warmup_batches * self.unit as u64
@@ -321,6 +326,17 @@ impl GateStage {
     /// Inert stage: plain `Method::decide` pass-through.
     pub fn passthrough() -> GateStage {
         GateStage { stream: None, min_count: 0 }
+    }
+
+    /// The streaming price tracker, when this configuration has one
+    /// (checkpoint capture).
+    pub fn stream(&self) -> Option<&EwQuantile> {
+        self.stream.as_ref()
+    }
+
+    /// Mutable tracker access for checkpoint restore.
+    pub fn stream_mut(&mut self) -> Option<&mut EwQuantile> {
+        self.stream.as_mut()
     }
 
     /// Decide which survivors get a backward pass. Indices in the returned

@@ -167,6 +167,19 @@ impl EwQuantile {
     pub fn count(&self) -> usize {
         self.count
     }
+
+    /// Mutable tracker state for checkpointing: `(lam, mad, count)`.
+    /// `q` and `rate` are construction-time config, not state.
+    pub fn snapshot(&self) -> (f64, f64, usize) {
+        (self.lam, self.mad, self.count)
+    }
+
+    /// Restore tracker state from a `snapshot()` tuple (checkpoint resume).
+    pub fn restore(&mut self, lam: f64, mad: f64, count: usize) {
+        self.lam = lam;
+        self.mad = mad;
+        self.count = count;
+    }
 }
 
 #[cfg(test)]

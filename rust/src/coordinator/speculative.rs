@@ -12,6 +12,8 @@
 //! `screening_precision` quantifies screening quality as precision of the
 //! draft's top-rho set against the true top-rho set.
 
+use anyhow::{bail, Result};
+
 use crate::utils::rng::Pcg32;
 use crate::utils::stats::quantile;
 
@@ -58,6 +60,29 @@ impl DraftScreen {
         }
         self.b -= g;
         self.seen += 1;
+    }
+
+    /// Learned state for checkpointing: `(weights, bias)`. `seen` travels
+    /// separately via [`DraftScreen::seen`]; `lr` is config, not state.
+    pub fn weights(&self) -> (&[f32], f32) {
+        (&self.w, self.b)
+    }
+
+    /// Restore learned state from a checkpoint, keeping the construction-
+    /// time learning rate. A dimension mismatch (the checkpoint came from
+    /// a different model) is a clean error, never a panic.
+    pub fn restore(&mut self, w: &[f32], b: f32, seen: u64) -> Result<()> {
+        if w.len() != self.w.len() {
+            bail!(
+                "draft screen dim mismatch: checkpoint {} vs model {}",
+                w.len(),
+                self.w.len()
+            );
+        }
+        self.w.copy_from_slice(w);
+        self.b = b;
+        self.seen = seen;
+        Ok(())
     }
 
     /// One SGD pass against observed surprisals. (Warm-up policy and

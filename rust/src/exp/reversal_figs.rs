@@ -49,6 +49,8 @@ fn base_cfg(ctx: &ExpCtx, method: Method, h: usize, m: usize, seed: u64) -> Reve
         inner_epochs: 1,
         screen: ctx.cfg.screen_cfg(),
         workers: ctx.cfg.workers,
+        // figure runs are short sweeps: no checkpointing
+        ..Default::default()
     }
 }
 

@@ -41,6 +41,7 @@
 
 pub mod algo;
 pub mod bandit_math;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod envs;

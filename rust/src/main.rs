@@ -8,8 +8,9 @@
 //!
 //! Overrides are `key=value` pairs over configs/default.toml (seeds,
 //! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
-//! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup),
-//! plus `preset=scaled|paper` to load configs/<preset>.toml first.
+//! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup,
+//! checkpoint_every, checkpoint_path, resume_from), plus
+//! `preset=scaled|paper` to load configs/<preset>.toml first.
 
 use std::path::Path;
 
@@ -48,7 +49,7 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
     const CFG_KEYS: &[&str] = &[
         "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
         "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
-        "screen_warmup",
+        "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -112,6 +113,8 @@ fn real_main() -> Result<()> {
                         seed: arg_u64(rest, "seed").unwrap_or(0),
                         workers: cfg.workers,
                         screen: cfg.screen_cfg(),
+                        checkpoint: cfg.checkpoint_cfg(),
+                        resume_from: cfg.resume_from_opt(),
                         ..Default::default()
                     };
                     let res = train_mnist(&eng, &tcfg)?;
@@ -140,6 +143,8 @@ fn real_main() -> Result<()> {
                         inner_epochs: arg_u64(rest, "epochs").unwrap_or(1) as usize,
                         screen: cfg.screen_cfg(),
                         workers: cfg.workers,
+                        checkpoint: cfg.checkpoint_cfg(),
+                        resume_from: cfg.resume_from_opt(),
                     };
                     let res = train_reversal(&eng, &tcfg)?;
                     println!(

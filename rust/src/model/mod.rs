@@ -164,6 +164,35 @@ impl ParamStore {
     pub fn zeros_like(&self) -> Vec<Vec<f32>> {
         self.tensors.iter().map(|t| vec![0.0; t.len()]).collect()
     }
+
+    /// Overwrite every tensor from checkpointed values. All lengths are
+    /// validated before any write, so a corrupt checkpoint cannot leave the
+    /// store half-restored (and cannot panic). Bumps the version so stale
+    /// `WeightPack`s are rebuilt on the next marshal.
+    pub fn restore_tensors(&mut self, tensors: &[Vec<f32>]) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!(
+                "checkpoint has {} tensors, model expects {}",
+                tensors.len(),
+                self.tensors.len()
+            );
+        }
+        for i in 0..tensors.len() {
+            if tensors[i].len() != self.tensors[i].len() {
+                bail!(
+                    "tensor '{}': checkpoint length {} != model length {}",
+                    self.rules[i].name,
+                    tensors[i].len(),
+                    self.tensors[i].len()
+                );
+            }
+        }
+        for i in 0..tensors.len() {
+            self.tensors[i].copy_from_slice(&tensors[i]);
+        }
+        self.version += 1;
+        Ok(())
+    }
 }
 
 /// Gradient accumulator matching a ParamStore layout.

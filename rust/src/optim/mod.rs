@@ -3,6 +3,7 @@
 //! artifact's output tensors, accumulated across capacity buckets.
 
 use crate::model::ParamStore;
+use anyhow::{bail, Result};
 
 pub trait Optimizer {
     /// Apply one update step given per-tensor gradients.
@@ -34,6 +35,45 @@ impl Adam {
             m: params.zeros_like(),
             v: params.zeros_like(),
         }
+    }
+
+    /// Bias-correction step counter (checkpointing).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// First/second-moment accumulators (checkpointing).
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore optimizer state from a checkpoint. Shapes must match the
+    /// `ParamStore` this optimizer was built for; mismatches are errors,
+    /// never panics (corrupt checkpoints must fail cleanly).
+    pub fn restore(&mut self, t: u64, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            bail!(
+                "optimizer moment arity mismatch: checkpoint has {}/{} tensors, model has {}",
+                m.len(),
+                v.len(),
+                self.m.len()
+            );
+        }
+        for i in 0..m.len() {
+            if m[i].len() != self.m[i].len() || v[i].len() != self.v[i].len() {
+                bail!(
+                    "optimizer moment {} length mismatch: checkpoint {}/{}, model {}",
+                    i,
+                    m[i].len(),
+                    v[i].len(),
+                    self.m[i].len()
+                );
+            }
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 

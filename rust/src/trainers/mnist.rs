@@ -21,10 +21,13 @@
 //! screen keeps this: per-sample RNG streams are keyed by the ORIGINAL
 //! batch index, so surviving a screen never shifts anybody's draws.
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{bail, Result};
 
 use crate::algo::baseline::Baseline;
 use crate::algo::{perturb_delight_abs, perturb_delight_rel, BatchSignals, Method};
+use crate::checkpoint::{self, CheckpointCfg, TrainCheckpoint};
 use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32, BucketSet};
 use crate::coordinator::pool::unit_rng;
 use crate::coordinator::{
@@ -33,7 +36,8 @@ use crate::coordinator::{
 use crate::envs::mnist::{MnistBandit, RewardNoise};
 use crate::model::ParamStore;
 use crate::optim::Adam;
-use crate::runtime::{tensor, Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor, InitRule};
+use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
 use super::{EvalPoint, GatedLoop};
@@ -66,6 +70,10 @@ pub struct MnistTrainerCfg {
     pub screen: ScreenCfg,
     /// worker threads for sharded forward/scoring/backward (1 = serial)
     pub workers: usize,
+    /// periodic checkpointing (None = never); see `crate::checkpoint`
+    pub checkpoint: Option<CheckpointCfg>,
+    /// resume from this checkpoint file before taking any steps
+    pub resume_from: Option<String>,
 }
 
 impl Default for MnistTrainerCfg {
@@ -86,8 +94,43 @@ impl Default for MnistTrainerCfg {
             streaming_lambda: false,
             screen: ScreenCfg::default(),
             workers: 1,
+            checkpoint: None,
+            resume_from: None,
         }
     }
+}
+
+/// Config identity stored in (and validated against) checkpoints: every
+/// knob inside the deterministic-trajectory contract. Deliberately
+/// excluded: `steps` (run extension), `workers` (cross-worker resume is
+/// bit-identical by the determinism contract), `gate_profile_steps`
+/// (diagnostics), and the checkpoint knobs themselves.
+fn fingerprint(cfg: &MnistTrainerCfg, rules: &[InitRule]) -> Json {
+    checkpoint::obj(vec![
+        ("trainer", Json::Str("mnist".into())),
+        ("seed", checkpoint::ju64(cfg.seed)),
+        ("method", Json::Str(format!("{:?}", cfg.method))),
+        ("baseline", Json::Str(format!("{:?}", cfg.baseline))),
+        ("noise", Json::Str(format!("{:?}", cfg.noise))),
+        ("screen", Json::Str(format!("{:?}", cfg.screen))),
+        ("lr", Json::Num(cfg.lr)),
+        ("delight_noise_rel", Json::Num(cfg.delight_noise_rel)),
+        ("delight_noise_abs", Json::Num(cfg.delight_noise_abs)),
+        ("logit_noise", Json::Num(cfg.logit_noise)),
+        ("eval_every", checkpoint::ju64(cfg.eval_every as u64)),
+        ("eval_size", checkpoint::ju64(cfg.eval_size as u64)),
+        ("streaming_lambda", Json::Bool(cfg.streaming_lambda)),
+        (
+            "shapes",
+            Json::Str(
+                rules
+                    .iter()
+                    .map(|r| format!("{}:{:?}", r.name, r.shape))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+        ),
+    ])
 }
 
 /// pi(y*) of kept vs skipped samples around one training step (Fig 15).
@@ -173,7 +216,35 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     let mut w_batch = vec![0.0f32; b];
     let mut a_batch = vec![0i32; b];
 
-    for step in 0..cfg.steps {
+    // ---- checkpoint resume: restore every trajectory-bearing piece of
+    // state, then continue the loop from the saved step cursor as if the
+    // run had never stopped (bit-identity locked by checkpoint_resume.rs)
+    let fp = fingerprint(cfg, &rules);
+    let mut start_step = 0usize;
+    if let Some(path) = &cfg.resume_from {
+        let ck = TrainCheckpoint::load(Path::new(path))?;
+        checkpoint::validate_fingerprint(&ck.fingerprint, &fp)?;
+        checkpoint::restore(
+            &ck, &mut params, &mut opt, &mut rng, &mut gl, &mut acct, &mut curve,
+        )?;
+        train_err_window.restore(checkpoint::pf64_arr(
+            checkpoint::field(&ck.extra, "train_window")?,
+            "extra.train_window",
+        )?);
+        precisions = checkpoint::pf64_arr(
+            checkpoint::field(&ck.extra, "precisions")?,
+            "extra.precisions",
+        )?;
+        start_step = ck.step as usize;
+        if start_step > cfg.steps {
+            bail!(
+                "checkpoint is at step {start_step}, beyond this run's {} steps",
+                cfg.steps
+            );
+        }
+    }
+
+    for step in start_step..cfg.steps {
         let ctx = env.sample_contexts(&mut rng);
         if cfg.logit_noise > 0.0 {
             for nz in noise.iter_mut() {
@@ -366,6 +437,29 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
                 metric2: test_err,
             });
         }
+
+        // ---- checkpoint save: between optimizer steps, after the eval
+        // cadence, so a resumed run replays neither a step nor an eval
+        if let Some(ck_cfg) = &cfg.checkpoint {
+            if ck_cfg.every > 0 && (step + 1) % ck_cfg.every == 0 {
+                let extra = checkpoint::obj(vec![
+                    ("train_window", checkpoint::jf64_arr(train_err_window.buf())),
+                    ("precisions", checkpoint::jf64_arr(&precisions)),
+                ]);
+                checkpoint::capture(
+                    fp.clone(),
+                    (step + 1) as u64,
+                    &params,
+                    &opt,
+                    &rng,
+                    &gl,
+                    &acct,
+                    &curve,
+                    extra,
+                )
+                .save(Path::new(&ck_cfg.path))?;
+            }
+        }
     }
 
     let final_test = curve.last().map(|p| p.metric2).unwrap_or(1.0);
@@ -465,5 +559,19 @@ impl TrainWindow {
             return 1.0;
         }
         self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    fn buf(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// Checkpoint restore: adopt the saved window, keeping at most the
+    /// last `cap` entries (push semantics).
+    fn restore(&mut self, vals: Vec<f64>) {
+        self.buf = vals;
+        if self.buf.len() > self.cap {
+            let excess = self.buf.len() - self.cap;
+            self.buf.drain(..excess);
+        }
     }
 }

@@ -135,6 +135,20 @@ impl<'e> GatedLoop<'e> {
         self.screen.as_ref()
     }
 
+    /// Mutable screen-stage access for checkpoint restore.
+    pub fn screen_stage_mut(&mut self) -> Option<&mut ScreenStage> {
+        self.screen.as_mut()
+    }
+
+    pub fn gate_stage(&self) -> &GateStage {
+        &self.gate
+    }
+
+    /// Mutable gate-stage access for checkpoint restore.
+    pub fn gate_stage_mut(&mut self) -> &mut GateStage {
+        &mut self.gate
+    }
+
     /// Contiguous shards of an `n`-row batch for this pool. This is the
     /// dispatch layer: empty shards (`split_shards(0, w)` yields one) are
     /// skipped (`pool::non_empty_shards`) so they are never handed to

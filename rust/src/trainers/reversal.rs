@@ -24,16 +24,20 @@
 //! is resolved once over the merged token scores. At eta = 0 the
 //! trajectory is bit-identical for every `workers` value (gated_e2e.rs).
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{bail, Result};
 
 use crate::algo::baseline::grouped_baseline;
 use crate::algo::{BatchSignals, Method};
+use crate::checkpoint::{self, CheckpointCfg, TrainCheckpoint};
 use crate::coordinator::batcher::{gather_rows_f32, gather_rows_i32};
 use crate::coordinator::{Ledger, ScreenCfg, ShardedLedger};
 use crate::envs::reversal::ReversalEnv;
 use crate::model::ParamStore;
 use crate::optim::Adam;
-use crate::runtime::{tensor, Engine, HostTensor};
+use crate::runtime::{tensor, Engine, HostTensor, InitRule};
+use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
 use super::{EvalPoint, GatedLoop};
@@ -56,6 +60,10 @@ pub struct ReversalTrainerCfg {
     pub screen: ScreenCfg,
     /// worker threads for sharded scoring/backward (1 = serial)
     pub workers: usize,
+    /// periodic checkpointing (None = never); see `crate::checkpoint`
+    pub checkpoint: Option<CheckpointCfg>,
+    /// resume from this checkpoint file before taking any steps
+    pub resume_from: Option<String>,
 }
 
 impl Default for ReversalTrainerCfg {
@@ -71,8 +79,37 @@ impl Default for ReversalTrainerCfg {
             inner_epochs: 1,
             screen: ScreenCfg::default(),
             workers: 1,
+            checkpoint: None,
+            resume_from: None,
         }
     }
+}
+
+/// Config identity stored in (and validated against) checkpoints. Same
+/// exclusions as the MNIST fingerprint: `steps`, `workers`, and the
+/// checkpoint knobs are outside the trajectory contract.
+fn fingerprint(cfg: &ReversalTrainerCfg, rules: &[InitRule]) -> Json {
+    checkpoint::obj(vec![
+        ("trainer", Json::Str("reversal".into())),
+        ("seed", checkpoint::ju64(cfg.seed)),
+        ("method", Json::Str(format!("{:?}", cfg.method))),
+        ("screen", Json::Str(format!("{:?}", cfg.screen))),
+        ("lr", Json::Num(cfg.lr)),
+        ("h", checkpoint::ju64(cfg.h as u64)),
+        ("m", checkpoint::ju64(cfg.m as u64)),
+        ("inner_epochs", checkpoint::ju64(cfg.inner_epochs as u64)),
+        ("eval_every", checkpoint::ju64(cfg.eval_every as u64)),
+        (
+            "shapes",
+            Json::Str(
+                rules
+                    .iter()
+                    .map(|r| format!("{}:{:?}", r.name, r.shape))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+        ),
+    ])
 }
 
 #[derive(Debug, Clone)]
@@ -140,7 +177,33 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let mut ep_weights = vec![0.0f32; batch * h_max];
     let mut ep_has = vec![false; batch];
 
-    for step in 0..cfg.steps {
+    // ---- checkpoint resume (bit-identity locked by checkpoint_resume.rs)
+    let fp = fingerprint(cfg, &rules);
+    let mut start_step = 0usize;
+    if let Some(path) = &cfg.resume_from {
+        let ck = TrainCheckpoint::load(Path::new(path))?;
+        checkpoint::validate_fingerprint(&ck.fingerprint, &fp)?;
+        checkpoint::restore(
+            &ck, &mut params, &mut opt, &mut rng, &mut gl, &mut acct, &mut curve,
+        )?;
+        reward_sum = checkpoint::pf64(
+            checkpoint::field(&ck.extra, "reward_sum")?,
+            "extra.reward_sum",
+        )?;
+        reward_window = checkpoint::pf64_arr(
+            checkpoint::field(&ck.extra, "reward_window")?,
+            "extra.reward_window",
+        )?;
+        start_step = ck.step as usize;
+        if start_step > cfg.steps {
+            bail!(
+                "checkpoint is at step {start_step}, beyond this run's {} steps",
+                cfg.steps
+            );
+        }
+    }
+
+    for step in start_step..cfg.steps {
         let prompts = env.sample_prompts(&mut rng);
         let prompt_t = {
             let mut buf = tensor::take_i32_zeroed(batch * h_max);
@@ -342,6 +405,32 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
                 metric: recent,
                 metric2: 0.0,
             });
+        }
+
+        // ---- checkpoint save: between optimizer steps, after the eval
+        // cadence. Only the tail of the reward window is stored -- the
+        // eval metric reads at most the last 10 entries, so the tail is
+        // the whole trajectory-bearing state of the window.
+        if let Some(ck_cfg) = &cfg.checkpoint {
+            if ck_cfg.every > 0 && (step + 1) % ck_cfg.every == 0 {
+                let tail_at = reward_window.len().saturating_sub(10);
+                let extra = checkpoint::obj(vec![
+                    ("reward_sum", Json::Num(reward_sum)),
+                    ("reward_window", checkpoint::jf64_arr(&reward_window[tail_at..])),
+                ]);
+                checkpoint::capture(
+                    fp.clone(),
+                    (step + 1) as u64,
+                    &params,
+                    &opt,
+                    &rng,
+                    &gl,
+                    &acct,
+                    &curve,
+                    extra,
+                )
+                .save(Path::new(&ck_cfg.path))?;
+            }
         }
 
         // step teardown: rollout outputs and the prompt copy return to

@@ -34,7 +34,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -98,9 +98,26 @@ impl Json {
             Json::Null => s.push_str("null"),
             Json::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                // integers print without a trailing ".0" so round-trips
-                // are stable for counters and schema versions
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                // Bit-exact round-trip contract (checkpoint substrate):
+                // Rust's `Display` for floats is shortest-round-trip, so
+                // `format!("{n}")` already parses back to the same bits
+                // for every finite value. The cases Display alone would
+                // lose: -0.0 through the integer fast path (prints "0",
+                // dropping the sign), and NaN/±inf (Display emits "NaN"/
+                // "inf", which the strict parser must spell consistently).
+                // NaN payloads are NOT preserved -- every NaN collapses to
+                // the one canonical token (documented in DESIGN.md §10).
+                if n.is_nan() {
+                    s.push_str("NaN");
+                } else if *n == f64::INFINITY {
+                    s.push_str("Infinity");
+                } else if *n == f64::NEG_INFINITY {
+                    s.push_str("-Infinity");
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    s.push_str("-0.0");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    // integers print without a trailing ".0" so round-trips
+                    // are stable for counters and schema versions
                     s.push_str(&format!("{}", *n as i64));
                 } else {
                     s.push_str(&format!("{n}"));
@@ -164,7 +181,14 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// open containers on the parse stack; bounded so adversarial or
+    /// corrupt input (e.g. a truncated checkpoint refilled with "[[[[…")
+    /// errors instead of overflowing the real stack through recursion
+    depth: usize,
 }
+
+/// Maximum container nesting the recursive-descent parser accepts.
+const MAX_DEPTH: usize = 200;
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
@@ -198,6 +222,10 @@ impl<'a> Parser<'a> {
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
+            // the non-finite tokens our own dumper emits (bit-exact
+            // round-trip contract); "-Infinity" enters through number()
+            Some(b'N') => self.lit("NaN", Json::Num(f64::NAN)),
+            Some(b'I') => self.lit("Infinity", Json::Num(f64::INFINITY)),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
@@ -214,10 +242,15 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -233,6 +266,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -242,10 +276,15 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -256,6 +295,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -288,8 +328,14 @@ impl<'a> Parser<'a> {
                             if self.i + 4 >= self.b.len() {
                                 return Err(self.err("bad \\u escape"));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                            let raw = &self.b[self.i + 1..self.i + 5];
+                            // pre-check hex digits: a multibyte char right
+                            // after the escape would split mid-sequence and
+                            // panic the from_utf8 below on corrupt input
+                            if !raw.iter().all(u8::is_ascii_hexdigit) {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(raw).unwrap();
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
@@ -316,6 +362,9 @@ impl<'a> Parser<'a> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
+            if self.peek() == Some(b'I') {
+                return self.lit("Infinity", Json::Num(f64::NEG_INFINITY));
+            }
         }
         while self
             .peek()
@@ -372,6 +421,119 @@ mod tests {
     fn negative_exponent_shapes() {
         let j = Json::parse(r#"{"neg_inf": -1e+30}"#).unwrap();
         assert_eq!(j.get("neg_inf").unwrap().as_f64(), Some(-1e30));
+    }
+
+    fn roundtrip(v: Json) -> Json {
+        let dumped = v.dump();
+        Json::parse(&dumped).unwrap_or_else(|e| panic!("reparse failed on {dumped:?}: {e}"))
+    }
+
+    #[test]
+    fn special_floats_roundtrip_bit_exact() {
+        // the checkpoint substrate's contract: every f64 value class
+        // survives dump -> parse with its exact bit pattern (NaN collapses
+        // to one canonical NaN -- payloads are explicitly out of scope)
+        for v in [
+            0.0,
+            -0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::MIN,
+            5e-324,  // smallest subnormal
+            -5e-324,
+            0.1,
+            1.0 / 3.0,
+            std::f64::consts::PI,
+            9.0e15,          // just past the integer fast path
+            9007199254740993.0, // 2^53 + 1 rounds to 2^53: still exact bits
+        ] {
+            let got = roundtrip(Json::Num(v)).as_f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits(), "{v:e} came back as {got:e}");
+        }
+        let nan = roundtrip(Json::Num(f64::NAN)).as_f64().unwrap();
+        assert!(nan.is_nan());
+        // the tokens themselves are stable (and hence FNV-stable)
+        assert_eq!(Json::Num(f64::NAN).dump().trim(), "NaN");
+        assert_eq!(Json::Num(f64::INFINITY).dump().trim(), "Infinity");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump().trim(), "-Infinity");
+        assert_eq!(Json::Num(-0.0).dump().trim(), "-0.0");
+        // -Infinity also parses inside containers (number() entry path)
+        let j = Json::parse(r#"[-Infinity, NaN, Infinity, -0.0]"#).unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_f64().unwrap(), f64::NEG_INFINITY);
+        assert!(a[1].as_f64().unwrap().is_nan());
+        assert_eq!(a[2].as_f64().unwrap(), f64::INFINITY);
+        assert_eq!(a[3].as_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn f64_roundtrip_property_random_bit_patterns() {
+        // property-style: arbitrary u64 bit patterns reinterpreted as f64
+        // must survive dump -> parse bit-exactly (NaN class-preserved)
+        let mut rng = crate::utils::rng::Pcg32::seeded(0x6a6f79);
+        for trial in 0..2000 {
+            let bits = rng.next_u64();
+            let v = f64::from_bits(bits);
+            let got = roundtrip(Json::Num(v)).as_f64().unwrap();
+            if v.is_nan() {
+                assert!(got.is_nan(), "trial {trial}: NaN {bits:#x} lost its NaN-ness");
+            } else {
+                assert_eq!(
+                    got.to_bits(),
+                    v.to_bits(),
+                    "trial {trial}: {v:e} ({bits:#x}) came back as {got:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_via_f64_roundtrip_property() {
+        // f32 tensors are stored as Json::Num(x as f64); the f32 -> f64 ->
+        // dump -> parse -> f32 path must be lossless for every bit pattern
+        let mut rng = crate::utils::rng::Pcg32::seeded(77);
+        for trial in 0..2000 {
+            let bits = rng.next_u32();
+            let v = f32::from_bits(bits);
+            let back = roundtrip(Json::Num(v as f64)).as_f64().unwrap() as f32;
+            if v.is_nan() {
+                assert!(back.is_nan(), "trial {trial}: f32 NaN {bits:#x} lost");
+            } else {
+                assert_eq!(
+                    back.to_bits(),
+                    v.to_bits(),
+                    "trial {trial}: f32 {v:e} ({bits:#x}) came back as {back:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // a corrupt/adversarial document must error cleanly, not blow the
+        // parser's recursion stack
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        let deep_obj = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // well within the limit still parses
+        let ok = format!("{}1{}", "[".repeat(50), "]".repeat(50));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_error_not_panic() {
+        // regression: a \u escape whose 4 "hex digits" split a multibyte
+        // char used to panic from_utf8 -- corrupt checkpoints must error
+        let bad = "\"\\u00\u{4e2d}\"";
+        assert!(Json::parse(bad).is_err());
+        let bad2 = "\"\\uzzzz\"";
+        assert!(Json::parse(bad2).is_err());
+        // valid escapes still work
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap().as_str(), Some("A"));
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! Deterministic checkpoint/resume, locked by bit identity (DESIGN.md
+//! §10), on the native testbed backend.
+//!
+//! The contract under test: training 2K steps uninterrupted vs training
+//! K steps -> checkpoint -> dropping every piece of in-memory state ->
+//! resuming K more steps must be indistinguishable. Concretely: the
+//! `EvalPoint` trajectories are bit-identical (exact f64 bit equality,
+//! no tolerances), the compute-ledger totals match, and -- at the same
+//! worker count -- the checkpoint files the two runs write at the final
+//! step are BYTE-identical, which pins the parameters, Adam moments,
+//! RNG stream, draft-screen state and trainer extras all at once
+//! through the canonical serialization. Both trainers, screened and
+//! unscreened, and across worker counts (the worker count is outside
+//! the checkpoint's config fingerprint, so the determinism contract of
+//! gated_e2e.rs extends through the save/load boundary).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use kondo::algo::{baseline::Baseline, Method};
+use kondo::checkpoint::{CheckpointCfg, TrainCheckpoint};
+use kondo::coordinator::{KondoGate, Ledger, Priority, ScreenCfg};
+use kondo::runtime::Engine;
+use kondo::trainers::{
+    train_mnist, train_reversal, EvalPoint, MnistTrainerCfg, ReversalTrainerCfg,
+};
+
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("kondo_resume_test_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn ckpt(path: &Path, every: usize) -> Option<CheckpointCfg> {
+    Some(CheckpointCfg { path: path.to_string_lossy().into_owned(), every })
+}
+
+fn resume(path: &Path) -> Option<String> {
+    Some(path.to_string_lossy().into_owned())
+}
+
+/// Exact (bitwise) equality of two learning curves, field by field.
+fn assert_curves_bit_identical(a: &[EvalPoint], b: &[EvalPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.step, pb.step, "{what}[{i}].step");
+        assert_eq!(pa.forward_samples, pb.forward_samples, "{what}[{i}].forward_samples");
+        assert_eq!(pa.screen_samples, pb.screen_samples, "{what}[{i}].screen_samples");
+        assert_eq!(pa.forward_skipped, pb.forward_skipped, "{what}[{i}].forward_skipped");
+        assert_eq!(pa.backward_kept, pb.backward_kept, "{what}[{i}].backward_kept");
+        assert_eq!(pa.backward_executed, pb.backward_executed, "{what}[{i}].backward_executed");
+        assert_eq!(
+            pa.metric.to_bits(),
+            pb.metric.to_bits(),
+            "{what}[{i}].metric: {} vs {}",
+            pa.metric,
+            pb.metric
+        );
+        assert_eq!(
+            pa.metric2.to_bits(),
+            pb.metric2.to_bits(),
+            "{what}[{i}].metric2: {} vs {}",
+            pa.metric2,
+            pb.metric2
+        );
+    }
+}
+
+/// Every ledger total, including the worker-dependent execution-shape
+/// fields -- valid when both runs used the same worker count.
+fn assert_ledger_totals_equal(a: &Ledger, b: &Ledger, what: &str) {
+    assert_eq!(a.forward_samples, b.forward_samples, "{what}: forward_samples");
+    assert_eq!(a.forward_executed, b.forward_executed, "{what}: forward_executed");
+    assert_eq!(a.forward_calls, b.forward_calls, "{what}: forward_calls");
+    assert_eq!(a.screen_samples, b.screen_samples, "{what}: screen_samples");
+    assert_eq!(a.forward_skipped, b.forward_skipped, "{what}: forward_skipped");
+    assert_eq!(a.backward_kept, b.backward_kept, "{what}: backward_kept");
+    assert_eq!(a.backward_executed, b.backward_executed, "{what}: backward_executed");
+    assert_eq!(a.backward_calls, b.backward_calls, "{what}: backward_calls");
+    assert_eq!(a.bucket_hist, b.bucket_hist, "{what}: bucket_hist");
+}
+
+/// The worker-invariant ledger subset (the determinism contract): shard
+/// padding makes `forward_executed`/`forward_calls` depend on the worker
+/// count, everything else must not.
+fn assert_invariant_totals_equal(a: &Ledger, b: &Ledger, what: &str) {
+    assert_eq!(a.forward_samples, b.forward_samples, "{what}: forward_samples");
+    assert_eq!(a.screen_samples, b.screen_samples, "{what}: screen_samples");
+    assert_eq!(a.forward_skipped, b.forward_skipped, "{what}: forward_skipped");
+    assert_eq!(a.backward_kept, b.backward_kept, "{what}: backward_kept");
+    assert_eq!(a.backward_executed, b.backward_executed, "{what}: backward_executed");
+    assert_eq!(a.bucket_hist, b.bucket_hist, "{what}: bucket_hist");
+}
+
+fn assert_files_identical(a: &Path, b: &Path, what: &str) {
+    let ba = fs::read(a).unwrap();
+    let bb = fs::read(b).unwrap();
+    assert!(ba.len() > 100, "{what}: checkpoint {} suspiciously small", a.display());
+    assert_eq!(ba, bb, "{what}: final checkpoints are not byte-identical");
+}
+
+/// Bit-exact equality of everything in a checkpoint EXCEPT the ledger
+/// (used for cross-worker comparisons, where the execution-shape ledger
+/// fields legitimately differ).
+fn assert_state_bit_identical(a: &TrainCheckpoint, b: &TrainCheckpoint, what: &str) {
+    assert_eq!(a.step, b.step, "{what}: step");
+    assert_eq!(a.params.len(), b.params.len(), "{what}: tensor count");
+    for (i, (ta, tb)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{what}: params[{i}] length");
+        for (j, (x, y)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: params[{i}][{j}]: {x} vs {y}");
+        }
+    }
+    assert_eq!(a.opt_t, b.opt_t, "{what}: opt_t");
+    for (ma, mb) in a.opt_m.iter().flatten().zip(b.opt_m.iter().flatten()) {
+        assert_eq!(ma.to_bits(), mb.to_bits(), "{what}: opt_m");
+    }
+    for (va, vb) in a.opt_v.iter().flatten().zip(b.opt_v.iter().flatten()) {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: opt_v");
+    }
+    assert_eq!(a.rng.0, b.rng.0, "{what}: rng state");
+    assert_eq!(a.rng.1, b.rng.1, "{what}: rng inc");
+    assert_eq!(
+        a.rng.2.map(f64::to_bits),
+        b.rng.2.map(f64::to_bits),
+        "{what}: rng gauss spare"
+    );
+    assert_eq!(a.screen, b.screen, "{what}: draft screen state");
+    assert_eq!(a.stream, b.stream, "{what}: gate price tracker state");
+    assert_eq!(a.extra.dump(), b.extra.dump(), "{what}: extras");
+}
+
+// ---- MNIST ----
+
+fn mnist_base(workers: usize) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        // hard gate (eta = 0) at rho = 0.25: the determinism-contract case
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Delight },
+        baseline: Baseline::Expected,
+        lr: 1e-3,
+        steps: 24,
+        eval_every: 6,
+        eval_size: 64,
+        seed: 17,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn mnist_screen_base(workers: usize) -> MnistTrainerCfg {
+    MnistTrainerCfg {
+        steps: 30,
+        eval_every: 10,
+        seed: 13,
+        // two-tier gate: rho_screen = 0.5 pre-gate over a 5-batch-warm draft
+        screen: ScreenCfg { rho_screen: 0.5, draft_lr: 1e-3, warmup_batches: 5 },
+        ..mnist_base(workers)
+    }
+}
+
+#[test]
+fn mnist_unscreened_resume_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("mnist_plain");
+    let (full_ck, mid_ck, end_ck) =
+        (dir.join("full.ckpt"), dir.join("mid.ckpt"), dir.join("end.ckpt"));
+
+    // uninterrupted 24-step run, checkpointing once at the very end
+    let mut full_cfg = mnist_base(1);
+    full_cfg.checkpoint = ckpt(&full_ck, 24);
+    let full = train_mnist(&eng, &full_cfg).unwrap();
+
+    // part 1: stop at step 12, leaving a checkpoint behind
+    let mut part1 = mnist_base(1);
+    part1.steps = 12;
+    part1.checkpoint = ckpt(&mid_ck, 12);
+    train_mnist(&eng, &part1).unwrap();
+
+    // part 2: a FRESH trainer invocation -- every piece of state is
+    // reconstructed from the checkpoint file alone
+    let mut part2 = mnist_base(1);
+    part2.resume_from = resume(&mid_ck);
+    part2.checkpoint = ckpt(&end_ck, 24);
+    let resumed = train_mnist(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "mnist resume");
+    assert_ledger_totals_equal(&full.ledger, &resumed.ledger, "mnist resume");
+    assert_eq!(full.final_train_err.to_bits(), resumed.final_train_err.to_bits());
+    assert_eq!(full.final_test_err.to_bits(), resumed.final_test_err.to_bits());
+    // byte-identical final checkpoints: params, moments, RNG, window and
+    // all, pinned at once through the canonical serialization
+    assert_files_identical(&full_ck, &end_ck, "mnist resume");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mnist_screened_resume_is_bit_identical() {
+    // the checkpoint lands at step 10: the draft is just past its 5-batch
+    // warm-up, so the restore must carry a PARTIALLY-trained draft and its
+    // warm-up counter, not merely converged weights
+    let eng = Engine::native_testbed();
+    let dir = test_dir("mnist_screen");
+    let (full_ck, mid_ck, end_ck) =
+        (dir.join("full.ckpt"), dir.join("mid.ckpt"), dir.join("end.ckpt"));
+
+    let mut full_cfg = mnist_screen_base(1);
+    full_cfg.checkpoint = ckpt(&full_ck, 30);
+    let full = train_mnist(&eng, &full_cfg).unwrap();
+
+    let mut part1 = mnist_screen_base(1);
+    part1.steps = 10;
+    part1.checkpoint = ckpt(&mid_ck, 10);
+    train_mnist(&eng, &part1).unwrap();
+
+    let mut part2 = mnist_screen_base(1);
+    part2.resume_from = resume(&mid_ck);
+    part2.checkpoint = ckpt(&end_ck, 30);
+    let resumed = train_mnist(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "mnist screened resume");
+    assert_ledger_totals_equal(&full.ledger, &resumed.ledger, "mnist screened resume");
+    assert_files_identical(&full_ck, &end_ck, "mnist screened resume");
+    // the run really screened on both sides of the save/load boundary
+    assert!(full.ledger.screen_samples > 0 && full.ledger.forward_skipped > 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mnist_resume_restores_warm_draft() {
+    // the airtight no-cold-start proof is in the ledger arithmetic: cold
+    // batches record NO screen dots and warm batches record exactly one
+    // per sample, so with a 5-batch warm-up a 20-step run screens exactly
+    // (20-5)*b samples. If resume re-entered the cold-start fallback, the
+    // 10 post-resume steps would screen only (10-5)*b more; a warm resume
+    // screens all 10*b.
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch as u64;
+    let dir = test_dir("mnist_warm");
+    let mid_ck = dir.join("mid.ckpt");
+
+    let mut part1 = mnist_screen_base(1);
+    part1.steps = 20;
+    part1.checkpoint = ckpt(&mid_ck, 20);
+    train_mnist(&eng, &part1).unwrap();
+
+    let ck = TrainCheckpoint::load(&mid_ck).unwrap();
+    assert_eq!(ck.step, 20);
+    assert_eq!(ck.ledger.screen_samples, (20 - 5) * b, "warm batches screen exactly b dots");
+    let screen = ck.screen.as_ref().expect("screened run must checkpoint its draft");
+    assert!(
+        screen.seen >= 5 * b,
+        "saved draft is past warm-up (seen {} < {})",
+        screen.seen,
+        5 * b
+    );
+
+    let mut part2 = mnist_screen_base(1);
+    part2.resume_from = resume(&mid_ck);
+    let resumed = train_mnist(&eng, &part2).unwrap();
+
+    // every one of the 10 post-resume batches screened: the draft came
+    // back warm, with no cold-start fallback
+    assert_eq!(resumed.ledger.screen_samples, (30 - 5) * b);
+    assert!(
+        resumed.ledger.forward_skipped > ck.ledger.forward_skipped,
+        "the resumed screen never skipped a forward"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mnist_cross_worker_resume_is_bit_identical() {
+    // a checkpoint saved under workers=2 resumes under workers=3: worker
+    // count is outside the fingerprint, and the trajectory is worker-
+    // invariant, so the resumed run matches an uninterrupted serial run
+    let eng = Engine::native_testbed();
+    let dir = test_dir("mnist_xworker");
+    let (full_ck, mid_ck, end_ck) =
+        (dir.join("full.ckpt"), dir.join("mid.ckpt"), dir.join("end.ckpt"));
+
+    let mut full_cfg = mnist_screen_base(1);
+    full_cfg.checkpoint = ckpt(&full_ck, 30);
+    let full = train_mnist(&eng, &full_cfg).unwrap();
+
+    let mut part1 = mnist_screen_base(2);
+    part1.steps = 10;
+    part1.checkpoint = ckpt(&mid_ck, 10);
+    train_mnist(&eng, &part1).unwrap();
+
+    let mut part2 = mnist_screen_base(3);
+    part2.resume_from = resume(&mid_ck);
+    part2.checkpoint = ckpt(&end_ck, 30);
+    let resumed = train_mnist(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "mnist 2->3 workers");
+    assert_invariant_totals_equal(&full.ledger, &resumed.ledger, "mnist 2->3 workers");
+    // the final states are bit-identical even though the execution-shape
+    // ledger fields (shard padding) differ across worker counts
+    let a = TrainCheckpoint::load(&full_ck).unwrap();
+    let b = TrainCheckpoint::load(&end_ck).unwrap();
+    assert_state_bit_identical(&a, &b, "mnist 2->3 workers");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---- token reversal ----
+
+fn rev_base(workers: usize) -> ReversalTrainerCfg {
+    ReversalTrainerCfg {
+        // lambda = 0 adaptive hard gate (Prop 1): eta = 0 determinism case
+        method: Method::DgK { gate: KondoGate::price(0.0), priority: Priority::Delight },
+        lr: 3e-4,
+        steps: 12,
+        h: 4,
+        m: 2,
+        seed: 9,
+        eval_every: 4,
+        inner_epochs: 1,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn rev_screen_base(workers: usize) -> ReversalTrainerCfg {
+    ReversalTrainerCfg {
+        screen: ScreenCfg { rho_screen: 0.5, draft_lr: 1e-3, warmup_batches: 2 },
+        ..rev_base(workers)
+    }
+}
+
+#[test]
+fn reversal_unscreened_resume_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("rev_plain");
+    let (full_ck, mid_ck, end_ck) =
+        (dir.join("full.ckpt"), dir.join("mid.ckpt"), dir.join("end.ckpt"));
+
+    let mut full_cfg = rev_base(1);
+    full_cfg.checkpoint = ckpt(&full_ck, 12);
+    let full = train_reversal(&eng, &full_cfg).unwrap();
+
+    let mut part1 = rev_base(1);
+    part1.steps = 8;
+    part1.checkpoint = ckpt(&mid_ck, 8);
+    train_reversal(&eng, &part1).unwrap();
+
+    let mut part2 = rev_base(1);
+    part2.resume_from = resume(&mid_ck);
+    part2.checkpoint = ckpt(&end_ck, 12);
+    let resumed = train_reversal(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "reversal resume");
+    assert_ledger_totals_equal(&full.ledger, &resumed.ledger, "reversal resume");
+    assert_eq!(full.final_reward.to_bits(), resumed.final_reward.to_bits());
+    // mean_reward folds the restored reward_sum into the same left-to-
+    // right addition order, so even this cross-run statistic is exact
+    assert_eq!(full.mean_reward.to_bits(), resumed.mean_reward.to_bits());
+    assert_files_identical(&full_ck, &end_ck, "reversal resume");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reversal_screened_resume_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("rev_screen");
+    let (full_ck, mid_ck, end_ck) =
+        (dir.join("full.ckpt"), dir.join("mid.ckpt"), dir.join("end.ckpt"));
+
+    let mut full_cfg = rev_screen_base(1);
+    full_cfg.checkpoint = ckpt(&full_ck, 12);
+    let full = train_reversal(&eng, &full_cfg).unwrap();
+
+    let mut part1 = rev_screen_base(1);
+    part1.steps = 4;
+    part1.checkpoint = ckpt(&mid_ck, 4);
+    train_reversal(&eng, &part1).unwrap();
+
+    let mut part2 = rev_screen_base(1);
+    part2.resume_from = resume(&mid_ck);
+    part2.checkpoint = ckpt(&end_ck, 12);
+    let resumed = train_reversal(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "reversal screened resume");
+    assert_ledger_totals_equal(&full.ledger, &resumed.ledger, "reversal screened resume");
+    assert_files_identical(&full_ck, &end_ck, "reversal screened resume");
+    // the token screen engaged on both sides of the boundary: 2 warm-up
+    // batches, then every batch screens all its tokens
+    let n_tok = (eng.manifest().constants.rev_batch * 4) as u64;
+    assert_eq!(full.ledger.screen_samples, (12 - 2) * n_tok);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reversal_cross_worker_resume_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("rev_xworker");
+    let mid_ck = dir.join("mid.ckpt");
+
+    let full = train_reversal(&eng, &rev_base(1)).unwrap();
+
+    let mut part1 = rev_base(4);
+    part1.steps = 8;
+    part1.checkpoint = ckpt(&mid_ck, 8);
+    train_reversal(&eng, &part1).unwrap();
+
+    let mut part2 = rev_base(2);
+    part2.resume_from = resume(&mid_ck);
+    let resumed = train_reversal(&eng, &part2).unwrap();
+
+    assert_curves_bit_identical(&full.curve, &resumed.curve, "reversal 4->2 workers");
+    assert_invariant_totals_equal(&full.ledger, &resumed.ledger, "reversal 4->2 workers");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---- guard rails: wrong-run resumes are clean errors, never panics ----
+
+#[test]
+fn mismatched_resume_is_rejected() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("mismatch");
+    let mid_ck = dir.join("mid.ckpt");
+
+    let mut part1 = mnist_base(1);
+    part1.steps = 6;
+    part1.checkpoint = ckpt(&mid_ck, 6);
+    train_mnist(&eng, &part1).unwrap();
+
+    // different seed: a different run entirely
+    let mut wrong = mnist_base(1);
+    wrong.seed = 18;
+    wrong.resume_from = resume(&mid_ck);
+    let err = train_mnist(&eng, &wrong).unwrap_err().to_string();
+    assert!(err.contains("seed"), "unexpected error: {err:?}");
+
+    // different gate rate: the method is in the fingerprint
+    let mut wrong = mnist_base(1);
+    wrong.method = Method::DgK { gate: KondoGate::rate(0.5), priority: Priority::Delight };
+    wrong.resume_from = resume(&mid_ck);
+    let err = train_mnist(&eng, &wrong).unwrap_err().to_string();
+    assert!(err.contains("method"), "unexpected error: {err:?}");
+
+    // a screened run cannot adopt an unscreened checkpoint
+    let mut wrong = mnist_screen_base(1);
+    wrong.seed = 17;
+    wrong.resume_from = resume(&mid_ck);
+    assert!(train_mnist(&eng, &wrong).is_err());
+
+    // the other trainer's checkpoint is rejected up front
+    let mut wrong_trainer = rev_base(1);
+    wrong_trainer.resume_from = resume(&mid_ck);
+    let err = train_reversal(&eng, &wrong_trainer).unwrap_err().to_string();
+    assert!(err.contains("trainer") || err.contains("mismatch"), "unexpected error: {err:?}");
+
+    // a run shorter than the checkpoint's step cursor cannot continue
+    let mut too_short = mnist_base(1);
+    too_short.steps = 3;
+    too_short.resume_from = resume(&mid_ck);
+    let err = train_mnist(&eng, &too_short).unwrap_err().to_string();
+    assert!(err.contains("beyond"), "unexpected error: {err:?}");
+
+    // a missing file is a clean error too
+    let mut gone = mnist_base(1);
+    gone.resume_from = resume(&dir.join("nope.ckpt"));
+    assert!(train_mnist(&eng, &gone).is_err());
+
+    // and a corrupted file never panics the trainer
+    let garbled = dir.join("garbled.ckpt");
+    let mut bytes = fs::read(&mid_ck).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] = bytes[mid].wrapping_add(1);
+    fs::write(&garbled, &bytes).unwrap();
+    let mut corrupt = mnist_base(1);
+    corrupt.resume_from = resume(&garbled);
+    // {:#} prints the whole context chain ("loading checkpoint ...: ...")
+    let err = format!("{:#}", train_mnist(&eng, &corrupt).unwrap_err());
+    assert!(err.contains("checksum"), "unexpected error: {err:?}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_extends_past_the_original_budget() {
+    // `steps` is outside the fingerprint by design: a finished 12-step
+    // run extends to 18 steps from its final checkpoint, and the extended
+    // trajectory's prefix is the original run's, bit for bit
+    let eng = Engine::native_testbed();
+    let dir = test_dir("extend");
+    let end_ck = dir.join("end.ckpt");
+
+    let mut orig = mnist_base(1);
+    orig.steps = 12;
+    orig.checkpoint = ckpt(&end_ck, 12);
+    let short = train_mnist(&eng, &orig).unwrap();
+
+    let mut ext = mnist_base(1);
+    ext.steps = 18;
+    ext.resume_from = resume(&end_ck);
+    let long = train_mnist(&eng, &ext).unwrap();
+
+    assert!(long.curve.len() > short.curve.len());
+    assert_curves_bit_identical(
+        &short.curve,
+        &long.curve[..short.curve.len()],
+        "extended-run prefix",
+    );
+    assert_eq!(long.curve.last().unwrap().step, 18);
+    let _ = fs::remove_dir_all(&dir);
+}

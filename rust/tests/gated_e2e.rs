@@ -10,7 +10,10 @@
 //! bit equality on the f64 metrics (no tolerances: "roughly equal" curves
 //! would mean the shard merge reordered floating-point work).
 
+use std::path::PathBuf;
+
 use kondo::algo::{baseline::Baseline, Method};
+use kondo::checkpoint::CheckpointCfg;
 use kondo::coordinator::{KondoGate, Priority, ScreenCfg};
 use kondo::runtime::Engine;
 use kondo::trainers::{
@@ -350,6 +353,60 @@ fn reversal_screened_trajectory_is_bit_identical() {
         .zip(&unscreened.curve)
         .all(|(x, y)| x.metric.to_bits() == y.metric.to_bits() && x.backward_kept == y.backward_kept);
     assert!(!same, "token screening changed nothing");
+}
+
+// ---- checkpoint/resume rides the same contract: a checkpoint written
+// under one worker count resumes under another, bit-identically (the
+// deep end-to-end coverage lives in rust/tests/checkpoint_resume.rs) ----
+
+#[test]
+fn checkpointed_resume_is_worker_invariant() {
+    let eng = Engine::native_testbed();
+    let dir = std::env::temp_dir()
+        .join(format!("kondo_gated_e2e_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_at = |p: &PathBuf, every: usize| {
+        Some(CheckpointCfg { path: p.to_string_lossy().into_owned(), every })
+    };
+
+    // mnist: save under w workers at step 16 of 24, resume under w'
+    let serial = train_mnist(&eng, &mnist_cfg(1)).unwrap();
+    for (w_save, w_resume) in [(1usize, 4usize), (4, 1)] {
+        let mid = dir.join(format!("mnist_{w_save}to{w_resume}.ckpt"));
+        let mut part1 = mnist_cfg(w_save);
+        part1.steps = 16;
+        part1.checkpoint = ckpt_at(&mid, 16);
+        train_mnist(&eng, &part1).unwrap();
+        let mut part2 = mnist_cfg(w_resume);
+        part2.resume_from = Some(mid.to_string_lossy().into_owned());
+        let resumed = train_mnist(&eng, &part2).unwrap();
+        let what = format!("mnist ckpt w={w_save} -> resume w={w_resume}");
+        assert_curves_bit_identical(&serial.curve, &resumed.curve, &what);
+        assert_eq!(serial.ledger.forward_samples, resumed.ledger.forward_samples, "{what}");
+        assert_eq!(serial.ledger.backward_kept, resumed.ledger.backward_kept, "{what}");
+        assert_eq!(serial.ledger.backward_executed, resumed.ledger.backward_executed, "{what}");
+        assert_eq!(serial.ledger.bucket_hist, resumed.ledger.bucket_hist, "{what}");
+    }
+
+    // reversal: save under w workers at step 8 of 12, resume under w'
+    let rserial = train_reversal(&eng, &rev_cfg(1)).unwrap();
+    for (w_save, w_resume) in [(1usize, 4usize), (4, 1)] {
+        let mid = dir.join(format!("rev_{w_save}to{w_resume}.ckpt"));
+        let mut part1 = rev_cfg(w_save);
+        part1.steps = 8;
+        part1.checkpoint = ckpt_at(&mid, 8);
+        train_reversal(&eng, &part1).unwrap();
+        let mut part2 = rev_cfg(w_resume);
+        part2.resume_from = Some(mid.to_string_lossy().into_owned());
+        let resumed = train_reversal(&eng, &part2).unwrap();
+        let what = format!("reversal ckpt w={w_save} -> resume w={w_resume}");
+        assert_curves_bit_identical(&rserial.curve, &resumed.curve, &what);
+        assert_eq!(rserial.ledger.forward_samples, resumed.ledger.forward_samples, "{what}");
+        assert_eq!(rserial.ledger.backward_kept, resumed.ledger.backward_kept, "{what}");
+        assert_eq!(rserial.ledger.bucket_hist, resumed.ledger.bucket_hist, "{what}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
