@@ -52,6 +52,24 @@ impl Method {
     pub fn is_gated(&self) -> bool {
         matches!(self, Method::DgK { .. })
     }
+
+    /// The gate priority, for methods that have one.
+    pub fn priority(&self) -> Option<Priority> {
+        match self {
+            Method::DgK { priority, .. } => Some(*priority),
+            _ => None,
+        }
+    }
+
+    /// Replace the gate priority on a DG-K method; a no-op for ungated
+    /// methods (they have no score vector to re-rank). This is how the
+    /// CLI/config `priority` knob composes with `method=dgk_*` names.
+    pub fn with_priority(self, priority: Priority) -> Method {
+        match self {
+            Method::DgK { gate, .. } => Method::DgK { gate, priority },
+            other => other,
+        }
+    }
 }
 
 /// Per-batch decision: which samples get a backward pass, with what weight.
@@ -97,19 +115,8 @@ impl Method {
                 }
             }
             Method::DgK { gate, priority } => {
-                // Screening scores: delight (or an ablation priority), with
-                // any upstream noise honoured through chi_override.
-                let scores = if *priority == Priority::Delight {
-                    delight(s)
-                } else {
-                    priority.score_batch(s.u, s.ell, rng)
-                };
-                let d = gate.decide(&scores, rng);
-                let mut weights = vec![0.0f32; n];
-                for &i in &d.keep {
-                    weights[i] = s.u[i] as f32; // Algorithm 1 line 10
-                }
-                WeightDecision { weights, keep: d.keep.clone(), gate: Some(d) }
+                let scores = priority_scores(*priority, s, rng);
+                gate_scored(gate, s.u, &scores, rng)
             }
             Method::Ppo { eps } => {
                 let ones: Vec<f64>;
@@ -156,6 +163,35 @@ impl Method {
             }
         }
     }
+}
+
+/// The score vector a DG-K gate decides on: delight (honouring any
+/// noise-injected `chi_override`) for the paper's priority, the configured
+/// Fig-5 ablation signal otherwise. This is THE single site that turns
+/// `BatchSignals` into gate scores -- `Method::decide` and the streaming
+/// `GateStage` both call it, so the price tracker can never ingest a
+/// different vector than the gate ranks (and `Uniform`'s one batch-global
+/// key is drawn exactly once per batch).
+pub fn priority_scores(priority: Priority, s: &BatchSignals, rng: &mut Pcg32) -> Vec<f64> {
+    if priority == Priority::Delight {
+        delight(s)
+    } else {
+        priority.score_batch(s.u, s.ell, rng)
+    }
+}
+
+/// Gate a precomputed score vector and weight the kept set by U
+/// (Algorithm 1 line 10). Split out of `Method::decide` so callers that
+/// need the scores afterwards (the streaming price tracker) gate the very
+/// vector they hold instead of recomputing it.
+pub fn gate_scored(gate: &KondoGate, u: &[f64], scores: &[f64], rng: &mut Pcg32) -> WeightDecision {
+    debug_assert_eq!(u.len(), scores.len());
+    let d = gate.decide(scores, rng);
+    let mut weights = vec![0.0f32; u.len()];
+    for &i in &d.keep {
+        weights[i] = u[i] as f32; // Algorithm 1 line 10
+    }
+    WeightDecision { weights, keep: d.keep.clone(), gate: Some(d) }
 }
 
 /// chi_t = U_t * ell_t, unless overridden by a noise-injected version.
@@ -265,6 +301,25 @@ mod tests {
         assert_eq!(d.weights[1], 0.0);
         assert!((d.weights[2] - 0.5f32).abs() < 1e-6);
         assert_eq!(d.weights[3], 0.0);
+    }
+
+    #[test]
+    fn dgk_non_delight_priority_ranks_on_its_signal() {
+        let u = [1.0, 1.0, 1.0, 1.0];
+        let ell = [4.0, 1.0, 3.0, 2.0];
+        let m = Method::DgK { gate: KondoGate::rate(0.5), priority: Priority::Surprisal };
+        let d = m.decide(&sig(&u, &ell), &mut rng());
+        assert_eq!(d.keep, vec![0, 2], "surprisal priority keeps the high-ell half");
+    }
+
+    #[test]
+    fn with_priority_rewrites_gated_methods_only() {
+        let m = Method::DgK { gate: KondoGate::rate(0.1), priority: Priority::Delight };
+        let m = m.with_priority(Priority::Uniform);
+        assert_eq!(m.priority(), Some(Priority::Uniform));
+        assert!(m.name().contains("uniform"));
+        assert_eq!(Method::Pg.with_priority(Priority::Uniform), Method::Pg);
+        assert_eq!(Method::Pg.priority(), None);
     }
 
     #[test]

@@ -431,20 +431,28 @@ impl TrainCheckpoint {
 /// so floats compare exactly). The fingerprint deliberately excludes
 /// knobs outside the trajectory contract — step budget, worker count,
 /// checkpoint settings — so run extension and cross-worker resume pass.
+/// Every differing key is reported, not just the first: some knobs are
+/// recorded both standalone and inside a composite Debug string (e.g. the
+/// gate priority inside 'method'), and naming each key keeps the specific
+/// mismatch visible.
 pub fn validate_fingerprint(stored: &Json, current: &Json) -> Result<()> {
     let (Some(s), Some(c)) = (stored.as_obj(), current.as_obj()) else {
         bail!("config fingerprint must be an object");
     };
-    for k in s.keys().chain(c.keys()) {
+    let mut diffs = Vec::new();
+    for k in s.keys().chain(c.keys().filter(|k| !s.contains_key(*k))) {
         let sv = s.get(k).map(Json::dump);
         let cv = c.get(k).map(Json::dump);
         if sv != cv {
-            bail!(
-                "checkpoint config mismatch at '{k}': checkpoint has {}, this run has {}",
+            diffs.push(format!(
+                "'{k}': checkpoint has {}, this run has {}",
                 sv.map_or("<absent>".into(), |v| v.trim().to_string()),
                 cv.map_or("<absent>".into(), |v| v.trim().to_string()),
-            );
+            ));
         }
+    }
+    if !diffs.is_empty() {
+        bail!("checkpoint config mismatch at {}", diffs.join("; at "));
     }
     Ok(())
 }

@@ -8,7 +8,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::checkpoint::CheckpointCfg;
-use crate::coordinator::ScreenCfg;
+use crate::coordinator::{Priority, ScreenCfg};
 use crate::utils::toml::TomlDoc;
 
 #[derive(Debug, Clone)]
@@ -44,6 +44,10 @@ pub struct ExpConfig {
     pub checkpoint_path: String,
     /// resume training from this checkpoint file (empty = fresh run)
     pub resume_from: String,
+    /// gate priority for DG-K methods (the Fig-5 comparison set):
+    /// `delight|advantage|surprisal|abs_advantage|uniform|additive:<alpha>`.
+    /// Stored as the raw knob string; `gate_priority()` parses/validates.
+    pub priority: String,
 }
 
 impl Default for ExpConfig {
@@ -65,6 +69,7 @@ impl Default for ExpConfig {
             checkpoint_every: 0,
             checkpoint_path: String::new(),
             resume_from: String::new(),
+            priority: "delight".into(),
         }
     }
 }
@@ -121,6 +126,16 @@ impl ExpConfig {
         if let Some(v) = doc.str("exp.resume_from") {
             self.resume_from = v.to_string();
         }
+        if let Some(v) = doc.str("exp.priority") {
+            self.priority = v.to_string();
+        }
+    }
+
+    /// The gate priority these knobs select, parsed and validated. A
+    /// typo'd name or malformed additive alpha errors here -- loudly, at
+    /// config time -- instead of silently running delight.
+    pub fn gate_priority(&self) -> Result<Priority> {
+        Priority::parse(&self.priority)
     }
 
     /// The screen configuration these knobs describe (threaded into both
@@ -169,7 +184,8 @@ impl ExpConfig {
     /// parsing so typos (`workers=eight`) still error instead of silently
     /// falling back to defaults.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
-        const STR_KEYS: &[&str] = &["out_dir", "artifacts_dir", "checkpoint_path", "resume_from"];
+        const STR_KEYS: &[&str] =
+            &["out_dir", "artifacts_dir", "checkpoint_path", "resume_from", "priority"];
         let quoted;
         let value_toml = if STR_KEYS.contains(&key) && !value.starts_with('"') {
             quoted = format!("\"{value}\"");
@@ -247,6 +263,28 @@ mod tests {
         // negative cadence clamps to off, matching the other numeric knobs
         cfg.apply_override("checkpoint_every", "-3").unwrap();
         assert!(cfg.checkpoint_cfg().is_none());
+    }
+
+    #[test]
+    fn priority_knob_threads_through() {
+        let mut cfg = ExpConfig::default();
+        assert_eq!(cfg.gate_priority().unwrap(), Priority::Delight);
+        // bare CLI values auto-quote like the other string keys, so
+        // `priority=additive:0.25` works without shell quoting gymnastics
+        cfg.apply_override("priority", "additive:0.25").unwrap();
+        assert_eq!(cfg.gate_priority().unwrap(), Priority::Additive { alpha: 0.25 });
+        for name in ["delight", "advantage", "surprisal", "abs_advantage", "uniform"] {
+            cfg.apply_override("priority", name).unwrap();
+            assert!(cfg.gate_priority().is_ok(), "{name}");
+        }
+        // a typo'd name survives the override (it is just a string) but
+        // errors at parse time, before any run starts
+        cfg.apply_override("priority", "delite").unwrap();
+        assert!(cfg.gate_priority().is_err());
+        // and the TOML path reads the same knob
+        let mut cfg = ExpConfig::default();
+        cfg.apply_doc(&TomlDoc::parse("[exp]\npriority = \"surprisal\"").unwrap());
+        assert_eq!(cfg.gate_priority().unwrap(), Priority::Surprisal);
     }
 
     #[test]

@@ -33,7 +33,7 @@
 
 use anyhow::Result;
 
-use crate::algo::{delight, BatchSignals, Method, WeightDecision};
+use crate::algo::{gate_scored, priority_scores, BatchSignals, Method, WeightDecision};
 use crate::coordinator::accounting::ShardedLedger;
 use crate::coordinator::batcher::{BucketSet, PackedChunk};
 use crate::coordinator::gate::{KondoGate, Pricing};
@@ -127,11 +127,11 @@ pub struct ScreenStage {
 }
 
 impl ScreenStage {
+    /// Construction follows the same disable-don't-panic policy as
+    /// `ScreenCfg::active()`: an out-of-range `rho_screen` builds a stage
+    /// whose `screen()` always returns `ScreenVerdict::Full`, it never
+    /// panics -- the knob is CLI-exposed, so every layer must degrade.
     pub fn new(dim: usize, unit: usize, cfg: ScreenCfg) -> ScreenStage {
-        assert!(
-            cfg.rho_screen > 0.0 && cfg.rho_screen <= 1.0,
-            "rho_screen must be in (0,1]"
-        );
         assert!(dim > 0, "draft feature dimension must be positive");
         ScreenStage {
             cfg,
@@ -298,9 +298,10 @@ impl ForwardStage {
     }
 }
 
-/// Stage 3: the exact-delight Kondo decision over the survivor set,
-/// including the streaming-lambda pricing ablation that previously lived
-/// inside the MNIST trainer.
+/// Stage 3: the exact Kondo decision over the survivor set -- scored by
+/// the method's configured `Priority` (delight, or a Fig-5 ablation
+/// signal) -- including the streaming-lambda pricing ablation that
+/// previously lived inside the MNIST trainer.
 pub struct GateStage {
     /// cross-batch EW quantile price tracker (ablation of Alg 1 line 5)
     stream: Option<EwQuantile>,
@@ -348,15 +349,20 @@ impl GateStage {
         signals: &BatchSignals,
         rng: &mut Pcg32,
     ) -> WeightDecision {
-        if let (Some(tracker), Method::DgK { priority, .. }) = (self.stream.as_mut(), method) {
-            // price from the cross-batch tracker (hard gate), then feed
-            // this batch's delight into the tracker
-            let gate_chi = delight(signals);
+        if let (Some(tracker), Method::DgK { gate, priority }) = (self.stream.as_mut(), method) {
+            // the gate's own score vector -- delight or the configured
+            // ablation priority, chi_override honoured -- computed ONCE,
+            // then used for both the priced decision and the tracker
+            // update, so the cross-batch price can never drift into
+            // different units than the scores it gates
+            let scores = priority_scores(*priority, signals, rng);
             let lam =
                 if tracker.count() >= self.min_count { tracker.value() } else { f64::INFINITY };
-            let m = Method::DgK { gate: KondoGate::price(lam), priority: *priority };
-            let d = m.decide(signals, rng);
-            for &c in &gate_chi {
+            // the streamed price replaces the rate; eta carries over so a
+            // soft gate stays soft under streaming pricing
+            let priced = KondoGate { pricing: Pricing::Price(lam), eta: gate.eta };
+            let d = gate_scored(&priced, signals.u, &scores, rng);
+            for &c in &scores {
                 tracker.update(c);
             }
             d
@@ -782,6 +788,68 @@ mod tests {
         let d2 = gs.decide(&m, &s, &mut rng);
         assert!(!d2.keep.is_empty());
         assert!(d2.keep.len() < 4);
+    }
+
+    #[test]
+    fn screen_stage_construction_honors_disable_dont_panic() {
+        // regression: ScreenStage::new used to assert rho in (0,1] while
+        // ScreenCfg::active() documents that out-of-range rates disable
+        // screening -- a CLI-supplied rho_screen=1.5 or 0.0 panicked at
+        // construction. Construction now follows active().
+        for rho in [1.5, 0.0, -0.5, 2.0, 1.0] {
+            let st = ScreenStage::new(4, 8, ScreenCfg::at_rate(rho));
+            assert!(!st.cfg().active(), "rho={rho} must be screening-off");
+            let pool = WorkerPool::new(1);
+            let mut acct = ShardedLedger::new(1);
+            let v = st.screen(&pool, &shards_of(8, 1), &vec![0.0; 32], 8, None, &mut acct);
+            assert!(!v.is_screened(), "rho={rho} must never screen");
+        }
+    }
+
+    #[test]
+    fn streaming_tracker_ingests_gate_scores_not_delight() {
+        // regression: the streaming path priced every priority against
+        // delight(signals). The tracker must evolve from the exact score
+        // vector the gate decided on -- here surprisal, chosen so that
+        // delight (u*ell) and the gate scores (ell) differ.
+        let m = Method::DgK { gate: KondoGate::rate(0.5), priority: Priority::Surprisal };
+        let mut gs = GateStage::new(&m, true, 4);
+        let u = [2.0, -1.0, 0.5, 3.0];
+        let ell = [1.0, 4.0, 2.0, 3.0];
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+        let mut rng = Pcg32::seeded(21);
+        gs.decide(&m, &s, &mut rng);
+        // the expected tracker saw the gate's own inputs: the surprisals
+        let mut expect = EwQuantile::new(0.5, 0.05);
+        for &e in &ell {
+            expect.update(e);
+        }
+        assert_eq!(gs.stream().unwrap().snapshot(), expect.snapshot());
+        // and provably NOT delight: a delight-fed twin diverges
+        let mut wrong = EwQuantile::new(0.5, 0.05);
+        for (&a, &e) in u.iter().zip(&ell) {
+            wrong.update(a * e);
+        }
+        assert_ne!(gs.stream().unwrap().snapshot(), wrong.snapshot());
+    }
+
+    #[test]
+    fn streaming_decision_matches_priced_method_decide() {
+        // once warm, the streaming stage must decide exactly like a
+        // price-mode DG-K at the tracker's lambda over the same priority
+        let m = Method::DgK { gate: KondoGate::rate(0.5), priority: Priority::AbsAdvantage };
+        let mut gs = GateStage::new(&m, true, 2);
+        let u = [0.5, -2.0, 1.0, -0.25];
+        let ell = [1.0, 1.0, 1.0, 1.0];
+        let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+        let mut rng = Pcg32::seeded(3);
+        gs.decide(&m, &s, &mut rng); // warmup batch: infinite price
+        let lam = gs.stream().unwrap().value();
+        let d = gs.decide(&m, &s, &mut Pcg32::seeded(4));
+        let priced = Method::DgK { gate: KondoGate::price(lam), priority: Priority::AbsAdvantage };
+        let e = priced.decide(&s, &mut Pcg32::seeded(4));
+        assert_eq!(d.keep, e.keep);
+        assert_eq!(d.weights, e.weights);
     }
 
     #[test]

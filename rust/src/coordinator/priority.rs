@@ -5,6 +5,9 @@
 //! surprisal-only, |advantage|, uniform random, and the additive family
 //! f_alpha = alpha*U + (1-alpha)*ell that Prop 2 shows can mis-rank.
 
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::pool::unit_rng;
 use crate::utils::rng::Pcg32;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,10 +41,53 @@ impl Priority {
         }
     }
 
-    /// Score a whole batch.
+    /// Score a whole batch. `Uniform` draws ONE batch-global key from the
+    /// caller's `rng` and scores sample `i` from the keyed stream
+    /// `unit_rng(key, 0, i)` -- the same per-unit keying rule the screen
+    /// and the trainers use -- so the main stream advances by exactly one
+    /// draw regardless of batch size and no per-sample draw can depend on
+    /// how the batch is sharded. Callers uphold the determinism contract
+    /// by invoking this on the caller's thread only (every gate decision
+    /// is batch-global; see DESIGN.md §11).
     pub fn score_batch(&self, u: &[f64], ell: &[f64], rng: &mut Pcg32) -> Vec<f64> {
         assert_eq!(u.len(), ell.len());
+        if matches!(self, Priority::Uniform) {
+            let key = rng.next_u64();
+            return (0..u.len()).map(|i| unit_rng(key, 0, i as u64).uniform()).collect();
+        }
         u.iter().zip(ell).map(|(&a, &l)| self.score(a, l, rng)).collect()
+    }
+
+    /// Parse a CLI/TOML priority name: `delight`, `advantage`,
+    /// `surprisal`, `abs_advantage`, `uniform`, or `additive:<alpha>`
+    /// (the `additive_a<alpha>` form `name()` prints is also accepted, so
+    /// names round-trip). The additive alpha must parse and be finite --
+    /// a typo'd knob fails loudly instead of silently running delight.
+    pub fn parse(text: &str) -> Result<Priority> {
+        let t = text.trim();
+        Ok(match t {
+            "delight" => Priority::Delight,
+            "advantage" => Priority::Advantage,
+            "surprisal" => Priority::Surprisal,
+            "abs_advantage" => Priority::AbsAdvantage,
+            "uniform" => Priority::Uniform,
+            _ => {
+                let alpha = t
+                    .strip_prefix("additive:")
+                    .or_else(|| t.strip_prefix("additive_a"))
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "unknown priority '{t}' (delight|advantage|surprisal|\
+                             abs_advantage|uniform|additive:<alpha>)"
+                        )
+                    })?;
+                let alpha: f64 = alpha
+                    .parse()
+                    .map_err(|e| anyhow!("bad additive alpha '{alpha}': {e}"))?;
+                ensure!(alpha.is_finite(), "additive alpha must be finite, got {alpha}");
+                Priority::Additive { alpha }
+            }
+        })
     }
 
     pub fn name(&self) -> String {
@@ -113,5 +159,60 @@ mod tests {
         let s2 = Priority::Uniform.score_batch(&[0.0; 5], &[0.0; 5], &mut r2);
         assert_eq!(s1, s2);
         assert!(s1.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn uniform_batch_costs_one_main_stream_draw() {
+        // the batch-global keying rule: scoring n samples advances the
+        // caller's stream by exactly one draw, independent of n, so the
+        // trajectory after the gate cannot depend on the survivor count
+        let mut small = rng();
+        let mut large = rng();
+        Priority::Uniform.score_batch(&[0.0; 3], &[0.0; 3], &mut small);
+        Priority::Uniform.score_batch(&[0.0; 64], &[0.0; 64], &mut large);
+        assert_eq!(small.next_u64(), large.next_u64());
+    }
+
+    #[test]
+    fn uniform_scores_are_prefix_stable_under_one_key() {
+        // per-sample keyed streams: sample i's score is a function of
+        // (batch key, i) alone, so a shorter batch scored under the same
+        // key is a prefix of the longer one
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let s3 = Priority::Uniform.score_batch(&[0.0; 3], &[0.0; 3], &mut r1);
+        let s8 = Priority::Uniform.score_batch(&[0.0; 8], &[0.0; 8], &mut r2);
+        assert_eq!(s3[..], s8[..3]);
+    }
+
+    #[test]
+    fn parse_round_trips_every_variant() {
+        for p in [
+            Priority::Delight,
+            Priority::Advantage,
+            Priority::Surprisal,
+            Priority::AbsAdvantage,
+            Priority::Uniform,
+            Priority::Additive { alpha: 0.25 },
+        ] {
+            assert_eq!(Priority::parse(&p.name()).unwrap(), p, "{}", p.name());
+        }
+        assert_eq!(
+            Priority::parse("additive:0.2").unwrap(),
+            Priority::Additive { alpha: 0.2 }
+        );
+        assert_eq!(Priority::parse(" delight ").unwrap(), Priority::Delight);
+    }
+
+    #[test]
+    fn parse_rejects_junk_loudly() {
+        assert!(Priority::parse("delite").is_err());
+        assert!(Priority::parse("additive:").is_err());
+        assert!(Priority::parse("additive:abc").is_err());
+        assert!(Priority::parse("additive:nan").is_err());
+        assert!(Priority::parse("additive:inf").is_err());
+        // out-of-[0,1] alphas are unusual but well-defined arithmetic --
+        // allowed, the gate cannot panic on them
+        assert_eq!(Priority::parse("additive:1.5").unwrap(), Priority::Additive { alpha: 1.5 });
     }
 }

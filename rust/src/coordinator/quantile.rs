@@ -43,7 +43,9 @@ impl P2Quantile {
         if self.init.len() < 5 {
             self.init.push(x);
             if self.init.len() == 5 {
-                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // total_cmp: NaN input must not panic the sort (same
+                // class of fix as speculative.rs); NaNs order after +inf
+                self.init.sort_by(|a, b| a.total_cmp(b));
                 for i in 0..5 {
                     self.h[i] = self.init[i];
                 }
@@ -113,7 +115,7 @@ impl P2Quantile {
         }
         if self.init.len() < 5 {
             let mut v = self.init.clone();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             let pos = self.q * (v.len() - 1) as f64;
             let lo = pos.floor() as usize;
             let hi = pos.ceil() as usize;
@@ -222,6 +224,26 @@ mod tests {
         }
         assert_eq!(est.value(), 2.0);
         assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn nan_input_does_not_panic_the_p2_sorts() {
+        // regression: both init-phase sorts used partial_cmp().unwrap(),
+        // so one NaN score (a diverged run) panicked the estimator
+        let mut est = P2Quantile::new(0.5);
+        est.update(1.0);
+        est.update(f64::NAN);
+        est.update(3.0);
+        // value() sorts the partial init buffer -- must not panic
+        let _ = est.value();
+        for x in [2.0, 4.0, 0.5, 1.5, 2.5] {
+            est.update(x); // crosses the 5-element init sort
+        }
+        for i in 0..100 {
+            est.update(i as f64 / 50.0);
+        }
+        assert!(est.value().is_finite(), "finite markers survive one NaN");
+        assert_eq!(est.count(), 108);
     }
 
     #[test]

@@ -60,6 +60,15 @@ impl AggCurve {
         *self.mean2.last().unwrap_or(&f64::NAN)
     }
 
+    /// Fraction of forward samples that earned a backward pass (the Fig-5
+    /// comparison's x-axis: quality per backward fraction). 0 when the
+    /// curve recorded no forwards.
+    pub fn backward_fraction(&self) -> f64 {
+        let fwd = *self.forward.last().unwrap_or(&0.0);
+        let bwd = *self.backward_kept.last().unwrap_or(&0.0);
+        if fwd > 0.0 { bwd / fwd } else { 0.0 }
+    }
+
     /// First backward-kept count at which `mean` drops to <= target
     /// (linear scan; None if never reached). Used for Fig 3 time-to-error.
     pub fn backward_to_reach(&self, target: f64) -> Option<f64> {

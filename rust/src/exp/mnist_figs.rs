@@ -248,10 +248,12 @@ pub fn fig4(ctx: &ExpCtx) -> Result<String> {
 pub fn fig5(ctx: &ExpCtx) -> Result<String> {
     let mut w = CsvWriter::create(
         format!("{}/fig5/priority.csv", ctx.cfg.out_dir),
-        &["panel", "param", "priority", "final_test_err"],
+        &["panel", "param", "priority", "final_test_err", "bwd_kept", "bwd_frac"],
     )?;
     let mut rows = Vec::new();
-    // (a) error vs backward batch size, by priority
+    // (a) error vs backward batch size, by priority -- every priority runs
+    // at the SAME rate-priced budget, so the comparison axis is quality vs
+    // backward fraction (kept backwards / forward samples)
     let priorities = [
         Priority::Delight,
         Priority::Advantage,
@@ -265,13 +267,22 @@ pub fn fig5(ctx: &ExpCtx) -> Result<String> {
             let m = Method::DgK { gate: KondoGate::rate(rho), priority: pr };
             let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
             let e = agg.final_metric2();
+            let frac = agg.backward_fraction();
             w.row(&[
                 "bwd_batch".into(),
                 kept.to_string(),
                 pr.name(),
                 format!("{e:.4}"),
+                format!("{:.0}", agg.backward_kept.last().unwrap_or(&0.0)),
+                format!("{frac:.4}"),
             ])?;
-            rows.push(vec!["bwd".into(), kept.to_string(), pr.name(), format!("{e:.4}")]);
+            rows.push(vec![
+                "bwd".into(),
+                kept.to_string(),
+                pr.name(),
+                format!("{e:.4}"),
+                format!("{frac:.3}"),
+            ]);
         }
     }
     // (b) additive alpha sweep at rho = 0.03 (delight as the flat reference)
@@ -282,11 +293,26 @@ pub fn fig5(ctx: &ExpCtx) -> Result<String> {
         };
         let (_, agg) = run_seeds(ctx, |s| base_cfg(ctx, m, s))?;
         let e = agg.final_metric2();
-        w.row(&["alpha".into(), format!("{alpha}"), format!("additive_{alpha}"), format!("{e:.4}")])?;
-        rows.push(vec!["alpha".into(), format!("{alpha}"), "additive".into(), format!("{e:.4}")]);
+        let frac = agg.backward_fraction();
+        w.row(&[
+            "alpha".into(),
+            format!("{alpha}"),
+            format!("additive_{alpha}"),
+            format!("{e:.4}"),
+            format!("{:.0}", agg.backward_kept.last().unwrap_or(&0.0)),
+            format!("{frac:.4}"),
+        ])?;
+        rows.push(vec![
+            "alpha".into(),
+            format!("{alpha}"),
+            "additive".into(),
+            format!("{e:.4}"),
+            format!("{frac:.3}"),
+        ]);
     }
-    let mut out = ascii_table(&["panel", "param", "priority", "final test err"], &rows);
-    out.push_str("expected shape: delight robust across budgets; surprisal-only fails; additive collapses at low alpha (Prop 2)\n");
+    let mut out =
+        ascii_table(&["panel", "param", "priority", "final test err", "bwd frac"], &rows);
+    out.push_str("expected shape: delight robust across budgets; surprisal-only fails; additive collapses at low alpha (Prop 2); bwd frac matches rho for every priority (same budget, different ranking)\n");
     Ok(out)
 }
 

@@ -9,8 +9,11 @@
 //! Overrides are `key=value` pairs over configs/default.toml (seeds,
 //! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
 //! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup,
-//! checkpoint_every, checkpoint_path, resume_from), plus
+//! checkpoint_every, checkpoint_path, resume_from, priority), plus
 //! `preset=scaled|paper` to load configs/<preset>.toml first.
+//! `priority=delight|advantage|surprisal|abs_advantage|uniform|
+//! additive:<alpha>` selects the Fig-5 gate-priority ablation for DG-K
+//! methods (both `repro train` and the exp drivers honour it).
 
 use std::path::Path;
 
@@ -49,7 +52,7 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
     const CFG_KEYS: &[&str] = &[
         "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
         "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
-        "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from",
+        "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from", "priority",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -100,7 +103,9 @@ fn real_main() -> Result<()> {
             let rest = &args[2.min(args.len())..];
             let cfg = load_config(rest)?;
             let eng = Engine::open(&cfg.artifacts_dir)?;
-            let method = parse_method(rest)?;
+            // the priority knob re-ranks any DG-K method's gate (a no-op
+            // for ungated methods); validated before the run starts
+            let method = parse_method(rest)?.with_priority(cfg.gate_priority()?);
             match what {
                 "mnist" => {
                     let tcfg = MnistTrainerCfg {
@@ -185,7 +190,7 @@ fn real_main() -> Result<()> {
         }
         Some("help") | None => {
             println!(
-                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg"
+                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg\n  repro train mnist method=dgk_rho0.25 priority=additive:0.2"
             );
             Ok(())
         }

@@ -40,7 +40,7 @@ use crate::runtime::{tensor, Engine, HostTensor, InitRule};
 use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
-use super::{EvalPoint, GatedLoop};
+use super::{priority_key, EvalPoint, GatedLoop};
 
 #[derive(Debug, Clone)]
 pub struct MnistTrainerCfg {
@@ -110,6 +110,11 @@ fn fingerprint(cfg: &MnistTrainerCfg, rules: &[InitRule]) -> Json {
         ("trainer", Json::Str("mnist".into())),
         ("seed", checkpoint::ju64(cfg.seed)),
         ("method", Json::Str(format!("{:?}", cfg.method))),
+        // the gate priority is inside the method Debug string already, but
+        // it is a trajectory-contract knob in its own right: an explicit
+        // key makes a wrong-priority resume rejection name 'priority'
+        // whatever the Debug format does
+        ("priority", Json::Str(priority_key(&cfg.method))),
         ("baseline", Json::Str(format!("{:?}", cfg.baseline))),
         ("noise", Json::Str(format!("{:?}", cfg.noise))),
         ("screen", Json::Str(format!("{:?}", cfg.screen))),

@@ -57,6 +57,15 @@ use crate::optim::Optimizer;
 use crate::runtime::{tensor, Engine, HostTensor};
 use crate::utils::rng::Pcg32;
 
+/// Fingerprint value of a method's gate priority: `Priority::name()` for
+/// gated methods, `"none"` otherwise. Both trainer fingerprints record it
+/// as an explicit key -- the priority is a trajectory-contract knob, so a
+/// wrong-priority resume must reject with an error that names 'priority'
+/// rather than an opaque method-Debug diff.
+pub(crate) fn priority_key(method: &Method) -> String {
+    method.priority().map(|p| p.name()).unwrap_or_else(|| "none".into())
+}
+
 /// One point of a learning curve, indexed by both step and compute.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalPoint {

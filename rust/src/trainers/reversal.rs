@@ -40,7 +40,7 @@ use crate::runtime::{tensor, Engine, HostTensor, InitRule};
 use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
-use super::{EvalPoint, GatedLoop};
+use super::{priority_key, EvalPoint, GatedLoop};
 
 #[derive(Debug, Clone)]
 pub struct ReversalTrainerCfg {
@@ -93,6 +93,9 @@ fn fingerprint(cfg: &ReversalTrainerCfg, rules: &[InitRule]) -> Json {
         ("trainer", Json::Str("reversal".into())),
         ("seed", checkpoint::ju64(cfg.seed)),
         ("method", Json::Str(format!("{:?}", cfg.method))),
+        // explicit fingerprint membership for the gate priority (see the
+        // MNIST fingerprint: wrong-priority resumes reject readably)
+        ("priority", Json::Str(priority_key(&cfg.method))),
         ("screen", Json::Str(format!("{:?}", cfg.screen))),
         ("lr", Json::Num(cfg.lr)),
         ("h", checkpoint::ju64(cfg.h as u64)),

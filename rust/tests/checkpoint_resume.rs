@@ -440,6 +440,15 @@ fn mismatched_resume_is_rejected() {
     let err = train_mnist(&eng, &wrong).unwrap_err().to_string();
     assert!(err.contains("method"), "unexpected error: {err:?}");
 
+    // same gate, different priority: the priority knob is a fingerprint
+    // key of its own, so the rejection names it explicitly
+    let mut wrong = mnist_base(1);
+    wrong.method = Method::DgK { gate: KondoGate::rate(0.25), priority: Priority::Surprisal };
+    wrong.resume_from = resume(&mid_ck);
+    let err = train_mnist(&eng, &wrong).unwrap_err().to_string();
+    assert!(err.contains("'priority'"), "unexpected error: {err:?}");
+    assert!(err.contains("surprisal"), "unexpected error: {err:?}");
+
     // a screened run cannot adopt an unscreened checkpoint
     let mut wrong = mnist_screen_base(1);
     wrong.seed = 17;

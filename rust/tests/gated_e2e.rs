@@ -12,10 +12,11 @@
 
 use std::path::PathBuf;
 
-use kondo::algo::{baseline::Baseline, Method};
+use kondo::algo::{baseline::Baseline, BatchSignals, Method};
 use kondo::checkpoint::CheckpointCfg;
 use kondo::coordinator::{KondoGate, Priority, ScreenCfg};
 use kondo::runtime::Engine;
+use kondo::utils::rng::Pcg32;
 use kondo::trainers::{
     train_mnist, train_reversal, EvalPoint, MnistTrainerCfg, ReversalTrainerCfg,
 };
@@ -407,6 +408,173 @@ fn checkpointed_resume_is_worker_invariant() {
         assert_eq!(rserial.ledger.bucket_hist, resumed.ledger.bucket_hist, "{what}");
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- PR 7: every Priority rides the same determinism contract. The
+// gate's ranking signal is a knob (Fig 5), so the eta = 0 bit-identity
+// guarantee has to hold per priority -- Uniform in particular draws its
+// scores from a batch-global keyed stream on the caller's thread. ----
+
+fn priority_set() -> Vec<Priority> {
+    vec![
+        Priority::Delight,
+        Priority::Advantage,
+        Priority::Surprisal,
+        Priority::AbsAdvantage,
+        Priority::Uniform,
+        Priority::Additive { alpha: 0.2 },
+    ]
+}
+
+#[test]
+fn every_priority_mnist_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    for pr in priority_set() {
+        let mk = |workers: usize| MnistTrainerCfg {
+            method: Method::DgK { gate: KondoGate::rate(0.25), priority: pr },
+            steps: 16,
+            ..mnist_cfg(workers)
+        };
+        let serial = train_mnist(&eng, &mk(1)).unwrap();
+        for workers in [2, 4] {
+            let sharded = train_mnist(&eng, &mk(workers)).unwrap();
+            let what = format!("mnist priority={} workers={workers}", pr.name());
+            assert_curves_bit_identical(&serial.curve, &sharded.curve, &what);
+            assert_eq!(serial.ledger.forward_samples, sharded.ledger.forward_samples, "{what}");
+            assert_eq!(serial.ledger.backward_kept, sharded.ledger.backward_kept, "{what}");
+            assert_eq!(
+                serial.ledger.backward_executed, sharded.ledger.backward_executed,
+                "{what}"
+            );
+            assert_eq!(serial.ledger.bucket_hist, sharded.ledger.bucket_hist, "{what}");
+        }
+        // the rate gate holds the budget no matter which signal ranks
+        let last = serial.curve.last().unwrap();
+        assert!(last.backward_kept > 0, "priority {} kept nothing", pr.name());
+        assert!(
+            last.backward_kept * 2 < last.forward_samples,
+            "priority {} overspent the rho=0.25 budget",
+            pr.name()
+        );
+    }
+}
+
+#[test]
+fn every_priority_reversal_trajectory_is_bit_identical() {
+    let eng = Engine::native_testbed();
+    for pr in priority_set() {
+        let mk = |workers: usize| ReversalTrainerCfg {
+            method: Method::DgK { gate: KondoGate::rate(0.25), priority: pr },
+            steps: 8,
+            ..rev_cfg(workers)
+        };
+        let serial = train_reversal(&eng, &mk(1)).unwrap();
+        for workers in [2, 4] {
+            let sharded = train_reversal(&eng, &mk(workers)).unwrap();
+            let what = format!("reversal priority={} workers={workers}", pr.name());
+            assert_curves_bit_identical(&serial.curve, &sharded.curve, &what);
+            assert_eq!(serial.ledger.forward_samples, sharded.ledger.forward_samples, "{what}");
+            assert_eq!(serial.ledger.backward_kept, sharded.ledger.backward_kept, "{what}");
+            assert_eq!(serial.ledger.bucket_hist, sharded.ledger.bucket_hist, "{what}");
+        }
+    }
+}
+
+#[test]
+fn every_priority_screened_run_is_deterministic_and_panic_free() {
+    // the two-tier pipeline (screen -> forward -> gate) must accept every
+    // priority: the tier-2 gate re-ranks the screen's survivors by the
+    // configured signal, and the whole thing stays worker-invariant
+    let eng = Engine::native_testbed();
+    for pr in priority_set() {
+        let mk = |workers: usize| MnistTrainerCfg {
+            method: Method::DgK { gate: KondoGate::rate(0.25), priority: pr },
+            steps: 20,
+            eval_every: 10,
+            ..mnist_screen_cfg(workers)
+        };
+        let serial = train_mnist(&eng, &mk(1)).unwrap();
+        let sharded = train_mnist(&eng, &mk(2)).unwrap();
+        let what = format!("mnist screened priority={}", pr.name());
+        assert_curves_bit_identical(&serial.curve, &sharded.curve, &what);
+        assert_eq!(serial.ledger.screen_samples, sharded.ledger.screen_samples, "{what}");
+        assert_eq!(serial.ledger.forward_skipped, sharded.ledger.forward_skipped, "{what}");
+        assert_eq!(serial.ledger.backward_kept, sharded.ledger.backward_kept, "{what}");
+        assert!(serial.ledger.screen_samples > 0, "{what}: screen never engaged");
+
+        let rk = |workers: usize| ReversalTrainerCfg {
+            method: Method::DgK { gate: KondoGate::rate(0.25), priority: pr },
+            steps: 8,
+            ..rev_screen_cfg(workers)
+        };
+        let rs = train_reversal(&eng, &rk(1)).unwrap();
+        let rp = train_reversal(&eng, &rk(2)).unwrap();
+        let rwhat = format!("reversal screened priority={}", pr.name());
+        assert_curves_bit_identical(&rs.curve, &rp.curve, &rwhat);
+        assert_eq!(rs.ledger.screen_samples, rp.ledger.screen_samples, "{rwhat}");
+        assert_eq!(rs.ledger.backward_kept, rp.ledger.backward_kept, "{rwhat}");
+    }
+}
+
+#[test]
+fn additive_small_alpha_keeps_rare_failures_delight_skips() {
+    // Fig 5 / Prop 2 mis-ranking, at decision level on the real gate path:
+    // a batch of 90 common modest successes (u > 0, tiny ell) and 10 rare
+    // high-surprisal failures (u < 0, huge ell). At the same rho = 0.1
+    // backward budget, delight (chi = u*ell) ranks every failure at the
+    // bottom, while additive with small alpha is dominated by the ell term
+    // and spends the budget on exactly those failures.
+    let mut u = Vec::new();
+    let mut ell = Vec::new();
+    for i in 0..90 {
+        u.push(0.3 + 0.005 * i as f64);
+        ell.push(0.05 + 0.001 * i as f64);
+    }
+    for i in 0..10 {
+        u.push(-0.1 - 0.02 * i as f64);
+        ell.push(6.0 + 0.4 * i as f64);
+    }
+    let s = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+    let gate = KondoGate::rate(0.1);
+
+    let mut rng = Pcg32::seeded(0);
+    let del = Method::DgK { gate, priority: Priority::Delight }.decide(&s, &mut rng);
+    let mut rng = Pcg32::seeded(0);
+    let add =
+        Method::DgK { gate, priority: Priority::Additive { alpha: 0.1 } }.decide(&s, &mut rng);
+
+    // matched budget: same rate gate, ~10 of 100 kept by both
+    assert!((8..=12).contains(&del.keep.len()), "delight kept {}", del.keep.len());
+    assert!((8..=12).contains(&add.keep.len()), "additive kept {}", add.keep.len());
+
+    // delight never touches a failure; additive spends its budget on them
+    assert!(
+        del.keep.iter().all(|&i| u[i] > 0.0),
+        "delight kept a negative-advantage sample"
+    );
+    let add_failures = add.keep.iter().filter(|&&i| u[i] < 0.0).count();
+    assert!(
+        add_failures * 2 > add.keep.len(),
+        "additive alpha=0.1 kept only {add_failures} failures of {}",
+        add.keep.len()
+    );
+
+    // and at trainer scale the budgets still match while the runs diverge
+    let eng = Engine::native_testbed();
+    let mk = |pr| MnistTrainerCfg {
+        method: Method::DgK { gate: KondoGate::rate(0.25), priority: pr },
+        ..mnist_cfg(1)
+    };
+    let tdel = train_mnist(&eng, &mk(Priority::Delight)).unwrap();
+    let tadd = train_mnist(&eng, &mk(Priority::Additive { alpha: 0.1 })).unwrap();
+    let (a, b) = (tdel.ledger.backward_kept as i64, tadd.ledger.backward_kept as i64);
+    assert!((a - b).abs() <= 24, "budgets not matched at rho=0.25: {a} vs {b}");
+    let same = tdel
+        .curve
+        .iter()
+        .zip(&tadd.curve)
+        .all(|(x, y)| x.metric.to_bits() == y.metric.to_bits());
+    assert!(!same, "swapping the priority changed nothing");
 }
 
 #[test]
