@@ -16,7 +16,7 @@
 //! File format: one header line
 //!
 //! ```text
-//! KONDO-CKPT v1 len=<body bytes> fnv=<16-hex FNV-1a-64 of body>
+//! KONDO-CKPT v2 len=<body bytes> fnv=<16-hex FNV-1a-64 of body>
 //! ```
 //!
 //! followed by the canonical JSON dump (`BTreeMap` keys ⇒ deterministic
@@ -43,7 +43,11 @@ use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
 pub const MAGIC: &str = "KONDO-CKPT";
-pub const VERSION: u32 = 1;
+/// v2: the ledger codec grew the fault/admission counters of the distrib
+/// actor–learner runtime (quarantine, staleness, shedding, supervisor).
+/// The codec is strict both ways, so v1 files are rejected by the version
+/// gate instead of resuming with silently-zeroed counters.
+pub const VERSION: u32 = 2;
 
 /// Checkpointing knobs threaded from `ExpConfig` into the trainer cfgs.
 #[derive(Debug, Clone)]
@@ -183,6 +187,14 @@ fn ledger_to_json(l: &Ledger) -> Json {
         ("backward_executed", ju64(l.backward_executed)),
         ("backward_calls", ju64(l.backward_calls)),
         ("bucket_hist", Json::Obj(hist)),
+        ("quarantined_samples", ju64(l.quarantined_samples)),
+        ("quarantined_batches", ju64(l.quarantined_batches)),
+        ("stale_samples", ju64(l.stale_samples)),
+        ("stale_kept", ju64(l.stale_kept)),
+        ("shed_samples", ju64(l.shed_samples)),
+        ("actor_crashes", ju64(l.actor_crashes)),
+        ("actor_restarts", ju64(l.actor_restarts)),
+        ("actor_timeouts", ju64(l.actor_timeouts)),
     ])
 }
 
@@ -196,6 +208,16 @@ fn ledger_from_json(j: &Json) -> Result<Ledger> {
     l.backward_kept = pu64(field(j, "backward_kept")?, "ledger.backward_kept")?;
     l.backward_executed = pu64(field(j, "backward_executed")?, "ledger.backward_executed")?;
     l.backward_calls = pu64(field(j, "backward_calls")?, "ledger.backward_calls")?;
+    l.quarantined_samples =
+        pu64(field(j, "quarantined_samples")?, "ledger.quarantined_samples")?;
+    l.quarantined_batches =
+        pu64(field(j, "quarantined_batches")?, "ledger.quarantined_batches")?;
+    l.stale_samples = pu64(field(j, "stale_samples")?, "ledger.stale_samples")?;
+    l.stale_kept = pu64(field(j, "stale_kept")?, "ledger.stale_kept")?;
+    l.shed_samples = pu64(field(j, "shed_samples")?, "ledger.shed_samples")?;
+    l.actor_crashes = pu64(field(j, "actor_crashes")?, "ledger.actor_crashes")?;
+    l.actor_restarts = pu64(field(j, "actor_restarts")?, "ledger.actor_restarts")?;
+    l.actor_timeouts = pu64(field(j, "actor_timeouts")?, "ledger.actor_timeouts")?;
     let Json::Obj(hist) = field(j, "bucket_hist")? else {
         bail!("checkpoint field 'ledger.bucket_hist': expected an object");
     };
@@ -556,6 +578,13 @@ mod tests {
         ledger.record_backward(8, 5);
         ledger.record_screen(64);
         ledger.record_forward_skipped(32);
+        ledger.record_quarantined(3);
+        ledger.record_quarantined_batch(16);
+        ledger.record_stale(16, 2);
+        ledger.record_shed(8);
+        ledger.record_actor_crash();
+        ledger.record_actor_restart();
+        ledger.record_actor_timeout();
         TrainCheckpoint {
             fingerprint: obj(vec![
                 ("trainer", Json::Str("unit".into())),
@@ -671,9 +700,14 @@ mod tests {
     #[test]
     fn wrong_version_and_magic_are_clean_errors() {
         let full = encode(&sample_ckpt());
-        let bumped = full.replacen("v1 ", "v2 ", 1);
+        let bumped = full.replacen(&format!("v{VERSION} "), &format!("v{} ", VERSION + 1), 1);
         let err = decode(&bumped).unwrap_err().to_string();
-        assert!(err.contains("version v2"), "unexpected error {err:?}");
+        assert!(err.contains(&format!("version v{}", VERSION + 1)), "unexpected error {err:?}");
+        // the previous format version is rejected too: the v2 ledger codec
+        // would otherwise resume a v1 file with silently-zeroed counters
+        let old = full.replacen(&format!("v{VERSION} "), "v1 ", 1);
+        let err = decode(&old).unwrap_err().to_string();
+        assert!(err.contains("version v1"), "unexpected error {err:?}");
         let err = decode(&full.replacen(MAGIC, "OTHER-FMT", 1)).unwrap_err().to_string();
         assert!(err.contains("not a checkpoint"), "unexpected error {err:?}");
         assert!(decode("garbage with no newline").is_err());
@@ -727,7 +761,7 @@ mod tests {
     #[test]
     fn corrupt_body_shapes_are_errors_not_panics() {
         // structurally valid header+json, semantically wrong bodies
-        let wrap = |body: &str| format!("{MAGIC} v1 len={} fnv={:016x}\n{body}", body.len(), fnv1a64(body.as_bytes()));
+        let wrap = |body: &str| format!("{MAGIC} v{VERSION} len={} fnv={:016x}\n{body}", body.len(), fnv1a64(body.as_bytes()));
         for body in [
             "null", "5", "[]", "{}", r#"{"step": "3"}"#,
         ] {

@@ -48,6 +48,18 @@ pub struct ExpConfig {
     /// `delight|advantage|surprisal|abs_advantage|uniform|additive:<alpha>`.
     /// Stored as the raw knob string; `gate_priority()` parses/validates.
     pub priority: String,
+    /// actor slots for the distributed runtime
+    pub actors: usize,
+    /// snapshot staleness: step t is computed on policy version t - lag
+    pub snapshot_lag: usize,
+    /// per-lag-step gate-rate decay in (0, 1]; 1 = staleness priced like fresh
+    pub stale_penalty: f64,
+    /// seeded fault schedule (distrib::faults grammar); empty = no faults
+    pub fault_spec: String,
+    /// silent-actor timeout (ms) before the learner re-dispatches
+    pub heartbeat_ms: u64,
+    /// per-slot respawn budget before an actor slot is left dead
+    pub max_respawns: u32,
 }
 
 impl Default for ExpConfig {
@@ -70,6 +82,12 @@ impl Default for ExpConfig {
             checkpoint_path: String::new(),
             resume_from: String::new(),
             priority: "delight".into(),
+            actors: 2,
+            snapshot_lag: 0,
+            stale_penalty: 1.0,
+            fault_spec: String::new(),
+            heartbeat_ms: 1000,
+            max_respawns: 2,
         }
     }
 }
@@ -129,6 +147,25 @@ impl ExpConfig {
         if let Some(v) = doc.str("exp.priority") {
             self.priority = v.to_string();
         }
+        if let Some(v) = doc.i64("exp.actors") {
+            self.actors = (v.max(1)) as usize;
+        }
+        if let Some(v) = doc.i64("exp.snapshot_lag") {
+            self.snapshot_lag = v.max(0) as usize;
+        }
+        if let Some(v) = doc.f64("exp.stale_penalty") {
+            // out-of-range decays turn staleness pricing off, like rho_screen
+            self.stale_penalty = if v > 0.0 && v <= 1.0 { v } else { 1.0 };
+        }
+        if let Some(v) = doc.str("exp.fault_spec") {
+            self.fault_spec = v.to_string();
+        }
+        if let Some(v) = doc.i64("exp.heartbeat_ms") {
+            self.heartbeat_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.i64("exp.max_respawns") {
+            self.max_respawns = v.max(0) as u32;
+        }
     }
 
     /// The gate priority these knobs select, parsed and validated. A
@@ -162,6 +199,31 @@ impl ExpConfig {
         Some(CheckpointCfg { path, every: self.checkpoint_every })
     }
 
+    /// The distributed-runtime configuration these knobs describe, for a
+    /// given method and seed. The CLI `train distrib` arm and the `dist`
+    /// experiment driver both build from here so the knob plumbing has
+    /// exactly one owner.
+    pub fn distrib_cfg(&self, method: crate::algo::Method, seed: u64) -> crate::distrib::DistribCfg {
+        crate::distrib::DistribCfg {
+            method,
+            lr: self.lr_mnist,
+            steps: self.mnist_steps,
+            eval_every: self.eval_every,
+            eval_size: self.eval_size,
+            seed,
+            actors: self.actors,
+            workers: self.workers,
+            lag: self.snapshot_lag,
+            stale_penalty: self.stale_penalty,
+            fault_spec: self.fault_spec.clone(),
+            heartbeat_ms: self.heartbeat_ms,
+            max_respawns: self.max_respawns,
+            record_to: None,
+            checkpoint: self.checkpoint_cfg(),
+            resume_from: self.resume_from_opt(),
+        }
+    }
+
     /// The resume source, or `None` for a fresh run.
     pub fn resume_from_opt(&self) -> Option<String> {
         if self.resume_from.is_empty() { None } else { Some(self.resume_from.clone()) }
@@ -184,8 +246,14 @@ impl ExpConfig {
     /// parsing so typos (`workers=eight`) still error instead of silently
     /// falling back to defaults.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
-        const STR_KEYS: &[&str] =
-            &["out_dir", "artifacts_dir", "checkpoint_path", "resume_from", "priority"];
+        const STR_KEYS: &[&str] = &[
+            "out_dir",
+            "artifacts_dir",
+            "checkpoint_path",
+            "resume_from",
+            "priority",
+            "fault_spec",
+        ];
         let quoted;
         let value_toml = if STR_KEYS.contains(&key) && !value.starts_with('"') {
             quoted = format!("\"{value}\"");
@@ -285,6 +353,40 @@ mod tests {
         let mut cfg = ExpConfig::default();
         cfg.apply_doc(&TomlDoc::parse("[exp]\npriority = \"surprisal\"").unwrap());
         assert_eq!(cfg.gate_priority().unwrap(), Priority::Surprisal);
+    }
+
+    #[test]
+    fn distrib_knobs_thread_through() {
+        let mut cfg = ExpConfig::default();
+        // fault_spec is a string key: commas/colons/@ pass through a bare
+        // CLI override without shell quoting gymnastics
+        cfg.apply_override("fault_spec", "crash@5,poison@8:nan_u:4").unwrap();
+        cfg.apply_override("actors", "4").unwrap();
+        cfg.apply_override("snapshot_lag", "3").unwrap();
+        cfg.apply_override("stale_penalty", "0.5").unwrap();
+        cfg.apply_override("heartbeat_ms", "250").unwrap();
+        cfg.apply_override("max_respawns", "0").unwrap();
+        let d = cfg.distrib_cfg(crate::algo::Method::Pg, 7);
+        assert_eq!(d.fault_spec, "crash@5,poison@8:nan_u:4");
+        assert_eq!(d.actors, 4);
+        assert_eq!(d.lag, 3);
+        assert_eq!(d.stale_penalty, 0.5);
+        assert_eq!(d.heartbeat_ms, 250);
+        assert_eq!(d.max_respawns, 0);
+        assert_eq!(d.seed, 7);
+        assert_eq!(d.steps, cfg.mnist_steps);
+        // clamps: a zero fleet and out-of-range decay fall back sanely
+        cfg.apply_override("actors", "0").unwrap();
+        assert_eq!(cfg.actors, 1);
+        cfg.apply_override("stale_penalty", "1.5").unwrap();
+        assert_eq!(cfg.stale_penalty, 1.0);
+        cfg.apply_override("heartbeat_ms", "0").unwrap();
+        assert_eq!(cfg.heartbeat_ms, 1);
+        // and the TOML path reads the same knobs
+        let mut cfg = ExpConfig::default();
+        cfg.apply_doc(&TomlDoc::parse("[exp]\nactors = 3\nfault_spec = \"stall@2:900\"").unwrap());
+        assert_eq!(cfg.actors, 3);
+        assert_eq!(cfg.fault_spec, "stall@2:900");
     }
 
     #[test]

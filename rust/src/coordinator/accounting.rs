@@ -39,6 +39,27 @@ pub struct Ledger {
     pub backward_calls: u64,
     /// executed-bucket histogram: capacity -> count
     pub bucket_hist: BTreeMap<usize, u64>,
+    /// samples the admission path rejected for corrupt content (non-finite
+    /// surprisal/advantage/feature, out-of-range action) -- quarantined,
+    /// never trained on (distrib learner; see distrib/learner.rs)
+    pub quarantined_samples: u64,
+    /// whole batches rejected before per-sample inspection (shape or
+    /// policy-fingerprint mismatch)
+    pub quarantined_batches: u64,
+    /// admitted samples generated against a stale policy snapshot
+    /// (snapshot version < learner step)
+    pub stale_samples: u64,
+    /// stale samples the gate still chose for a backward pass
+    pub stale_kept: u64,
+    /// deliveries dropped under backlog/degradation (duplicate or
+    /// late-arriving work for steps already completed)
+    pub shed_samples: u64,
+    /// actor deaths observed by the supervisor (panic or injected crash)
+    pub actor_crashes: u64,
+    /// actor respawns performed by the supervisor (bounded backoff)
+    pub actor_restarts: u64,
+    /// heartbeat timeouts (actor alive but silent past the deadline)
+    pub actor_timeouts: u64,
 }
 
 impl Ledger {
@@ -75,6 +96,46 @@ impl Ledger {
     /// Samples the screen spared from the full forward.
     pub fn record_forward_skipped(&mut self, samples: usize) {
         self.forward_skipped += samples as u64;
+    }
+
+    /// Corrupt samples rejected by the admission path (never trained on).
+    pub fn record_quarantined(&mut self, samples: usize) {
+        self.quarantined_samples += samples as u64;
+    }
+
+    /// A whole batch rejected before per-sample inspection (shape or
+    /// fingerprint mismatch). Counts the batch AND its samples.
+    pub fn record_quarantined_batch(&mut self, samples: usize) {
+        self.quarantined_batches += 1;
+        self.quarantined_samples += samples as u64;
+    }
+
+    /// Admitted samples from a stale snapshot; `kept` of them survived
+    /// the gate (the staleness-vs-admission axis of arxiv 2603.20521).
+    pub fn record_stale(&mut self, samples: usize, kept: usize) {
+        debug_assert!(kept <= samples);
+        self.stale_samples += samples as u64;
+        self.stale_kept += kept as u64;
+    }
+
+    /// Deliveries dropped under backlog (duplicate/late work).
+    pub fn record_shed(&mut self, samples: usize) {
+        self.shed_samples += samples as u64;
+    }
+
+    /// An actor death observed by the supervisor.
+    pub fn record_actor_crash(&mut self) {
+        self.actor_crashes += 1;
+    }
+
+    /// A supervisor respawn of a dead actor.
+    pub fn record_actor_restart(&mut self) {
+        self.actor_restarts += 1;
+    }
+
+    /// A heartbeat timeout on a silent actor.
+    pub fn record_actor_timeout(&mut self) {
+        self.actor_timeouts += 1;
     }
 
     /// Fig 3 cost model in forward-sample equivalents, using the gate's
@@ -143,6 +204,14 @@ impl Ledger {
         for (&cap, &n) in &other.bucket_hist {
             *self.bucket_hist.entry(cap).or_insert(0) += n;
         }
+        self.quarantined_samples += other.quarantined_samples;
+        self.quarantined_batches += other.quarantined_batches;
+        self.stale_samples += other.stale_samples;
+        self.stale_kept += other.stale_kept;
+        self.shed_samples += other.shed_samples;
+        self.actor_crashes += other.actor_crashes;
+        self.actor_restarts += other.actor_restarts;
+        self.actor_timeouts += other.actor_timeouts;
     }
 }
 
@@ -374,6 +443,38 @@ mod tests {
         assert!((sl.backward_imbalance() - 1.5).abs() < 1e-12);
         // zero-shard guard: constructor clamps to one shard
         assert_eq!(ShardedLedger::new(0).n_shards(), 1);
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_merge() {
+        let mut l = Ledger::new();
+        l.record_quarantined(2);
+        l.record_quarantined_batch(8); // batch reject counts its samples too
+        l.record_stale(16, 3);
+        l.record_shed(4);
+        l.record_actor_crash();
+        l.record_actor_restart();
+        l.record_actor_timeout();
+        l.record_actor_timeout();
+        assert_eq!(l.quarantined_samples, 10);
+        assert_eq!(l.quarantined_batches, 1);
+        assert_eq!(l.stale_samples, 16);
+        assert_eq!(l.stale_kept, 3);
+        assert_eq!(l.shed_samples, 4);
+        assert_eq!(l.actor_crashes, 1);
+        assert_eq!(l.actor_restarts, 1);
+        assert_eq!(l.actor_timeouts, 2);
+        let mut t = Ledger::new();
+        t.merge(&l);
+        t.merge(&l);
+        assert_eq!(t.quarantined_samples, 20);
+        assert_eq!(t.quarantined_batches, 2);
+        assert_eq!(t.stale_samples, 32);
+        assert_eq!(t.stale_kept, 6);
+        assert_eq!(t.shed_samples, 8);
+        assert_eq!(t.actor_crashes, 2);
+        assert_eq!(t.actor_restarts, 2);
+        assert_eq!(t.actor_timeouts, 4);
     }
 
     #[test]

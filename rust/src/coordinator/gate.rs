@@ -59,15 +59,25 @@ impl KondoGate {
     }
 
     /// Resolve the price for a batch of priority scores.
+    ///
+    /// Rate mode prices from the *finite* scores only: `quantile` orders by
+    /// `total_cmp`, which sorts NaN above every finite value, so one poisoned
+    /// sample would silently shift exactly the high quantiles that
+    /// small-rho pricing reads. A batch with no finite score prices at
+    /// +inf — nothing in it is worth a backward pass.
     pub fn resolve_lambda(&self, chi: &[f64]) -> f64 {
         match self.pricing {
             Pricing::Price(l) => l,
             Pricing::Rate(rho) => {
-                if rho >= 1.0 {
+                let finite: Vec<f64> =
+                    chi.iter().cloned().filter(|c| c.is_finite()).collect();
+                if finite.is_empty() {
+                    f64::INFINITY
+                } else if rho >= 1.0 {
                     // keep everything: price below the minimum
-                    chi.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0
+                    finite.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0
                 } else {
-                    quantile(chi, 1.0 - rho)
+                    quantile(&finite, 1.0 - rho)
                 }
             }
         }
@@ -75,6 +85,13 @@ impl KondoGate {
 
     /// Gate probability for one score at a given price.
     pub fn prob(&self, chi: f64, lambda: f64) -> f64 {
+        // A non-finite score is corrupt data, not high priority: its gate
+        // probability is 0, and (since p = 0 draws nothing in `decide`) it
+        // consumes no randomness — the rng stream stays aligned with the
+        // same batch minus the corrupt sample.
+        if !chi.is_finite() {
+            return 0.0;
+        }
         if self.eta == 0.0 {
             if chi > lambda {
                 1.0
@@ -217,5 +234,51 @@ mod tests {
         let mut r = rng();
         let d = KondoGate::rate(0.5).decide(&[], &mut r);
         assert!(d.keep.is_empty());
+    }
+
+    #[test]
+    fn non_finite_scores_do_not_corrupt_the_quantile_price() {
+        let g = KondoGate::rate(0.5);
+        let clean = vec![1.0, 2.0, 3.0, 4.0];
+        let lam = g.resolve_lambda(&clean);
+        // NaN sorts above every finite score under total_cmp; without the
+        // finite filter it would shift the (1-rho)-quantile upward.
+        let poisoned =
+            vec![1.0, f64::NAN, 2.0, 3.0, f64::INFINITY, 4.0, f64::NEG_INFINITY];
+        assert_eq!(g.resolve_lambda(&poisoned), lam);
+    }
+
+    #[test]
+    fn non_finite_scores_are_never_kept_and_consume_no_rng() {
+        // Soft gate so every finite sample costs one Bernoulli draw: the
+        // rng stream after deciding the poisoned batch must match the
+        // stream after deciding only its finite scores.
+        let g = KondoGate::price(0.0).with_eta(1.0);
+        let chi =
+            vec![f64::NAN, 5.0, f64::INFINITY, -1.0, f64::NEG_INFINITY, 0.3];
+        let mut r_full = Pcg32::seeded(7);
+        let d = g.decide(&chi, &mut r_full);
+        assert!(d.keep.iter().all(|&i| chi[i].is_finite()));
+        for (i, &c) in chi.iter().enumerate() {
+            if !c.is_finite() {
+                assert_eq!(d.probs[i], 0.0, "sample {i}");
+            }
+        }
+        let finite: Vec<f64> =
+            chi.iter().cloned().filter(|c| c.is_finite()).collect();
+        let mut r_fin = Pcg32::seeded(7);
+        let d_fin = g.decide(&finite, &mut r_fin);
+        assert_eq!(r_full.snapshot(), r_fin.snapshot());
+        assert_eq!(d.keep.len(), d_fin.keep.len());
+    }
+
+    #[test]
+    fn all_non_finite_batch_keeps_nothing() {
+        let mut r = rng();
+        let chi = vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+        // rho >= 1.0 branch: even "keep everything" keeps no corrupt data
+        let d = KondoGate::rate(1.0).decide(&chi, &mut r);
+        assert!(d.keep.is_empty());
+        assert_eq!(d.lambda, f64::INFINITY);
     }
 }

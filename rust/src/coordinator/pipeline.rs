@@ -362,8 +362,14 @@ impl GateStage {
             // soft gate stays soft under streaming pricing
             let priced = KondoGate { pricing: Pricing::Price(lam), eta: gate.eta };
             let d = gate_scored(&priced, signals.u, &scores, rng);
+            // non-finite scores never reach the tracker: one NaN would
+            // poison the EW quantile state for every later batch (the
+            // cross-batch version of the quantile-price corruption the
+            // gate itself now rejects -- see KondoGate::resolve_lambda)
             for &c in &scores {
-                tracker.update(c);
+                if c.is_finite() {
+                    tracker.update(c);
+                }
             }
             d
         } else {
@@ -610,7 +616,7 @@ mod tests {
     fn cold_screen_passes_everything_and_records_nothing() {
         let st = ScreenStage::new(4, 8, ScreenCfg { warmup_batches: 5, ..ScreenCfg::at_rate(0.5) });
         assert!(!st.warm());
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         let feats = vec![0.0f32; 8 * 4];
         let v = st.screen(&pool, &shards_of(8, 1), &feats, 8, None, &mut acct);
@@ -623,7 +629,7 @@ mod tests {
     fn inactive_screen_cfg_never_screens() {
         let st = ScreenStage::new(4, 8, ScreenCfg::default());
         assert!(!st.cfg().active());
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         let v = st.screen(&pool, &shards_of(8, 1), &vec![0.0; 32], 8, None, &mut acct);
         assert!(!v.is_screened());
@@ -641,7 +647,7 @@ mod tests {
         let dim = 3;
         let n = 16;
         let st = warm_stage(dim, n, 0.25);
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         // feature x0 = i scrambled so the top set is not a suffix
         let order = [5usize, 12, 0, 9, 3, 15, 7, 1, 11, 4, 13, 2, 8, 6, 14, 10];
@@ -671,7 +677,7 @@ mod tests {
         let mut rng = crate::utils::rng::Pcg32::seeded(3);
         let feats: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
         let survivors_at = |w: usize| {
-            let pool = WorkerPool::new(w);
+            let pool = WorkerPool::new(w).unwrap();
             let mut acct = ShardedLedger::new(w);
             let v = st.screen(&pool, &shards_of(n, w), &feats, n, None, &mut acct);
             assert_eq!(acct.total().screen_samples, n as u64);
@@ -687,7 +693,7 @@ mod tests {
         let dim = 2;
         let n = 8;
         let st = warm_stage(dim, n, 0.25);
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         // all rows predict the same surprisal; u alone decides survival
         let mut feats = vec![0.0f32; n * dim];
@@ -707,7 +713,7 @@ mod tests {
         let dim = 2;
         let n = 8;
         let st = warm_stage(dim, n, 0.5);
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         // identical rows -> identical predictions -> no strict top set
         let feats = vec![1.0f32; n * dim];
@@ -732,7 +738,7 @@ mod tests {
             !st.draft().predict(&feats[0..2]).is_finite(),
             "setup failed to diverge the draft"
         );
-        let pool = WorkerPool::new(1);
+        let pool = WorkerPool::new(1).unwrap();
         let mut acct = ShardedLedger::new(1);
         let v = st.screen(&pool, &shards_of(4, 1), &feats, 4, None, &mut acct);
         assert!(!v.is_screened(), "non-finite scores must fall back to the full path");
@@ -799,7 +805,7 @@ mod tests {
         for rho in [1.5, 0.0, -0.5, 2.0, 1.0] {
             let st = ScreenStage::new(4, 8, ScreenCfg::at_rate(rho));
             assert!(!st.cfg().active(), "rho={rho} must be screening-off");
-            let pool = WorkerPool::new(1);
+            let pool = WorkerPool::new(1).unwrap();
             let mut acct = ShardedLedger::new(1);
             let v = st.screen(&pool, &shards_of(8, 1), &vec![0.0; 32], 8, None, &mut acct);
             assert!(!v.is_screened(), "rho={rho} must never screen");

@@ -1,0 +1,206 @@
+//! Actor workers: long-lived rollout generators over a `Transport`.
+//!
+//! Each actor owns a scratch `ParamStore` it restores policy snapshots
+//! into (re-marshalling only when the snapshot version changes, so a
+//! lagging learner costs one marshal per *new* snapshot, not per step)
+//! and an identical copy of the bandit environment. Per-sample
+//! randomness comes from `unit_rng(seed, step, i)` — a pure function of
+//! (run seed, learner step, sample index) — so the rollout for a step is
+//! bit-identical no matter which actor slot computes it, which worker
+//! count the learner runs, or whether the step was re-dispatched after a
+//! crash. That invariance is the whole determinism story of the
+//! distributed path: the learner's trajectory is a fold over per-step
+//! rollouts that nobody's scheduling can perturb.
+//!
+//! Fault injection lives here too: the actor consults the shared
+//! `FaultPlan` when it picks up a work item and crashes, stalls, or
+//! poisons its own reply accordingly — downstream, the learner has no
+//! idea faults exist; it only sees what a misbehaving actor would send.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::algo::baseline::Baseline;
+use crate::coordinator::pool::unit_rng;
+use crate::envs::mnist::{MnistBandit, RewardNoise};
+use crate::model::ParamStore;
+use crate::runtime::{tensor, Engine, HostTensor};
+
+use super::faults::{apply_poison, FaultKind, FaultPlan};
+use super::transport::{FromActor, PolicySnapshot, RolloutBatch, ToActor, WorkItem};
+
+/// One actor's compute state. Also used directly (without a thread) by
+/// the inline learner mode, which is the bit-identity reference.
+pub struct ActorCtx<'e> {
+    eng: &'e Engine,
+    env: MnistBandit,
+    seed: u64,
+    b: usize,
+    n_act: usize,
+    scratch: ParamStore,
+    param_inputs: Vec<HostTensor>,
+    loaded_version: Option<u64>,
+    /// zero logit-noise matrix `[b, n_act]`; the distributed path runs
+    /// the clean-forward variant of the figures
+    noise: HostTensor,
+}
+
+impl<'e> ActorCtx<'e> {
+    pub fn new(eng: &'e Engine, seed: u64) -> Result<ActorCtx<'e>> {
+        let man = eng.manifest();
+        let b = man.constants.mnist_batch;
+        let n_act = man.constants.mnist_actions;
+        let rules = man.model("mnist")?.to_vec();
+        // rule-shaped placeholder; every rollout restores real params over it
+        let scratch = ParamStore::init(&rules, 0);
+        Ok(ActorCtx {
+            eng,
+            // same fixed corpus seed as the single-process trainer
+            env: MnistBandit::new(1234, b, RewardNoise::clean()),
+            seed,
+            b,
+            n_act,
+            scratch,
+            param_inputs: Vec::new(),
+            loaded_version: None,
+            noise: HostTensor::f32(&[b, n_act], vec![0.0; b * n_act]),
+        })
+    }
+
+    /// Compute the rollout for one step: forward the snapshot policy on
+    /// the shipped contexts, sample actions, score rewards, and emit
+    /// per-sample advantage `u` and surprisal `ell`.
+    pub fn rollout(
+        &mut self,
+        actor: usize,
+        snapshot: &PolicySnapshot,
+        step: u64,
+        x: &[f32],
+        y: &[usize],
+    ) -> Result<RolloutBatch> {
+        let b = self.b;
+        if self.loaded_version != Some(snapshot.version) {
+            self.scratch
+                .restore_tensors(&snapshot.params)
+                .with_context(|| format!("actor {actor}: snapshot v{}", snapshot.version))?;
+            self.scratch.marshal_into(&mut self.param_inputs);
+            self.loaded_version = Some(snapshot.version);
+        }
+        let xs = HostTensor::f32(&[b, self.env.obs_dim()], x.to_vec());
+        let mut inputs: Vec<&HostTensor> = self.param_inputs.iter().collect();
+        inputs.push(&xs);
+        inputs.push(&self.noise);
+        let out = self.eng.execute_refs("mnist_fwd", &inputs)?;
+        let logp = out[0].as_f32()?;
+
+        let mut actions = Vec::with_capacity(b);
+        let mut u = Vec::with_capacity(b);
+        let mut ell = Vec::with_capacity(b);
+        for i in 0..b {
+            // same stream as the single-process trainer's scoring stage
+            let mut srng = unit_rng(self.seed, step, i as u64);
+            let row = &logp[i * self.n_act..(i + 1) * self.n_act];
+            let a = srng.categorical_from_logits(row);
+            let pi: Vec<f32> = row.iter().map(|&l| l.exp()).collect();
+            let r = self.env.reward(a, y[i], &mut srng);
+            let bval = Baseline::Expected.value(&pi, y[i]);
+            actions.push(a as i32);
+            u.push(r - bval);
+            ell.push(-(row[a] as f64));
+        }
+        tensor::recycle_tensor(xs);
+        for t in out {
+            tensor::recycle_tensor(t);
+        }
+        Ok(RolloutBatch {
+            actor,
+            step,
+            snapshot_version: snapshot.version,
+            fingerprint: snapshot.fingerprint,
+            n: b,
+            actions,
+            u,
+            ell,
+        })
+    }
+}
+
+/// Thread body for one actor slot: receive work until shutdown (explicit
+/// message or learner hangup), applying any fault the plan schedules for
+/// the step in hand. Crashes and compute errors announce themselves with
+/// a `Died` message carrying the orphaned step so the supervisor can
+/// re-dispatch without waiting out a heartbeat.
+pub fn actor_loop(
+    eng: &Engine,
+    actor: usize,
+    seed: u64,
+    plan: &FaultPlan,
+    rx: Receiver<ToActor>,
+    tx: Sender<FromActor>,
+) {
+    let mut ctx = match ActorCtx::new(eng, seed) {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = tx.send(FromActor::Died {
+                actor,
+                step: 0,
+                reason: format!("actor init failed: {e:#}"),
+            });
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        let item = match msg {
+            ToActor::Shutdown => return,
+            ToActor::Generate(item) => item,
+        };
+        let fault = plan.take(item.step);
+        if let Some(FaultKind::Crash) = fault {
+            let _ = tx.send(FromActor::Died {
+                actor,
+                step: item.step,
+                reason: "injected crash".into(),
+            });
+            return;
+        }
+        if let Some(FaultKind::Stall { ms }) = fault {
+            // a slow actor, not a dead one: sleep, then deliver late —
+            // the learner's heartbeat will have re-dispatched by then and
+            // its dedup path sheds whichever copy loses the race
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        match ctx.rollout(actor, &item.snapshot, item.step, &item.x, &item.y) {
+            Ok(mut rb) => {
+                if let Some(FaultKind::Poison { kind, count }) = fault {
+                    apply_poison(&mut rb, kind, count);
+                }
+                if tx.send(FromActor::Rollout(rb)).is_err() {
+                    return; // learner gone
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(FromActor::Died {
+                    actor,
+                    step: item.step,
+                    reason: format!("{e:#}"),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Convenience for the inline path: apply the plan's non-process faults
+/// (poison) to a locally computed rollout. Crash/stall events make no
+/// sense without a separate actor process and are ignored — inline mode
+/// documents itself as the zero-churn reference.
+pub fn apply_inline_fault(plan: &FaultPlan, rb: &mut RolloutBatch) {
+    if let Some(FaultKind::Poison { kind, count }) = plan.take(rb.step) {
+        apply_poison(rb, kind, count);
+    }
+}
+
+// Exercised end-to-end (threads, faults, replay) in tests/distrib_e2e.rs;
+// unit tests here would need an Engine fixture and would duplicate those.

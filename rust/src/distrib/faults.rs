@@ -1,0 +1,347 @@
+//! Deterministic, seeded fault injection for the actor–learner runtime.
+//!
+//! A `FaultPlan` is a schedule of failures keyed by *learner step*: the
+//! actor that ends up computing step `s` consumes the event for `s` (at
+//! most once — respawns and re-dispatches never re-fire it), so every
+//! counter a plan implies is exact regardless of which thread raced
+//! where. Keying by step rather than by actor slot is what makes the
+//! schedule unambiguous under supervisor churn: slot assignment shifts
+//! when actors die, but each step is first attempted exactly once.
+//!
+//! The spec grammar (the `fault_spec` config knob) is a comma-separated
+//! list of
+//!
+//! ```text
+//! crash@STEP              actor computing STEP dies before replying
+//! stall@STEP:MS           actor sleeps MS ms, then delivers late
+//! poison@STEP:KIND[:N]    corrupt the rollout for STEP (N samples, default 1)
+//! lag=N                   override the snapshot-lag knob for this run
+//! ```
+//!
+//! with poison kinds `nan_u | nan_ell | bad_action` (per-sample corruption
+//! the admission path quarantines sample-by-sample) and `shape |
+//! fingerprint` (batch-level corruption quarantining the whole delivery).
+//! At most one event per step: a duplicate step is a config error, not a
+//! silent precedence rule.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::transport::RolloutBatch;
+
+/// The pool-wide poisoned-mutex policy (coordinator/pool.rs): absorb the
+/// poison and take the guard — consumed-flag state stays consistent even
+/// if some other thread panicked while holding it.
+fn lock_ok<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonKind {
+    /// non-finite advantage on the first N samples
+    NanU,
+    /// non-finite surprisal on the first N samples
+    NanEll,
+    /// out-of-range action id on the first N samples
+    BadAction,
+    /// truncated sample vectors (claimed n != actual) — batch-level
+    Shape,
+    /// wrong policy/config fingerprint — batch-level
+    Fingerprint,
+}
+
+impl PoisonKind {
+    pub fn parse(s: &str) -> Result<PoisonKind> {
+        Ok(match s {
+            "nan_u" => PoisonKind::NanU,
+            "nan_ell" => PoisonKind::NanEll,
+            "bad_action" => PoisonKind::BadAction,
+            "shape" => PoisonKind::Shape,
+            "fingerprint" => PoisonKind::Fingerprint,
+            other => bail!(
+                "unknown poison kind '{other}' (nan_u|nan_ell|bad_action|shape|fingerprint)"
+            ),
+        })
+    }
+
+    /// Batch-level kinds quarantine the whole delivery before per-sample
+    /// inspection; the rest are caught sample-by-sample.
+    pub fn is_batch_level(&self) -> bool {
+        matches!(self, PoisonKind::Shape | PoisonKind::Fingerprint)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    Crash,
+    Stall { ms: u64 },
+    Poison { kind: PoisonKind, count: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// Ledger totals a plan implies, for exact-match assertions (tests and
+/// the `dist` experiment report). `restarts` assumes the supervisor's
+/// respawn budget is not exhausted (the default); runs that exhaust it
+/// assert their counters directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExpectedCounts {
+    pub crashes: u64,
+    pub restarts: u64,
+    pub stalls: u64,
+    pub quarantined_samples: u64,
+    pub quarantined_batches: u64,
+}
+
+/// A seeded failure schedule, shared (`&FaultPlan`) across actor threads.
+#[derive(Debug)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    consumed: Mutex<Vec<bool>>,
+    lag_override: Option<usize>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: vec![], consumed: Mutex::new(vec![]), lag_override: None }
+    }
+
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut lag_override = None;
+        for raw in spec.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some(v) = tok.strip_prefix("lag=") {
+                lag_override =
+                    Some(v.parse().with_context(|| format!("bad lag override '{tok}'"))?);
+                continue;
+            }
+            let (what, rest) = tok
+                .split_once('@')
+                .with_context(|| format!("bad fault token '{tok}' (KIND@STEP...)"))?;
+            let kind = match what {
+                "crash" => {
+                    let step = rest.parse().with_context(|| format!("bad step in '{tok}'"))?;
+                    FaultEvent { step, kind: FaultKind::Crash }
+                }
+                "stall" => {
+                    let (s, ms) = rest
+                        .split_once(':')
+                        .with_context(|| format!("stall needs '@STEP:MS' in '{tok}'"))?;
+                    FaultEvent {
+                        step: s.parse().with_context(|| format!("bad step in '{tok}'"))?,
+                        kind: FaultKind::Stall {
+                            ms: ms.parse().with_context(|| format!("bad ms in '{tok}'"))?,
+                        },
+                    }
+                }
+                "poison" => {
+                    let mut parts = rest.split(':');
+                    let step: u64 = parts
+                        .next()
+                        .unwrap_or("")
+                        .parse()
+                        .with_context(|| format!("bad step in '{tok}'"))?;
+                    let kind = PoisonKind::parse(
+                        parts.next().with_context(|| format!("poison needs a kind in '{tok}'"))?,
+                    )?;
+                    let count = match parts.next() {
+                        None => 1,
+                        Some(c) => {
+                            c.parse().with_context(|| format!("bad count in '{tok}'"))?
+                        }
+                    };
+                    FaultEvent { step, kind: FaultKind::Poison { kind, count } }
+                }
+                other => bail!("unknown fault '{other}' in '{tok}' (crash|stall|poison)"),
+            };
+            if events.iter().any(|e| e.step == kind.step) {
+                bail!("duplicate fault at step {} (one event per step)", kind.step);
+            }
+            events.push(kind);
+        }
+        let n = events.len();
+        Ok(FaultPlan { events, consumed: Mutex::new(vec![false; n]), lag_override })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn lag_override(&self) -> Option<usize> {
+        self.lag_override
+    }
+
+    /// Consume the event scheduled for `step`, if any and not yet fired.
+    /// Whoever computes the step's first attempt gets it; re-dispatches
+    /// after a crash/timeout find it already consumed.
+    pub fn take(&self, step: u64) -> Option<FaultKind> {
+        let idx = self.events.iter().position(|e| e.step == step)?;
+        let mut consumed = lock_ok(&self.consumed);
+        if consumed[idx] {
+            return None;
+        }
+        consumed[idx] = true;
+        Some(self.events[idx].kind)
+    }
+
+    /// The exact ledger totals this plan implies for a run of batches of
+    /// size `batch` whose steps cover every event.
+    pub fn expected_counts(&self, batch: usize) -> ExpectedCounts {
+        let mut c = ExpectedCounts::default();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::Crash => {
+                    c.crashes += 1;
+                    c.restarts += 1;
+                }
+                FaultKind::Stall { .. } => c.stalls += 1,
+                FaultKind::Poison { kind, count } => {
+                    if kind.is_batch_level() {
+                        c.quarantined_batches += 1;
+                        c.quarantined_samples += batch as u64;
+                    } else {
+                        c.quarantined_samples += count.min(batch) as u64;
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Corrupt a computed rollout in place, deterministically: the first
+/// `count` samples for the per-sample kinds, a structural lie for the
+/// batch-level ones. The corruption is a pure function of (kind, count),
+/// so a replayed poisoned stream is bit-identical to the live one.
+pub fn apply_poison(rb: &mut RolloutBatch, kind: PoisonKind, count: usize) {
+    match kind {
+        PoisonKind::NanU => {
+            for v in rb.u.iter_mut().take(count) {
+                *v = f64::NAN;
+            }
+        }
+        PoisonKind::NanEll => {
+            for v in rb.ell.iter_mut().take(count) {
+                *v = f64::NAN;
+            }
+        }
+        PoisonKind::BadAction => {
+            for a in rb.actions.iter_mut().take(count) {
+                *a = -1;
+            }
+        }
+        PoisonKind::Shape => {
+            // claimed n stays; the vectors lie about it
+            rb.actions.pop();
+            rb.u.pop();
+        }
+        PoisonKind::Fingerprint => {
+            rb.fingerprint ^= 0x5eed_bad_f00d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout(n: usize) -> RolloutBatch {
+        RolloutBatch {
+            actor: 0,
+            step: 3,
+            snapshot_version: 3,
+            fingerprint: 42,
+            n,
+            actions: vec![1; n],
+            u: vec![0.5; n],
+            ell: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("crash@5, stall@7:1500, poison@8:nan_u:3, lag=2").unwrap();
+        assert_eq!(p.lag_override(), Some(2));
+        assert!(!p.is_empty());
+        assert_eq!(p.take(5), Some(FaultKind::Crash));
+        assert_eq!(p.take(7), Some(FaultKind::Stall { ms: 1500 }));
+        assert_eq!(
+            p.take(8),
+            Some(FaultKind::Poison { kind: PoisonKind::NanU, count: 3 })
+        );
+        assert_eq!(p.take(9), None, "no event scheduled");
+        // empty / whitespace specs are a valid no-fault plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+        assert!(FaultPlan::none().take(0).is_none());
+    }
+
+    #[test]
+    fn events_fire_at_most_once() {
+        let p = FaultPlan::parse("crash@5").unwrap();
+        assert_eq!(p.take(5), Some(FaultKind::Crash));
+        assert_eq!(p.take(5), None, "a re-dispatched step must not re-fire");
+    }
+
+    #[test]
+    fn malformed_specs_are_errors() {
+        for bad in [
+            "crash@x",
+            "crash5",
+            "stall@3",          // ms required
+            "poison@3",         // kind required
+            "poison@3:weird",
+            "explode@3",
+            "lag=abc",
+            "crash@5,poison@5:nan_u", // duplicate step
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn expected_counts_match_the_plan() {
+        let p = FaultPlan::parse(
+            "crash@1,stall@2:900,poison@3:nan_ell:4,poison@4:shape,poison@5:fingerprint",
+        )
+        .unwrap();
+        let c = p.expected_counts(16);
+        assert_eq!(c.crashes, 1);
+        assert_eq!(c.restarts, 1);
+        assert_eq!(c.stalls, 1);
+        // 4 per-sample + two whole batches of 16
+        assert_eq!(c.quarantined_samples, 4 + 32);
+        assert_eq!(c.quarantined_batches, 2);
+    }
+
+    #[test]
+    fn poison_corrupts_deterministically() {
+        let mut rb = rollout(8);
+        apply_poison(&mut rb, PoisonKind::NanU, 3);
+        assert!(rb.u[..3].iter().all(|v| v.is_nan()));
+        assert!(rb.u[3..].iter().all(|v| v.is_finite()));
+
+        let mut rb = rollout(8);
+        apply_poison(&mut rb, PoisonKind::BadAction, 2);
+        assert_eq!(&rb.actions[..3], &[-1, -1, 1]);
+
+        let mut rb = rollout(8);
+        apply_poison(&mut rb, PoisonKind::Shape, 1);
+        assert_eq!(rb.n, 8, "the claim stands while the vectors lie");
+        assert_eq!(rb.actions.len(), 7);
+
+        let mut rb = rollout(8);
+        let fp = rb.fingerprint;
+        apply_poison(&mut rb, PoisonKind::Fingerprint, 1);
+        assert_ne!(rb.fingerprint, fp);
+    }
+}

@@ -1,0 +1,875 @@
+//! The distributed learner: dispatch, hardened admission, staleness
+//! pricing, and the three execution modes (inline / threaded / replay)
+//! that share one ingest path.
+//!
+//! # Determinism (the eta=0 contract, distributed)
+//!
+//! The learner's trajectory is a fold over per-step (context, rollout)
+//! pairs. Contexts for step `t` come from `unit_rng(seed ^ CTX_SALT, t,
+//! 0)` — a pure function of the run seed. Rollouts are computed by
+//! actors whose per-sample randomness is `unit_rng(seed, t, i)`, so the
+//! rollout for a step is bit-identical no matter which actor slot
+//! computes it or how many times it is re-dispatched. Ingestion is
+//! strictly step-ordered (out-of-order deliveries park in a reorder
+//! buffer). Hence: **inline, threaded (any actor count), and replay all
+//! produce the same trajectory bit-for-bit at eta = 0**, and runtime
+//! events (crashes, timeouts, respawns) perturb only the runtime
+//! counters, never the weights. Inline mode is the reference; threaded
+//! and replay are locked against it in rust/tests/distrib_e2e.rs.
+//!
+//! # Admission (the screen's slot in the distributed pipeline)
+//!
+//! The single-process pipeline screens on predicted surprisal before
+//! spending forward compute. Distributed, the actors have already spent
+//! the forward — what the learner screens is *trust*: a batch-level
+//! structural check (fingerprint echo, claimed-vs-actual shape, sane
+//! snapshot version) quarantines a whole delivery, then a per-sample
+//! check (finite u/ell, in-range action) quarantines individual samples.
+//! Quarantine is bookkeeping, not a panic: the step advances, the
+//! ledger's `quarantined_*` counters record exactly what was dropped,
+//! and the gate then prices whatever was admitted. Staleness is priced
+//! rather than rejected (arxiv 2603.20521): a rollout computed on a
+//! snapshot `k` steps behind has its gate rate tightened to
+//! `rho * stale_penalty^k`, so stale samples must be *delightful* to
+//! earn a backward pass.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::{BatchSignals, Method};
+use crate::checkpoint::{self, CheckpointCfg, TrainCheckpoint};
+use crate::coordinator::batcher::{gather_f32, gather_i32, gather_rows_f32};
+use crate::coordinator::pool::unit_rng;
+use crate::coordinator::{KondoGate, Ledger, Pricing, ShardedLedger};
+use crate::envs::mnist::{ContextBatch, MnistBandit, RewardNoise};
+use crate::model::ParamStore;
+use crate::optim::Adam;
+use crate::runtime::{Engine, HostTensor, InitRule};
+use crate::trainers::mnist::eval_test_error;
+use crate::trainers::{priority_key, EvalPoint, GatedLoop};
+use crate::utils::json::Json;
+use crate::utils::rng::Pcg32;
+
+use super::actor::{actor_loop, apply_inline_fault, ActorCtx};
+use super::faults::FaultPlan;
+use super::replay;
+use super::supervisor::{RespawnVerdict, Supervisor};
+use super::transport::{
+    ChannelTransport, FromActor, PolicySnapshot, RolloutBatch, ToActor, Transport, WorkItem,
+};
+
+/// Keeps the context stream disjoint from the per-sample action/reward
+/// streams (which use the raw seed).
+const CTX_SALT: u64 = 0x6374_7821_6374_7821;
+
+/// Inbox poll granularity; heartbeat timeouts resolve to within this.
+const POLL: Duration = Duration::from_millis(20);
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistribMode {
+    /// Single-thread reference: the learner drives one `ActorCtx`
+    /// directly. No churn faults (crash/stall are ignored), but the
+    /// same snapshot-lag ring and admission path — this is the
+    /// bit-identity anchor the concurrent modes are tested against.
+    Inline,
+    /// N actor threads over the channel transport, supervised.
+    Threaded,
+    /// Re-ingest a recorded actor stream (see `record_to`).
+    Replay(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct DistribCfg {
+    pub method: Method,
+    pub lr: f64,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_size: usize,
+    pub seed: u64,
+    /// actor slots (threaded mode); inline/replay stamp `t % actors`
+    pub actors: usize,
+    /// learner workers for the backward stage
+    pub workers: usize,
+    /// snapshot staleness: step `t` is computed on policy version
+    /// `t - lag` (clamped at 0), and up to `lag + 1` steps are in
+    /// flight at once
+    pub lag: usize,
+    /// per-lag-step gate-rate decay; 1.0 = staleness priced like fresh
+    pub stale_penalty: f64,
+    /// seeded fault schedule (see distrib::faults grammar); may carry a
+    /// `lag=N` override
+    pub fault_spec: String,
+    /// silent-actor timeout before re-dispatch (threaded mode)
+    pub heartbeat_ms: u64,
+    /// per-slot respawn budget before a slot is left dead
+    pub max_respawns: u32,
+    /// record the ingested actor stream to this path
+    pub record_to: Option<String>,
+    pub checkpoint: Option<CheckpointCfg>,
+    pub resume_from: Option<String>,
+}
+
+impl Default for DistribCfg {
+    fn default() -> DistribCfg {
+        DistribCfg {
+            method: Method::DgK {
+                gate: KondoGate::rate(0.25),
+                priority: crate::coordinator::Priority::Delight,
+            },
+            lr: 1e-2,
+            steps: 50,
+            eval_every: 25,
+            eval_size: 500,
+            seed: 0,
+            actors: 2,
+            workers: 1,
+            lag: 0,
+            stale_penalty: 1.0,
+            fault_spec: String::new(),
+            heartbeat_ms: 1000,
+            max_respawns: 2,
+            record_to: None,
+            checkpoint: None,
+            resume_from: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DistribRunResult {
+    pub curve: Vec<EvalPoint>,
+    pub ledger: Ledger,
+    pub final_test_err: f64,
+    pub final_train_err: f64,
+}
+
+/// Trajectory-contract fingerprint. Scheduling knobs (actors, workers,
+/// heartbeat, mode, respawn budget) are deliberately excluded: they may
+/// not change the trajectory, so a recording or checkpoint from one
+/// fleet shape resumes under another. `lag`, `stale_penalty`, and the
+/// fault spec DO shape the trajectory and are pinned — a wrong-lag
+/// resume rejects with an error naming 'lag'.
+fn fingerprint(cfg: &DistribCfg, lag: usize, rules: &[InitRule]) -> Json {
+    checkpoint::obj(vec![
+        ("trainer", Json::Str("distrib".into())),
+        ("seed", checkpoint::ju64(cfg.seed)),
+        ("method", Json::Str(format!("{:?}", cfg.method))),
+        ("priority", Json::Str(priority_key(&cfg.method))),
+        ("lr", Json::Num(cfg.lr)),
+        ("lag", checkpoint::ju64(lag as u64)),
+        ("stale_penalty", Json::Num(cfg.stale_penalty)),
+        ("fault_spec", Json::Str(cfg.fault_spec.clone())),
+        ("eval_every", checkpoint::ju64(cfg.eval_every as u64)),
+        ("eval_size", checkpoint::ju64(cfg.eval_size as u64)),
+        (
+            "shapes",
+            Json::Str(
+                rules
+                    .iter()
+                    .map(|r| format!("{}:{:?}", r.name, r.shape))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ),
+        ),
+    ])
+}
+
+/// Tighten the gate for a stale rollout: `rho -> rho * penalty^k`.
+/// Fixed-price gates and ungated methods pass through — staleness
+/// pricing is a Kondo-rate concept.
+fn stale_priced(method: &Method, lag_actual: u64, penalty: f64) -> Method {
+    if lag_actual == 0 || penalty >= 1.0 {
+        return *method;
+    }
+    match method {
+        Method::DgK { gate, priority } => match gate.pricing {
+            Pricing::Rate(rho) => {
+                let rho_eff = (rho * penalty.powi(lag_actual.min(64) as i32)).max(1e-9);
+                Method::DgK {
+                    gate: KondoGate { pricing: Pricing::Rate(rho_eff), eta: gate.eta },
+                    priority: *priority,
+                }
+            }
+            Pricing::Price(_) => *method,
+        },
+        m => *m,
+    }
+}
+
+/// Rolling train-error window, same semantics as the single-process
+/// trainer's (which keeps its own private copy).
+struct ErrWindow {
+    buf: Vec<f64>,
+    cap: usize,
+}
+
+impl ErrWindow {
+    fn new(cap: usize) -> ErrWindow {
+        ErrWindow { buf: vec![], cap }
+    }
+    fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.remove(0);
+        }
+        self.buf.push(v);
+    }
+    fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 1.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+    fn restore(&mut self, vals: Vec<f64>) {
+        self.buf = vals;
+        if self.buf.len() > self.cap {
+            let excess = self.buf.len() - self.cap;
+            self.buf.drain(..excess);
+        }
+    }
+}
+
+/// All learner-side state shared by the three modes. `ingest` is the
+/// single admission + gate + backward path; the mode drivers only differ
+/// in how (context, rollout) pairs are produced.
+struct LearnerState<'e> {
+    eng: &'e Engine,
+    cfg: &'e DistribCfg,
+    b: usize,
+    img: usize,
+    n_act: usize,
+    eval_b: usize,
+    env: MnistBandit,
+    params: ParamStore,
+    opt: Adam,
+    gl: GatedLoop<'e>,
+    param_inputs: Vec<HostTensor>,
+    /// master rng: consumed only by soft-gate draws (nothing at eta=0)
+    rng: Pcg32,
+    acct: ShardedLedger,
+    curve: Vec<EvalPoint>,
+    window: ErrWindow,
+    test: ContextBatch,
+    fp: Json,
+    fp_hash: u64,
+    /// effective snapshot lag (config knob or fault-plan override)
+    lag: usize,
+    /// snapshots for versions `completed-lag ..= completed`
+    ring: VecDeque<Arc<PolicySnapshot>>,
+    /// steps ingested so far == current policy version
+    completed: usize,
+    w_batch: Vec<f32>,
+    a_batch: Vec<i32>,
+    recorded: Option<Vec<RolloutBatch>>,
+}
+
+impl<'e> LearnerState<'e> {
+    fn new(eng: &'e Engine, cfg: &'e DistribCfg, lag: usize) -> Result<LearnerState<'e>> {
+        let man = eng.manifest();
+        let b = man.constants.mnist_batch;
+        let n_act = man.constants.mnist_actions;
+        let img = man.constants.mnist_in;
+        let eval_b = man.constants.mnist_eval_batch;
+        let rules = man.model("mnist")?.to_vec();
+        // same init stream as the single-process trainer so a distrib run
+        // and a train_mnist run start from identical weights per seed
+        let mut params = ParamStore::init(&rules, cfg.seed.wrapping_mul(0x51ed) ^ 0xbeef);
+        let mut opt = Adam::new(cfg.lr, &params);
+        // no forward ladder and no screen: actors own the forward, and
+        // the admission path is the distributed analogue of the screen
+        let mut gl = GatedLoop::new(eng, cfg.workers, man.constants.mnist_bwd_caps.clone())?
+            .with_gate(&cfg.method, false, b);
+        let env = MnistBandit::new(1234, b, RewardNoise::clean());
+        let mut rng = Pcg32::new(cfg.seed, 0x6469_7374); // "dist"
+        let test = env.test_set(cfg.eval_size.max(eval_b));
+        let mut acct = ShardedLedger::new(gl.workers());
+        let mut curve = Vec::new();
+        let mut window = ErrWindow::new(10);
+        let fp = fingerprint(cfg, lag, &rules);
+        let fp_hash = checkpoint::fnv1a64(fp.dump().as_bytes());
+
+        let mut ring: VecDeque<Arc<PolicySnapshot>> = VecDeque::new();
+        let mut completed = 0usize;
+        if let Some(path) = &cfg.resume_from {
+            let ck = TrainCheckpoint::load(Path::new(path))?;
+            checkpoint::validate_fingerprint(&ck.fingerprint, &fp)?;
+            checkpoint::restore(
+                &ck, &mut params, &mut opt, &mut rng, &mut gl, &mut acct, &mut curve,
+            )?;
+            window.restore(checkpoint::pf64_arr(
+                checkpoint::field(&ck.extra, "train_window")?,
+                "extra.train_window",
+            )?);
+            // rebuild the snapshot ring so lagged dispatch resumes against
+            // the exact historical policies the interrupted run would use
+            let versions = match checkpoint::field(&ck.extra, "ring_versions")? {
+                Json::Arr(a) => a
+                    .iter()
+                    .map(|v| checkpoint::pu64(v, "extra.ring_versions"))
+                    .collect::<Result<Vec<u64>>>()?,
+                _ => bail!("checkpoint field 'extra.ring_versions': expected an array"),
+            };
+            let Json::Arr(snaps) = checkpoint::field(&ck.extra, "ring")? else {
+                bail!("checkpoint field 'extra.ring': expected an array");
+            };
+            if versions.len() != snaps.len() {
+                bail!("checkpoint ring_versions/ring length mismatch");
+            }
+            for (version, snap) in versions.into_iter().zip(snaps) {
+                let Json::Arr(tensors) = snap else {
+                    bail!("checkpoint field 'extra.ring': expected tensor arrays");
+                };
+                let tensors: Vec<Vec<f32>> = tensors
+                    .iter()
+                    .map(|t| checkpoint::pf32_arr(t, "extra.ring"))
+                    .collect::<Result<_>>()?;
+                ring.push_back(Arc::new(PolicySnapshot {
+                    version,
+                    params: Arc::new(tensors),
+                    fingerprint: fp_hash,
+                }));
+            }
+            completed = ck.step as usize;
+            if completed > cfg.steps {
+                bail!(
+                    "checkpoint is at step {completed}, beyond this run's {} steps",
+                    cfg.steps
+                );
+            }
+        }
+
+        let mut l = LearnerState {
+            eng,
+            cfg,
+            b,
+            img,
+            n_act,
+            eval_b,
+            env,
+            params,
+            opt,
+            gl,
+            param_inputs: Vec::new(),
+            rng,
+            acct,
+            curve,
+            window,
+            test,
+            fp,
+            fp_hash,
+            lag,
+            ring,
+            completed,
+            w_batch: vec![0.0f32; b],
+            a_batch: vec![0i32; b],
+            recorded: cfg.record_to.as_ref().map(|_| Vec::new()),
+        };
+        if l.ring.is_empty() {
+            l.push_snapshot(0);
+        }
+        Ok(l)
+    }
+
+    /// Contexts for step `t`: a pure function of (seed, t), so every
+    /// mode — and a resumed run — regenerates the identical batch.
+    fn context_for(&self, t: usize) -> ContextBatch {
+        let mut r = unit_rng(self.cfg.seed ^ CTX_SALT, t as u64, 0);
+        self.env.sample_contexts(&mut r)
+    }
+
+    /// The snapshot step `t` must be computed on: version
+    /// `t - lag` (clamped at 0). The ring retains exactly the window the
+    /// dispatch rule can ask for.
+    fn snapshot_for(&self, t: usize) -> Result<Arc<PolicySnapshot>> {
+        let version = t.saturating_sub(self.lag) as u64;
+        let front = self.ring.front().map(|s| s.version).unwrap_or(0);
+        let idx = version
+            .checked_sub(front)
+            .map(|i| i as usize)
+            .filter(|&i| i < self.ring.len());
+        match idx {
+            Some(i) => Ok(self.ring[i].clone()),
+            None => bail!(
+                "snapshot v{version} for step {t} not in ring (front v{front}, len {})",
+                self.ring.len()
+            ),
+        }
+    }
+
+    fn push_snapshot(&mut self, version: u64) {
+        let tensors: Vec<Vec<f32>> =
+            (0..self.params.n_tensors()).map(|i| self.params.tensor(i).to_vec()).collect();
+        self.ring.push_back(Arc::new(PolicySnapshot {
+            version,
+            params: Arc::new(tensors),
+            fingerprint: self.fp_hash,
+        }));
+        while self.ring.len() > self.lag + 1 {
+            self.ring.pop_front();
+        }
+    }
+
+    fn ledger(&self) -> Ledger {
+        self.acct.total()
+    }
+
+    /// Ingest the rollout for step `completed`: admission, staleness
+    /// pricing, gate, backward, eval/checkpoint cadence. This is THE
+    /// shared path — all three modes fold through it, which is what
+    /// makes their trajectories structurally comparable.
+    fn ingest(&mut self, rb: RolloutBatch, ctx: &ContextBatch) -> Result<()> {
+        debug_assert_eq!(rb.step as usize, self.completed, "ingest must be step-ordered");
+        if let Some(rec) = self.recorded.as_mut() {
+            rec.push(rb.clone());
+        }
+        let b = self.b;
+
+        // ---- batch-level admission: is the delivery structurally what
+        // it claims to be, from the policy we think it is from?
+        let structurally_ok = rb.fingerprint == self.fp_hash
+            && rb.n == b
+            && rb.actions.len() == b
+            && rb.u.len() == b
+            && rb.ell.len() == b
+            && rb.snapshot_version <= rb.step;
+        if !structurally_ok {
+            self.acct.shard_mut(0).record_quarantined_batch(b);
+            return self.after_step();
+        }
+        self.acct.shard_mut(0).record_forward(b);
+
+        // ---- per-sample admission: quarantine non-finite signals and
+        // out-of-range actions instead of letting them near the gate
+        let mut admitted: Vec<usize> = Vec::with_capacity(b);
+        for i in 0..b {
+            let a = rb.actions[i];
+            if rb.u[i].is_finite()
+                && rb.ell[i].is_finite()
+                && a >= 0
+                && (a as usize) < self.n_act
+            {
+                admitted.push(i);
+            }
+        }
+        if admitted.len() < b {
+            self.acct.shard_mut(0).record_quarantined(b - admitted.len());
+        }
+
+        // ---- staleness pricing: high effective surprisal is exactly
+        // what the Kondo gate screens for, so staleness folds into the
+        // gate rate rather than a separate rejection rule
+        let lag_actual = rb.step - rb.snapshot_version;
+        let method_eff = stale_priced(&self.cfg.method, lag_actual, self.cfg.stale_penalty);
+
+        let decision = if admitted.is_empty() {
+            None
+        } else {
+            let u: Vec<f64> = admitted.iter().map(|&i| rb.u[i]).collect();
+            let ell: Vec<f64> = admitted.iter().map(|&i| rb.ell[i]).collect();
+            let signals = BatchSignals { u: &u, ell: &ell, logp_old: None, chi_override: None };
+            Some(self.gl.decide(&method_eff, &signals, &mut self.rng))
+        };
+        let kept = decision.as_ref().map(|d| d.keep.len()).unwrap_or(0);
+        if lag_actual > 0 {
+            self.acct.shard_mut(0).record_stale(admitted.len(), kept);
+        }
+
+        // train metric: sampled-action error over the admitted set
+        if !admitted.is_empty() {
+            let wrong =
+                admitted.iter().filter(|&&i| rb.actions[i] as usize != ctx.y[i]).count();
+            self.window.push(wrong as f64 / admitted.len() as f64);
+        }
+
+        // ---- backward over the kept set (admitted-slot indices -> the
+        // original batch indices the chunk gathers use)
+        if let Some(d) = &decision {
+            if !d.keep.is_empty() {
+                let keep_orig: Vec<usize> = d.keep.iter().map(|&s| admitted[s]).collect();
+                let chunks = self.gl.buckets().pack(&keep_orig);
+                self.gl.record_backward_chunks(&mut self.acct, &chunks, 1, |c| c.idx.len());
+                self.w_batch.fill(0.0);
+                self.a_batch.fill(0);
+                for (s, &i) in admitted.iter().enumerate() {
+                    self.w_batch[i] = d.weights[s];
+                    self.a_batch[i] = rb.actions[i];
+                }
+                self.params.marshal_into(&mut self.param_inputs);
+                let img = self.img;
+                let x = &ctx.x;
+                let w_batch = &self.w_batch;
+                let a_batch = &self.a_batch;
+                self.gl.backward(
+                    &mut self.params,
+                    &self.param_inputs,
+                    &mut self.opt,
+                    &chunks,
+                    |cap| format!("mnist_bwd_c{cap}"),
+                    |chunk| {
+                        let cap = chunk.cap;
+                        vec![
+                            HostTensor::f32(
+                                &[cap, img],
+                                gather_rows_f32(x, img, &chunk.idx, cap),
+                            ),
+                            HostTensor::i32(&[cap], gather_i32(a_batch, &chunk.idx, cap)),
+                            HostTensor::f32(&[cap], gather_f32(w_batch, &chunk.idx, cap)),
+                        ]
+                    },
+                    // sum/B over the full nominal batch, quarantined or
+                    // not: dropped samples contribute zero gradient, they
+                    // do not re-scale their survivors
+                    b as f32,
+                )?;
+            }
+        }
+        self.after_step()
+    }
+
+    /// Advance the step cursor: eval cadence, snapshot publication,
+    /// checkpoint cadence. Runs for quarantined steps too — a rejected
+    /// delivery still advances time (its snapshot is just unchanged
+    /// weights), so the schedule stays a pure function of step count.
+    fn after_step(&mut self) -> Result<()> {
+        let t1 = self.completed + 1;
+        let last = t1 == self.cfg.steps;
+        if t1 % self.cfg.eval_every == 0 || last {
+            let test_err = eval_test_error(
+                self.eng,
+                &self.params,
+                &self.test.x,
+                &self.test.y,
+                self.eval_b,
+                self.img,
+                self.n_act,
+            )?;
+            let totals = self.acct.total();
+            self.curve.push(EvalPoint {
+                step: t1,
+                forward_samples: totals.forward_samples,
+                screen_samples: totals.screen_samples,
+                forward_skipped: totals.forward_skipped,
+                backward_kept: totals.backward_kept,
+                backward_executed: totals.backward_executed,
+                metric: self.window.mean(),
+                metric2: test_err,
+            });
+        }
+        self.push_snapshot(t1 as u64);
+        if let Some(ck_cfg) = &self.cfg.checkpoint {
+            if ck_cfg.every > 0 && t1 % ck_cfg.every == 0 {
+                // the threaded driver's dispatch barrier guarantees the
+                // pipeline is quiescent here (nothing in flight), so the
+                // ring + scalar state IS the whole distributed state
+                let ring_versions =
+                    Json::Arr(self.ring.iter().map(|s| checkpoint::ju64(s.version)).collect());
+                let ring_tensors = Json::Arr(
+                    self.ring
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(
+                                s.params.iter().map(|t| checkpoint::jf32_arr(t)).collect(),
+                            )
+                        })
+                        .collect(),
+                );
+                let extra = checkpoint::obj(vec![
+                    ("train_window", checkpoint::jf64_arr(&self.window.buf)),
+                    ("ring_versions", ring_versions),
+                    ("ring", ring_tensors),
+                ]);
+                checkpoint::capture(
+                    self.fp.clone(),
+                    t1 as u64,
+                    &self.params,
+                    &self.opt,
+                    &self.rng,
+                    &self.gl,
+                    &self.acct,
+                    &self.curve,
+                    extra,
+                )
+                .save(Path::new(&ck_cfg.path))?;
+            }
+        }
+        self.completed = t1;
+        Ok(())
+    }
+
+    fn into_result(self) -> Result<DistribRunResult> {
+        if let Some(path) = &self.cfg.record_to {
+            let recorded = self.recorded.as_deref().unwrap_or(&[]);
+            replay::write_stream(path, self.fp_hash, self.b, recorded)?;
+        }
+        let final_test = self.curve.last().map(|p| p.metric2).unwrap_or(1.0);
+        let final_train = self.curve.last().map(|p| p.metric).unwrap_or(1.0);
+        Ok(DistribRunResult {
+            ledger: self.acct.total(),
+            curve: self.curve,
+            final_test_err: final_test,
+            final_train_err: final_train,
+        })
+    }
+}
+
+/// Inline reference: one `ActorCtx`, driven synchronously, same lag ring
+/// and admission path. Poison faults apply; crash/stall are meaningless
+/// without a separate actor and are ignored.
+fn run_inline(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
+    let mut actor = ActorCtx::new(l.eng, l.cfg.seed)?;
+    let n_slots = l.cfg.actors.max(1);
+    while l.completed < l.cfg.steps {
+        let t = l.completed;
+        let ctx = l.context_for(t);
+        let snap = l.snapshot_for(t)?;
+        let mut rb = actor.rollout(t % n_slots, &snap, t as u64, &ctx.x, &ctx.y)?;
+        apply_inline_fault(plan, &mut rb);
+        l.ingest(rb, &ctx)?;
+    }
+    Ok(())
+}
+
+/// Replay: fold a recorded stream through the identical ingest path.
+/// Contexts are regenerated from the seed; the stream must carry exactly
+/// the steps this run ingests (resume-from mid-stream works because the
+/// fold is step-indexed).
+fn run_replay(l: &mut LearnerState<'_>, path: &str) -> Result<()> {
+    let rollouts = replay::read_stream(path, l.fp_hash)?;
+    if rollouts.len() < l.cfg.steps {
+        bail!(
+            "actor stream '{path}' has {} steps, run wants {}",
+            rollouts.len(),
+            l.cfg.steps
+        );
+    }
+    while l.completed < l.cfg.steps {
+        let t = l.completed;
+        let ctx = l.context_for(t);
+        l.ingest(rollouts[t].clone(), &ctx)?;
+    }
+    Ok(())
+}
+
+/// Threaded mode: dispatch over the channel transport with supervision.
+///
+/// Scheduling rules, all deterministic in (step, alive-set):
+/// - step `t` goes to slot `t % actors`, walking past dead slots;
+/// - at most `lag + 1` steps in flight (`t <= completed + lag`), and
+///   never across a checkpoint boundary (saves happen quiescent);
+/// - a `Died` actor is respawned with bounded backoff until its budget
+///   runs out, and every step it was holding is re-dispatched;
+/// - a silent actor (no delivery for `heartbeat_ms` while its step heads
+///   the ingest queue) counts one timeout and its step is re-dispatched
+///   to the next live slot; the superseded delivery is shed on arrival.
+fn run_threaded(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
+    let actors = l.cfg.actors.max(1);
+    let steps = l.cfg.steps;
+    let lag = l.lag;
+    let seed = l.cfg.seed;
+    let eng = l.eng;
+    let heartbeat = Duration::from_millis(l.cfg.heartbeat_ms.max(1));
+    let ckpt_every = l.cfg.checkpoint.as_ref().map(|c| c.every).unwrap_or(0);
+    let max_respawns = l.cfg.max_respawns;
+    let tp = ChannelTransport::new(actors);
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut sup = Supervisor::new(actors, max_respawns);
+        for a in 0..actors {
+            let (rx, tx) = tp.register_actor(a);
+            s.spawn(move || actor_loop(eng, a, seed, plan, rx, tx));
+        }
+
+        // pending contexts (shipped to actors, kept for admission),
+        // reorder buffer, and dispatch bookkeeping
+        let mut pending_ctx: BTreeMap<usize, ContextBatch> = BTreeMap::new();
+        let mut buffered: BTreeMap<u64, RolloutBatch> = BTreeMap::new();
+        let mut in_flight: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut timeout_counted: BTreeSet<u64> = BTreeSet::new();
+        let mut next_dispatch = l.completed;
+        // the head step's wait clock arms when it BECOMES the head, so a
+        // queue behind a slow actor can't rack up spurious timeouts
+        let mut awaited: Option<(usize, Instant)> = None;
+
+        let run = |l: &mut LearnerState<'_>,
+                   sup: &mut Supervisor,
+                   pending_ctx: &mut BTreeMap<usize, ContextBatch>,
+                   buffered: &mut BTreeMap<u64, RolloutBatch>,
+                   in_flight: &mut BTreeMap<u64, usize>,
+                   timeout_counted: &mut BTreeSet<u64>,
+                   next_dispatch: &mut usize,
+                   awaited: &mut Option<(usize, Instant)>|
+         -> Result<()> {
+            let send_step =
+                |l: &LearnerState<'_>, pending_ctx: &BTreeMap<usize, ContextBatch>, t: usize, a: usize| -> Result<()> {
+                    let ctx = &pending_ctx[&t];
+                    let item = WorkItem {
+                        step: t as u64,
+                        x: ctx.x.clone(),
+                        y: ctx.y.clone(),
+                        snapshot: l.snapshot_for(t)?,
+                    };
+                    // a failed send means the slot is mid-death; its Died
+                    // message is already in the inbox and will re-route
+                    // this step via the orphan scan
+                    let _ = tp.send_to(a, ToActor::Generate(Box::new(item)));
+                    Ok(())
+                };
+
+            while l.completed < steps {
+                // ---- dispatch window
+                let barrier = if ckpt_every == 0 {
+                    usize::MAX
+                } else {
+                    (l.completed / ckpt_every + 1) * ckpt_every
+                };
+                while *next_dispatch < steps
+                    && *next_dispatch <= l.completed + lag
+                    && *next_dispatch < barrier
+                {
+                    let t = *next_dispatch;
+                    if !pending_ctx.contains_key(&t) {
+                        let c = l.context_for(t);
+                        pending_ctx.insert(t, c);
+                    }
+                    let Some(a) = sup.assign(t as u64) else {
+                        bail!("no live actor slot to dispatch step {t}");
+                    };
+                    send_step(l, pending_ctx, t, a)?;
+                    in_flight.insert(t as u64, a);
+                    *next_dispatch += 1;
+                }
+
+                // ---- ingest the head if it has arrived
+                let head = l.completed;
+                if let Some(rb) = buffered.remove(&(head as u64)) {
+                    let ctx = pending_ctx
+                        .remove(&head)
+                        .context("pending context missing for buffered step")?;
+                    *awaited = None;
+                    l.ingest(rb, &ctx)?;
+                    continue;
+                }
+                if awaited.map(|(t, _)| t) != Some(head) {
+                    *awaited = Some((head, Instant::now()));
+                }
+
+                // ---- wait for news
+                match tp.recv_timeout(POLL) {
+                    Some(FromActor::Rollout(rb)) => {
+                        let step = rb.step;
+                        let fresh = (step as usize) >= l.completed
+                            && in_flight.contains_key(&step)
+                            && !buffered.contains_key(&step);
+                        if fresh {
+                            in_flight.remove(&step);
+                            buffered.insert(step, rb);
+                        }
+                        // else: superseded or duplicate — already shed at
+                        // re-dispatch time
+                    }
+                    Some(FromActor::Died { actor, step, reason }) => {
+                        eprintln!("[distrib] actor {actor} died at step {step}: {reason}");
+                        l.acct.shard_mut(0).record_actor_crash();
+                        let respawned = match sup.on_death(actor) {
+                            RespawnVerdict::Respawn { backoff } => {
+                                std::thread::sleep(backoff);
+                                let (rx, tx) = tp.register_actor(actor);
+                                s.spawn(move || actor_loop(eng, actor, seed, plan, rx, tx));
+                                sup.on_respawn(actor);
+                                l.acct.shard_mut(0).record_actor_restart();
+                                true
+                            }
+                            RespawnVerdict::GiveUp => {
+                                tp.deregister(actor);
+                                false
+                            }
+                        };
+                        if sup.n_live() == 0 {
+                            bail!("all {actors} actor slots dead (respawn budget exhausted)");
+                        }
+                        // every step the dead actor held — the announced
+                        // one AND anything queued behind it — re-routes
+                        let orphans: Vec<u64> = in_flight
+                            .iter()
+                            .filter(|&(_, &slot)| slot == actor)
+                            .map(|(&st, _)| st)
+                            .collect();
+                        for st in orphans {
+                            let target = if respawned {
+                                actor
+                            } else {
+                                sup.assign(st).context("no live actor for re-dispatch")?
+                            };
+                            send_step(l, pending_ctx, st as usize, target)?;
+                            in_flight.insert(st, target);
+                            if st as usize == head {
+                                *awaited = None; // restart the head clock
+                            }
+                        }
+                    }
+                    None => {
+                        // ---- heartbeat: the head has been silent too long
+                        if let Some((t, since)) = *awaited {
+                            if since.elapsed() >= heartbeat {
+                                if let Some(&slot) = in_flight.get(&(t as u64)) {
+                                    if timeout_counted.insert(t as u64) {
+                                        l.acct.shard_mut(0).record_actor_timeout();
+                                    }
+                                    // the superseded dispatch's output is
+                                    // load-shed (dropped on arrival, or
+                                    // never seen if the run ends first)
+                                    l.acct.shard_mut(0).record_shed(l.b);
+                                    let target = sup
+                                        .next_live_after(slot)
+                                        .context("no live actor for re-dispatch")?;
+                                    send_step(l, pending_ctx, t, target)?;
+                                    in_flight.insert(t as u64, target);
+                                    *awaited = Some((t, Instant::now()));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        };
+
+        let result = run(
+            l,
+            &mut sup,
+            &mut pending_ctx,
+            &mut buffered,
+            &mut in_flight,
+            &mut timeout_counted,
+            &mut next_dispatch,
+            &mut awaited,
+        );
+
+        // graceful or not, unblock every actor so the scope can join:
+        // deregistering drops the inbox sender, ending each recv loop
+        for a in 0..actors {
+            if result.is_ok() && sup.is_alive(a) {
+                let _ = tp.send_to(a, ToActor::Shutdown);
+            }
+            tp.deregister(a);
+        }
+        result
+    })
+}
+
+/// Entry point: build the learner, run the configured mode, optionally
+/// persist the recorded stream.
+pub fn train_distrib(eng: &Engine, cfg: &DistribCfg, mode: &DistribMode) -> Result<DistribRunResult> {
+    let plan = FaultPlan::parse(&cfg.fault_spec)?;
+    let lag = plan.lag_override().unwrap_or(cfg.lag);
+    let mut l = LearnerState::new(eng, cfg, lag)?;
+    match mode {
+        DistribMode::Inline => run_inline(&mut l, &plan)?,
+        DistribMode::Threaded => run_threaded(&mut l, &plan)?,
+        DistribMode::Replay(path) => run_replay(&mut l, path)?,
+    }
+    l.into_result()
+}

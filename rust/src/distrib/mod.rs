@@ -1,0 +1,37 @@
+//! Fault-tolerant actor–learner runtime (DESIGN.md §12).
+//!
+//! N actor workers generate rollouts against policy snapshots that lag
+//! the learner by a configurable number of steps; the learner ingests
+//! them through a hardened admission path that *quarantines* bad data
+//! (non-finite signals, shape/fingerprint lies, out-of-range actions)
+//! instead of panicking, prices staleness through the Kondo gate, and
+//! supervises the fleet (heartbeat timeouts, bounded-backoff respawn,
+//! graceful degradation to the surviving actors). Every failure mode is
+//! reproducible via the seeded `FaultPlan`, and the recorded-stream
+//! replay mode extends the eta=0 bit-identity contract to the
+//! distributed path.
+//!
+//! Module map:
+//! - [`transport`] — message types and the socket-shaped `Transport`
+//!   trait; `ChannelTransport` is the in-process implementation.
+//! - [`actor`] — rollout workers; all per-sample randomness is keyed by
+//!   (seed, step, sample), never by actor identity.
+//! - [`faults`] — the seeded, consume-once fault schedule.
+//! - [`supervisor`] — pure assignment/respawn state machine.
+//! - [`learner`] — admission, staleness pricing, the three execution
+//!   modes, checkpointing.
+//! - [`replay`] — recorded actor streams (bit-exact JSON codec).
+
+pub mod actor;
+pub mod faults;
+pub mod learner;
+pub mod replay;
+pub mod supervisor;
+pub mod transport;
+
+pub use faults::{ExpectedCounts, FaultKind, FaultPlan, PoisonKind};
+pub use learner::{train_distrib, DistribCfg, DistribMode, DistribRunResult};
+pub use supervisor::{RespawnVerdict, Supervisor};
+pub use transport::{
+    ChannelTransport, FromActor, PolicySnapshot, RolloutBatch, ToActor, Transport, WorkItem,
+};

@@ -1,0 +1,202 @@
+//! Recorded actor streams: persist every rollout the learner ingested,
+//! replay it later through the identical admission path.
+//!
+//! Replay extends the eta=0 bit-identity contract to the distributed
+//! path: the learner's trajectory is a fold over (context, rollout)
+//! pairs, contexts are regenerated from the seed (they are a pure
+//! function of it, so the file never stores pixels), and the rollouts
+//! come from this stream in ingest order — one per step. Values
+//! round-trip through the bit-exact `Json` codec (`NaN`/`Infinity`
+//! tokens included), so even a *poisoned* stream replays into the exact
+//! quarantine counters of the live run. Supervisor counters (crashes,
+//! restarts, timeouts, shed) are runtime events, not stream content, and
+//! are documented as excluded from replay comparison.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{field, ju64, obj, pu64, write_atomic};
+use crate::utils::json::Json;
+
+use super::transport::RolloutBatch;
+
+const STREAM_KIND: &str = "kondo-actor-stream";
+const STREAM_VERSION: u64 = 1;
+
+fn jf64_bits_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn pf64_bits_arr(j: &Json, what: &str) -> Result<Vec<f64>> {
+    let Json::Arr(a) = j else {
+        bail!("actor stream field '{what}': expected an array");
+    };
+    a.iter()
+        .map(|v| v.as_f64().with_context(|| format!("actor stream field '{what}'")))
+        .collect()
+}
+
+fn rollout_to_json(rb: &RolloutBatch) -> Json {
+    obj(vec![
+        ("actor", ju64(rb.actor as u64)),
+        ("step", ju64(rb.step)),
+        ("snapshot_version", ju64(rb.snapshot_version)),
+        ("fingerprint", ju64(rb.fingerprint)),
+        ("n", ju64(rb.n as u64)),
+        // i32 -> f64 is exact, so actions survive the Num round-trip
+        ("actions", Json::Arr(rb.actions.iter().map(|&a| Json::Num(a as f64)).collect())),
+        ("u", jf64_bits_arr(&rb.u)),
+        ("ell", jf64_bits_arr(&rb.ell)),
+    ])
+}
+
+fn rollout_from_json(j: &Json) -> Result<RolloutBatch> {
+    let actions = match field(j, "actions")? {
+        Json::Arr(a) => a
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as i32)
+                    .context("actor stream field 'actions'")
+            })
+            .collect::<Result<Vec<i32>>>()?,
+        _ => bail!("actor stream field 'actions': expected an array"),
+    };
+    Ok(RolloutBatch {
+        actor: pu64(field(j, "actor")?, "actor")? as usize,
+        step: pu64(field(j, "step")?, "step")?,
+        snapshot_version: pu64(field(j, "snapshot_version")?, "snapshot_version")?,
+        fingerprint: pu64(field(j, "fingerprint")?, "fingerprint")?,
+        n: pu64(field(j, "n")?, "n")? as usize,
+        actions,
+        u: pf64_bits_arr(field(j, "u")?, "u")?,
+        ell: pf64_bits_arr(field(j, "ell")?, "ell")?,
+    })
+}
+
+/// Write an ingest-ordered stream atomically. `fingerprint` is the run's
+/// fingerprint hash: replay refuses a stream recorded under a different
+/// config, same as checkpoint resume does.
+pub fn write_stream(
+    path: &str,
+    fingerprint: u64,
+    batch: usize,
+    rollouts: &[RolloutBatch],
+) -> Result<()> {
+    let doc = obj(vec![
+        ("kind", Json::Str(STREAM_KIND.into())),
+        ("version", ju64(STREAM_VERSION)),
+        ("fingerprint", ju64(fingerprint)),
+        ("batch", ju64(batch as u64)),
+        ("steps", ju64(rollouts.len() as u64)),
+        ("rollouts", Json::Arr(rollouts.iter().map(rollout_to_json).collect())),
+    ]);
+    write_atomic(Path::new(path), &doc.dump())
+        .with_context(|| format!("writing actor stream '{path}'"))
+}
+
+/// Load a stream and check it is what it claims: right kind/version,
+/// matching run fingerprint, and exactly one rollout per step in order
+/// (`rollouts[t].step == t`), so replay is a straight fold.
+pub fn read_stream(path: &str, expect_fingerprint: u64) -> Result<Vec<RolloutBatch>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading actor stream '{path}'"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing actor stream '{path}'"))?;
+    match field(&doc, "kind")? {
+        Json::Str(k) if k == STREAM_KIND => {}
+        other => bail!("'{path}' is not an actor stream (kind {})", other.dump().trim()),
+    }
+    let version = pu64(field(&doc, "version")?, "version")?;
+    if version != STREAM_VERSION {
+        bail!("actor stream '{path}' is v{version}, this build reads v{STREAM_VERSION}");
+    }
+    let fp = pu64(field(&doc, "fingerprint")?, "fingerprint")?;
+    if fp != expect_fingerprint {
+        bail!(
+            "actor stream '{path}' was recorded under a different run fingerprint \
+             ({fp:#x} != {expect_fingerprint:#x}); config must match the recording"
+        );
+    }
+    let Json::Arr(arr) = field(&doc, "rollouts")? else {
+        bail!("actor stream field 'rollouts': expected an array");
+    };
+    let steps = pu64(field(&doc, "steps")?, "steps")? as usize;
+    if arr.len() != steps {
+        bail!("actor stream '{path}': steps claims {steps}, found {}", arr.len());
+    }
+    let rollouts: Vec<RolloutBatch> =
+        arr.iter().map(rollout_from_json).collect::<Result<_>>()?;
+    for (t, rb) in rollouts.iter().enumerate() {
+        if rb.step != t as u64 {
+            bail!(
+                "actor stream '{path}': rollout {t} is for step {} (must be ingest-ordered)",
+                rb.step
+            );
+        }
+    }
+    Ok(rollouts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(step: u64) -> RolloutBatch {
+        RolloutBatch {
+            actor: (step % 2) as usize,
+            step,
+            snapshot_version: step.saturating_sub(1),
+            fingerprint: 0xabcd,
+            n: 3,
+            actions: vec![0, -1, 9],
+            u: vec![0.5, f64::NAN, -0.25],
+            ell: vec![1.5, f64::INFINITY, 0.0],
+        }
+    }
+
+    #[test]
+    fn streams_round_trip_bit_exactly_including_non_finite_values() {
+        let dir = std::env::temp_dir().join("kondo_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.json");
+        let path = path.to_str().unwrap();
+
+        let rollouts = vec![sample(0), sample(1)];
+        write_stream(path, 0xabcd, 3, &rollouts).unwrap();
+        let back = read_stream(path, 0xabcd).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in rollouts.iter().zip(&back) {
+            assert_eq!(a.actor, b.actor);
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.snapshot_version, b.snapshot_version);
+            assert_eq!(a.fingerprint, b.fingerprint);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.actions, b.actions);
+            // bit-exact, NaN included
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            assert_eq!(bits(&a.u), bits(&b.u));
+            assert_eq!(bits(&a.ell), bits(&b.ell));
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn wrong_fingerprint_and_bad_order_are_clean_errors() {
+        let dir = std::env::temp_dir().join("kondo_replay_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.json");
+        let path = path.to_str().unwrap();
+
+        write_stream(path, 7, 3, &[sample(0)]).unwrap();
+        let err = read_stream(path, 8).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+
+        // out-of-order stream: step 1 in slot 0
+        write_stream(path, 7, 3, &[sample(1)]).unwrap();
+        let err = read_stream(path, 7).unwrap_err().to_string();
+        assert!(err.contains("ingest-ordered"), "{err}");
+
+        std::fs::remove_file(path).unwrap();
+    }
+}

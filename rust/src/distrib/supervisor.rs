@@ -1,0 +1,150 @@
+//! Supervision policy for the actor fleet: who is alive, who computes
+//! which step, and what happens when a slot dies.
+//!
+//! The policy is deliberately separated from the transport/thread
+//! machinery so it is a pure, unit-testable state machine:
+//!
+//! - **Assignment** is static round-robin by step, skipping dead slots.
+//!   With every slot alive, `assign(t) = t % n` — which is exactly how
+//!   the inline reference stamps rollouts, so a zero-fault threaded run
+//!   records a byte-identical actor stream.
+//! - **Respawn** is per-slot budgeted with bounded exponential backoff:
+//!   a flapping actor costs at most `max_respawns` restarts, after which
+//!   the slot stays dead and its work re-routes to survivors (graceful
+//!   degradation — training continues as long as one slot lives).
+
+use std::time::Duration;
+
+/// What the runtime should do about a slot that just died.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RespawnVerdict {
+    /// Respawn the slot after sleeping `backoff`.
+    Respawn { backoff: Duration },
+    /// Budget exhausted: leave the slot dead.
+    GiveUp,
+}
+
+#[derive(Debug)]
+pub struct Supervisor {
+    alive: Vec<bool>,
+    respawns: Vec<u32>,
+    max_respawns: u32,
+    backoff_base_ms: u64,
+    backoff_cap_ms: u64,
+}
+
+impl Supervisor {
+    pub fn new(n_actors: usize, max_respawns: u32) -> Supervisor {
+        assert!(n_actors > 0, "need at least one actor slot");
+        Supervisor {
+            alive: vec![true; n_actors],
+            respawns: vec![0; n_actors],
+            max_respawns,
+            backoff_base_ms: 5,
+            backoff_cap_ms: 100,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn is_alive(&self, slot: usize) -> bool {
+        self.alive[slot]
+    }
+
+    /// Total respawns granted so far (the ledger's `actor_restarts`).
+    pub fn total_respawns(&self) -> u64 {
+        self.respawns.iter().map(|&r| r as u64).sum()
+    }
+
+    /// The slot that should compute `step`: round-robin over all slots,
+    /// walking forward past dead ones. `None` when the whole fleet is
+    /// dead.
+    pub fn assign(&self, step: u64) -> Option<usize> {
+        let n = self.alive.len();
+        let start = (step % n as u64) as usize;
+        (0..n).map(|k| (start + k) % n).find(|&a| self.alive[a])
+    }
+
+    /// The next live slot after `slot` (wrapping), for re-dispatching
+    /// work away from a stalled or dead actor. May return `slot` itself
+    /// when it is the only survivor.
+    pub fn next_live_after(&self, slot: usize) -> Option<usize> {
+        let n = self.alive.len();
+        (1..=n).map(|k| (slot + k) % n).find(|&a| self.alive[a])
+    }
+
+    /// Record a death and decide the slot's fate. On `Respawn` the
+    /// caller sleeps the backoff, restarts the actor, then confirms with
+    /// [`Supervisor::on_respawn`].
+    pub fn on_death(&mut self, slot: usize) -> RespawnVerdict {
+        self.alive[slot] = false;
+        if self.respawns[slot] >= self.max_respawns {
+            return RespawnVerdict::GiveUp;
+        }
+        self.respawns[slot] += 1;
+        let shift = (self.respawns[slot] - 1).min(10);
+        let ms = (self.backoff_base_ms << shift).min(self.backoff_cap_ms);
+        RespawnVerdict::Respawn { backoff: Duration::from_millis(ms) }
+    }
+
+    pub fn on_respawn(&mut self, slot: usize) {
+        self.alive[slot] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_round_robin_skipping_dead_slots() {
+        let mut sup = Supervisor::new(3, 0);
+        assert_eq!(sup.assign(0), Some(0));
+        assert_eq!(sup.assign(4), Some(1));
+        assert_eq!(sup.assign(5), Some(2));
+        sup.on_death(1);
+        // slot 1's steps roll forward to slot 2
+        assert_eq!(sup.assign(4), Some(2));
+        assert_eq!(sup.assign(0), Some(0));
+        assert_eq!(sup.n_live(), 2);
+    }
+
+    #[test]
+    fn backoff_grows_and_saturates_until_budget_exhausts() {
+        let mut sup = Supervisor::new(1, 6);
+        let mut last = Duration::ZERO;
+        for i in 0..6 {
+            match sup.on_death(0) {
+                RespawnVerdict::Respawn { backoff } => {
+                    assert!(backoff >= last, "death {i}: backoff must not shrink");
+                    assert!(backoff <= Duration::from_millis(100), "death {i}: capped");
+                    last = backoff;
+                    sup.on_respawn(0);
+                }
+                RespawnVerdict::GiveUp => panic!("budget not yet exhausted at death {i}"),
+            }
+        }
+        assert_eq!(sup.total_respawns(), 6);
+        assert_eq!(sup.on_death(0), RespawnVerdict::GiveUp);
+        assert_eq!(sup.n_live(), 0);
+        assert_eq!(sup.assign(3), None, "a dead fleet assigns nothing");
+    }
+
+    #[test]
+    fn zero_budget_means_no_respawns() {
+        let mut sup = Supervisor::new(2, 0);
+        assert_eq!(sup.on_death(0), RespawnVerdict::GiveUp);
+        assert!(!sup.is_alive(0));
+        assert!(sup.is_alive(1));
+        // survivor keeps the fleet serving
+        assert_eq!(sup.assign(0), Some(1));
+        assert_eq!(sup.next_live_after(0), Some(1));
+        assert_eq!(sup.next_live_after(1), Some(1), "sole survivor re-routes to itself");
+    }
+}

@@ -1,0 +1,191 @@
+//! Message types and the channel transport between learner and actors.
+//!
+//! The `Transport` trait is deliberately shaped like a socket: the
+//! learner addresses actors by slot index, receives from a single
+//! multiplexed inbox with a timeout, and never touches thread handles.
+//! A TCP/IPC implementation can slot in behind the same trait; the
+//! in-process `ChannelTransport` is the reference implementation and the
+//! one the test suite runs against.
+//!
+//! Everything an actor needs to compute a rollout travels in the
+//! `WorkItem` — contexts and the policy snapshot — so actors are
+//! stateless between items apart from a param cache keyed on snapshot
+//! version. Everything the learner needs to admit the result travels in
+//! the `RolloutBatch`; contexts are *not* echoed back (the learner keeps
+//! its pending set), which is what a bandwidth-conscious socket transport
+//! would do too.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Immutable policy snapshot shipped to actors. `version` counts
+/// optimizer steps applied; `fingerprint` is the run fingerprint hash the
+/// admission path checks echoes against.
+#[derive(Debug)]
+pub struct PolicySnapshot {
+    pub version: u64,
+    /// one Vec<f32> per model tensor, in ParamStore order
+    pub params: Arc<Vec<Vec<f32>>>,
+    pub fingerprint: u64,
+}
+
+/// One unit of rollout work: compute step `step` on `snapshot`.
+#[derive(Debug)]
+pub struct WorkItem {
+    pub step: u64,
+    /// flattened context batch, `[b * obs_dim]`
+    pub x: Vec<f32>,
+    /// labels (actors need them only to score rewards)
+    pub y: Vec<usize>,
+    pub snapshot: Arc<PolicySnapshot>,
+}
+
+/// An actor's reply for one step. `n` is the *claimed* sample count; the
+/// admission path cross-checks it against the vector lengths, so a buggy
+/// or malicious actor cannot smuggle a short batch past accounting.
+#[derive(Debug, Clone)]
+pub struct RolloutBatch {
+    pub actor: usize,
+    pub step: u64,
+    pub snapshot_version: u64,
+    pub fingerprint: u64,
+    pub n: usize,
+    pub actions: Vec<i32>,
+    pub u: Vec<f64>,
+    pub ell: Vec<f64>,
+}
+
+pub enum ToActor {
+    Generate(Box<WorkItem>),
+    Shutdown,
+}
+
+pub enum FromActor {
+    Rollout(RolloutBatch),
+    /// Actor announced its own death (injected crash or compute error).
+    /// `step` is the work item it was holding, so the supervisor can
+    /// re-dispatch it without waiting for a heartbeat timeout.
+    Died { actor: usize, step: u64, reason: String },
+}
+
+/// Learner-side view of the actor fleet.
+pub trait Transport: Send + Sync {
+    fn n_actors(&self) -> usize;
+    /// Send work to one actor slot. Fails if the slot has no live
+    /// endpoint (never registered, deregistered, or hung up).
+    fn send_to(&self, actor: usize, msg: ToActor) -> Result<()>;
+    /// Wait up to `timeout` for any actor's next message.
+    fn recv_timeout(&self, timeout: Duration) -> Option<FromActor>;
+}
+
+/// The pool-wide poisoned-mutex policy (coordinator/pool.rs): absorb the
+/// poison and take the guard; channel endpoints stay usable.
+fn lock_ok<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// In-process transport over std mpsc channels: one inbox channel per
+/// actor slot, one shared outbox back to the learner. Respawning an
+/// actor re-registers its slot, which drops the dead actor's inbox (and
+/// any work queued behind the crash — the supervisor re-dispatches it).
+pub struct ChannelTransport {
+    to: Mutex<Vec<Option<Sender<ToActor>>>>,
+    from_tx: Mutex<Sender<FromActor>>,
+    from_rx: Mutex<Receiver<FromActor>>,
+}
+
+impl ChannelTransport {
+    pub fn new(n_actors: usize) -> ChannelTransport {
+        let (from_tx, from_rx) = channel();
+        ChannelTransport {
+            to: Mutex::new(vec![None; n_actors]),
+            from_tx: Mutex::new(from_tx),
+            from_rx: Mutex::new(from_rx),
+        }
+    }
+
+    /// Create (or replace, on respawn) the endpoint pair for slot
+    /// `actor`: the actor-side inbox receiver and a clone of the shared
+    /// outbox sender.
+    pub fn register_actor(&self, actor: usize) -> (Receiver<ToActor>, Sender<FromActor>) {
+        let (tx, rx) = channel();
+        lock_ok(&self.to)[actor] = Some(tx);
+        (rx, lock_ok(&self.from_tx).clone())
+    }
+
+    /// Drop slot `actor`'s inbox sender; its receive loop ends once the
+    /// queue drains. Used for shutdown and for abandoning a dead slot.
+    pub fn deregister(&self, actor: usize) {
+        lock_ok(&self.to)[actor] = None;
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n_actors(&self) -> usize {
+        lock_ok(&self.to).len()
+    }
+
+    fn send_to(&self, actor: usize, msg: ToActor) -> Result<()> {
+        let to = lock_ok(&self.to);
+        match to.get(actor) {
+            Some(Some(tx)) => {
+                if tx.send(msg).is_err() {
+                    bail!("actor {actor} hung up");
+                }
+                Ok(())
+            }
+            Some(None) => bail!("actor {actor} not registered"),
+            None => bail!("actor slot {actor} out of range"),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<FromActor> {
+        lock_ok(&self.from_rx).recv_timeout(timeout).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_and_slot_errors() {
+        let tp = ChannelTransport::new(2);
+        assert_eq!(tp.n_actors(), 2);
+        // unregistered slots and out-of-range slots fail cleanly
+        assert!(tp.send_to(0, ToActor::Shutdown).is_err());
+        assert!(tp.send_to(7, ToActor::Shutdown).is_err());
+
+        let (rx, tx) = tp.register_actor(0);
+        tp.send_to(0, ToActor::Shutdown).unwrap();
+        assert!(matches!(rx.recv().unwrap(), ToActor::Shutdown));
+
+        tx.send(FromActor::Died { actor: 0, step: 3, reason: "test".into() }).unwrap();
+        match tp.recv_timeout(Duration::from_millis(200)) {
+            Some(FromActor::Died { actor, step, .. }) => {
+                assert_eq!((actor, step), (0, 3));
+            }
+            other => panic!("expected Died, got {:?}", other.is_some()),
+        }
+        // empty inbox times out as None, not an error
+        assert!(tp.recv_timeout(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn reregistering_replaces_the_endpoint() {
+        let tp = ChannelTransport::new(1);
+        let (old_rx, _tx) = tp.register_actor(0);
+        let (new_rx, _tx2) = tp.register_actor(0);
+        tp.send_to(0, ToActor::Shutdown).unwrap();
+        // the replaced inbox sees a hangup, the fresh one gets the message
+        assert!(old_rx.recv().is_err());
+        assert!(matches!(new_rx.recv().unwrap(), ToActor::Shutdown));
+
+        tp.deregister(0);
+        assert!(tp.send_to(0, ToActor::Shutdown).is_err());
+        assert!(new_rx.recv().is_err(), "deregister hangs up the actor");
+    }
+}

@@ -28,7 +28,8 @@ pub const ALL: &[&str] = &[
 
 /// Extensions beyond the paper (its §7 next steps + our ablations); run
 /// individually or via `repro exp extras`.
-pub const EXTRAS: &[&str] = &["spec", "abl_pricing", "abl_eta", "abl_buckets", "abl_priority"];
+pub const EXTRAS: &[&str] =
+    &["spec", "abl_pricing", "abl_eta", "abl_buckets", "abl_priority", "dist"];
 
 /// What each id reproduces (for `repro list`).
 pub fn describe(id: &str) -> &'static str {
@@ -53,6 +54,7 @@ pub fn describe(id: &str) -> &'static str {
         "abl_eta" => "EXT: gate temperature sweep (hard threshold <-> constant gate)",
         "abl_buckets" => "EXT: backward bucket granularity vs padding overhead",
         "abl_priority" => "EXT: Fig-5 priority sweep at trainer scale (MNIST + reversal, matched bwd budget)",
+        "dist" => "EXT: actor-learner staleness sweep + fault-injection recovery (DESIGN.md \u{a7}12)",
         _ => "unknown",
     }
 }
@@ -80,6 +82,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<String> {
         "abl_eta" => extensions::abl_eta(ctx)?,
         "abl_buckets" => extensions::abl_buckets(ctx)?,
         "abl_priority" => extensions::abl_priority(ctx)?,
+        "dist" => extensions::dist(ctx)?,
         other => bail!("unknown experiment '{other}' (see `repro list`)"),
     };
     Ok(format!(

@@ -44,6 +44,7 @@ pub mod bandit_math;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
+pub mod distrib;
 pub mod envs;
 pub mod exp;
 pub mod metrics;

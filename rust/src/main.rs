@@ -9,11 +9,15 @@
 //! Overrides are `key=value` pairs over configs/default.toml (seeds,
 //! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
 //! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup,
-//! checkpoint_every, checkpoint_path, resume_from, priority), plus
-//! `preset=scaled|paper` to load configs/<preset>.toml first.
+//! checkpoint_every, checkpoint_path, resume_from, priority, actors,
+//! snapshot_lag, stale_penalty, fault_spec, heartbeat_ms, max_respawns),
+//! plus `preset=scaled|paper` to load configs/<preset>.toml first.
 //! `priority=delight|advantage|surprisal|abs_advantage|uniform|
 //! additive:<alpha>` selects the Fig-5 gate-priority ablation for DG-K
 //! methods (both `repro train` and the exp drivers honour it).
+//! `repro train distrib` runs the fault-tolerant actor–learner runtime
+//! (DESIGN.md §12): `mode=threaded|inline`, `record_to=PATH` to persist
+//! the actor stream, `replay_from=PATH` to re-ingest a recorded one.
 
 use std::path::Path;
 
@@ -22,6 +26,7 @@ use anyhow::{bail, Result};
 use kondo::algo::{baseline::Baseline, Method};
 use kondo::config::ExpConfig;
 use kondo::coordinator::{KondoGate, Priority};
+use kondo::distrib::{train_distrib, DistribMode};
 use kondo::exp::{self, ExpCtx};
 use kondo::runtime::Engine;
 use kondo::trainers::{train_mnist, train_reversal, MnistTrainerCfg, ReversalTrainerCfg};
@@ -53,6 +58,8 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
         "seeds", "mnist_steps", "rev_steps", "eval_every", "eval_size", "lr_mnist",
         "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
         "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from", "priority",
+        "actors", "snapshot_lag", "stale_penalty", "fault_spec", "heartbeat_ms",
+        "max_respawns",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -162,7 +169,42 @@ fn real_main() -> Result<()> {
                         res.ledger.backward_executed,
                     );
                 }
-                other => bail!("unknown trainer '{other}' (mnist|reversal)"),
+                "distrib" => {
+                    let mut dcfg = cfg.distrib_cfg(method, arg_u64(rest, "seed").unwrap_or(0));
+                    dcfg.record_to = arg_str(rest, "record_to");
+                    let mode = match (arg_str(rest, "replay_from"), arg_str(rest, "mode")) {
+                        (Some(path), _) => DistribMode::Replay(path),
+                        (None, Some(m)) if m == "inline" => DistribMode::Inline,
+                        (None, Some(m)) if m == "threaded" => DistribMode::Threaded,
+                        (None, None) => DistribMode::Threaded,
+                        (None, Some(other)) => {
+                            bail!("unknown distrib mode '{other}' (threaded|inline)")
+                        }
+                    };
+                    let res = train_distrib(&eng, &dcfg, &mode)?;
+                    // one greppable line per fault counter: CI's smoke
+                    // test asserts recovery happened from this output
+                    println!(
+                        "final train err {:.4} | test err {:.4} | fwd {} bwd_kept {} bwd_exec {}",
+                        res.final_train_err,
+                        res.final_test_err,
+                        res.ledger.forward_samples,
+                        res.ledger.backward_kept,
+                        res.ledger.backward_executed,
+                    );
+                    println!(
+                        "distrib: crashes={} restarts={} timeouts={} shed={} quarantined={} quarantined_batches={} stale={} stale_kept={}",
+                        res.ledger.actor_crashes,
+                        res.ledger.actor_restarts,
+                        res.ledger.actor_timeouts,
+                        res.ledger.shed_samples,
+                        res.ledger.quarantined_samples,
+                        res.ledger.quarantined_batches,
+                        res.ledger.stale_samples,
+                        res.ledger.stale_kept,
+                    );
+                }
+                other => bail!("unknown trainer '{other}' (mnist|reversal|distrib)"),
             }
             print_artifact_stats(&eng);
             Ok(())
@@ -190,7 +232,7 @@ fn real_main() -> Result<()> {
         }
         Some("help") | None => {
             println!(
-                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg\n  repro train mnist method=dgk_rho0.25 priority=additive:0.2"
+                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg\n  repro train mnist method=dgk_rho0.25 priority=additive:0.2\n  repro train distrib method=dgk_rho0.25 actors=4 snapshot_lag=3 fault_spec=crash@5\n  repro train distrib mode=inline record_to=out/stream.json"
             );
             Ok(())
         }
@@ -202,6 +244,12 @@ fn arg_u64(args: &[String], key: &str) -> Option<u64> {
     args.iter()
         .find_map(|a| a.strip_prefix(&format!("{key}=")))
         .and_then(|v| v.parse().ok())
+}
+
+fn arg_str(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .find_map(|a| a.strip_prefix(&format!("{key}=")))
+        .map(String::from)
 }
 
 fn parse_method(args: &[String]) -> Result<Method> {

@@ -94,10 +94,13 @@ pub struct GatedLoop<'e> {
 }
 
 impl<'e> GatedLoop<'e> {
+    /// Errors are real config/resource failures surfaced before any step
+    /// runs: a bad bucket set, or worker-thread spawn failure
+    /// (`WorkerPool::new` is fallible -- disable-don't-panic).
     pub fn new(eng: &'e Engine, workers: usize, bwd_caps: Vec<usize>) -> Result<GatedLoop<'e>> {
         Ok(GatedLoop {
             eng,
-            pool: WorkerPool::new(workers),
+            pool: WorkerPool::new(workers)?,
             screen: None,
             fwd: ForwardStage::new(None),
             gate: GateStage::passthrough(),

@@ -1,0 +1,314 @@
+//! End-to-end contracts for the fault-injected actor–learner runtime
+//! (DESIGN.md §12), on the native testbed backend.
+//!
+//! Two contracts, both exact — no tolerances anywhere:
+//!
+//! 1. **Bit identity.** At eta = 0 the learner trajectory is a pure
+//!    function of the seed: the inline reference, the threaded runtime
+//!    at any actor/worker count, and a replay of the recorded stream all
+//!    produce bit-identical curves, and zero-fault recorded streams are
+//!    BYTE-identical across fleet shapes. Checkpoint/resume extends the
+//!    same contract through the save/load boundary with a lagged
+//!    snapshot ring in flight.
+//!
+//! 2. **Exact fault ledgers.** Every fault in a seeded `FaultPlan` is
+//!    consumed exactly once, so the recovery counters (crashes,
+//!    restarts, timeouts, shed, quarantined) must EQUAL the plan's
+//!    `expected_counts` — not "at least", equal — across worker and
+//!    actor counts.
+
+use std::fs;
+use std::path::PathBuf;
+
+use kondo::checkpoint::CheckpointCfg;
+use kondo::coordinator::{KondoGate, Priority};
+use kondo::distrib::{train_distrib, DistribCfg, DistribMode, FaultPlan};
+use kondo::runtime::Engine;
+use kondo::trainers::EvalPoint;
+
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("kondo_distrib_test_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Short-run config: eta = 0 (hard gate) so the trajectory is
+/// deterministic, eval every 2 steps so curves carry enough points to
+/// disagree on.
+fn base_cfg(seed: u64) -> DistribCfg {
+    DistribCfg {
+        method: kondo::algo::Method::DgK {
+            gate: KondoGate::rate(0.25),
+            priority: Priority::Delight,
+        },
+        steps: 10,
+        eval_every: 2,
+        eval_size: 64,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_curves_bit_identical(a: &[EvalPoint], b: &[EvalPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(pa.step, pb.step, "{what}[{i}].step");
+        assert_eq!(pa.forward_samples, pb.forward_samples, "{what}[{i}].forward_samples");
+        assert_eq!(pa.backward_kept, pb.backward_kept, "{what}[{i}].backward_kept");
+        assert_eq!(pa.backward_executed, pb.backward_executed, "{what}[{i}].backward_executed");
+        assert_eq!(pa.metric.to_bits(), pb.metric.to_bits(), "{what}[{i}].metric");
+        assert_eq!(pa.metric2.to_bits(), pb.metric2.to_bits(), "{what}[{i}].metric2");
+    }
+}
+
+// ---------------------------------------------------------------------
+// contract 1: bit identity across modes, fleet shapes, and replay
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_and_replay_match_the_inline_reference_bit_for_bit() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("modes");
+
+    // inline reference, recording its stream
+    let mut cfg = base_cfg(3);
+    let inline_stream = dir.join("inline.json");
+    cfg.record_to = Some(inline_stream.to_string_lossy().into_owned());
+    let inline = train_distrib(&eng, &cfg, &DistribMode::Inline).unwrap();
+
+    // threaded across fleet shapes: same curve; and the recorded stream
+    // is byte-identical to an inline run of the SAME actor count (the
+    // `actor` provenance stamp is `t % actors`, everything else is a
+    // pure function of the seed)
+    for (actors, workers) in [(1usize, 1usize), (2, 2), (4, 1)] {
+        let mut cfg = base_cfg(3);
+        cfg.actors = actors;
+        cfg.workers = workers;
+        let stream = dir.join(format!("threaded_{actors}x{workers}.json"));
+        cfg.record_to = Some(stream.to_string_lossy().into_owned());
+        let res = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap();
+        let what = format!("threaded {actors} actors x {workers} workers");
+        assert_curves_bit_identical(&inline.curve, &res.curve, &what);
+        assert_eq!(
+            res.final_test_err.to_bits(),
+            inline.final_test_err.to_bits(),
+            "{what}: final test err"
+        );
+        let mut ref_cfg = base_cfg(3);
+        ref_cfg.actors = actors;
+        let ref_stream = dir.join(format!("inline_{actors}.json"));
+        ref_cfg.record_to = Some(ref_stream.to_string_lossy().into_owned());
+        train_distrib(&eng, &ref_cfg, &DistribMode::Inline).unwrap();
+        assert_eq!(
+            fs::read(&ref_stream).unwrap(),
+            fs::read(&stream).unwrap(),
+            "{what}: recorded stream must be byte-identical to the inline one"
+        );
+        // no faults injected: the recovery ledger is all zeros
+        let l = &res.ledger;
+        assert_eq!(
+            (l.actor_crashes, l.actor_restarts, l.actor_timeouts, l.shed_samples),
+            (0, 0, 0, 0),
+            "{what}: zero-fault run must report a clean recovery ledger"
+        );
+        assert_eq!((l.quarantined_samples, l.quarantined_batches), (0, 0), "{what}");
+    }
+
+    // replaying the recorded stream reproduces the run exactly
+    let cfg = base_cfg(3);
+    let mode = DistribMode::Replay(inline_stream.to_string_lossy().into_owned());
+    let replay = train_distrib(&eng, &cfg, &mode).unwrap();
+    assert_curves_bit_identical(&inline.curve, &replay.curve, "replay");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_lag_changes_the_trajectory_but_not_its_determinism() {
+    let eng = Engine::native_testbed();
+
+    let mut lagged = base_cfg(5);
+    lagged.lag = 3;
+    lagged.stale_penalty = 0.5;
+    let a = train_distrib(&eng, &lagged, &DistribMode::Threaded).unwrap();
+    let b = train_distrib(&eng, &lagged, &DistribMode::Threaded).unwrap();
+    assert_curves_bit_identical(&a.curve, &b.curve, "lag=3 rerun");
+
+    // the inline reference honours the same lag ring
+    let c = train_distrib(&eng, &lagged, &DistribMode::Inline).unwrap();
+    assert_curves_bit_identical(&a.curve, &c.curve, "lag=3 inline vs threaded");
+
+    // all but the first `lag` steps run on stale snapshots and are priced
+    let b_sz = eng.manifest().constants.mnist_batch;
+    assert_eq!(a.ledger.stale_samples, ((lagged.steps - 1) * b_sz) as u64);
+
+    // and a lag-0 run really is a different trajectory (the knob bites)
+    let fresh = train_distrib(&eng, &base_cfg(5), &DistribMode::Threaded).unwrap();
+    assert_ne!(
+        fresh.curve.last().unwrap().metric2.to_bits(),
+        a.curve.last().unwrap().metric2.to_bits(),
+        "lag must alter the trajectory (else the ring is dead code)"
+    );
+}
+
+// ---------------------------------------------------------------------
+// contract 2: ledger totals exactly match the seeded FaultPlan
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_ledger_exactly_matches_the_plan_across_fleet_shapes() {
+    let eng = Engine::native_testbed();
+    let spec = "crash@3,poison@6:nan_u:3,poison@8:fingerprint,lag=2";
+    let b = eng.manifest().constants.mnist_batch;
+    let expect = FaultPlan::parse(spec).unwrap().expected_counts(b);
+    assert_eq!(expect.crashes, 1);
+    assert_eq!(expect.restarts, 1);
+    assert_eq!(expect.quarantined_samples, 3 + b as u64);
+    assert_eq!(expect.quarantined_batches, 1);
+
+    for (actors, workers) in [(2usize, 1usize), (3, 2)] {
+        let mut cfg = base_cfg(7);
+        cfg.actors = actors;
+        cfg.workers = workers;
+        cfg.fault_spec = spec.into();
+        let res = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap();
+        let l = &res.ledger;
+        let what = format!("{actors} actors x {workers} workers");
+        assert_eq!(l.actor_crashes, expect.crashes, "{what}: crashes");
+        assert_eq!(l.actor_restarts, expect.restarts, "{what}: restarts");
+        assert_eq!(l.quarantined_samples, expect.quarantined_samples, "{what}: quarantined");
+        assert_eq!(l.quarantined_batches, expect.quarantined_batches, "{what}: q-batches");
+        assert_eq!(l.actor_timeouts, 0, "{what}: a crash announces itself, no timeout");
+        assert_eq!(l.shed_samples, 0, "{what}: nothing shed without a stall");
+        // every step still ingested something: quarantined batches skip
+        // record_forward, admitted ones log the full batch
+        assert_eq!(
+            l.forward_samples,
+            ((cfg.steps - 1) * b) as u64,
+            "{what}: one batch quarantined wholesale"
+        );
+    }
+}
+
+#[test]
+fn a_stalled_actor_times_out_and_its_late_delivery_is_shed() {
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch;
+
+    let mut cfg = base_cfg(11);
+    cfg.actors = 2;
+    cfg.heartbeat_ms = 250;
+    cfg.fault_spec = "stall@2:1500".into();
+    let res = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap();
+    let l = &res.ledger;
+    assert_eq!(l.actor_timeouts, 1, "one stall, one timeout");
+    assert_eq!(l.shed_samples, b as u64, "the superseded delivery is shed");
+    assert_eq!(l.actor_crashes, 0, "a slow actor is not a dead actor");
+    assert_eq!(l.actor_restarts, 0);
+
+    // the re-dispatched rollout is bit-identical to the stalled one, so
+    // the trajectory still matches a fault-free run exactly
+    let clean = train_distrib(&eng, &base_cfg(11), &DistribMode::Threaded).unwrap();
+    assert_curves_bit_identical(&clean.curve, &res.curve, "stall vs clean");
+}
+
+#[test]
+fn respawn_budget_zero_degrades_to_the_survivor_and_still_finishes() {
+    let eng = Engine::native_testbed();
+    let mut cfg = base_cfg(13);
+    cfg.actors = 2;
+    cfg.max_respawns = 0;
+    cfg.fault_spec = "crash@4".into();
+    let res = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap();
+    assert_eq!(res.ledger.actor_crashes, 1);
+    assert_eq!(res.ledger.actor_restarts, 0, "budget 0: no respawn granted");
+    assert_eq!(res.curve.last().unwrap().step, cfg.steps, "run completed on the survivor");
+
+    // the trajectory is indifferent to which slot computed what
+    let clean = train_distrib(&eng, &base_cfg(13), &DistribMode::Threaded).unwrap();
+    assert_curves_bit_identical(&clean.curve, &res.curve, "degraded vs clean");
+
+    // a sole actor with no budget left cannot survive its own crash
+    let mut cfg = base_cfg(13);
+    cfg.actors = 1;
+    cfg.max_respawns = 0;
+    cfg.fault_spec = "crash@4".into();
+    let err = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap_err().to_string();
+    assert!(err.contains("dead"), "total fleet loss is a clean error: {err}");
+}
+
+#[test]
+fn a_faulted_run_replays_into_the_same_trajectory_and_quarantine_ledger() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("faulted_replay");
+
+    // poison + lag, inline (replay carries data faults; crash/stall are
+    // runtime events and documented as outside the stream)
+    let mut cfg = base_cfg(17);
+    cfg.fault_spec = "poison@3:nan_ell:4,poison@5:bad_action:2,lag=1".into();
+    cfg.stale_penalty = 0.5;
+    let stream = dir.join("poisoned.json");
+    cfg.record_to = Some(stream.to_string_lossy().into_owned());
+    let live = train_distrib(&eng, &cfg, &DistribMode::Inline).unwrap();
+    assert_eq!(live.ledger.quarantined_samples, 6);
+
+    let mut replay_cfg = cfg.clone();
+    replay_cfg.record_to = None;
+    let mode = DistribMode::Replay(stream.to_string_lossy().into_owned());
+    let replay = train_distrib(&eng, &replay_cfg, &mode).unwrap();
+    assert_curves_bit_identical(&live.curve, &replay.curve, "poisoned replay");
+    assert_eq!(replay.ledger.quarantined_samples, live.ledger.quarantined_samples);
+    assert_eq!(replay.ledger.stale_samples, live.ledger.stale_samples);
+
+    // a config drift (different penalty => different fingerprint) refuses
+    // to ingest the recording
+    let mut drifted = replay_cfg.clone();
+    drifted.stale_penalty = 0.9;
+    let err = train_distrib(&eng, &drifted, &mode).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// checkpoint/resume through the distributed path
+// ---------------------------------------------------------------------
+
+#[test]
+fn resume_with_a_lagged_ring_is_bit_identical_to_the_uninterrupted_run() {
+    let eng = Engine::native_testbed();
+    let dir = test_dir("resume");
+    let ck_path = dir.join("dist.ckpt");
+
+    let mut full = base_cfg(19);
+    full.lag = 2;
+    full.stale_penalty = 0.5;
+    full.steps = 8;
+    full.checkpoint =
+        Some(CheckpointCfg { path: ck_path.to_string_lossy().into_owned(), every: 4 });
+    let uninterrupted = train_distrib(&eng, &full, &DistribMode::Threaded).unwrap();
+
+    // run to the mid checkpoint only, then resume from it
+    let mut half = full.clone();
+    half.steps = 4;
+    train_distrib(&eng, &half, &DistribMode::Threaded).unwrap();
+    let mut resumed_cfg = full.clone();
+    resumed_cfg.resume_from = Some(ck_path.to_string_lossy().into_owned());
+    let resumed = train_distrib(&eng, &resumed_cfg, &DistribMode::Threaded).unwrap();
+    assert_curves_bit_identical(&uninterrupted.curve, &resumed.curve, "resume");
+    assert_eq!(
+        uninterrupted.ledger.backward_kept, resumed.ledger.backward_kept,
+        "ledger totals survive the boundary"
+    );
+
+    // the ring is part of the contract: resuming under a different lag
+    // must be refused, naming the knob
+    let mut wrong = resumed_cfg.clone();
+    wrong.lag = 1;
+    let err = train_distrib(&eng, &wrong, &DistribMode::Threaded).unwrap_err().to_string();
+    assert!(err.contains("lag"), "wrong-lag resume must name the knob: {err}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
