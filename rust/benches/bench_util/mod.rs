@@ -61,6 +61,10 @@ pub struct BenchEntry {
     pub mean_ns_per_step: f64,
     pub throughput_per_sec: f64,
     pub unit: String,
+    /// optional extra numeric columns (e.g. the kernel bench's
+    /// roofline-style `bytes_per_call` / `gbytes_per_s`); keys must stay
+    /// within the allowlist of `rust/tests/bench_schema.rs`
+    pub extras: Vec<(String, f64)>,
 }
 
 /// Collects bench entries and merge-writes them into the shared
@@ -91,6 +95,21 @@ impl JsonReport {
         throughput_per_sec: f64,
         unit: &str,
     ) {
+        self.record_with(section, method, workers, mean_ns_per_step, throughput_per_sec, unit, &[]);
+    }
+
+    /// `record` plus extra numeric columns for this cell.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_with(
+        &mut self,
+        section: &str,
+        method: &str,
+        workers: usize,
+        mean_ns_per_step: f64,
+        throughput_per_sec: f64,
+        unit: &str,
+        extras: &[(&str, f64)],
+    ) {
         self.entries.push(BenchEntry {
             section: section.to_string(),
             method: method.to_string(),
@@ -98,6 +117,7 @@ impl JsonReport {
             mean_ns_per_step,
             throughput_per_sec,
             unit: unit.to_string(),
+            extras: extras.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         });
     }
 
@@ -124,6 +144,9 @@ impl JsonReport {
                 "throughput_per_s_per_worker".to_string(),
                 Json::Num((per_worker * 10.0).round() / 10.0),
             );
+            for (k, v) in &e.extras {
+                o.insert(k.clone(), Json::Num((v * 10.0).round() / 10.0));
+            }
             entries.push(Json::Obj(o));
         }
         let mut sec = BTreeMap::new();

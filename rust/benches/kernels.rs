@@ -9,14 +9,32 @@
 //! Entry convention: `mean_ns_per_step` is the mean wall-clock of ONE
 //! kernel call at the stated shape, `throughput_per_s` is GFLOP/s
 //! (`unit: "gflops"`), `workers` is always 1 (kernels are single-thread
-//! primitives; parallelism lives a layer up in the worker pool).
+//! primitives; parallelism lives a layer up in the worker pool). Every
+//! dispatched kernel is benched as a `[scalar]`/`[dispatch]` column pair
+//! — with `--features simd` on an AVX2 host the pair is the simd_off /
+//! simd_on comparison; without the feature both columns run scalar and
+//! the `simd` extra records 0. The two forward GEMMs add an `[f32fast]`
+//! column for the non-golden f32 tier (DESIGN.md §13). Each cell also
+//! carries a roofline-style `bytes_per_call` estimate (compulsory
+//! traffic: operands read once + outputs written once) and the implied
+//! `gbytes_per_s`, so a memory-bound kernel is readable as such straight
+//! from the JSON.
+//!
+//! `cargo bench --bench kernels -- --autotune` switches to the autotune
+//! sweep instead: it times `KernelTune` candidates (traversal blocking
+//! only — reduction order is frozen, so every candidate is bit-identical)
+//! at the testbed GEMM shapes and writes the winners as a tune file
+//! (`KONDO_TUNE_OUT`, default `kernel_tune.txt`) for `KONDO_KERNEL_TUNE`.
 
 mod bench_util;
 
 use bench_util::{bench, JsonReport};
 use kondo::runtime::kernels::{
-    gather_mix_masked, gemm_bias_logsoftmax, gemm_bias_tanh, log_softmax_rows, outer_acc,
-    softmax_jacobian_rows, softmax_rows, WeightPack,
+    gather_mix_masked, gather_mix_masked_scalar, gemm_bias_logsoftmax,
+    gemm_bias_logsoftmax_f32fast, gemm_bias_logsoftmax_scalar, gemm_bias_logsoftmax_with,
+    gemm_bias_tanh, gemm_bias_tanh_f32fast, gemm_bias_tanh_scalar, gemm_bias_tanh_with,
+    log_softmax_rows, log_softmax_rows_scalar, outer_acc, simd_enabled, softmax_jacobian_rows,
+    softmax_jacobian_rows_scalar, softmax_rows, KernelTune, WeightPack, PANEL,
 };
 use kondo::runtime::native::{
     MNIST_ACTIONS, MNIST_BATCH, MNIST_HIDDEN, MNIST_IN, REV_HMAX, REV_VOCAB,
@@ -29,16 +47,49 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
 }
 
-/// Record one kernel cell: per-call latency plus GFLOP/s from the
-/// analytic flop count of the benched shape.
-fn record(report: &mut JsonReport, section: &str, method: &str, mean_ns: f64, flops: f64) {
+/// Record one kernel cell: per-call latency, GFLOP/s from the analytic
+/// flop count, and the roofline-style bytes-moved estimate of the benched
+/// shape (`bytes` = compulsory traffic per call).
+fn record(
+    report: &mut JsonReport,
+    section: &str,
+    method: &str,
+    mean_ns: f64,
+    flops: f64,
+    bytes: f64,
+) {
     let gflops = flops / mean_ns; // flops per ns == GFLOP/s
-    report.record(section, method, 1, mean_ns, gflops, "gflops");
-    println!("    -> {gflops:.3} GFLOP/s");
+    let gbps = bytes / mean_ns; // bytes per ns == GB/s
+    report.record_with(
+        section,
+        method,
+        1,
+        mean_ns,
+        gflops,
+        "gflops",
+        &[
+            ("bytes_per_call", bytes),
+            ("gbytes_per_s", gbps),
+            ("simd", if simd_enabled() { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!("    -> {gflops:.3} GFLOP/s, {gbps:.3} GB/s ({bytes:.0} B/call)");
+}
+
+/// Compulsory GEMM traffic: x + packed weights (padded panels) + bias
+/// read once, out written once. All f32.
+fn gemm_bytes(rows: usize, k: usize, n: usize) -> f64 {
+    let packed = n.div_ceil(PANEL) * k * PANEL;
+    (4 * (rows * k + packed + n + rows * n)) as f64
 }
 
 fn main() {
-    let mut report = JsonReport::new("kernels", "native");
+    if std::env::args().any(|a| a == "--autotune") {
+        autotune();
+        return;
+    }
+    let platform = if simd_enabled() { "native+avx2" } else { "native" };
+    let mut report = JsonReport::new("kernels", platform);
     let iters = 200;
     let warmup = 20;
 
@@ -49,12 +100,23 @@ fn main() {
         let bias = randv(MNIST_HIDDEN, 3);
         let pack = WeightPack::new(&w, MNIST_IN, MNIST_HIDDEN, 0);
         let mut out = vec![0.0f32; MNIST_BATCH * MNIST_HIDDEN];
-        let r = bench("mnist fwd gemm+tanh [32x784x32]", iters, warmup, || {
+        let flops = 2.0 * (MNIST_BATCH * MNIST_IN * MNIST_HIDDEN) as f64;
+        let bytes = gemm_bytes(MNIST_BATCH, MNIST_IN, MNIST_HIDDEN);
+        let r = bench("mnist fwd gemm+tanh [32x784x32] scalar", iters, warmup, || {
+            gemm_bias_tanh_scalar(&x, MNIST_BATCH, &pack, &bias, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        record(&mut report, "mnist_fwd", "gemm_bias_tanh_32x784x32[scalar]", r.mean_ns, flops, bytes);
+        let r = bench("mnist fwd gemm+tanh [32x784x32] dispatch", iters, warmup, || {
             gemm_bias_tanh(&x, MNIST_BATCH, &pack, &bias, &mut out);
             std::hint::black_box(&mut out);
         });
-        let flops = 2.0 * (MNIST_BATCH * MNIST_IN * MNIST_HIDDEN) as f64;
-        record(&mut report, "mnist_fwd", "gemm_bias_tanh_32x784x32", r.mean_ns, flops);
+        record(&mut report, "mnist_fwd", "gemm_bias_tanh_32x784x32[dispatch]", r.mean_ns, flops, bytes);
+        let r = bench("mnist fwd gemm+tanh [32x784x32] f32fast", iters, warmup, || {
+            gemm_bias_tanh_f32fast(&x, MNIST_BATCH, &pack, &bias, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        record(&mut report, "mnist_fwd", "gemm_bias_tanh_32x784x32[f32fast]", r.mean_ns, flops, bytes);
     }
 
     // ---- MNIST head GEMM: [32, 32] x [32, 10], fused bias+log-softmax
@@ -63,18 +125,29 @@ fn main() {
         let w = randv(MNIST_HIDDEN * MNIST_ACTIONS, 5);
         let bias = randv(MNIST_ACTIONS, 6);
         let pack = WeightPack::new(&w, MNIST_HIDDEN, MNIST_ACTIONS, 0);
-        let mut scratch = vec![0.0f32; MNIST_ACTIONS];
         let mut out = vec![0.0f32; MNIST_BATCH * MNIST_ACTIONS];
-        let r = bench("mnist head gemm+logsoftmax [32x32x10]", iters, warmup, || {
-            gemm_bias_logsoftmax(&h, MNIST_BATCH, &pack, &bias, None, &mut scratch, &mut out);
+        let flops = 2.0 * (MNIST_BATCH * MNIST_HIDDEN * MNIST_ACTIONS) as f64;
+        let bytes = gemm_bytes(MNIST_BATCH, MNIST_HIDDEN, MNIST_ACTIONS);
+        let r = bench("mnist head gemm+logsoftmax [32x32x10] scalar", iters, warmup, || {
+            gemm_bias_logsoftmax_scalar(&h, MNIST_BATCH, &pack, &bias, None, &mut out);
             std::hint::black_box(&mut out);
         });
-        let flops = 2.0 * (MNIST_BATCH * MNIST_HIDDEN * MNIST_ACTIONS) as f64;
-        record(&mut report, "mnist_fwd", "gemm_bias_logsoftmax_32x32x10", r.mean_ns, flops);
+        record(&mut report, "mnist_fwd", "gemm_bias_logsoftmax_32x32x10[scalar]", r.mean_ns, flops, bytes);
+        let r = bench("mnist head gemm+logsoftmax [32x32x10] dispatch", iters, warmup, || {
+            gemm_bias_logsoftmax(&h, MNIST_BATCH, &pack, &bias, None, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        record(&mut report, "mnist_fwd", "gemm_bias_logsoftmax_32x32x10[dispatch]", r.mean_ns, flops, bytes);
+        let r = bench("mnist head gemm+logsoftmax [32x32x10] f32fast", iters, warmup, || {
+            gemm_bias_logsoftmax_f32fast(&h, MNIST_BATCH, &pack, &bias, None, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        record(&mut report, "mnist_fwd", "gemm_bias_logsoftmax_32x32x10[f32fast]", r.mean_ns, flops, bytes);
     }
 
     // ---- MNIST backward GEMM: the rank-1 g_w1 scatter, one batch of
-    // per-sample outer products at the forward's shape
+    // per-sample outer products at the forward's shape (no SIMD twin:
+    // the scatter stays scalar by design — DESIGN.md §13)
     {
         let xs = randv(MNIST_BATCH * MNIST_IN, 7);
         let dpre = randv(MNIST_HIDDEN, 8);
@@ -86,7 +159,9 @@ fn main() {
             std::hint::black_box(&mut gw1);
         });
         let flops = 2.0 * (MNIST_BATCH * MNIST_IN * MNIST_HIDDEN) as f64;
-        record(&mut report, "mnist_bwd", "outer_acc_batch32_784x32", r.mean_ns, flops);
+        // per sample: x and dpre read, gw read+written (accumulate)
+        let bytes = (MNIST_BATCH * 4 * (MNIST_IN + MNIST_HIDDEN + 2 * MNIST_IN * MNIST_HIDDEN)) as f64;
+        record(&mut report, "mnist_bwd", "outer_acc_batch32_784x32", r.mean_ns, flops, bytes);
     }
 
     // ---- reversal attention: gather-mix logits over a full episode
@@ -99,33 +174,67 @@ fn main() {
         let idx: Vec<usize> = (0..REV_HMAX).map(|k| (k * 3) % (REV_VOCAB + 1)).collect();
         let mut acc = vec![0.0f64; REV_VOCAB * LANES];
         let mut logits = vec![0.0f32; REV_VOCAB];
-        let r = bench("rev attention gather_mix x8 [8x8]", iters, warmup, || {
-            for j in 0..REV_HMAX {
-                gather_mix_masked(
-                    &alpha[j * REV_HMAX..(j + 1) * REV_HMAX],
-                    &emit,
-                    REV_VOCAB,
-                    &idx,
-                    REV_VOCAB,
-                    -1.0e30,
-                    &mut acc,
-                    &mut logits,
-                );
-                std::hint::black_box(&mut logits);
-            }
-        });
         let flops = 2.0 * (REV_HMAX * REV_HMAX * REV_VOCAB) as f64;
-        record(&mut report, "rev_attention", "gather_mix_8pos_8x8", r.mean_ns, flops);
+        // per position: coef + gathered table rows read, acc (f64)
+        // read+written per term, logits written once
+        let bytes = (REV_HMAX
+            * (4 * REV_HMAX
+                + REV_HMAX * 4 * REV_VOCAB
+                + REV_HMAX * 2 * 8 * REV_VOCAB * LANES
+                + 4 * REV_VOCAB)) as f64;
+        let mut run_pair = |label: &str,
+                            method: &str,
+                            f: &mut dyn FnMut(
+            &[f32],
+            &[f32],
+            &[usize],
+            &mut [f64],
+            &mut [f32],
+        )| {
+            let r = bench(label, iters, warmup, || {
+                for j in 0..REV_HMAX {
+                    f(
+                        &alpha[j * REV_HMAX..(j + 1) * REV_HMAX],
+                        &emit,
+                        &idx,
+                        &mut acc,
+                        &mut logits,
+                    );
+                    std::hint::black_box(&mut logits);
+                }
+            });
+            record(&mut report, "rev_attention", method, r.mean_ns, flops, bytes);
+        };
+        run_pair(
+            "rev attention gather_mix x8 [8x8] scalar",
+            "gather_mix_8pos_8x8[scalar]",
+            &mut |c, t, i, a, o| {
+                gather_mix_masked_scalar(c, t, REV_VOCAB, i, REV_VOCAB, -1.0e30, a, o)
+            },
+        );
+        run_pair(
+            "rev attention gather_mix x8 [8x8] dispatch",
+            "gather_mix_8pos_8x8[dispatch]",
+            &mut |c, t, i, a, o| {
+                gather_mix_masked(c, t, REV_VOCAB, i, REV_VOCAB, -1.0e30, a, o)
+            },
+        );
 
         let dalpha = randv(REV_HMAX * REV_HMAX, 11);
         let mut gattn = vec![0.0f32; REV_HMAX * REV_HMAX];
-        let r = bench("rev attention softmax_jacobian [8x8]", iters, warmup, || {
+        // per row: a dot (2n) + n multiply-subtracts (2n)
+        let flops = 4.0 * (REV_HMAX * REV_HMAX) as f64;
+        let bytes = (3 * 4 * REV_HMAX * REV_HMAX) as f64;
+        let r = bench("rev attention softmax_jacobian [8x8] scalar", iters, warmup, || {
+            softmax_jacobian_rows_scalar(&alpha, &dalpha, REV_HMAX, REV_HMAX, &mut gattn);
+            std::hint::black_box(&mut gattn);
+        });
+        record(&mut report, "rev_attention", "softmax_jacobian_8x8[scalar]", r.mean_ns, flops, bytes);
+        let r = bench("rev attention softmax_jacobian [8x8] dispatch", iters, warmup, || {
             softmax_jacobian_rows(&alpha, &dalpha, REV_HMAX, REV_HMAX, &mut gattn);
             std::hint::black_box(&mut gattn);
         });
-        // per row: a dot (2n) + n multiply-subtracts (2n)
-        let flops = 4.0 * (REV_HMAX * REV_HMAX) as f64;
-        record(&mut report, "rev_attention", "softmax_jacobian_8x8", r.mean_ns, flops);
+        record(&mut report, "rev_attention", "softmax_jacobian_8x8[dispatch]", r.mean_ns, flops, bytes);
     }
 
     // ---- log-softmax rows (single-pass logsumexp epilogue) at the MNIST
@@ -133,13 +242,20 @@ fn main() {
     {
         let logits = randv(MNIST_BATCH * MNIST_ACTIONS, 12);
         let mut out = vec![0.0f32; MNIST_BATCH * MNIST_ACTIONS];
-        let r = bench("log_softmax_rows [32x10]", iters, warmup, || {
+        // per element: one exp-accumulate in the lse sweep + one subtract
+        let flops = 3.0 * (MNIST_BATCH * MNIST_ACTIONS) as f64;
+        // two read sweeps (lse + subtract) and one write, all f32
+        let bytes = (3 * 4 * MNIST_BATCH * MNIST_ACTIONS) as f64;
+        let r = bench("log_softmax_rows [32x10] scalar", iters, warmup, || {
+            log_softmax_rows_scalar(&logits, MNIST_BATCH, MNIST_ACTIONS, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        record(&mut report, "log_softmax", "log_softmax_rows_32x10[scalar]", r.mean_ns, flops, bytes);
+        let r = bench("log_softmax_rows [32x10] dispatch", iters, warmup, || {
             log_softmax_rows(&logits, MNIST_BATCH, MNIST_ACTIONS, &mut out);
             std::hint::black_box(&mut out);
         });
-        // per element: one exp-accumulate in the lse sweep + one subtract
-        let flops = 3.0 * (MNIST_BATCH * MNIST_ACTIONS) as f64;
-        record(&mut report, "log_softmax", "log_softmax_rows_32x10", r.mean_ns, flops);
+        record(&mut report, "log_softmax", "log_softmax_rows_32x10[dispatch]", r.mean_ns, flops, bytes);
     }
 
     let json_path = std::env::var("KONDO_BENCH_JSON")
@@ -147,6 +263,85 @@ fn main() {
     report.write(&json_path);
 
     println!("\nexpected shape: the fwd GEMM dominated by the 784-wide reduction should");
-    println!("sit within a small factor of scalar-f64 peak; the e2e_step bench tells");
-    println!("whether those GFLOP/s survive the full Screen -> Forward -> Gate -> Backward path.");
+    println!("sit near the scalar/dispatch roofline its gbytes_per_s column implies; the");
+    println!("e2e_step bench tells whether those GFLOP/s survive the full pipeline.");
+}
+
+/// Autotune sweep: time `KernelTune` candidates at the testbed GEMM
+/// shapes and write the winners as a `KONDO_KERNEL_TUNE` file. Blocking
+/// only changes tile traversal order — every candidate produces
+/// bit-identical output (locked by `gemm_is_tune_invariant_bitwise`) —
+/// so picking the fastest is always safe.
+fn autotune() {
+    let iters = 100;
+    let warmup = 10;
+    let row_blocks = [1usize, 2, 4, 8, 16, 32];
+    let panel_blocks = [1usize, 2, 4, 8, 16, 32];
+    let mut lines = vec![
+        "# shape-keyed kernel tune table: k n row_block panel_block".to_string(),
+        format!("# emitted by `cargo bench --bench kernels -- --autotune` (simd={})", simd_enabled()),
+    ];
+
+    // shape 1: the hidden-layer GEMM [32, 784] x [784, 32]
+    {
+        let (rows, k, n) = (MNIST_BATCH, MNIST_IN, MNIST_HIDDEN);
+        let x = randv(rows * k, 1);
+        let w = randv(k * n, 2);
+        let bias = randv(n, 3);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut out = vec![0.0f32; rows * n];
+        let mut best = (f64::INFINITY, KernelTune::DEFAULT);
+        for &rb in &row_blocks {
+            for &pb in &panel_blocks {
+                let t = KernelTune { row_block: rb, panel_block: pb };
+                let r = bench(&format!("tanh {k}x{n} rb={rb} pb={pb}"), iters, warmup, || {
+                    gemm_bias_tanh_with(t, &x, rows, &pack, &bias, &mut out);
+                    std::hint::black_box(&mut out);
+                });
+                if r.mean_ns < best.0 {
+                    best = (r.mean_ns, t);
+                }
+            }
+        }
+        println!(
+            "best for {k}x{n}: rb={} pb={} ({:.0} ns)",
+            best.1.row_block, best.1.panel_block, best.0
+        );
+        lines.push(format!("{k} {n} {} {}", best.1.row_block, best.1.panel_block));
+    }
+
+    // shape 2: the head GEMM [32, 32] x [32, 10]
+    {
+        let (rows, k, n) = (MNIST_BATCH, MNIST_HIDDEN, MNIST_ACTIONS);
+        let h = randv(rows * k, 4);
+        let w = randv(k * n, 5);
+        let bias = randv(n, 6);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut out = vec![0.0f32; rows * n];
+        let mut best = (f64::INFINITY, KernelTune::DEFAULT);
+        for &rb in &row_blocks {
+            for &pb in &panel_blocks {
+                let t = KernelTune { row_block: rb, panel_block: pb };
+                let r = bench(&format!("lsm {k}x{n} rb={rb} pb={pb}"), iters, warmup, || {
+                    gemm_bias_logsoftmax_with(t, &h, rows, &pack, &bias, None, &mut out);
+                    std::hint::black_box(&mut out);
+                });
+                if r.mean_ns < best.0 {
+                    best = (r.mean_ns, t);
+                }
+            }
+        }
+        println!(
+            "best for {k}x{n}: rb={} pb={} ({:.0} ns)",
+            best.1.row_block, best.1.panel_block, best.0
+        );
+        lines.push(format!("{k} {n} {} {}", best.1.row_block, best.1.panel_block));
+    }
+
+    let out_path =
+        std::env::var("KONDO_TUNE_OUT").unwrap_or_else(|_| "kernel_tune.txt".to_string());
+    match std::fs::write(&out_path, lines.join("\n") + "\n") {
+        Ok(()) => println!("\nwrote {out_path}; use it via KONDO_KERNEL_TUNE={out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
 }

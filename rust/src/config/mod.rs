@@ -60,6 +60,10 @@ pub struct ExpConfig {
     pub heartbeat_ms: u64,
     /// per-slot respawn budget before an actor slot is left dead
     pub max_respawns: u32,
+    /// route forward-tier GEMMs through the **non-golden** f32-fast
+    /// kernels (screen/forward only, never the gated backward; DESIGN.md
+    /// §13). A method-axis knob: it enters checkpoint fingerprints.
+    pub f32_fast: bool,
 }
 
 impl Default for ExpConfig {
@@ -88,6 +92,7 @@ impl Default for ExpConfig {
             fault_spec: String::new(),
             heartbeat_ms: 1000,
             max_respawns: 2,
+            f32_fast: false,
         }
     }
 }
@@ -165,6 +170,9 @@ impl ExpConfig {
         }
         if let Some(v) = doc.i64("exp.max_respawns") {
             self.max_respawns = v.max(0) as u32;
+        }
+        if let Some(v) = doc.bool("exp.f32_fast") {
+            self.f32_fast = v;
         }
     }
 
@@ -387,6 +395,21 @@ mod tests {
         cfg.apply_doc(&TomlDoc::parse("[exp]\nactors = 3\nfault_spec = \"stall@2:900\"").unwrap());
         assert_eq!(cfg.actors, 3);
         assert_eq!(cfg.fault_spec, "stall@2:900");
+    }
+
+    #[test]
+    fn f32_fast_knob_threads_through() {
+        let mut cfg = ExpConfig::default();
+        assert!(!cfg.f32_fast, "exact kernels by default");
+        // bare CLI booleans parse as TOML booleans, no quoting needed
+        cfg.apply_override("f32_fast", "true").unwrap();
+        assert!(cfg.f32_fast);
+        cfg.apply_override("f32_fast", "false").unwrap();
+        assert!(!cfg.f32_fast);
+        // and the TOML path reads the same knob
+        let mut cfg = ExpConfig::default();
+        cfg.apply_doc(&TomlDoc::parse("[exp]\nf32_fast = true").unwrap());
+        assert!(cfg.f32_fast);
     }
 
     #[test]

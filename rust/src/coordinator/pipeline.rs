@@ -140,6 +140,15 @@ impl ScreenStage {
         }
     }
 
+    /// Route the draft's scoring dot through the non-golden f32-fast tier
+    /// (DESIGN.md §13). Screen scores feed a rank threshold, never a
+    /// gradient, so this is the designed consumer of that axis; the knob
+    /// is config (threaded from `Engine::f32_fast`), not checkpoint state.
+    pub fn with_f32_fast(mut self, on: bool) -> ScreenStage {
+        self.draft = self.draft.clone().with_f32_fast(on);
+        self
+    }
+
     pub fn cfg(&self) -> &ScreenCfg {
         &self.cfg
     }

@@ -26,11 +26,22 @@ pub struct DraftScreen {
     lr: f32,
     /// samples seen (for the cold-start guard)
     seen: u64,
+    /// score with the non-golden f32-fast dot (DESIGN.md §13). Config,
+    /// not state: excluded from `weights()`/`restore()` exactly like `lr`.
+    f32_fast: bool,
 }
 
 impl DraftScreen {
     pub fn new(dim: usize, lr: f32) -> DraftScreen {
-        DraftScreen { w: vec![0.0; dim], b: 0.0, lr, seen: 0 }
+        DraftScreen { w: vec![0.0; dim], b: 0.0, lr, seen: 0, f32_fast: false }
+    }
+
+    /// Select the screen's scoring tier. The screen is the textbook home
+    /// for the f32-fast axis: §3.2 shows the gate tolerates approximate
+    /// delight scores, and the draft's predictions never touch a gradient.
+    pub fn with_f32_fast(mut self, on: bool) -> DraftScreen {
+        self.f32_fast = on;
+        self
     }
 
     pub fn dim(&self) -> usize {
@@ -45,9 +56,15 @@ impl DraftScreen {
     /// sample dot of the tier-1 screen, routed through the shared
     /// lane-reduced `utils::math::dot` (the same fixed reduction tree the
     /// kernel layer uses, so the screen's scores carry the same
-    /// shape-only ordering guarantee as every other reduction).
+    /// shape-only ordering guarantee as every other reduction). Under the
+    /// f32-fast tier the accumulation runs in f32 instead — still
+    /// deterministic per shape, but a distinct method axis, never
+    /// bit-comparable to the golden path.
     pub fn predict(&self, x: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), self.w.len());
+        if self.f32_fast {
+            return self.b as f64 + crate::utils::math::dot_f32fast(&self.w, x) as f64;
+        }
         self.b as f64 + crate::utils::math::dot(&self.w, x)
     }
 
@@ -233,6 +250,27 @@ mod tests {
         b.update_row(&xs[2..4], ell[1]);
         assert_eq!(a.seen(), b.seen());
         assert_eq!(a.predict(&[0.3, 0.9]).to_bits(), b.predict(&[0.3, 0.9]).to_bits());
+    }
+
+    #[test]
+    fn f32_fast_draft_is_deterministic_and_survives_restore() {
+        let mut rng = Pcg32::seeded(7);
+        let dim = 33; // ragged on purpose: not a multiple of LANES
+        let mut exact = DraftScreen::new(dim, 0.05);
+        let xs: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        for _ in 0..50 {
+            exact.update_row(&xs, 1.25);
+        }
+        let (w, b) = exact.weights();
+        let (w, b, seen) = (w.to_vec(), b, exact.seen());
+        let mut fast = DraftScreen::new(dim, 0.05).with_f32_fast(true);
+        fast.restore(&w, b, seen).unwrap();
+        let pe = exact.predict(&xs);
+        let pf = fast.predict(&xs);
+        // close (the screen tolerates this much, per §3.2) but a distinct
+        // method axis — and bit-stable under repetition
+        assert!((pe - pf).abs() < 1e-3 * pe.abs().max(1.0), "{pe} vs {pf}");
+        assert_eq!(pf.to_bits(), fast.predict(&xs).to_bits());
     }
 
     #[test]

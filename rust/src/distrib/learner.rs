@@ -153,12 +153,14 @@ pub struct DistribRunResult {
 /// fleet shape resumes under another. `lag`, `stale_penalty`, and the
 /// fault spec DO shape the trajectory and are pinned — a wrong-lag
 /// resume rejects with an error naming 'lag'.
-fn fingerprint(cfg: &DistribCfg, lag: usize, rules: &[InitRule]) -> Json {
+fn fingerprint(cfg: &DistribCfg, lag: usize, f32_fast: bool, rules: &[InitRule]) -> Json {
     checkpoint::obj(vec![
         ("trainer", Json::Str("distrib".into())),
         ("seed", checkpoint::ju64(cfg.seed)),
         ("method", Json::Str(format!("{:?}", cfg.method))),
         ("priority", Json::Str(priority_key(&cfg.method))),
+        // forward-tier knob: pinned like a learning rate (DESIGN.md §13)
+        ("f32_fast", Json::Bool(f32_fast)),
         ("lr", Json::Num(cfg.lr)),
         ("lag", checkpoint::ju64(lag as u64)),
         ("stale_penalty", Json::Num(cfg.stale_penalty)),
@@ -288,7 +290,7 @@ impl<'e> LearnerState<'e> {
         let mut acct = ShardedLedger::new(gl.workers());
         let mut curve = Vec::new();
         let mut window = ErrWindow::new(10);
-        let fp = fingerprint(cfg, lag, &rules);
+        let fp = fingerprint(cfg, lag, eng.f32_fast(), &rules);
         let fp_hash = checkpoint::fnv1a64(fp.dump().as_bytes());
 
         let mut ring: VecDeque<Arc<PolicySnapshot>> = VecDeque::new();

@@ -10,8 +10,10 @@
 //! mnist_steps, rev_steps, eval_every, eval_size, lr_mnist, lr_rev,
 //! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup,
 //! checkpoint_every, checkpoint_path, resume_from, priority, actors,
-//! snapshot_lag, stale_penalty, fault_spec, heartbeat_ms, max_respawns),
-//! plus `preset=scaled|paper` to load configs/<preset>.toml first.
+//! snapshot_lag, stale_penalty, fault_spec, heartbeat_ms, max_respawns,
+//! f32_fast), plus `preset=scaled|paper` to load configs/<preset>.toml
+//! first. `f32_fast=true` routes the forward/screen tier through the
+//! non-golden f32 kernels (DESIGN.md §13); the gated backward stays exact.
 //! `priority=delight|advantage|surprisal|abs_advantage|uniform|
 //! additive:<alpha>` selects the Fig-5 gate-priority ablation for DG-K
 //! methods (both `repro train` and the exp drivers honour it).
@@ -59,7 +61,7 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
         "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
         "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from", "priority",
         "actors", "snapshot_lag", "stale_penalty", "fault_spec", "heartbeat_ms",
-        "max_respawns",
+        "max_respawns", "f32_fast",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -88,7 +90,7 @@ fn real_main() -> Result<()> {
         Some("exp") => {
             let id = args.get(1).map(String::as_str).unwrap_or("all");
             let cfg = load_config(&args[2.min(args.len())..])?;
-            let eng = Engine::open(&cfg.artifacts_dir)?;
+            let eng = Engine::open(&cfg.artifacts_dir)?.with_f32_fast(cfg.f32_fast);
             // make the backend unmistakable in experiment logs: figures
             // from the native testbed must not pass as artifact runs
             println!("platform: {}", eng.platform());
@@ -109,7 +111,7 @@ fn real_main() -> Result<()> {
             let what = args.get(1).map(String::as_str).unwrap_or("mnist");
             let rest = &args[2.min(args.len())..];
             let cfg = load_config(rest)?;
-            let eng = Engine::open(&cfg.artifacts_dir)?;
+            let eng = Engine::open(&cfg.artifacts_dir)?.with_f32_fast(cfg.f32_fast);
             // the priority knob re-ranks any DG-K method's gate (a no-op
             // for ungated methods); validated before the run starts
             let method = parse_method(rest)?.with_priority(cfg.gate_priority()?);

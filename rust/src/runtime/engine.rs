@@ -79,9 +79,29 @@ impl Engine {
     /// benches, and `artifacts_dir = "native"` runs use.
     pub fn native_testbed() -> Engine {
         Engine {
-            backend: Backend::Native(NativeTestbed),
+            backend: Backend::Native(NativeTestbed::default()),
             manifest: NativeTestbed::manifest(),
             stats: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Enable (or disable) the **non-golden** f32-fast forward tier
+    /// (DESIGN.md §13) on the native backend. A config knob, not state:
+    /// it participates in checkpoint fingerprints exactly like a learning
+    /// rate, so a resume under a different setting is rejected. No-op on
+    /// the PJRT backend (artifact precision is fixed at AOT time).
+    pub fn with_f32_fast(mut self, on: bool) -> Engine {
+        if let Backend::Native(nb) = &mut self.backend {
+            nb.f32_fast = on;
+        }
+        self
+    }
+
+    /// Whether the non-golden f32-fast forward tier is active.
+    pub fn f32_fast(&self) -> bool {
+        match &self.backend {
+            Backend::Native(nb) => nb.f32_fast,
+            Backend::Pjrt { .. } => false,
         }
     }
 
@@ -298,6 +318,27 @@ mod tests {
         let second = eng.execute_refs("mnist_fwd", &refs).unwrap();
         assert_eq!(first[0].as_f32().unwrap(), second[0].as_f32().unwrap());
         assert_eq!(eng.stats()[0].1.calls, 2);
+    }
+
+    #[test]
+    fn with_f32_fast_flips_the_forward_tier() {
+        let eng = Engine::native_testbed();
+        assert!(!eng.f32_fast(), "exact by default");
+        let eng = eng.with_f32_fast(true);
+        assert!(eng.f32_fast());
+        let man = eng.manifest();
+        let rules = man.model("mnist").unwrap().to_vec();
+        let params = crate::model::ParamStore::init(&rules, 1);
+        let b = man.constants.mnist_batch;
+        let mut inputs = params.as_inputs();
+        inputs.push(HostTensor::zeros_f32(&[b, man.constants.mnist_in]));
+        inputs.push(HostTensor::zeros_f32(&[b, man.constants.mnist_actions]));
+        // still a valid normalized forward under the fast tier
+        let out = eng.execute("mnist_fwd", &inputs).unwrap();
+        for row in out[0].as_f32().unwrap().chunks(man.constants.mnist_actions) {
+            let s: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
     }
 
     #[test]

@@ -29,10 +29,25 @@
 //! `ParamStore` version so a stale pack is detectable in debug builds;
 //! [`packs_built`] counts builds so tests can assert exactly one pack per
 //! weight matrix per step regardless of worker count.
+//!
+//! **SIMD lowering (DESIGN.md §13).** With `--features simd` on x86_64,
+//! the microkernel and the elementwise epilogue loops dispatch at runtime
+//! ([`simd_enabled`]) onto the AVX2 twins in `utils::simd`, which perform
+//! the identical per-lane operations and the identical `(l0+l1)+(l2+l3)`
+//! tree — the feature changes speed, never bits. Every dispatched kernel
+//! keeps a public `*_scalar` twin, and `rust/tests/simd_equivalence.rs`
+//! locks bitwise equality between the two across ragged shapes. Cache
+//! blocking is a [`KernelTune`] (shape-keyed via [`tune_for`], sweepable
+//! via `cargo bench --bench kernels -- --autotune`) that may vary **only
+//! the tile traversal order**, never any accumulation order. The
+//! `*_f32fast` variants are a separate, explicitly **non-golden** method
+//! axis (f32 accumulators for the screen/forward tier only).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
-use crate::utils::math::{lane_reduce, LANES};
+use crate::utils::math::{lane_reduce, lane_reduce_f32, LANES};
 
 /// Columns per packed weight panel (the register-tile width of the GEMM
 /// microkernel). With `LANES` f64 accumulators per column the inner loop
@@ -66,6 +81,9 @@ pub struct WeightPack {
 
 impl WeightPack {
     pub fn new(w: &[f32], k: usize, n: usize, version: u64) -> WeightPack {
+        // loud at the boundary: a short slice must not reach the panel
+        // loop (same contract `refill` enforces)
+        assert_eq!(w.len(), k * n, "weight pack shape mismatch");
         let panels = n.div_ceil(PANEL);
         let mut pack = WeightPack { k, n, version, data: vec![0.0; panels * k * PANEL] };
         pack.refill(w, version);
@@ -132,6 +150,87 @@ impl WeightPack {
     }
 }
 
+/// Whether kernel calls lower onto the AVX2 backend: compiled in by the
+/// `simd` cargo feature on x86_64 and confirmed by one-time runtime CPU
+/// detection. Purely a speed switch — the lowering is bit-identical by
+/// construction (DESIGN.md §13) and locked by
+/// `rust/tests/simd_equivalence.rs`.
+#[inline]
+pub fn simd_enabled() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        crate::utils::simd::avx2()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Cache-blocking plan for the GEMM traversal. A tune may vary **only**
+/// which (row, panel) tile executes when; `PANEL` (the packed layout) and
+/// `LANES` (the reduction tree) are frozen, and every tile is computed
+/// identically under every tune — so all tunes are bitwise
+/// interchangeable (locked by the tune-invariance tests) and tuning sits
+/// entirely outside the golden contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelTune {
+    /// Rows per traversal block (>= 1).
+    pub row_block: usize,
+    /// Weight panels per traversal block (>= 1).
+    pub panel_block: usize,
+}
+
+impl KernelTune {
+    /// Compile-time default: a block streams `panel_block * k * PANEL`
+    /// packed weights against `row_block` input rows — sized to keep the
+    /// working set in L2 for the repo's shapes on typical x86_64 parts.
+    pub const DEFAULT: KernelTune = KernelTune { row_block: 8, panel_block: 16 };
+}
+
+/// Shape-keyed tune lookup: the `(k, n)` entry from the optional tune
+/// file named by the `KONDO_KERNEL_TUNE` env var (emitted by `cargo bench
+/// --bench kernels -- --autotune`, read once per process), else
+/// [`KernelTune::DEFAULT`].
+pub fn tune_for(k: usize, n: usize) -> KernelTune {
+    static TABLE: OnceLock<BTreeMap<(usize, usize), KernelTune>> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        std::env::var("KONDO_KERNEL_TUNE")
+            .ok()
+            .and_then(|path| std::fs::read_to_string(path).ok())
+            .map(|text| parse_tune_file(&text))
+            .unwrap_or_default()
+    });
+    table.get(&(k, n)).copied().unwrap_or(KernelTune::DEFAULT)
+}
+
+/// Parse a tune file: one `k n row_block panel_block` line per shape,
+/// `#` starts a comment. Lines with zero blocks (a traversal block must
+/// make progress) or the wrong field count are ignored. Pure, so tests
+/// cover it without touching process-global env state.
+pub fn parse_tune_file(text: &str) -> BTreeMap<(usize, usize), KernelTune> {
+    let mut table = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<usize> =
+            line.split_whitespace().filter_map(|t| t.parse().ok()).collect();
+        if fields.len() == 4
+            && line.split_whitespace().count() == 4
+            && fields[2] >= 1
+            && fields[3] >= 1
+        {
+            table.insert(
+                (fields[0], fields[1]),
+                KernelTune { row_block: fields[2], panel_block: fields[3] },
+            );
+        }
+    }
+    table
+}
+
 /// One register tile of the microkernel: `acc[j][l]` accumulates
 /// `x[kk] * panel[kk][j]` for `kk ≡ l (mod LANES)`, ascending — the fixed
 /// lane assignment of the determinism rule.
@@ -159,6 +258,86 @@ fn panel_dot(xr: &[f32], panel: &[f32], k: usize, acc: &mut [[f64; LANES]; PANEL
     }
 }
 
+/// Column sums for one (row, panel) tile: `sums[j]` = the lane-tree sum
+/// of `x[kk] * panel[kk][j]`. The single dispatch point between the
+/// scalar microkernel and its AVX2 twin — both produce the post-tree
+/// values, so every epilogue downstream is shared code.
+#[inline]
+fn panel_sums(xr: &[f32], panel: &[f32], k: usize, simd: bool, sums: &mut [f64; PANEL]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        // safety: `simd` is only true after runtime detection (see
+        // simd_enabled / the *_scalar twins, which pass false)
+        unsafe { crate::utils::simd::panel_dot_avx2(xr, panel, k, sums) };
+        return;
+    }
+    let _ = simd;
+    let mut acc = [[0.0f64; LANES]; PANEL];
+    panel_dot(xr, panel, k, &mut acc);
+    for (s, accj) in sums.iter_mut().zip(acc.iter()) {
+        *s = lane_reduce(accj);
+    }
+}
+
+/// f32-accumulating tile for the **non-golden** fast path: same lane
+/// assignment and tree as [`panel_dot`] + `lane_reduce`, with f32
+/// accumulators throughout.
+#[inline]
+fn panel_sums_f32(xr: &[f32], panel: &[f32], k: usize, sums: &mut [f32; PANEL]) {
+    let mut acc = [[0.0f32; LANES]; PANEL];
+    let chunks = k / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            let xv = xr[base + l];
+            let prow = &panel[(base + l) * PANEL..(base + l + 1) * PANEL];
+            for (j, &pv) in prow.iter().enumerate() {
+                acc[j][l] += xv * pv;
+            }
+        }
+    }
+    let base = chunks * LANES;
+    for l in 0..(k - base) {
+        let xv = xr[base + l];
+        let prow = &panel[(base + l) * PANEL..(base + l + 1) * PANEL];
+        for (j, &pv) in prow.iter().enumerate() {
+            acc[j][l] += xv * pv;
+        }
+    }
+    for (s, accj) in sums.iter_mut().zip(acc.iter()) {
+        *s = lane_reduce_f32(accj);
+    }
+}
+
+/// `xs[i] -= s` with the subtract (an exact elementwise f32 op)
+/// optionally vectorized; bitwise identical either way.
+#[inline]
+fn sub_scalar_inplace(xs: &mut [f32], s: f32, simd: bool) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        unsafe { crate::utils::simd::sub_scalar_inplace_avx2(xs, s) };
+        return;
+    }
+    let _ = simd;
+    for x in xs.iter_mut() {
+        *x -= s;
+    }
+}
+
+/// `out[i] = src[i] - s`, same dispatch.
+#[inline]
+fn sub_scalar_into(src: &[f32], s: f32, simd: bool, out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        unsafe { crate::utils::simd::sub_scalar_avx2(src, s, out) };
+        return;
+    }
+    let _ = simd;
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = v - s;
+    }
+}
+
 /// Blocked GEMM with fused bias + tanh epilogue:
 /// `out[r, c] = tanh(bias[c] + sum_k x[r, k] * W[k, c])`, `x` row-major
 /// `[rows, k]`, `out` `[rows, n]`. Row `r` of the output is a pure
@@ -166,17 +345,90 @@ fn panel_dot(xr: &[f32], panel: &[f32], k: usize, acc: &mut [[f64; LANES]; PANEL
 /// nothing (row independence), and the per-element reduction is the
 /// fixed lane tree.
 pub fn gemm_bias_tanh(x: &[f32], rows: usize, w: &WeightPack, bias: &[f32], out: &mut [f32]) {
+    gemm_bias_tanh_impl(x, rows, w, bias, out, simd_enabled(), tune_for(w.k, w.n));
+}
+
+/// Scalar twin of [`gemm_bias_tanh`] (bitwise identical; equivalence
+/// locked by `rust/tests/simd_equivalence.rs`).
+pub fn gemm_bias_tanh_scalar(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    gemm_bias_tanh_impl(x, rows, w, bias, out, false, tune_for(w.k, w.n));
+}
+
+/// [`gemm_bias_tanh`] under an explicit tune — the autotune sweep entry
+/// point. Bitwise identical to every other tune.
+pub fn gemm_bias_tanh_with(
+    tune: KernelTune,
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    gemm_bias_tanh_impl(x, rows, w, bias, out, simd_enabled(), tune);
+}
+
+fn gemm_bias_tanh_impl(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    out: &mut [f32],
+    simd: bool,
+    t: KernelTune,
+) {
     let (k, n) = (w.k, w.n);
     debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
-    let mut acc = [[0.0f64; LANES]; PANEL];
+    let (rb, pb) = (t.row_block.max(1), t.panel_block.max(1));
+    let np = w.n_panels();
+    let mut sums = [0.0f64; PANEL];
+    for r0 in (0..rows).step_by(rb) {
+        let r1 = (r0 + rb).min(rows);
+        for p0 in (0..np).step_by(pb) {
+            let p1 = (p0 + pb).min(np);
+            for r in r0..r1 {
+                let xr = &x[r * k..(r + 1) * k];
+                let orow = &mut out[r * n..(r + 1) * n];
+                for p in p0..p1 {
+                    panel_sums(xr, w.panel(p), k, simd, &mut sums);
+                    let j0 = p * PANEL;
+                    for j in 0..PANEL.min(n - j0) {
+                        orow[j0 + j] = (bias[j0 + j] as f64 + sums[j]).tanh() as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// **Non-golden** f32-fast twin of [`gemm_bias_tanh`]: f32 accumulators,
+/// f32 epilogue. For the screen/forward tier only — never the gated
+/// backward, never anything a checkpoint or golden compares (DESIGN.md
+/// §13). Deterministic (shape-keyed order), just not bit-comparable to
+/// the golden kernel.
+pub fn gemm_bias_tanh_f32fast(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
+    let mut sums = [0.0f32; PANEL];
     for r in 0..rows {
         let xr = &x[r * k..(r + 1) * k];
         let orow = &mut out[r * n..(r + 1) * n];
         for p in 0..w.n_panels() {
-            panel_dot(xr, w.panel(p), k, &mut acc);
+            panel_sums_f32(xr, w.panel(p), k, &mut sums);
             let j0 = p * PANEL;
             for j in 0..PANEL.min(n - j0) {
-                orow[j0 + j] = (bias[j0 + j] as f64 + lane_reduce(&acc[j])).tanh() as f32;
+                orow[j0 + j] = (bias[j0 + j] + sums[j]).tanh();
             }
         }
     }
@@ -185,41 +437,128 @@ pub fn gemm_bias_tanh(x: &[f32], rows: usize, w: &WeightPack, bias: &[f32], out:
 /// Blocked GEMM with fused bias (+ optional per-row additive noise) +
 /// log-softmax epilogue: `logits[r, c] = bias[c] + sum_k x[r, k]*W[k, c]
 /// (+ noise[r, c])`, `out[r, c] = logits[r, c] - logsumexp(logits[r, :])`.
-/// `scratch` stages one row of logits (`len >= n`); callers on the hot
-/// path hand in a stack buffer so the kernel allocates nothing.
+/// Logits are staged directly in `out` (no scratch, no allocation), then
+/// normalized row-wise in a second pass — which is what lets the GEMM
+/// traversal be arbitrarily blocked without touching the value.
 pub fn gemm_bias_logsoftmax(
     x: &[f32],
     rows: usize,
     w: &WeightPack,
     bias: &[f32],
     noise: Option<&[f32]>,
-    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    gemm_bias_logsoftmax_impl(x, rows, w, bias, noise, out, simd_enabled(), tune_for(w.k, w.n));
+}
+
+/// Scalar twin of [`gemm_bias_logsoftmax`] (bitwise identical).
+pub fn gemm_bias_logsoftmax_scalar(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    noise: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    gemm_bias_logsoftmax_impl(x, rows, w, bias, noise, out, false, tune_for(w.k, w.n));
+}
+
+/// [`gemm_bias_logsoftmax`] under an explicit tune (autotune sweeps).
+pub fn gemm_bias_logsoftmax_with(
+    tune: KernelTune,
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    noise: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    gemm_bias_logsoftmax_impl(x, rows, w, bias, noise, out, simd_enabled(), tune);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_bias_logsoftmax_impl(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    noise: Option<&[f32]>,
+    out: &mut [f32],
+    simd: bool,
+    t: KernelTune,
+) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
+    let (rb, pb) = (t.row_block.max(1), t.panel_block.max(1));
+    let np = w.n_panels();
+    let mut sums = [0.0f64; PANEL];
+    // pass 1: stage the logits tile by tile — tiles are disjoint and each
+    // is computed identically, so any traversal order yields the same bits
+    for r0 in (0..rows).step_by(rb) {
+        let r1 = (r0 + rb).min(rows);
+        for p0 in (0..np).step_by(pb) {
+            let p1 = (p0 + pb).min(np);
+            for r in r0..r1 {
+                let xr = &x[r * k..(r + 1) * k];
+                let orow = &mut out[r * n..(r + 1) * n];
+                for p in p0..p1 {
+                    panel_sums(xr, w.panel(p), k, simd, &mut sums);
+                    let j0 = p * PANEL;
+                    for j in 0..PANEL.min(n - j0) {
+                        let c = j0 + j;
+                        // fixed epilogue order: lane tree, bias, then noise
+                        let mut v = bias[c] as f64 + sums[j];
+                        if let Some(nz) = noise {
+                            v += nz[r * n + c] as f64;
+                        }
+                        orow[c] = v as f32;
+                    }
+                }
+            }
+        }
+    }
+    // pass 2: row-wise normalization. logsumexp stays the sequential
+    // scalar kernel (its running max/rescale is order-critical); only the
+    // exact elementwise subtract is vectorized.
+    for r in 0..rows {
+        let orow = &mut out[r * n..(r + 1) * n];
+        let lse = logsumexp_1pass(orow);
+        sub_scalar_inplace(orow, lse, simd);
+    }
+}
+
+/// **Non-golden** f32-fast twin of [`gemm_bias_logsoftmax`]: f32
+/// accumulators and epilogue (the logsumexp itself keeps its f64
+/// internals — it is cheap and shared). Screen/forward tier only.
+pub fn gemm_bias_logsoftmax_f32fast(
+    x: &[f32],
+    rows: usize,
+    w: &WeightPack,
+    bias: &[f32],
+    noise: Option<&[f32]>,
     out: &mut [f32],
 ) {
     let (k, n) = (w.k, w.n);
     debug_assert!(x.len() >= rows * k && out.len() >= rows * n && bias.len() == n);
-    debug_assert!(scratch.len() >= n);
-    let mut acc = [[0.0f64; LANES]; PANEL];
+    let mut sums = [0.0f32; PANEL];
     for r in 0..rows {
         let xr = &x[r * k..(r + 1) * k];
-        let logits = &mut scratch[..n];
+        let orow = &mut out[r * n..(r + 1) * n];
         for p in 0..w.n_panels() {
-            panel_dot(xr, w.panel(p), k, &mut acc);
+            panel_sums_f32(xr, w.panel(p), k, &mut sums);
             let j0 = p * PANEL;
             for j in 0..PANEL.min(n - j0) {
                 let c = j0 + j;
-                // fixed epilogue order: lane tree, bias, then noise
-                let mut v = bias[c] as f64 + lane_reduce(&acc[j]);
+                let mut v = bias[c] + sums[j];
                 if let Some(nz) = noise {
-                    v += nz[r * n + c] as f64;
+                    v += nz[r * n + c];
                 }
-                logits[c] = v as f32;
+                orow[c] = v;
             }
         }
-        let lse = logsumexp_1pass(logits);
-        let orow = &mut out[r * n..(r + 1) * n];
-        for (o, &l) in orow.iter_mut().zip(logits.iter()) {
-            *o = l - lse;
+        let lse = logsumexp_1pass(orow);
+        for o in orow.iter_mut() {
+            *o -= lse;
         }
     }
 }
@@ -255,26 +594,45 @@ pub fn logsumexp_1pass(xs: &[f32]) -> f32 {
 }
 
 /// Row-wise softmax: `out[r, :] = exp(x[r, :] - logsumexp(x[r, :]))`.
+/// The subtract vectorizes (exact elementwise op); `exp` stays the same
+/// scalar libm call on both paths, so the twins are bitwise identical.
 pub fn softmax_rows(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    softmax_rows_impl(x, rows, n, out, simd_enabled());
+}
+
+/// Scalar twin of [`softmax_rows`].
+pub fn softmax_rows_scalar(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    softmax_rows_impl(x, rows, n, out, false);
+}
+
+fn softmax_rows_impl(x: &[f32], rows: usize, n: usize, out: &mut [f32], simd: bool) {
     for r in 0..rows {
         let row = &x[r * n..(r + 1) * n];
         let lse = logsumexp_1pass(row);
         let orow = &mut out[r * n..(r + 1) * n];
-        for (o, &v) in orow.iter_mut().zip(row) {
-            *o = (v - lse).exp();
+        sub_scalar_into(row, lse, simd, orow);
+        for o in orow.iter_mut() {
+            *o = o.exp();
         }
     }
 }
 
 /// Row-wise log-softmax (no GEMM): `out[r, :] = x[r, :] - lse(x[r, :])`.
 pub fn log_softmax_rows(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    log_softmax_rows_impl(x, rows, n, out, simd_enabled());
+}
+
+/// Scalar twin of [`log_softmax_rows`].
+pub fn log_softmax_rows_scalar(x: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    log_softmax_rows_impl(x, rows, n, out, false);
+}
+
+fn log_softmax_rows_impl(x: &[f32], rows: usize, n: usize, out: &mut [f32], simd: bool) {
     for r in 0..rows {
         let row = &x[r * n..(r + 1) * n];
         let lse = logsumexp_1pass(row);
         let orow = &mut out[r * n..(r + 1) * n];
-        for (o, &v) in orow.iter_mut().zip(row) {
-            *o = v - lse;
-        }
+        sub_scalar_into(row, lse, simd, orow);
     }
 }
 
@@ -294,19 +652,43 @@ pub fn gather_mix_masked(
     acc: &mut [f64],
     out: &mut [f32],
 ) {
+    gather_mix_masked_impl(coef, table, width, idx, m, fill, acc, out, simd_enabled());
+}
+
+/// Scalar twin of [`gather_mix_masked`] (bitwise identical).
+#[allow(clippy::too_many_arguments)]
+pub fn gather_mix_masked_scalar(
+    coef: &[f32],
+    table: &[f32],
+    width: usize,
+    idx: &[usize],
+    m: usize,
+    fill: f32,
+    acc: &mut [f64],
+    out: &mut [f32],
+) {
+    gather_mix_masked_impl(coef, table, width, idx, m, fill, acc, out, false);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gather_mix_masked_impl(
+    coef: &[f32],
+    table: &[f32],
+    width: usize,
+    idx: &[usize],
+    m: usize,
+    fill: f32,
+    acc: &mut [f64],
+    out: &mut [f32],
+    simd: bool,
+) {
     debug_assert_eq!(coef.len(), idx.len());
     debug_assert!(m <= width && out.len() >= m && acc.len() >= m * LANES);
     out.fill(fill);
     let acc = &mut acc[..m * LANES];
     acc.fill(0.0);
-    for (kk, (&c, &t)) in coef.iter().zip(idx).enumerate() {
-        let l = kk % LANES;
-        let cv = c as f64;
-        let trow = &table[t * width..t * width + m];
-        for (v, &e) in trow.iter().enumerate() {
-            acc[v * LANES + l] += cv * e as f64;
-        }
-    }
+    gather_mix_acc(coef, table, width, idx, m, acc, simd);
+    // the final tree lives in exactly one place, shared by both paths
     for v in 0..m {
         let lanes = [
             acc[v * LANES],
@@ -315,6 +697,34 @@ pub fn gather_mix_masked(
             acc[v * LANES + 3],
         ];
         out[v] = lane_reduce(&lanes) as f32;
+    }
+}
+
+/// The accumulation phase: term `kk` lands in lane `kk % LANES` of slot
+/// `v`, ascending kk — one vector add per 4 terms on the AVX2 path,
+/// per-lane identical to the scalar statements.
+fn gather_mix_acc(
+    coef: &[f32],
+    table: &[f32],
+    width: usize,
+    idx: &[usize],
+    m: usize,
+    acc: &mut [f64],
+    simd: bool,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        unsafe { crate::utils::simd::gather_mix_acc_avx2(coef, table, width, idx, m, acc) };
+        return;
+    }
+    let _ = simd;
+    for (kk, (&c, &t)) in coef.iter().zip(idx).enumerate() {
+        let l = kk % LANES;
+        let cv = c as f64;
+        let trow = &table[t * width..t * width + m];
+        for (v, &e) in trow.iter().enumerate() {
+            acc[v * LANES + l] += cv * e as f64;
+        }
     }
 }
 
@@ -358,14 +768,56 @@ pub fn softmax_jacobian_rows(
     n: usize,
     out: &mut [f32],
 ) {
+    softmax_jacobian_rows_impl(alpha, dalpha, rows, n, out, simd_enabled());
+}
+
+/// Scalar twin of [`softmax_jacobian_rows`] (bitwise identical).
+pub fn softmax_jacobian_rows_scalar(
+    alpha: &[f32],
+    dalpha: &[f32],
+    rows: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    softmax_jacobian_rows_impl(alpha, dalpha, rows, n, out, false);
+}
+
+fn softmax_jacobian_rows_impl(
+    alpha: &[f32],
+    dalpha: &[f32],
+    rows: usize,
+    n: usize,
+    out: &mut [f32],
+    simd: bool,
+) {
     for r in 0..rows {
         let a = &alpha[r * n..(r + 1) * n];
         let da = &dalpha[r * n..(r + 1) * n];
-        let d = crate::utils::math::dot(a, da) as f32;
+        // math::dot dispatches on the same runtime condition as `simd`,
+        // and its twins are bit-identical, so either call is exact here;
+        // the scalar twin pins the scalar path for the equivalence tests
+        let d = if simd {
+            crate::utils::math::dot(a, da)
+        } else {
+            crate::utils::math::dot_scalar(a, da)
+        } as f32;
         let orow = &mut out[r * n..(r + 1) * n];
-        for i in 0..n {
-            orow[i] = a[i] * (da[i] - d);
-        }
+        jacobian_row(a, da, d, orow, simd);
+    }
+}
+
+/// Elementwise `out[i] = a[i] * (da[i] - d)` — exact f32 ops, vectorized
+/// 8-wide on the AVX2 path.
+#[inline]
+fn jacobian_row(a: &[f32], da: &[f32], d: f32, out: &mut [f32], simd: bool) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        unsafe { crate::utils::simd::jacobian_row_avx2(a, da, d, out) };
+        return;
+    }
+    let _ = simd;
+    for i in 0..a.len() {
+        out[i] = a[i] * (da[i] - d);
     }
 }
 
@@ -468,20 +920,11 @@ mod tests {
             assert_eq!(&batched[r * n..(r + 1) * n], &single[..], "row {r}");
         }
         // and log-softmax epilogue the same way
-        let mut scratch = vec![0.0f32; n];
         let mut batched_ls = vec![0.0f32; rows * n];
-        gemm_bias_logsoftmax(&x, rows, &pack, &bias, None, &mut scratch, &mut batched_ls);
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, None, &mut batched_ls);
         for r in 0..rows {
             let mut single = vec![0.0f32; n];
-            gemm_bias_logsoftmax(
-                &x[r * k..(r + 1) * k],
-                1,
-                &pack,
-                &bias,
-                None,
-                &mut scratch,
-                &mut single,
-            );
+            gemm_bias_logsoftmax(&x[r * k..(r + 1) * k], 1, &pack, &bias, None, &mut single);
             assert_eq!(&batched_ls[r * n..(r + 1) * n], &single[..], "ls row {r}");
         }
     }
@@ -511,9 +954,8 @@ mod tests {
         let bias = randv(n, 43);
         let noise = randv(rows * n, 44);
         let pack = WeightPack::new(&w, k, n, 0);
-        let mut scratch = vec![0.0f32; n];
         let mut out = vec![0.0f32; rows * n];
-        gemm_bias_logsoftmax(&x, rows, &pack, &bias, Some(&noise), &mut scratch, &mut out);
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, Some(&noise), &mut out);
         let reference = gemm_ref(&x, rows, &w, k, n, &bias);
         for r in 0..rows {
             let s: f64 = out[r * n..(r + 1) * n].iter().map(|&l| (l as f64).exp()).sum();
@@ -619,6 +1061,140 @@ mod tests {
         let mut acc = vec![1.0f32, 1.0, 1.0];
         axpy(2.0, &y, &mut acc);
         assert_eq!(acc, vec![3.0, 2.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight pack shape mismatch")]
+    fn pack_new_rejects_short_slice() {
+        // regression: a short slice must fail loudly at the boundary, not
+        // zero-fill or panic deep inside the panel loop
+        let w = randv(11, 90); // one short of 3 * 4
+        let _ = WeightPack::new(&w, 3, 4, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight pack shape mismatch")]
+    fn pack_new_rejects_long_slice() {
+        let w = randv(13, 91);
+        let _ = WeightPack::new(&w, 3, 4, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight pack shape mismatch")]
+    fn pack_refill_rejects_wrong_len() {
+        let w = randv(12, 92);
+        let mut pack = WeightPack::new(&w, 3, 4, 0);
+        pack.refill(&w[..8], 1);
+    }
+
+    #[test]
+    fn tune_file_parses_and_rejects_malformed_lines() {
+        let table = parse_tune_file(
+            "# shape-keyed tunes\n\
+             784 32 16 8   # mnist hidden\n\
+             32 10 4 2\n\
+             \n\
+             1 2 0 4       # zero row_block: rejected\n\
+             1 2 4 0       # zero panel_block: rejected\n\
+             5 5 5         # wrong field count: rejected\n\
+             a b c d       # garbage: rejected\n\
+             7 7 7 7 7     # too many fields: rejected\n",
+        );
+        assert_eq!(
+            table.get(&(784, 32)),
+            Some(&KernelTune { row_block: 16, panel_block: 8 })
+        );
+        assert_eq!(table.get(&(32, 10)), Some(&KernelTune { row_block: 4, panel_block: 2 }));
+        assert_eq!(table.len(), 2);
+    }
+
+    #[test]
+    fn tune_for_defaults_without_a_tune_file() {
+        // the env var is unset in tests; any shape falls to DEFAULT
+        assert_eq!(tune_for(784, 32), KernelTune::DEFAULT);
+        assert_eq!(tune_for(1, 1), KernelTune::DEFAULT);
+    }
+
+    #[test]
+    fn gemm_is_tune_invariant_bitwise() {
+        // the KernelTune contract: traversal order may change, bits may
+        // not — across degenerate, ragged, and oversized blockings
+        let (rows, k, n) = (7usize, 33usize, 11usize);
+        let x = randv(rows * k, 101);
+        let w = randv(k * n, 102);
+        let bias = randv(n, 103);
+        let noise = randv(rows * n, 104);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut base_t = vec![0.0f32; rows * n];
+        let mut base_ls = vec![0.0f32; rows * n];
+        gemm_bias_tanh(&x, rows, &pack, &bias, &mut base_t);
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, Some(&noise), &mut base_ls);
+        for tune in [
+            KernelTune { row_block: 1, panel_block: 1 },
+            KernelTune { row_block: 2, panel_block: 1 },
+            KernelTune { row_block: 3, panel_block: 2 },
+            KernelTune { row_block: 100, panel_block: 100 },
+            KernelTune::DEFAULT,
+        ] {
+            let mut out_t = vec![0.0f32; rows * n];
+            let mut out_ls = vec![0.0f32; rows * n];
+            gemm_bias_tanh_with(tune, &x, rows, &pack, &bias, &mut out_t);
+            gemm_bias_logsoftmax_with(tune, &x, rows, &pack, &bias, Some(&noise), &mut out_ls);
+            assert_eq!(out_t, base_t, "tanh under {tune:?}");
+            assert_eq!(out_ls, base_ls, "logsoftmax under {tune:?}");
+        }
+    }
+
+    #[test]
+    fn f32fast_is_deterministic_close_and_distinct_axis() {
+        let (rows, k, n) = (3usize, 50usize, 10usize);
+        let x = randv(rows * k, 111);
+        let w = randv(k * n, 112);
+        let bias = randv(n, 113);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let mut golden = vec![0.0f32; rows * n];
+        let mut fast = vec![0.0f32; rows * n];
+        let mut fast2 = vec![0.0f32; rows * n];
+        gemm_bias_tanh(&x, rows, &pack, &bias, &mut golden);
+        gemm_bias_tanh_f32fast(&x, rows, &pack, &bias, &mut fast);
+        gemm_bias_tanh_f32fast(&x, rows, &pack, &bias, &mut fast2);
+        // deterministic: repeated fast evaluation is bit-identical
+        assert_eq!(fast, fast2);
+        // close to the golden values — but nothing asserts bit equality:
+        // this is the non-golden method axis by design
+        for i in 0..rows * n {
+            assert!((fast[i] - golden[i]).abs() < 1e-4, "tanh[{i}]");
+        }
+        let mut golden_ls = vec![0.0f32; rows * n];
+        let mut fast_ls = vec![0.0f32; rows * n];
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, None, &mut golden_ls);
+        gemm_bias_logsoftmax_f32fast(&x, rows, &pack, &bias, None, &mut fast_ls);
+        for r in 0..rows {
+            let s: f64 =
+                fast_ls[r * n..(r + 1) * n].iter().map(|&l| (l as f64).exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4, "fast row {r} normalizes");
+        }
+        for i in 0..rows * n {
+            assert!((fast_ls[i] - golden_ls[i]).abs() < 1e-3, "ls[{i}]");
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_are_bitwise_scalar_twins_smoke() {
+        // one in-module smoke of the twin contract; the full ragged-shape
+        // property suite lives in rust/tests/simd_equivalence.rs
+        let (rows, k, n) = (5usize, 29usize, 10usize);
+        let x = randv(rows * k, 121);
+        let w = randv(k * n, 122);
+        let bias = randv(n, 123);
+        let pack = WeightPack::new(&w, k, n, 0);
+        let (mut a, mut b) = (vec![0.0f32; rows * n], vec![0.0f32; rows * n]);
+        gemm_bias_tanh(&x, rows, &pack, &bias, &mut a);
+        gemm_bias_tanh_scalar(&x, rows, &pack, &bias, &mut b);
+        assert_eq!(a, b);
+        gemm_bias_logsoftmax(&x, rows, &pack, &bias, None, &mut a);
+        gemm_bias_logsoftmax_scalar(&x, rows, &pack, &bias, None, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

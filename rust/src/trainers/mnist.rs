@@ -105,11 +105,15 @@ impl Default for MnistTrainerCfg {
 /// excluded: `steps` (run extension), `workers` (cross-worker resume is
 /// bit-identical by the determinism contract), `gate_profile_steps`
 /// (diagnostics), and the checkpoint knobs themselves.
-fn fingerprint(cfg: &MnistTrainerCfg, rules: &[InitRule]) -> Json {
+fn fingerprint(cfg: &MnistTrainerCfg, f32_fast: bool, rules: &[InitRule]) -> Json {
     checkpoint::obj(vec![
         ("trainer", Json::Str("mnist".into())),
         ("seed", checkpoint::ju64(cfg.seed)),
         ("method", Json::Str(format!("{:?}", cfg.method))),
+        // the forward tier is a trajectory-contract knob exactly like a
+        // learning rate: an f32-fast run must never silently resume a
+        // golden checkpoint (or vice versa) -- DESIGN.md §13
+        ("f32_fast", Json::Bool(f32_fast)),
         // the gate priority is inside the method Debug string already, but
         // it is a trajectory-contract knob in its own right: an explicit
         // key makes a wrong-priority resume rejection name 'priority'
@@ -224,7 +228,7 @@ pub fn train_mnist(eng: &Engine, cfg: &MnistTrainerCfg) -> Result<MnistRunResult
     // ---- checkpoint resume: restore every trajectory-bearing piece of
     // state, then continue the loop from the saved step cursor as if the
     // run had never stopped (bit-identity locked by checkpoint_resume.rs)
-    let fp = fingerprint(cfg, &rules);
+    let fp = fingerprint(cfg, eng.f32_fast(), &rules);
     let mut start_step = 0usize;
     if let Some(path) = &cfg.resume_from {
         let ck = TrainCheckpoint::load(Path::new(path))?;

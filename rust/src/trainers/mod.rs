@@ -120,7 +120,11 @@ impl<'e> GatedLoop<'e> {
     /// configurations (`rho_screen = 1`) attach nothing.
     pub fn with_screen(mut self, dim: usize, unit: usize, cfg: ScreenCfg) -> GatedLoop<'e> {
         if cfg.active() && dim > 0 {
-            self.screen = Some(ScreenStage::new(dim, unit, cfg));
+            // the screen inherits the engine's forward tier: under
+            // f32-fast the draft's scoring dots run in the same non-golden
+            // f32 tier as the forwards they stand in for (DESIGN.md §13)
+            self.screen =
+                Some(ScreenStage::new(dim, unit, cfg).with_f32_fast(self.eng.f32_fast()));
         }
         self
     }

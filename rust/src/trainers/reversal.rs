@@ -88,11 +88,13 @@ impl Default for ReversalTrainerCfg {
 /// Config identity stored in (and validated against) checkpoints. Same
 /// exclusions as the MNIST fingerprint: `steps`, `workers`, and the
 /// checkpoint knobs are outside the trajectory contract.
-fn fingerprint(cfg: &ReversalTrainerCfg, rules: &[InitRule]) -> Json {
+fn fingerprint(cfg: &ReversalTrainerCfg, f32_fast: bool, rules: &[InitRule]) -> Json {
     checkpoint::obj(vec![
         ("trainer", Json::Str("reversal".into())),
         ("seed", checkpoint::ju64(cfg.seed)),
         ("method", Json::Str(format!("{:?}", cfg.method))),
+        // forward-tier knob: pinned like a learning rate (DESIGN.md §13)
+        ("f32_fast", Json::Bool(f32_fast)),
         // explicit fingerprint membership for the gate priority (see the
         // MNIST fingerprint: wrong-priority resumes reject readably)
         ("priority", Json::Str(priority_key(&cfg.method))),
@@ -181,7 +183,7 @@ pub fn train_reversal(eng: &Engine, cfg: &ReversalTrainerCfg) -> Result<Reversal
     let mut ep_has = vec![false; batch];
 
     // ---- checkpoint resume (bit-identity locked by checkpoint_resume.rs)
-    let fp = fingerprint(cfg, &rules);
+    let fp = fingerprint(cfg, eng.f32_fast(), &rules);
     let mut start_step = 0usize;
     if let Some(path) = &cfg.resume_from {
         let ck = TrainCheckpoint::load(Path::new(path))?;

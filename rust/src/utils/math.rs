@@ -70,7 +70,23 @@ pub fn binary_entropy(w: f64) -> f64 {
 /// `i` goes to lane `i % LANES`, ascending) and combined by
 /// [`lane_reduce`]. The value is a pure function of the inputs and their
 /// length; see the module docs for why the order is fixed.
+///
+/// With `--features simd` on an AVX2 host this routes through the vector
+/// lowering in `utils::simd`, which performs the identical per-lane
+/// operations and tree and is therefore bit-identical to [`dot_scalar`]
+/// (locked by `rust/tests/simd_equivalence.rs`).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2() {
+        return unsafe { super::simd::dot_avx2(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// The scalar twin of [`dot`]: always the plain lane-accumulated loop,
+/// regardless of features. Exposed so equivalence tests (and callers that
+/// want the reference path explicitly) can compare against it.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f64 {
     let n = a.len().min(b.len());
     let mut acc = [0.0f64; LANES];
     let chunks = n / LANES;
@@ -85,6 +101,35 @@ pub fn dot(a: &[f32], b: &[f32]) -> f64 {
         acc[l] += a[base + l] as f64 * b[base + l] as f64;
     }
     lane_reduce(&acc)
+}
+
+/// The fixed lane tree in f32 — only for the explicitly non-golden
+/// `f32-fast` method axis (DESIGN.md §13). Never on the golden path.
+#[inline]
+pub fn lane_reduce_f32(acc: &[f32; LANES]) -> f32 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// `f32-fast` dot: same lane assignment and tree as [`dot`] but the
+/// accumulators stay f32, halving accumulator bandwidth at the cost of
+/// precision. **Non-golden**: screen/forward-tier only, never the gated
+/// backward, never checkpoint or contract values. Deterministic (the
+/// order is still shape-keyed) but not bit-comparable to [`dot`].
+pub fn dot_f32fast(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[base + l] * b[base + l];
+        }
+    }
+    let base = chunks * LANES;
+    for l in 0..(n - base) {
+        acc[l] += a[base + l] * b[base + l];
+    }
+    lane_reduce_f32(&acc)
 }
 
 /// L2 norm.
@@ -103,13 +148,34 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Component of `a` perpendicular to `dir` (returns squared norm). Same
-/// fixed lane reduction as [`dot`].
+/// fixed lane reduction as [`dot`]; dispatches to the AVX2 lowering under
+/// the same conditions and with the same bit-identity guarantee.
 pub fn perp_norm2(a: &[f32], dir: &[f32]) -> f64 {
     let nd2 = dot(dir, dir);
     if nd2 < 1e-300 {
         return dot(a, a);
     }
     let proj = dot(a, dir) / nd2;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2() {
+        return unsafe { super::simd::perp_acc_avx2(a, dir, proj) };
+    }
+    perp_acc_scalar(a, dir, proj)
+}
+
+/// The scalar twin of [`perp_norm2`], entered after the shared projection
+/// computation (which itself uses the dispatched [`dot`], whose twins are
+/// bit-identical).
+pub fn perp_norm2_scalar(a: &[f32], dir: &[f32]) -> f64 {
+    let nd2 = dot_scalar(dir, dir);
+    if nd2 < 1e-300 {
+        return dot_scalar(a, a);
+    }
+    let proj = dot_scalar(a, dir) / nd2;
+    perp_acc_scalar(a, dir, proj)
+}
+
+fn perp_acc_scalar(a: &[f32], dir: &[f32], proj: f64) -> f64 {
     let n = a.len().min(dir.len());
     let mut acc = [0.0f64; LANES];
     let chunks = n / LANES;
@@ -250,6 +316,33 @@ mod tests {
             })
             .sum();
         assert!((perp_norm2(&a, &d) - seq).abs() < 1e-9 * (1.0 + seq));
+    }
+
+    #[test]
+    fn dispatched_dot_and_perp_are_bitwise_scalar_twins() {
+        // holds in every build configuration: without `simd` the dispatch
+        // IS the scalar twin; with it, the AVX2 lowering must reproduce
+        // the twin bit for bit (the §13 contract)
+        for n in [0usize, 1, 3, 4, 5, 8, 31, 784] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.37).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 7 % 19) as f32 - 9.0) * 0.11).collect();
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(
+                perp_norm2(&a, &b).to_bits(),
+                perp_norm2_scalar(&a, &b).to_bits(),
+                "perp n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_f32fast_is_deterministic_and_close_but_non_golden() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i as f32 * 0.3).cos()).collect();
+        // deterministic: repeated evaluation is bit-identical
+        assert_eq!(dot_f32fast(&a, &b).to_bits(), dot_f32fast(&a, &b).to_bits());
+        // close to the f64 golden value, but nothing asserts bit equality
+        assert!((dot_f32fast(&a, &b) as f64 - dot(&a, &b)).abs() < 1e-3);
     }
 
     #[test]

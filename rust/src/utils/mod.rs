@@ -3,5 +3,7 @@
 pub mod json;
 pub mod math;
 pub mod rng;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
 pub mod stats;
 pub mod toml;

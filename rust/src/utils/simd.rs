@@ -1,0 +1,352 @@
+//! AVX2 lowering of the lane-tree kernels (`--features simd`, x86_64).
+//!
+//! This module exists only under `cfg(all(feature = "simd", target_arch =
+//! "x86_64"))`; every caller dispatches at runtime through [`avx2`] and
+//! falls back to its scalar twin when the host lacks AVX2 (or on other
+//! architectures, where this module is compiled out entirely).
+//!
+//! **Why these functions are bit-identical to their scalar twins.** The
+//! determinism contract (DESIGN.md §9, §13) fixes element `i` into lane
+//! `i % LANES` in ascending index order, combined by the tree
+//! `(l0 + l1) + (l2 + l3)`. A `LANES`-wide f64 vector register *is* that
+//! lane array: one vector add per chunk performs the four scalar
+//! `acc[l] += x * w` statements with identical IEEE-754 rounding, because
+//! vector `mul_pd`/`add_pd` are exactly rounded per element just like
+//! their scalar counterparts. Three rules keep it exact:
+//!
+//! 1. **Never fuse.** Multiplies and adds stay separate instructions
+//!    (`_mm256_mul_pd` then `_mm256_add_pd`); an FMA would skip the
+//!    intermediate rounding the scalar code performs. (The debug-vs-
+//!    release CI step would catch an accidental contraction.)
+//! 2. **Never reassociate.** Horizontal reduction uses the same
+//!    `(l0 + l1) + (l2 + l3)` tree as `utils::math::lane_reduce` —
+//!    either literally (store + `lane_reduce`) or via the
+//!    `hadd`/`permute2f128` sequence whose adds are that exact tree.
+//!    (IEEE-754 addition is commutative in value for non-NaN operands,
+//!    so `hadd`'s `hi + lo` pair order equals `l0 + l1` bitwise.)
+//! 3. **Transcendentals stay scalar.** `tanh`/`exp`/`ln` go through the
+//!    same libm calls as the scalar path; only loads, converts, `mul`,
+//!    `sub`, and `add` are vectorized.
+//!
+//! Ragged tails (`len % LANES != 0`) run the scalar twin's own tail
+//! statements, so every length — not just vector-friendly ones — reduces
+//! in the contract order.
+
+use core::arch::x86_64::*;
+use std::sync::OnceLock;
+
+use super::math::{lane_reduce, LANES};
+
+/// Runtime CPU-feature dispatch, detected once per process. `true` means
+/// the `*_avx2` entry points in this module are safe to call.
+pub fn avx2() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// One register tile of the GEMM microkernel: `sums[j]` receives the
+/// lane-reduced `sum_kk x[kk] * panel[kk * PANEL + j]` for the four panel
+/// columns (`PANEL == LANES == 4`). Bitwise equal to `panel_dot` +
+/// `lane_reduce` per column.
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true, `xr.len() >= k`, and
+/// `panel.len() >= k * 4` (the packed-panel layout guarantees the
+/// latter exactly).
+#[target_feature(enable = "avx2")]
+pub unsafe fn panel_dot_avx2(xr: &[f32], panel: &[f32], k: usize, sums: &mut [f64; 4]) {
+    debug_assert!(xr.len() >= k && panel.len() >= k * 4);
+    let xp = xr.as_ptr();
+    let pp = panel.as_ptr();
+    let mut a0 = _mm256_setzero_pd();
+    let mut a1 = _mm256_setzero_pd();
+    let mut a2 = _mm256_setzero_pd();
+    let mut a3 = _mm256_setzero_pd();
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(base)));
+        // four packed rows kk = base..base+4, each holding the 4 panel
+        // columns for that kk
+        let r0 = _mm_loadu_ps(pp.add(base * 4));
+        let r1 = _mm_loadu_ps(pp.add(base * 4 + 4));
+        let r2 = _mm_loadu_ps(pp.add(base * 4 + 8));
+        let r3 = _mm_loadu_ps(pp.add(base * 4 + 12));
+        // 4x4 f32 transpose: after this, c_j lane l = panel[(base+l)*4+j]
+        let t0 = _mm_unpacklo_ps(r0, r1);
+        let t1 = _mm_unpackhi_ps(r0, r1);
+        let t2 = _mm_unpacklo_ps(r2, r3);
+        let t3 = _mm_unpackhi_ps(r2, r3);
+        let c0 = _mm_movelh_ps(t0, t2);
+        let c1 = _mm_movehl_ps(t2, t0);
+        let c2 = _mm_movelh_ps(t1, t3);
+        let c3 = _mm_movehl_ps(t3, t1);
+        // separate mul + add (rule 1): lane l performs exactly the scalar
+        // `acc[j][l] += xr[base+l] as f64 * panel[(base+l)*4+j] as f64`
+        a0 = _mm256_add_pd(a0, _mm256_mul_pd(xv, _mm256_cvtps_pd(c0)));
+        a1 = _mm256_add_pd(a1, _mm256_mul_pd(xv, _mm256_cvtps_pd(c1)));
+        a2 = _mm256_add_pd(a2, _mm256_mul_pd(xv, _mm256_cvtps_pd(c2)));
+        a3 = _mm256_add_pd(a3, _mm256_mul_pd(xv, _mm256_cvtps_pd(c3)));
+    }
+    let base = chunks * 4;
+    if base == k {
+        // horizontal (l0+l1)+(l2+l3) for all four columns at once:
+        // hadd_pd pairs lanes {0,1} and {2,3} within each 128-bit half,
+        // the permutes gather the (l0+l1) terms into `lo` and the
+        // (l2+l3) terms into `hi`, and one add_pd finishes the tree
+        let h01 = _mm256_hadd_pd(a0, a1);
+        let h23 = _mm256_hadd_pd(a2, a3);
+        let lo = _mm256_permute2f128_pd(h01, h23, 0x20);
+        let hi = _mm256_permute2f128_pd(h01, h23, 0x31);
+        _mm256_storeu_pd(sums.as_mut_ptr(), _mm256_add_pd(lo, hi));
+    } else {
+        // ragged k: spill the lanes and run the scalar twin's own tail +
+        // tree so the reduction order is the contract's, not a shortcut
+        let mut acc = [[0.0f64; 4]; 4];
+        _mm256_storeu_pd(acc[0].as_mut_ptr(), a0);
+        _mm256_storeu_pd(acc[1].as_mut_ptr(), a1);
+        _mm256_storeu_pd(acc[2].as_mut_ptr(), a2);
+        _mm256_storeu_pd(acc[3].as_mut_ptr(), a3);
+        for l in 0..(k - base) {
+            let xv = *xp.add(base + l) as f64;
+            for (j, accj) in acc.iter_mut().enumerate() {
+                accj[l] += xv * *pp.add((base + l) * 4 + j) as f64;
+            }
+        }
+        for (s, accj) in sums.iter_mut().zip(acc.iter()) {
+            *s = lane_reduce(accj);
+        }
+    }
+}
+
+/// Lane-reduced dot product; bitwise equal to `utils::math::dot_scalar`.
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut accv = _mm256_setzero_pd();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(base)));
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(base)));
+        accv = _mm256_add_pd(accv, _mm256_mul_pd(av, bv));
+    }
+    let mut acc = [0.0f64; LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), accv);
+    let base = chunks * LANES;
+    for l in 0..(n - base) {
+        acc[l] += *ap.add(base + l) as f64 * *bp.add(base + l) as f64;
+    }
+    lane_reduce(&acc)
+}
+
+/// The perpendicular-component accumulation of `utils::math::perp_norm2`
+/// given the already-computed projection coefficient: lane-reduced
+/// `sum (a[i] - proj * dir[i])^2`. Bitwise equal to the scalar loop.
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true.
+#[target_feature(enable = "avx2")]
+pub unsafe fn perp_acc_avx2(a: &[f32], dir: &[f32], proj: f64) -> f64 {
+    let n = a.len().min(dir.len());
+    let ap = a.as_ptr();
+    let dp = dir.as_ptr();
+    let projv = _mm256_set1_pd(proj);
+    let mut accv = _mm256_setzero_pd();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(base)));
+        let dv = _mm256_cvtps_pd(_mm_loadu_ps(dp.add(base)));
+        let pv = _mm256_sub_pd(av, _mm256_mul_pd(projv, dv));
+        accv = _mm256_add_pd(accv, _mm256_mul_pd(pv, pv));
+    }
+    let mut acc = [0.0f64; LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), accv);
+    let base = chunks * LANES;
+    for l in 0..(n - base) {
+        let p = *ap.add(base + l) as f64 - proj * *dp.add(base + l) as f64;
+        acc[l] += p * p;
+    }
+    lane_reduce(&acc)
+}
+
+/// The accumulation phase of `gather_mix_masked`: `acc[v * LANES + l] +=
+/// coef[kk] * table[idx[kk] * width + v]` for `kk % LANES == l`, ascending
+/// kk. The caller zeroes `acc` first and performs the shared scalar
+/// lane-reduce afterwards, so the tree stays in exactly one place.
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true, `acc.len() >= m * LANES`,
+/// `idx[kk] * width + m <= table.len()` for all kk, and
+/// `idx.len() == coef.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather_mix_acc_avx2(
+    coef: &[f32],
+    table: &[f32],
+    width: usize,
+    idx: &[usize],
+    m: usize,
+    acc: &mut [f64],
+) {
+    debug_assert!(acc.len() >= m * LANES && idx.len() == coef.len());
+    let chunks = coef.len() / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        let cv = _mm256_cvtps_pd(_mm_loadu_ps(coef.as_ptr().add(base)));
+        let t0 = table.as_ptr().add(idx[base] * width);
+        let t1 = table.as_ptr().add(idx[base + 1] * width);
+        let t2 = table.as_ptr().add(idx[base + 2] * width);
+        let t3 = table.as_ptr().add(idx[base + 3] * width);
+        for v in 0..m {
+            // set_pd takes lanes high-to-low: lane l = row base+l, slot v
+            let tv = _mm256_set_pd(
+                *t3.add(v) as f64,
+                *t2.add(v) as f64,
+                *t1.add(v) as f64,
+                *t0.add(v) as f64,
+            );
+            let av = _mm256_loadu_pd(acc.as_ptr().add(v * LANES));
+            _mm256_storeu_pd(
+                acc.as_mut_ptr().add(v * LANES),
+                _mm256_add_pd(av, _mm256_mul_pd(cv, tv)),
+            );
+        }
+    }
+    // ragged tail: the scalar twin's own statements
+    for kk in chunks * LANES..coef.len() {
+        let l = kk % LANES;
+        let cv = coef[kk] as f64;
+        let trow = &table[idx[kk] * width..idx[kk] * width + m];
+        for (v, &e) in trow.iter().enumerate() {
+            acc[v * LANES + l] += cv * e as f64;
+        }
+    }
+}
+
+/// Elementwise softmax-Jacobian row `out[i] = a[i] * (da[i] - d)`, all in
+/// f32 exactly like the scalar statement (no reduction involved, so
+/// 8-wide f32 is bitwise exact).
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true and `da.len() >= a.len()`,
+/// `out.len() >= a.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn jacobian_row_avx2(a: &[f32], da: &[f32], d: f32, out: &mut [f32]) {
+    let n = a.len();
+    debug_assert!(da.len() >= n && out.len() >= n);
+    let d8 = _mm256_set1_ps(d);
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        let av = _mm256_loadu_ps(a.as_ptr().add(base));
+        let dv = _mm256_loadu_ps(da.as_ptr().add(base));
+        _mm256_storeu_ps(
+            out.as_mut_ptr().add(base),
+            _mm256_mul_ps(av, _mm256_sub_ps(dv, d8)),
+        );
+    }
+    for i in chunks * 8..n {
+        out[i] = a[i] * (da[i] - d);
+    }
+}
+
+/// `out[i] = src[i] - s`, elementwise f32 (the log-softmax normalization
+/// subtract). Bitwise equal to the scalar loop.
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true and `out.len() >= src.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sub_scalar_avx2(src: &[f32], s: f32, out: &mut [f32]) {
+    let n = src.len();
+    debug_assert!(out.len() >= n);
+    let s8 = _mm256_set1_ps(s);
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        let v = _mm256_loadu_ps(src.as_ptr().add(base));
+        _mm256_storeu_ps(out.as_mut_ptr().add(base), _mm256_sub_ps(v, s8));
+    }
+    for i in chunks * 8..n {
+        out[i] = src[i] - s;
+    }
+}
+
+/// In-place `xs[i] -= s` (the fused-GEMM log-softmax second pass).
+///
+/// # Safety
+/// Caller must ensure `avx2()` is true.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sub_scalar_inplace_avx2(xs: &mut [f32], s: f32) {
+    let s8 = _mm256_set1_ps(s);
+    let n = xs.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        let v = _mm256_loadu_ps(xs.as_ptr().add(base));
+        _mm256_storeu_ps(xs.as_mut_ptr().add(base), _mm256_sub_ps(v, s8));
+    }
+    for x in &mut xs[chunks * 8..] {
+        *x -= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Direct intrinsic-level twins; the public dispatched-vs-scalar
+    //! property suite lives in rust/tests/simd_equivalence.rs and runs in
+    //! both feature configurations.
+    use super::*;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..n)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64 - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot_avx2_is_bitwise_scalar_dot() {
+        if !avx2() {
+            return; // host without AVX2: dispatch never reaches these paths
+        }
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 31, 784] {
+            let a = randv(n, 1 + n as u64);
+            let b = randv(n, 100 + n as u64);
+            let simd = unsafe { dot_avx2(&a, &b) };
+            let scalar = crate::utils::math::dot_scalar(&a, &b);
+            assert_eq!(simd.to_bits(), scalar.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn panel_dot_avx2_matches_scalar_tree_both_reduce_paths() {
+        if !avx2() {
+            return;
+        }
+        // k % 4 == 0 exercises the hadd tree, the rest the spill + tail
+        for k in [4usize, 8, 784, 1, 2, 3, 5, 7, 33] {
+            let xr = randv(k, 7 + k as u64);
+            let panel = randv(k * 4, 200 + k as u64);
+            let mut sums = [0.0f64; 4];
+            unsafe { panel_dot_avx2(&xr, &panel, k, &mut sums) };
+            for (j, &s) in sums.iter().enumerate() {
+                let mut acc = [0.0f64; LANES];
+                for (kk, &x) in xr.iter().enumerate() {
+                    acc[kk % LANES] += x as f64 * panel[kk * 4 + j] as f64;
+                }
+                assert_eq!(s.to_bits(), lane_reduce(&acc).to_bits(), "k={k} j={j}");
+            }
+        }
+    }
+}

@@ -14,7 +14,10 @@
 //!         {"section": s, "method": s, "workers": int >= 1,
 //!          "mean_ns_per_step": num > 0, "unit": s,
 //!          "throughput_per_s": num >= 0,
-//!          "throughput_per_s_per_worker": num >= 0}
+//!          "throughput_per_s_per_worker": num >= 0,
+//!          // optional roofline columns (kernel bench only):
+//!          "bytes_per_call": num > 0, "gbytes_per_s": num >= 0,
+//!          "simd": 0 | 1}
 //!       ]
 //!     }
 //!   }
@@ -107,6 +110,32 @@ fn bench_json_matches_schema_2() {
                 per_worker >= 0.0 && per_worker <= tput * 1.0001 + 1e-9,
                 "{what}: per-worker throughput {per_worker} exceeds total {tput}"
             );
+            // optional extras are allowlisted: an unknown key means the
+            // sink and this lock disagree (or the file was hand-edited)
+            let known = [
+                "section",
+                "method",
+                "unit",
+                "workers",
+                "mean_ns_per_step",
+                "throughput_per_s",
+                "throughput_per_s_per_worker",
+                "bytes_per_call",
+                "gbytes_per_s",
+                "simd",
+            ];
+            for key in entry.as_obj().unwrap().keys() {
+                assert!(known.contains(&key.as_str()), "{what}: unknown key '{key}'");
+            }
+            if let Some(b) = entry.get("bytes_per_call").and_then(Json::as_f64) {
+                assert!(b > 0.0 && b.is_finite(), "{what}: bad bytes_per_call {b}");
+            }
+            if let Some(g) = entry.get("gbytes_per_s").and_then(Json::as_f64) {
+                assert!(g >= 0.0 && g.is_finite(), "{what}: bad gbytes_per_s {g}");
+            }
+            if let Some(s) = entry.get("simd").and_then(Json::as_f64) {
+                assert!(s == 0.0 || s == 1.0, "{what}: simd must be 0 or 1, got {s}");
+            }
         }
     }
 }
