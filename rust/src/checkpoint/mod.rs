@@ -45,9 +45,11 @@ use crate::utils::rng::Pcg32;
 pub const MAGIC: &str = "KONDO-CKPT";
 /// v2: the ledger codec grew the fault/admission counters of the distrib
 /// actor–learner runtime (quarantine, staleness, shedding, supervisor).
-/// The codec is strict both ways, so v1 files are rejected by the version
-/// gate instead of resuming with silently-zeroed counters.
-pub const VERSION: u32 = 2;
+/// v3: the ledger codec grew the wire-level counters of the cross-process
+/// transport (corrupt frames, reconnects, handshake rejects).
+/// The codec is strict both ways, so older files are rejected by the
+/// version gate instead of resuming with silently-zeroed counters.
+pub const VERSION: u32 = 3;
 
 /// Checkpointing knobs threaded from `ExpConfig` into the trainer cfgs.
 #[derive(Debug, Clone)]
@@ -195,6 +197,9 @@ fn ledger_to_json(l: &Ledger) -> Json {
         ("actor_crashes", ju64(l.actor_crashes)),
         ("actor_restarts", ju64(l.actor_restarts)),
         ("actor_timeouts", ju64(l.actor_timeouts)),
+        ("wire_corrupt_frames", ju64(l.wire_corrupt_frames)),
+        ("wire_reconnects", ju64(l.wire_reconnects)),
+        ("handshake_rejects", ju64(l.handshake_rejects)),
     ])
 }
 
@@ -218,6 +223,10 @@ fn ledger_from_json(j: &Json) -> Result<Ledger> {
     l.actor_crashes = pu64(field(j, "actor_crashes")?, "ledger.actor_crashes")?;
     l.actor_restarts = pu64(field(j, "actor_restarts")?, "ledger.actor_restarts")?;
     l.actor_timeouts = pu64(field(j, "actor_timeouts")?, "ledger.actor_timeouts")?;
+    l.wire_corrupt_frames =
+        pu64(field(j, "wire_corrupt_frames")?, "ledger.wire_corrupt_frames")?;
+    l.wire_reconnects = pu64(field(j, "wire_reconnects")?, "ledger.wire_reconnects")?;
+    l.handshake_rejects = pu64(field(j, "handshake_rejects")?, "ledger.handshake_rejects")?;
     let Json::Obj(hist) = field(j, "bucket_hist")? else {
         bail!("checkpoint field 'ledger.bucket_hist': expected an object");
     };
@@ -585,6 +594,9 @@ mod tests {
         ledger.record_actor_crash();
         ledger.record_actor_restart();
         ledger.record_actor_timeout();
+        ledger.record_wire_corrupt_frame();
+        ledger.record_wire_reconnect();
+        ledger.record_handshake_rejects(2);
         TrainCheckpoint {
             fingerprint: obj(vec![
                 ("trainer", Json::Str("unit".into())),

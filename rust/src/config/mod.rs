@@ -60,6 +60,16 @@ pub struct ExpConfig {
     pub heartbeat_ms: u64,
     /// per-slot respawn budget before an actor slot is left dead
     pub max_respawns: u32,
+    /// distributed fleet carrier: `channel` (in-process threads) or
+    /// `socket` (actor subprocesses over Unix sockets)
+    pub transport: String,
+    /// directory for the learner's socket file; empty = system temp dir
+    pub socket_dir: String,
+    /// per-frame wire read/write deadline (ms, socket transport)
+    pub wire_deadline_ms: u64,
+    /// base reconnect backoff (ms, socket transport; doubles per
+    /// consecutive loss, capped, jittered)
+    pub reconnect_backoff_ms: u64,
     /// route forward-tier GEMMs through the **non-golden** f32-fast
     /// kernels (screen/forward only, never the gated backward; DESIGN.md
     /// §13). A method-axis knob: it enters checkpoint fingerprints.
@@ -92,6 +102,10 @@ impl Default for ExpConfig {
             fault_spec: String::new(),
             heartbeat_ms: 1000,
             max_respawns: 2,
+            transport: "channel".into(),
+            socket_dir: String::new(),
+            wire_deadline_ms: 2000,
+            reconnect_backoff_ms: 25,
             f32_fast: false,
         }
     }
@@ -171,6 +185,18 @@ impl ExpConfig {
         if let Some(v) = doc.i64("exp.max_respawns") {
             self.max_respawns = v.max(0) as u32;
         }
+        if let Some(v) = doc.str("exp.transport") {
+            self.transport = v.to_string();
+        }
+        if let Some(v) = doc.str("exp.socket_dir") {
+            self.socket_dir = v.to_string();
+        }
+        if let Some(v) = doc.i64("exp.wire_deadline_ms") {
+            self.wire_deadline_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.i64("exp.reconnect_backoff_ms") {
+            self.reconnect_backoff_ms = v.max(1) as u64;
+        }
         if let Some(v) = doc.bool("exp.f32_fast") {
             self.f32_fast = v;
         }
@@ -210,9 +236,14 @@ impl ExpConfig {
     /// The distributed-runtime configuration these knobs describe, for a
     /// given method and seed. The CLI `train distrib` arm and the `dist`
     /// experiment driver both build from here so the knob plumbing has
-    /// exactly one owner.
-    pub fn distrib_cfg(&self, method: crate::algo::Method, seed: u64) -> crate::distrib::DistribCfg {
-        crate::distrib::DistribCfg {
+    /// exactly one owner. Errors on an unknown `transport` name — at
+    /// config time, before a run starts.
+    pub fn distrib_cfg(
+        &self,
+        method: crate::algo::Method,
+        seed: u64,
+    ) -> Result<crate::distrib::DistribCfg> {
+        Ok(crate::distrib::DistribCfg {
             method,
             lr: self.lr_mnist,
             steps: self.mnist_steps,
@@ -229,7 +260,17 @@ impl ExpConfig {
             record_to: None,
             checkpoint: self.checkpoint_cfg(),
             resume_from: self.resume_from_opt(),
-        }
+            transport: crate::distrib::TransportKind::parse(&self.transport)?,
+            artifacts_dir: self.artifacts_dir.clone(),
+            socket_dir: if self.socket_dir.is_empty() {
+                None
+            } else {
+                Some(self.socket_dir.clone())
+            },
+            wire_deadline_ms: self.wire_deadline_ms,
+            reconnect_backoff_ms: self.reconnect_backoff_ms,
+            actor_bin: None,
+        })
     }
 
     /// The resume source, or `None` for a fresh run.
@@ -261,6 +302,8 @@ impl ExpConfig {
             "resume_from",
             "priority",
             "fault_spec",
+            "transport",
+            "socket_dir",
         ];
         let quoted;
         let value_toml = if STR_KEYS.contains(&key) && !value.starts_with('"') {
@@ -374,7 +417,7 @@ mod tests {
         cfg.apply_override("stale_penalty", "0.5").unwrap();
         cfg.apply_override("heartbeat_ms", "250").unwrap();
         cfg.apply_override("max_respawns", "0").unwrap();
-        let d = cfg.distrib_cfg(crate::algo::Method::Pg, 7);
+        let d = cfg.distrib_cfg(crate::algo::Method::Pg, 7).unwrap();
         assert_eq!(d.fault_spec, "crash@5,poison@8:nan_u:4");
         assert_eq!(d.actors, 4);
         assert_eq!(d.lag, 3);
@@ -383,6 +426,9 @@ mod tests {
         assert_eq!(d.max_respawns, 0);
         assert_eq!(d.seed, 7);
         assert_eq!(d.steps, cfg.mnist_steps);
+        assert_eq!(d.transport, crate::distrib::TransportKind::Channel);
+        assert_eq!(d.artifacts_dir, cfg.artifacts_dir, "actors open the same artifacts");
+        assert!(d.socket_dir.is_none(), "empty socket_dir means the temp dir");
         // clamps: a zero fleet and out-of-range decay fall back sanely
         cfg.apply_override("actors", "0").unwrap();
         assert_eq!(cfg.actors, 1);
@@ -395,6 +441,29 @@ mod tests {
         cfg.apply_doc(&TomlDoc::parse("[exp]\nactors = 3\nfault_spec = \"stall@2:900\"").unwrap());
         assert_eq!(cfg.actors, 3);
         assert_eq!(cfg.fault_spec, "stall@2:900");
+    }
+
+    #[test]
+    fn transport_knobs_thread_through() {
+        let mut cfg = ExpConfig::default();
+        // transport and socket_dir are string keys: bare CLI values work
+        cfg.apply_override("transport", "socket").unwrap();
+        cfg.apply_override("socket_dir", "/tmp/kondo-socks").unwrap();
+        cfg.apply_override("wire_deadline_ms", "500").unwrap();
+        cfg.apply_override("reconnect_backoff_ms", "40").unwrap();
+        let d = cfg.distrib_cfg(crate::algo::Method::Pg, 0).unwrap();
+        assert_eq!(d.transport, crate::distrib::TransportKind::Socket);
+        assert_eq!(d.socket_dir.as_deref(), Some("/tmp/kondo-socks"));
+        assert_eq!(d.wire_deadline_ms, 500);
+        assert_eq!(d.reconnect_backoff_ms, 40);
+        // degenerate deadlines clamp instead of disabling the wire clock
+        cfg.apply_override("wire_deadline_ms", "0").unwrap();
+        assert_eq!(cfg.wire_deadline_ms, 1);
+        cfg.apply_override("reconnect_backoff_ms", "-5").unwrap();
+        assert_eq!(cfg.reconnect_backoff_ms, 1);
+        // a typo'd transport errors at config time, not mid-run
+        cfg.apply_override("transport", "tcp").unwrap();
+        assert!(cfg.distrib_cfg(crate::algo::Method::Pg, 0).is_err());
     }
 
     #[test]

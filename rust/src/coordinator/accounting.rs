@@ -60,6 +60,16 @@ pub struct Ledger {
     pub actor_restarts: u64,
     /// heartbeat timeouts (actor alive but silent past the deadline)
     pub actor_timeouts: u64,
+    /// wire frames dropped as damaged (torn mid-flight or checksum
+    /// mismatch) -- the byte-level tier of quarantine-don't-crash
+    /// (distrib/wire.rs); zero on in-process transports
+    pub wire_corrupt_frames: u64,
+    /// actor connections re-established after a sever (distinct from
+    /// `actor_restarts`, which counts announced deaths)
+    pub wire_reconnects: u64,
+    /// actor connection attempts rejected at the handshake (wrong
+    /// magic/version/run-fingerprint)
+    pub handshake_rejects: u64,
 }
 
 impl Ledger {
@@ -138,6 +148,22 @@ impl Ledger {
         self.actor_timeouts += 1;
     }
 
+    /// A wire frame dropped as damaged (torn or checksum-failed).
+    pub fn record_wire_corrupt_frame(&mut self) {
+        self.wire_corrupt_frames += 1;
+    }
+
+    /// An actor connection re-established after a sever.
+    pub fn record_wire_reconnect(&mut self) {
+        self.wire_reconnects += 1;
+    }
+
+    /// Handshake rejections, drained in bulk from the transport's
+    /// accept loop at the end of a run.
+    pub fn record_handshake_rejects(&mut self, n: u64) {
+        self.handshake_rejects += n;
+    }
+
     /// Fig 3 cost model in forward-sample equivalents, using the gate's
     /// idealized backward count.
     pub fn total_compute(&self, cost_ratio: f64) -> f64 {
@@ -212,6 +238,9 @@ impl Ledger {
         self.actor_crashes += other.actor_crashes;
         self.actor_restarts += other.actor_restarts;
         self.actor_timeouts += other.actor_timeouts;
+        self.wire_corrupt_frames += other.wire_corrupt_frames;
+        self.wire_reconnects += other.wire_reconnects;
+        self.handshake_rejects += other.handshake_rejects;
     }
 }
 
@@ -456,6 +485,10 @@ mod tests {
         l.record_actor_restart();
         l.record_actor_timeout();
         l.record_actor_timeout();
+        l.record_wire_corrupt_frame();
+        l.record_wire_corrupt_frame();
+        l.record_wire_reconnect();
+        l.record_handshake_rejects(3);
         assert_eq!(l.quarantined_samples, 10);
         assert_eq!(l.quarantined_batches, 1);
         assert_eq!(l.stale_samples, 16);
@@ -464,6 +497,9 @@ mod tests {
         assert_eq!(l.actor_crashes, 1);
         assert_eq!(l.actor_restarts, 1);
         assert_eq!(l.actor_timeouts, 2);
+        assert_eq!(l.wire_corrupt_frames, 2);
+        assert_eq!(l.wire_reconnects, 1);
+        assert_eq!(l.handshake_rejects, 3);
         let mut t = Ledger::new();
         t.merge(&l);
         t.merge(&l);
@@ -475,6 +511,9 @@ mod tests {
         assert_eq!(t.actor_crashes, 2);
         assert_eq!(t.actor_restarts, 2);
         assert_eq!(t.actor_timeouts, 4);
+        assert_eq!(t.wire_corrupt_frames, 4);
+        assert_eq!(t.wire_reconnects, 2);
+        assert_eq!(t.handshake_rejects, 6);
     }
 
     #[test]

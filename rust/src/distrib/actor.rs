@@ -12,10 +12,13 @@
 //! distributed path: the learner's trajectory is a fold over per-step
 //! rollouts that nobody's scheduling can perturb.
 //!
-//! Fault injection lives here too: the actor consults the shared
-//! `FaultPlan` when it picks up a work item and crashes, stalls, or
-//! poisons its own reply accordingly — downstream, the learner has no
-//! idea faults exist; it only sees what a misbehaving actor would send.
+//! Fault injection executes here too: the learner owns the consume-once
+//! `FaultPlan` and ships each step's fault order inside the `WorkItem`,
+//! so the actor just obeys — crash, stall, or poison its own reply.
+//! Wire-level fault kinds (torn/partial/bitflip/disconnect) are byte
+//! damage; they only mean something to a transport that carries bytes
+//! and are ignored by this in-process loop (the socket actor in
+//! distrib/socket.rs executes them).
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Duration;
@@ -128,15 +131,14 @@ impl<'e> ActorCtx<'e> {
 }
 
 /// Thread body for one actor slot: receive work until shutdown (explicit
-/// message or learner hangup), applying any fault the plan schedules for
-/// the step in hand. Crashes and compute errors announce themselves with
-/// a `Died` message carrying the orphaned step so the supervisor can
-/// re-dispatch without waiting out a heartbeat.
+/// message or learner hangup), executing any fault order the work item
+/// carries. Crashes and compute errors announce themselves with a `Died`
+/// message carrying the orphaned step so the supervisor can re-dispatch
+/// without waiting out a heartbeat.
 pub fn actor_loop(
     eng: &Engine,
     actor: usize,
     seed: u64,
-    plan: &FaultPlan,
     rx: Receiver<ToActor>,
     tx: Sender<FromActor>,
 ) {
@@ -156,7 +158,10 @@ pub fn actor_loop(
             ToActor::Shutdown => return,
             ToActor::Generate(item) => item,
         };
-        let fault = plan.take(item.step);
+        // wire kinds are byte damage — meaningless on an mpsc channel —
+        // and train_distrib refuses them before a channel fleet starts;
+        // matching only process faults keeps this loop honest anyway
+        let fault = item.fault;
         if let Some(FaultKind::Crash) = fault {
             let _ = tx.send(FromActor::Died {
                 actor,

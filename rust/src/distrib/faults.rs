@@ -15,14 +15,22 @@
 //! crash@STEP              actor computing STEP dies before replying
 //! stall@STEP:MS           actor sleeps MS ms, then delivers late
 //! poison@STEP:KIND[:N]    corrupt the rollout for STEP (N samples, default 1)
+//! torn@STEP               cut STEP's rollout frame mid-flight, then hang up
+//! partial@STEP:BYTES      send only the first BYTES bytes, then hang up
+//! bitflip@STEP:OFFSET     flip one payload bit (checksum-caught, link survives)
+//! disconnect@STEP         close the connection instead of replying
 //! lag=N                   override the snapshot-lag knob for this run
 //! ```
 //!
 //! with poison kinds `nan_u | nan_ell | bad_action` (per-sample corruption
 //! the admission path quarantines sample-by-sample) and `shape |
 //! fingerprint` (batch-level corruption quarantining the whole delivery).
-//! At most one event per step: a duplicate step is a config error, not a
-//! silent precedence rule.
+//! The last four are *wire-level* faults: they damage the encoded bytes
+//! (via `wire::WireFaults`) rather than the rollout contents, so they
+//! only exist on a transport with real bytes — `transport=socket`
+//! rejects nothing, everything else rejects the spec up front. At most
+//! one event per step: a duplicate step is a config error, not a silent
+//! precedence rule.
 
 use std::sync::Mutex;
 
@@ -77,6 +85,37 @@ pub enum FaultKind {
     Crash,
     Stall { ms: u64 },
     Poison { kind: PoisonKind, count: usize },
+    /// Cut the rollout frame mid-flight and hang up (wire-level).
+    Torn,
+    /// Send only the first `bytes` bytes of the frame, then hang up.
+    Partial { bytes: usize },
+    /// Flip one payload bit; the checksum catches it, the link survives.
+    BitFlip { offset: usize },
+    /// Close the connection instead of replying.
+    Disconnect,
+}
+
+impl FaultKind {
+    /// Wire-level faults damage encoded bytes rather than rollout
+    /// contents; they require a transport with real bytes.
+    pub fn is_wire(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::Torn
+                | FaultKind::Partial { .. }
+                | FaultKind::BitFlip { .. }
+                | FaultKind::Disconnect
+        )
+    }
+
+    /// Wire faults that end the connection (the learner must reconnect);
+    /// `BitFlip` is the one that damages a frame while the link lives.
+    pub fn severs_connection(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::Torn | FaultKind::Partial { .. } | FaultKind::Disconnect
+        )
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -96,6 +135,12 @@ pub struct ExpectedCounts {
     pub stalls: u64,
     pub quarantined_samples: u64,
     pub quarantined_batches: u64,
+    /// Frames the learner dropped as damaged: one per torn/partial
+    /// (detected mid-frame) and one per bitflip (checksum-caught).
+    pub wire_corrupt_frames: u64,
+    /// Connections re-established after a sever: one per torn/partial/
+    /// disconnect (a bitflip leaves the link up).
+    pub wire_reconnects: u64,
 }
 
 /// A seeded failure schedule, shared (`&FaultPlan`) across actor threads.
@@ -161,7 +206,42 @@ impl FaultPlan {
                     };
                     FaultEvent { step, kind: FaultKind::Poison { kind, count } }
                 }
-                other => bail!("unknown fault '{other}' in '{tok}' (crash|stall|poison)"),
+                "torn" => {
+                    let step = rest.parse().with_context(|| format!("bad step in '{tok}'"))?;
+                    FaultEvent { step, kind: FaultKind::Torn }
+                }
+                "partial" => {
+                    let (s, b) = rest
+                        .split_once(':')
+                        .with_context(|| format!("partial needs '@STEP:BYTES' in '{tok}'"))?;
+                    FaultEvent {
+                        step: s.parse().with_context(|| format!("bad step in '{tok}'"))?,
+                        kind: FaultKind::Partial {
+                            bytes: b.parse().with_context(|| format!("bad bytes in '{tok}'"))?,
+                        },
+                    }
+                }
+                "bitflip" => {
+                    let (s, o) = rest
+                        .split_once(':')
+                        .with_context(|| format!("bitflip needs '@STEP:OFFSET' in '{tok}'"))?;
+                    FaultEvent {
+                        step: s.parse().with_context(|| format!("bad step in '{tok}'"))?,
+                        kind: FaultKind::BitFlip {
+                            offset: o
+                                .parse()
+                                .with_context(|| format!("bad offset in '{tok}'"))?,
+                        },
+                    }
+                }
+                "disconnect" => {
+                    let step = rest.parse().with_context(|| format!("bad step in '{tok}'"))?;
+                    FaultEvent { step, kind: FaultKind::Disconnect }
+                }
+                other => bail!(
+                    "unknown fault '{other}' in '{tok}' \
+                     (crash|stall|poison|torn|partial|bitflip|disconnect)"
+                ),
             };
             if events.iter().any(|e| e.step == kind.step) {
                 bail!("duplicate fault at step {} (one event per step)", kind.step);
@@ -178,6 +258,12 @@ impl FaultPlan {
 
     pub fn lag_override(&self) -> Option<usize> {
         self.lag_override
+    }
+
+    /// Whether any scheduled event is wire-level (needs a byte-carrying
+    /// transport); the config layer gates `transport=` choices on this.
+    pub fn has_wire_events(&self) -> bool {
+        self.events.iter().any(|e| e.kind.is_wire())
     }
 
     /// Consume the event scheduled for `step`, if any and not yet fired.
@@ -212,6 +298,14 @@ impl FaultPlan {
                         c.quarantined_samples += count.min(batch) as u64;
                     }
                 }
+                // a torn/partial frame is both a detected corruption and
+                // a severed link the learner must re-establish
+                FaultKind::Torn | FaultKind::Partial { .. } => {
+                    c.wire_corrupt_frames += 1;
+                    c.wire_reconnects += 1;
+                }
+                FaultKind::BitFlip { .. } => c.wire_corrupt_frames += 1,
+                FaultKind::Disconnect => c.wire_reconnects += 1,
             }
         }
         c
@@ -303,9 +397,48 @@ mod tests {
             "explode@3",
             "lag=abc",
             "crash@5,poison@5:nan_u", // duplicate step
+            "torn@x",
+            "partial@3",  // bytes required
+            "bitflip@3",  // offset required
+            "bitflip@3:x",
+            "disconnect@",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    fn wire_grammar_parses_and_classifies() {
+        let p =
+            FaultPlan::parse("torn@2,partial@3:13,bitflip@6:17,disconnect@9,crash@11").unwrap();
+        assert!(p.has_wire_events());
+        assert_eq!(p.take(2), Some(FaultKind::Torn));
+        assert_eq!(p.take(3), Some(FaultKind::Partial { bytes: 13 }));
+        assert_eq!(p.take(6), Some(FaultKind::BitFlip { offset: 17 }));
+        assert_eq!(p.take(9), Some(FaultKind::Disconnect));
+
+        assert!(FaultKind::Torn.is_wire() && FaultKind::Torn.severs_connection());
+        assert!(FaultKind::Partial { bytes: 1 }.severs_connection());
+        assert!(FaultKind::Disconnect.severs_connection());
+        assert!(
+            FaultKind::BitFlip { offset: 0 }.is_wire()
+                && !FaultKind::BitFlip { offset: 0 }.severs_connection()
+        );
+        assert!(!FaultKind::Crash.is_wire());
+        assert!(!FaultPlan::parse("crash@5,stall@6:10").unwrap().has_wire_events());
+    }
+
+    #[test]
+    fn wire_events_count_into_expected_totals() {
+        let p = FaultPlan::parse("torn@1,partial@2:9,bitflip@3:4,disconnect@5,crash@6").unwrap();
+        let c = p.expected_counts(16);
+        // torn + partial + bitflip each drop one frame
+        assert_eq!(c.wire_corrupt_frames, 3);
+        // torn + partial + disconnect each sever the link once
+        assert_eq!(c.wire_reconnects, 3);
+        assert_eq!(c.crashes, 1);
+        assert_eq!(c.restarts, 1);
+        assert_eq!(c.quarantined_samples, 0, "wire damage never reaches admission");
     }
 
     #[test]

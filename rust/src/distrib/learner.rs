@@ -34,7 +34,7 @@
 //! earn a backward pass.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -55,11 +55,13 @@ use crate::utils::json::Json;
 use crate::utils::rng::Pcg32;
 
 use super::actor::{actor_loop, apply_inline_fault, ActorCtx};
-use super::faults::FaultPlan;
+use super::faults::{FaultKind, FaultPlan};
 use super::replay;
+use super::socket::{SocketCfg, SocketTransport};
 use super::supervisor::{RespawnVerdict, Supervisor};
 use super::transport::{
-    ChannelTransport, FromActor, PolicySnapshot, RolloutBatch, ToActor, Transport, WorkItem,
+    ChannelTransport, FromActor, PolicySnapshot, Recv, RolloutBatch, ToActor, Transport,
+    TransportKind, WorkItem,
 };
 
 /// Keeps the context stream disjoint from the per-sample action/reward
@@ -76,7 +78,9 @@ pub enum DistribMode {
     /// same snapshot-lag ring and admission path — this is the
     /// bit-identity anchor the concurrent modes are tested against.
     Inline,
-    /// N actor threads over the channel transport, supervised.
+    /// A supervised actor fleet behind the `Transport` trait: actor
+    /// threads over mpsc channels, or actor *processes* over Unix
+    /// sockets, per `DistribCfg::transport`. Same driver either way.
     Threaded,
     /// Re-ingest a recorded actor stream (see `record_to`).
     Replay(String),
@@ -111,6 +115,22 @@ pub struct DistribCfg {
     pub record_to: Option<String>,
     pub checkpoint: Option<CheckpointCfg>,
     pub resume_from: Option<String>,
+    /// what carries the fleet in threaded mode: in-process channels or
+    /// Unix sockets to actor subprocesses. NOT in the fingerprint — the
+    /// trajectory is transport-invariant by contract.
+    pub transport: TransportKind,
+    /// artifacts dir actor subprocesses open their own `Engine` from
+    pub artifacts_dir: String,
+    /// directory for the learner's socket file (default: the system
+    /// temp dir)
+    pub socket_dir: Option<String>,
+    /// per-frame read/write deadline on every blocking wire call
+    pub wire_deadline_ms: u64,
+    /// base reconnect backoff (doubles per consecutive loss on a slot,
+    /// capped at `max(8 * base, 100)` ms, plus seeded jitter)
+    pub reconnect_backoff_ms: u64,
+    /// actor executable to spawn (default: this binary)
+    pub actor_bin: Option<String>,
 }
 
 impl Default for DistribCfg {
@@ -135,6 +155,12 @@ impl Default for DistribCfg {
             record_to: None,
             checkpoint: None,
             resume_from: None,
+            transport: TransportKind::Channel,
+            artifacts_dir: "native".into(),
+            socket_dir: None,
+            wire_deadline_ms: 2000,
+            reconnect_backoff_ms: 25,
+            actor_bin: None,
         }
     }
 }
@@ -655,199 +681,356 @@ fn run_replay(l: &mut LearnerState<'_>, path: &str) -> Result<()> {
     Ok(())
 }
 
-/// Threaded mode: dispatch over the channel transport with supervision.
+/// The fleet driver: dispatch over ANY `Transport`, with supervision.
+/// `run_threaded` (channel) and `run_socket` (subprocesses) both run
+/// through this one loop — which is what makes "socket == channel ==
+/// inline, bit for bit" a structural property instead of a coincidence.
 ///
 /// Scheduling rules, all deterministic in (step, alive-set):
 /// - step `t` goes to slot `t % actors`, walking past dead slots;
 /// - at most `lag + 1` steps in flight (`t <= completed + lag`), and
 ///   never across a checkpoint boundary (saves happen quiescent);
-/// - a `Died` actor is respawned with bounded backoff until its budget
-///   runs out, and every step it was holding is re-dispatched;
+/// - the learner consumes the `FaultPlan` at FIRST dispatch of a step
+///   and ships the order with the work; a fault that has not yet fired
+///   rides along on re-dispatch, one that has (crash announced, frame
+///   damaged, connection severed) is retired so it fires exactly once;
+/// - a dead slot is respawned (via `respawn`, with bounded backoff plus
+///   seeded jitter when `jitter` is armed) until its budget runs out,
+///   then retired for good (via `retire`); every step it was holding is
+///   re-dispatched either way;
+/// - a corrupt frame costs the frame, not the link: the step it carried
+///   is re-sent to the same slot;
 /// - a silent actor (no delivery for `heartbeat_ms` while its step heads
 ///   the ingest queue) counts one timeout and its step is re-dispatched
 ///   to the next live slot; the superseded delivery is shed on arrival.
-fn run_threaded(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
-    let actors = l.cfg.actors.max(1);
+///   The clock never arms against a slot already known dead — that work
+///   re-routes immediately.
+fn drive_fleet<T, FR, FT>(
+    l: &mut LearnerState<'_>,
+    tp: &T,
+    sup: &mut Supervisor,
+    plan: &FaultPlan,
+    jitter: Option<Pcg32>,
+    respawn: FR,
+    retire: FT,
+) -> Result<()>
+where
+    T: Transport + ?Sized,
+    FR: FnMut(usize) -> Result<()>,
+    FT: FnMut(usize),
+{
+    let mut respawn = respawn;
+    let mut retire = retire;
+    let mut jitter = jitter;
+    let actors = tp.n_actors();
     let steps = l.cfg.steps;
     let lag = l.lag;
-    let seed = l.cfg.seed;
-    let eng = l.eng;
     let heartbeat = Duration::from_millis(l.cfg.heartbeat_ms.max(1));
     let ckpt_every = l.cfg.checkpoint.as_ref().map(|c| c.every).unwrap_or(0);
+
+    // pending contexts (shipped to actors, kept for admission), reorder
+    // buffer, dispatch bookkeeping, and the consume-once fault orders
+    // that have been taken from the plan but have not provably fired
+    let mut pending_ctx: BTreeMap<usize, ContextBatch> = BTreeMap::new();
+    let mut buffered: BTreeMap<u64, RolloutBatch> = BTreeMap::new();
+    let mut in_flight: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut pending_faults: BTreeMap<u64, FaultKind> = BTreeMap::new();
+    let mut timeout_counted: BTreeSet<u64> = BTreeSet::new();
+    let mut next_dispatch = l.completed;
+    // the head step's wait clock arms when it BECOMES the head, so a
+    // queue behind a slow actor can't rack up spurious timeouts
+    let mut awaited: Option<(usize, Instant)> = None;
+
+    let send_step = |l: &LearnerState<'_>,
+                     pending_ctx: &BTreeMap<usize, ContextBatch>,
+                     t: usize,
+                     a: usize,
+                     fault: Option<FaultKind>|
+     -> Result<()> {
+        let ctx = &pending_ctx[&t];
+        let item = WorkItem {
+            step: t as u64,
+            x: ctx.x.clone(),
+            y: ctx.y.clone(),
+            snapshot: l.snapshot_for(t)?,
+            fault,
+        };
+        // a failed send means the slot is mid-death; its Died message or
+        // loss event is already in the inbox and will re-route this step
+        // via the orphan scan
+        let _ = tp.send_to(a, ToActor::Generate(Box::new(item)));
+        Ok(())
+    };
+
+    // shared death handling: budgeted backoff (+ jitter when armed),
+    // then respawn-or-retire; true means the slot lives again
+    let mut revive = |sup: &mut Supervisor, actor: usize| -> bool {
+        match sup.on_death(actor) {
+            RespawnVerdict::Respawn { backoff } => {
+                let extra = jitter
+                    .as_mut()
+                    .map(|r| {
+                        let half = (backoff.as_millis() as u64 / 2).max(1);
+                        Duration::from_millis(r.next_u64() % half)
+                    })
+                    .unwrap_or(Duration::ZERO);
+                std::thread::sleep(backoff + extra);
+                match respawn(actor) {
+                    Ok(()) => {
+                        sup.on_respawn(actor);
+                        true
+                    }
+                    Err(e) => {
+                        eprintln!("[distrib] respawning actor {actor} failed: {e:#}");
+                        retire(actor);
+                        false
+                    }
+                }
+            }
+            RespawnVerdict::GiveUp => {
+                retire(actor);
+                false
+            }
+        }
+    };
+
+    while l.completed < steps {
+        // ---- dispatch window
+        let barrier = if ckpt_every == 0 {
+            usize::MAX
+        } else {
+            (l.completed / ckpt_every + 1) * ckpt_every
+        };
+        while next_dispatch < steps
+            && next_dispatch <= l.completed + lag
+            && next_dispatch < barrier
+        {
+            let t = next_dispatch;
+            if !pending_ctx.contains_key(&t) {
+                let c = l.context_for(t);
+                pending_ctx.insert(t, c);
+            }
+            let Some(a) = sup.assign(t as u64) else {
+                bail!("no live actor slot to dispatch step {t}");
+            };
+            let fault = plan.take(t as u64);
+            if let Some(f) = fault {
+                pending_faults.insert(t as u64, f);
+            }
+            send_step(l, &pending_ctx, t, a, fault)?;
+            in_flight.insert(t as u64, a);
+            next_dispatch += 1;
+        }
+
+        // ---- ingest the head if it has arrived
+        let head = l.completed;
+        if let Some(rb) = buffered.remove(&(head as u64)) {
+            let ctx = pending_ctx
+                .remove(&head)
+                .context("pending context missing for buffered step")?;
+            awaited = None;
+            l.ingest(rb, &ctx)?;
+            continue;
+        }
+        if let Some(&holder) = in_flight.get(&(head as u64)) {
+            if !sup.is_alive(holder) {
+                // never arm a heartbeat clock against a permanently-dead
+                // slot — no delivery can come; re-route immediately
+                let refire = pending_faults.get(&(head as u64)).copied();
+                let target =
+                    sup.assign(head as u64).context("no live actor for re-dispatch")?;
+                send_step(l, &pending_ctx, head, target, refire)?;
+                in_flight.insert(head as u64, target);
+                awaited = None;
+                continue;
+            }
+        }
+        if awaited.map(|(t, _)| t) != Some(head) {
+            awaited = Some((head, Instant::now()));
+        }
+
+        // ---- wait for news
+        match tp.recv_timeout(POLL) {
+            Recv::Msg(FromActor::Rollout(rb)) => {
+                let step = rb.step;
+                let fresh = (step as usize) >= l.completed
+                    && in_flight.contains_key(&step)
+                    && !buffered.contains_key(&step);
+                if fresh {
+                    in_flight.remove(&step);
+                    pending_faults.remove(&step);
+                    buffered.insert(step, rb);
+                }
+                // else: superseded or duplicate — already shed at
+                // re-dispatch time
+            }
+            Recv::Msg(FromActor::Died { actor, step, reason }) => {
+                eprintln!("[distrib] actor {actor} died at step {step}: {reason}");
+                l.acct.shard_mut(0).record_actor_crash();
+                // the crash order (if this death was injected) has fired
+                pending_faults.remove(&step);
+                let respawned = revive(sup, actor);
+                if respawned {
+                    l.acct.shard_mut(0).record_actor_restart();
+                }
+                if sup.n_live() == 0 {
+                    bail!("all {actors} actor slots dead (respawn budget exhausted)");
+                }
+                // every step the dead actor held — the announced one AND
+                // anything queued behind it — re-routes, un-fired fault
+                // orders riding along
+                let orphans: Vec<u64> = in_flight
+                    .iter()
+                    .filter(|&(_, &slot)| slot == actor)
+                    .map(|(&st, _)| st)
+                    .collect();
+                for st in orphans {
+                    let target = if respawned {
+                        actor
+                    } else {
+                        sup.assign(st).context("no live actor for re-dispatch")?
+                    };
+                    let refire = pending_faults.get(&st).copied();
+                    send_step(l, &pending_ctx, st as usize, target, refire)?;
+                    in_flight.insert(st, target);
+                    if st as usize == head {
+                        awaited = None; // restart the head clock
+                    }
+                }
+            }
+            Recv::CorruptFrame { actor } => {
+                // a frame from this slot failed its checksum: the link
+                // survives, whatever the frame carried did not
+                l.acct.shard_mut(0).record_wire_corrupt_frame();
+                let slot_steps: Vec<u64> = in_flight
+                    .iter()
+                    .filter(|&(_, &slot)| slot == actor)
+                    .map(|(&st, _)| st)
+                    .collect();
+                // under a seeded plan the damaged frame is exactly the
+                // step carrying a pending bitflip order; real line noise
+                // has no such marker, so re-send everything the slot holds
+                let flipped: Vec<u64> = slot_steps
+                    .iter()
+                    .copied()
+                    .filter(|st| {
+                        matches!(pending_faults.get(st), Some(FaultKind::BitFlip { .. }))
+                    })
+                    .collect();
+                let resend = if flipped.is_empty() { slot_steps } else { flipped };
+                for st in resend {
+                    pending_faults.remove(&st); // the damage fired
+                    send_step(l, &pending_ctx, st as usize, actor, None)?;
+                    if st as usize == head {
+                        awaited = None;
+                    }
+                }
+            }
+            Recv::ConnectionLost { actor, mid_frame } => {
+                eprintln!(
+                    "[distrib] actor {actor} connection lost{}",
+                    if mid_frame { " mid-frame" } else { "" }
+                );
+                if mid_frame {
+                    // bytes of a frame died with the link
+                    l.acct.shard_mut(0).record_wire_corrupt_frame();
+                }
+                let slot_steps: Vec<u64> = in_flight
+                    .iter()
+                    .filter(|&(_, &slot)| slot == actor)
+                    .map(|(&st, _)| st)
+                    .collect();
+                // a severing wire order (torn/partial/disconnect) on this
+                // slot has now fired; non-severing orders ride along on
+                // the re-dispatch below
+                for st in &slot_steps {
+                    if pending_faults.get(st).is_some_and(|f| f.severs_connection()) {
+                        pending_faults.remove(st);
+                    }
+                }
+                let respawned = revive(sup, actor);
+                if respawned {
+                    l.acct.shard_mut(0).record_wire_reconnect();
+                }
+                if sup.n_live() == 0 {
+                    bail!("all {actors} actor slots dead (respawn budget exhausted)");
+                }
+                for st in slot_steps {
+                    let target = if respawned {
+                        actor
+                    } else {
+                        sup.assign(st).context("no live actor for re-dispatch")?
+                    };
+                    let refire = pending_faults.get(&st).copied();
+                    send_step(l, &pending_ctx, st as usize, target, refire)?;
+                    in_flight.insert(st, target);
+                    if st as usize == head {
+                        awaited = None;
+                    }
+                }
+            }
+            Recv::Timeout => {
+                // ---- heartbeat: the head has been silent too long
+                if let Some((t, since)) = awaited {
+                    if since.elapsed() >= heartbeat {
+                        if let Some(&slot) = in_flight.get(&(t as u64)) {
+                            if timeout_counted.insert(t as u64) {
+                                l.acct.shard_mut(0).record_actor_timeout();
+                            }
+                            // the superseded dispatch's output is
+                            // load-shed (dropped on arrival, or never
+                            // seen if the run ends first); its fault (if
+                            // any) fired on the slow slot, so the fresh
+                            // copy computes clean
+                            l.acct.shard_mut(0).record_shed(l.b);
+                            let target = sup
+                                .next_live_after(slot)
+                                .context("no live actor for re-dispatch")?;
+                            send_step(l, &pending_ctx, t, target, None)?;
+                            in_flight.insert(t as u64, target);
+                            awaited = Some((t, Instant::now()));
+                        }
+                    }
+                }
+            }
+            Recv::Disconnected => {
+                bail!(
+                    "transport disconnected with {} of {steps} steps ingested",
+                    l.completed
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Threaded mode over in-process channels: one thread per actor slot.
+fn run_threaded(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
+    let actors = l.cfg.actors.max(1);
+    let seed = l.cfg.seed;
+    let eng = l.eng;
     let max_respawns = l.cfg.max_respawns;
     let tp = ChannelTransport::new(actors);
 
     std::thread::scope(|s| -> Result<()> {
         let mut sup = Supervisor::new(actors, max_respawns);
         for a in 0..actors {
-            let (rx, tx) = tp.register_actor(a);
-            s.spawn(move || actor_loop(eng, a, seed, plan, rx, tx));
+            let (rx, tx) = tp.register_actor(a)?;
+            s.spawn(move || actor_loop(eng, a, seed, rx, tx));
         }
 
-        // pending contexts (shipped to actors, kept for admission),
-        // reorder buffer, and dispatch bookkeeping
-        let mut pending_ctx: BTreeMap<usize, ContextBatch> = BTreeMap::new();
-        let mut buffered: BTreeMap<u64, RolloutBatch> = BTreeMap::new();
-        let mut in_flight: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut timeout_counted: BTreeSet<u64> = BTreeSet::new();
-        let mut next_dispatch = l.completed;
-        // the head step's wait clock arms when it BECOMES the head, so a
-        // queue behind a slow actor can't rack up spurious timeouts
-        let mut awaited: Option<(usize, Instant)> = None;
-
-        let run = |l: &mut LearnerState<'_>,
-                   sup: &mut Supervisor,
-                   pending_ctx: &mut BTreeMap<usize, ContextBatch>,
-                   buffered: &mut BTreeMap<u64, RolloutBatch>,
-                   in_flight: &mut BTreeMap<u64, usize>,
-                   timeout_counted: &mut BTreeSet<u64>,
-                   next_dispatch: &mut usize,
-                   awaited: &mut Option<(usize, Instant)>|
-         -> Result<()> {
-            let send_step =
-                |l: &LearnerState<'_>, pending_ctx: &BTreeMap<usize, ContextBatch>, t: usize, a: usize| -> Result<()> {
-                    let ctx = &pending_ctx[&t];
-                    let item = WorkItem {
-                        step: t as u64,
-                        x: ctx.x.clone(),
-                        y: ctx.y.clone(),
-                        snapshot: l.snapshot_for(t)?,
-                    };
-                    // a failed send means the slot is mid-death; its Died
-                    // message is already in the inbox and will re-route
-                    // this step via the orphan scan
-                    let _ = tp.send_to(a, ToActor::Generate(Box::new(item)));
-                    Ok(())
-                };
-
-            while l.completed < steps {
-                // ---- dispatch window
-                let barrier = if ckpt_every == 0 {
-                    usize::MAX
-                } else {
-                    (l.completed / ckpt_every + 1) * ckpt_every
-                };
-                while *next_dispatch < steps
-                    && *next_dispatch <= l.completed + lag
-                    && *next_dispatch < barrier
-                {
-                    let t = *next_dispatch;
-                    if !pending_ctx.contains_key(&t) {
-                        let c = l.context_for(t);
-                        pending_ctx.insert(t, c);
-                    }
-                    let Some(a) = sup.assign(t as u64) else {
-                        bail!("no live actor slot to dispatch step {t}");
-                    };
-                    send_step(l, pending_ctx, t, a)?;
-                    in_flight.insert(t as u64, a);
-                    *next_dispatch += 1;
-                }
-
-                // ---- ingest the head if it has arrived
-                let head = l.completed;
-                if let Some(rb) = buffered.remove(&(head as u64)) {
-                    let ctx = pending_ctx
-                        .remove(&head)
-                        .context("pending context missing for buffered step")?;
-                    *awaited = None;
-                    l.ingest(rb, &ctx)?;
-                    continue;
-                }
-                if awaited.map(|(t, _)| t) != Some(head) {
-                    *awaited = Some((head, Instant::now()));
-                }
-
-                // ---- wait for news
-                match tp.recv_timeout(POLL) {
-                    Some(FromActor::Rollout(rb)) => {
-                        let step = rb.step;
-                        let fresh = (step as usize) >= l.completed
-                            && in_flight.contains_key(&step)
-                            && !buffered.contains_key(&step);
-                        if fresh {
-                            in_flight.remove(&step);
-                            buffered.insert(step, rb);
-                        }
-                        // else: superseded or duplicate — already shed at
-                        // re-dispatch time
-                    }
-                    Some(FromActor::Died { actor, step, reason }) => {
-                        eprintln!("[distrib] actor {actor} died at step {step}: {reason}");
-                        l.acct.shard_mut(0).record_actor_crash();
-                        let respawned = match sup.on_death(actor) {
-                            RespawnVerdict::Respawn { backoff } => {
-                                std::thread::sleep(backoff);
-                                let (rx, tx) = tp.register_actor(actor);
-                                s.spawn(move || actor_loop(eng, actor, seed, plan, rx, tx));
-                                sup.on_respawn(actor);
-                                l.acct.shard_mut(0).record_actor_restart();
-                                true
-                            }
-                            RespawnVerdict::GiveUp => {
-                                tp.deregister(actor);
-                                false
-                            }
-                        };
-                        if sup.n_live() == 0 {
-                            bail!("all {actors} actor slots dead (respawn budget exhausted)");
-                        }
-                        // every step the dead actor held — the announced
-                        // one AND anything queued behind it — re-routes
-                        let orphans: Vec<u64> = in_flight
-                            .iter()
-                            .filter(|&(_, &slot)| slot == actor)
-                            .map(|(&st, _)| st)
-                            .collect();
-                        for st in orphans {
-                            let target = if respawned {
-                                actor
-                            } else {
-                                sup.assign(st).context("no live actor for re-dispatch")?
-                            };
-                            send_step(l, pending_ctx, st as usize, target)?;
-                            in_flight.insert(st, target);
-                            if st as usize == head {
-                                *awaited = None; // restart the head clock
-                            }
-                        }
-                    }
-                    None => {
-                        // ---- heartbeat: the head has been silent too long
-                        if let Some((t, since)) = *awaited {
-                            if since.elapsed() >= heartbeat {
-                                if let Some(&slot) = in_flight.get(&(t as u64)) {
-                                    if timeout_counted.insert(t as u64) {
-                                        l.acct.shard_mut(0).record_actor_timeout();
-                                    }
-                                    // the superseded dispatch's output is
-                                    // load-shed (dropped on arrival, or
-                                    // never seen if the run ends first)
-                                    l.acct.shard_mut(0).record_shed(l.b);
-                                    let target = sup
-                                        .next_live_after(slot)
-                                        .context("no live actor for re-dispatch")?;
-                                    send_step(l, pending_ctx, t, target)?;
-                                    in_flight.insert(t as u64, target);
-                                    *awaited = Some((t, Instant::now()));
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            Ok(())
-        };
-
-        let result = run(
+        let result = drive_fleet(
             l,
+            &tp,
             &mut sup,
-            &mut pending_ctx,
-            &mut buffered,
-            &mut in_flight,
-            &mut timeout_counted,
-            &mut next_dispatch,
-            &mut awaited,
+            plan,
+            None,
+            |a| {
+                let (rx, tx) = tp.register_actor(a)?;
+                s.spawn(move || actor_loop(eng, a, seed, rx, tx));
+                Ok(())
+            },
+            |a| tp.deregister(a),
         );
 
         // graceful or not, unblock every actor so the scope can join:
@@ -862,15 +1045,82 @@ fn run_threaded(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
     })
 }
 
+/// Threaded mode over Unix sockets: one subprocess per actor slot,
+/// spawned from the `repro actor` subcommand and supervised exactly like
+/// the channel fleet — the respawn budget now buys process respawns and
+/// reconnects, with stretched, jittered backoff (reconnect storms from a
+/// flapping peer should not synchronize).
+fn run_socket(l: &mut LearnerState<'_>, plan: &FaultPlan) -> Result<()> {
+    let cfg = l.cfg;
+    let actors = cfg.actors.max(1);
+    let bin = match &cfg.actor_bin {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe()
+            .context("resolving this executable for actor spawn (set actor_bin=)")?,
+    };
+    let deadline_ms = cfg.wire_deadline_ms.max(1);
+    let scfg = SocketCfg {
+        dir: cfg.socket_dir.as_ref().map(PathBuf::from).unwrap_or_else(std::env::temp_dir),
+        n_actors: actors,
+        fingerprint: l.fp_hash,
+        deadline: Duration::from_millis(deadline_ms),
+        accept_timeout: Duration::from_secs(30),
+        bin,
+        args: vec![
+            format!("seed={}", cfg.seed),
+            format!("fingerprint={:016x}", l.fp_hash),
+            format!("artifacts_dir={}", cfg.artifacts_dir),
+            format!("f32_fast={}", if l.eng.f32_fast() { 1 } else { 0 }),
+            format!("deadline_ms={deadline_ms}"),
+        ],
+    };
+    let tp = SocketTransport::bind(scfg)?;
+    tp.start()?;
+
+    let base = cfg.reconnect_backoff_ms.max(1);
+    let mut sup =
+        Supervisor::new(actors, cfg.max_respawns).with_backoff(base, (base * 8).max(100));
+    let jitter = Pcg32::new(cfg.seed, 0x6a69_7474); // "jitt"
+    let result = drive_fleet(
+        l,
+        &tp,
+        &mut sup,
+        plan,
+        Some(jitter),
+        |a| tp.respawn_slot(a),
+        |a| tp.retire_slot(a),
+    );
+
+    // handshake rejections accumulate inside the transport; fold them
+    // into the ledger once, whatever the run's outcome
+    let rejects = tp.handshake_rejects();
+    if rejects > 0 {
+        l.acct.shard_mut(0).record_handshake_rejects(rejects);
+    }
+    tp.shutdown(|slot| result.is_ok() && sup.is_alive(slot));
+    result
+}
+
 /// Entry point: build the learner, run the configured mode, optionally
 /// persist the recorded stream.
 pub fn train_distrib(eng: &Engine, cfg: &DistribCfg, mode: &DistribMode) -> Result<DistribRunResult> {
     let plan = FaultPlan::parse(&cfg.fault_spec)?;
+    if plan.has_wire_events()
+        && !(matches!(mode, DistribMode::Threaded) && cfg.transport == TransportKind::Socket)
+    {
+        bail!(
+            "fault_spec schedules wire-level faults (torn/partial/bitflip/disconnect): \
+             they damage bytes in flight and need mode=threaded with transport=socket"
+        );
+    }
     let lag = plan.lag_override().unwrap_or(cfg.lag);
     let mut l = LearnerState::new(eng, cfg, lag)?;
     match mode {
         DistribMode::Inline => run_inline(&mut l, &plan)?,
-        DistribMode::Threaded => run_threaded(&mut l, &plan)?,
+        DistribMode::Threaded => match cfg.transport {
+            TransportKind::Channel => run_threaded(&mut l, &plan)?,
+            TransportKind::Socket => run_socket(&mut l, &plan)?,
+        },
         DistribMode::Replay(path) => run_replay(&mut l, path)?,
     }
     l.into_result()

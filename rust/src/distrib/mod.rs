@@ -14,24 +14,35 @@
 //! Module map:
 //! - [`transport`] — message types and the socket-shaped `Transport`
 //!   trait; `ChannelTransport` is the in-process implementation.
+//! - [`wire`] — the hardened frame codec (length-prefixed, checksummed,
+//!   versioned handshake) cross-process links speak, plus the byte-level
+//!   fault shim.
+//! - [`socket`] — `SocketTransport`: actor subprocesses over Unix
+//!   sockets, with handshake validation, per-link reader threads, and
+//!   learner-driven process respawn; also the actor-process entry point.
 //! - [`actor`] — rollout workers; all per-sample randomness is keyed by
 //!   (seed, step, sample), never by actor identity.
-//! - [`faults`] — the seeded, consume-once fault schedule.
+//! - [`faults`] — the seeded, consume-once fault schedule (process- and
+//!   wire-level).
 //! - [`supervisor`] — pure assignment/respawn state machine.
-//! - [`learner`] — admission, staleness pricing, the three execution
-//!   modes, checkpointing.
+//! - [`learner`] — admission, staleness pricing, the execution modes,
+//!   the transport-generic fleet driver, checkpointing.
 //! - [`replay`] — recorded actor streams (bit-exact JSON codec).
 
 pub mod actor;
 pub mod faults;
 pub mod learner;
 pub mod replay;
+pub mod socket;
 pub mod supervisor;
 pub mod transport;
+pub mod wire;
 
 pub use faults::{ExpectedCounts, FaultKind, FaultPlan, PoisonKind};
 pub use learner::{train_distrib, DistribCfg, DistribMode, DistribRunResult};
+pub use socket::{run_actor, ActorProcCfg, SocketCfg, SocketTransport};
 pub use supervisor::{RespawnVerdict, Supervisor};
 pub use transport::{
-    ChannelTransport, FromActor, PolicySnapshot, RolloutBatch, ToActor, Transport, WorkItem,
+    ChannelTransport, FromActor, PolicySnapshot, Recv, RolloutBatch, ToActor, Transport,
+    TransportKind, WorkItem,
 };

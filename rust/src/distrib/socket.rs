@@ -1,0 +1,615 @@
+//! Cross-process transport: Unix-domain sockets to actor subprocesses.
+//!
+//! `SocketTransport` implements the same `Transport` trait the in-process
+//! `ChannelTransport` does, but each actor slot is an OS process (spawned
+//! from the `repro actor` subcommand) connected over a UDS carrying the
+//! hardened frame protocol of `distrib::wire`. The learner owns the full
+//! lifecycle: it binds the socket, spawns and reaps the children,
+//! validates each connection's magic/version/run-fingerprint handshake,
+//! and re-establishes links that die (the supervisor's respawn budget
+//! decides whether; this module just does the work).
+//!
+//! One reader thread per link turns frames into events. Events carry the
+//! link's *generation*: respawning a slot bumps its generation, so
+//! corruption/loss noise from a replaced connection can never be
+//! attributed to its successor. The learner drains events serially
+//! through `recv_timeout`, which filters stale generations — the same
+//! single-consumer discipline that makes the channel path deterministic.
+//!
+//! Policy snapshots ship per-link, at most once per version: `send_to`
+//! prepends a Snapshot frame before the first Generate that references a
+//! version this link has not seen, and a reconnected link starts over
+//! (its cache died with the process). The actor caches snapshots by
+//! version and reports a cache miss as a `Died` frame — which is also the
+//! *terminal* frame by protocol: after announcing death, nothing else is
+//! valid on the link, so the reader exits without synthesizing a
+//! connection-loss event and a crash is never double-counted as a
+//! reconnect.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write;
+use std::net::Shutdown as NetShutdown;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Engine;
+
+use super::actor::ActorCtx;
+use super::faults::{apply_poison, FaultKind};
+use super::transport::{FromActor, PolicySnapshot, Recv, ToActor, Transport};
+use super::wire::{
+    decode_payload, encode_died, encode_generate, encode_hello, encode_hello_ack,
+    encode_hello_reject, encode_rollout, encode_shutdown, encode_snapshot, read_frame,
+    validate_hello, WireError, WireFaults, WireMsg, READ_POLL,
+};
+
+/// Distinguishes socket files when several transports share a directory
+/// (parallel tests in one process share a pid).
+static SOCKET_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// How many snapshot versions an actor keeps cached before evicting.
+const SNAPSHOT_CACHE: u64 = 256;
+
+/// An actor that hears nothing at all for this long assumes the learner
+/// is gone and exits rather than lingering as an orphan process.
+const IDLE_EXIT: Duration = Duration::from_secs(120);
+
+fn lock_ok<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[derive(Debug, Clone)]
+pub struct SocketCfg {
+    /// directory the socket file is created in (created if missing)
+    pub dir: PathBuf,
+    pub n_actors: usize,
+    /// run fingerprint every Hello must echo
+    pub fingerprint: u64,
+    /// per-frame read/write deadline on every blocking wire call
+    pub deadline: Duration,
+    /// how long to wait for a spawned child to connect and handshake
+    pub accept_timeout: Duration,
+    /// actor executable (the `repro` binary)
+    pub bin: PathBuf,
+    /// extra `k=v` args appended after `actor --slot N --socket PATH`
+    pub args: Vec<String>,
+}
+
+/// Reader-thread -> learner events, tagged with the link generation that
+/// produced them so events from a replaced connection are discardable.
+enum Event {
+    From(FromActor),
+    Corrupt { slot: usize, gen: u64 },
+    Lost { slot: usize, gen: u64, mid_frame: bool },
+}
+
+struct Shared {
+    events: Mutex<VecDeque<Event>>,
+    cv: Condvar,
+    /// current generation per slot; bumped by every (re)install
+    gens: Vec<AtomicU64>,
+}
+
+/// Learner-side state for one live connection.
+struct Link {
+    stream: UnixStream,
+    /// snapshot versions already shipped on THIS connection
+    sent_versions: BTreeSet<u64>,
+    gen: u64,
+}
+
+pub struct SocketTransport {
+    cfg: SocketCfg,
+    path: PathBuf,
+    listener: UnixListener,
+    shared: Arc<Shared>,
+    links: Mutex<Vec<Option<Link>>>,
+    children: Mutex<Vec<Option<Child>>>,
+    handshake_rejects: AtomicU64,
+}
+
+impl SocketTransport {
+    /// Bind the listener (unique filename per transport instance). No
+    /// children are spawned yet; call [`SocketTransport::start`].
+    pub fn bind(cfg: SocketCfg) -> Result<SocketTransport> {
+        assert!(cfg.n_actors > 0, "need at least one actor slot");
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating socket dir {}", cfg.dir.display()))?;
+        let name = format!(
+            "kondo-{}-{}.sock",
+            std::process::id(),
+            SOCKET_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = cfg.dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding {}", path.display()))?;
+        // accept() is polled with a sleep so accept_timeout is enforceable
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            events: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            gens: (0..cfg.n_actors).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let links = Mutex::new((0..cfg.n_actors).map(|_| None).collect());
+        let children = Mutex::new((0..cfg.n_actors).map(|_| None).collect());
+        Ok(SocketTransport {
+            cfg,
+            path,
+            listener,
+            shared,
+            links,
+            children,
+            handshake_rejects: AtomicU64::new(0),
+        })
+    }
+
+    pub fn socket_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Handshake rejections counted so far (drained into the ledger once
+    /// at the end of a run).
+    pub fn handshake_rejects(&self) -> u64 {
+        self.handshake_rejects.load(Ordering::Relaxed)
+    }
+
+    /// Spawn every actor process and accept their handshakes.
+    pub fn start(&self) -> Result<()> {
+        for slot in 0..self.cfg.n_actors {
+            let child = self.spawn_child(slot)?;
+            lock_ok(&self.children)[slot] = Some(child);
+        }
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        while seen.len() < self.cfg.n_actors {
+            let (slot, stream) = self.accept_one(|s| !seen.contains(&s))?;
+            seen.insert(slot);
+            self.install_link(slot, stream);
+        }
+        Ok(())
+    }
+
+    fn spawn_child(&self, slot: usize) -> Result<Child> {
+        let mut cmd = Command::new(&self.cfg.bin);
+        cmd.arg("actor")
+            .arg("--slot")
+            .arg(slot.to_string())
+            .arg("--socket")
+            .arg(&self.path)
+            .stdin(Stdio::null());
+        for a in &self.cfg.args {
+            cmd.arg(a);
+        }
+        cmd.spawn().with_context(|| {
+            format!("spawning actor {slot} from {}", self.cfg.bin.display())
+        })
+    }
+
+    /// Accept connections until one presents a valid Hello for a slot
+    /// `want` accepts. Invalid handshakes (bad magic/version/fingerprint,
+    /// out-of-range or unwanted slot, undecodable first frame) are
+    /// rejected with a reason frame, counted, and the wait continues.
+    fn accept_one(&self, want: impl Fn(usize) -> bool) -> Result<(usize, UnixStream)> {
+        let t0 = Instant::now();
+        loop {
+            if t0.elapsed() >= self.cfg.accept_timeout {
+                bail!(
+                    "no valid actor handshake within {:?} on {}",
+                    self.cfg.accept_timeout,
+                    self.path.display()
+                );
+            }
+            let mut stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_read_timeout(Some(READ_POLL))?;
+            stream.set_write_timeout(Some(self.cfg.deadline))?;
+            // read the Hello, bounded by the remaining accept budget
+            let hello_deadline = self
+                .cfg
+                .accept_timeout
+                .saturating_sub(t0.elapsed())
+                .max(Duration::from_millis(50));
+            let hello_t0 = Instant::now();
+            let verdict: std::result::Result<u32, String> = loop {
+                match read_frame(&mut stream, self.cfg.deadline) {
+                    Ok((kind, payload)) => {
+                        break match decode_payload(kind, &payload) {
+                            Ok(msg) => validate_hello(&msg, self.cfg.fingerprint),
+                            Err(e) => Err(format!("undecodable first frame: {e}")),
+                        }
+                    }
+                    Err(WireError::Idle) if hello_t0.elapsed() < hello_deadline => continue,
+                    Err(e) => break Err(format!("no Hello frame: {e}")),
+                }
+            };
+            match verdict {
+                Ok(slot) if (slot as usize) < self.cfg.n_actors && want(slot as usize) => {
+                    let _ = stream.write_all(&encode_hello_ack());
+                    return Ok((slot as usize, stream));
+                }
+                Ok(slot) => {
+                    self.reject(&mut stream, &format!("unexpected slot {slot}"));
+                }
+                Err(reason) => {
+                    self.reject(&mut stream, &reason);
+                }
+            }
+        }
+    }
+
+    fn reject(&self, stream: &mut UnixStream, reason: &str) {
+        self.handshake_rejects.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[distrib] handshake rejected: {reason}");
+        let _ = stream.write_all(&encode_hello_reject(reason));
+        let _ = stream.shutdown(NetShutdown::Both);
+    }
+
+    /// Install an accepted connection as slot `slot`'s live link and
+    /// start its reader thread. Bumps the slot generation, so any event
+    /// still queued from a previous connection is recognizably stale.
+    fn install_link(&self, slot: usize, stream: UnixStream) {
+        let gen = self.shared.gens[slot].fetch_add(1, Ordering::SeqCst) + 1;
+        let reader = stream.try_clone().expect("cloning UDS for reader");
+        let shared = self.shared.clone();
+        let deadline = self.cfg.deadline;
+        std::thread::spawn(move || reader_loop(reader, slot, gen, deadline, shared));
+        lock_ok(&self.links)[slot] = Some(Link { stream, sent_versions: BTreeSet::new(), gen });
+    }
+
+    /// Reap the dead child on `slot`, spawn a fresh one, and wait for its
+    /// handshake. On failure the slot is left unlinked (the caller
+    /// retires it).
+    pub fn respawn_slot(&self, slot: usize) -> Result<()> {
+        self.reap_child(slot);
+        lock_ok(&self.links)[slot] = None;
+        let child = self.spawn_child(slot)?;
+        lock_ok(&self.children)[slot] = Some(child);
+        let (got, stream) = self.accept_one(|s| s == slot)?;
+        debug_assert_eq!(got, slot);
+        self.install_link(slot, stream);
+        Ok(())
+    }
+
+    /// Abandon a slot for good: kill + reap its child, drop its link.
+    pub fn retire_slot(&self, slot: usize) {
+        self.reap_child(slot);
+        lock_ok(&self.links)[slot] = None;
+    }
+
+    fn reap_child(&self, slot: usize) {
+        if let Some(mut child) = lock_ok(&self.children)[slot].take() {
+            // usually already dead (crash/sever exits the process); kill
+            // is a no-op then, and wait reaps the zombie either way
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Orderly teardown: Shutdown frame to every slot `keep` approves,
+    /// then close links and reap every child (waiting briefly for clean
+    /// exits before killing).
+    pub fn shutdown(&self, keep: impl Fn(usize) -> bool) {
+        for slot in 0..self.cfg.n_actors {
+            if keep(slot) {
+                let _ = self.send_to(slot, ToActor::Shutdown);
+            }
+            lock_ok(&self.links)[slot] = None;
+        }
+        let t0 = Instant::now();
+        for slot in 0..self.cfg.n_actors {
+            let mut done = false;
+            if let Some(child) = lock_ok(&self.children)[slot].as_mut() {
+                while t0.elapsed() < Duration::from_secs(5) {
+                    match child.try_wait() {
+                        Ok(Some(_)) => {
+                            done = true;
+                            break;
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                        Err(_) => break,
+                    }
+                }
+            }
+            if done {
+                lock_ok(&self.children)[slot] = None;
+            } else {
+                self.reap_child(slot);
+            }
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        for slot in 0..self.cfg.n_actors {
+            self.reap_child(slot);
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Per-link reader: frames -> events, until the link ends. The policy
+/// split lives here: recoverable damage (checksum failure) emits
+/// `Corrupt` and keeps reading; everything fatal emits `Lost` exactly
+/// once and exits; a `Died` frame is terminal by protocol and exits
+/// WITHOUT a `Lost` (the death is the whole story — the respawn it
+/// triggers must not also count as a reconnect).
+fn reader_loop(
+    mut stream: UnixStream,
+    slot: usize,
+    gen: u64,
+    deadline: Duration,
+    shared: Arc<Shared>,
+) {
+    let push = |ev: Event| {
+        lock_ok(&shared.events).push_back(ev);
+        shared.cv.notify_one();
+    };
+    loop {
+        match read_frame(&mut stream, deadline) {
+            Ok((kind, payload)) => match decode_payload(kind, &payload) {
+                Ok(WireMsg::Rollout(rb)) => push(Event::From(FromActor::Rollout(rb))),
+                Ok(WireMsg::Died { actor, step, reason }) => {
+                    push(Event::From(FromActor::Died { actor, step, reason }));
+                    return;
+                }
+                Ok(other) => {
+                    eprintln!("[distrib] actor {slot}: protocol violation: {other:?}");
+                    push(Event::Lost { slot, gen, mid_frame: false });
+                    return;
+                }
+                Err(e) => {
+                    eprintln!("[distrib] actor {slot}: {e}");
+                    push(Event::Lost { slot, gen, mid_frame: false });
+                    return;
+                }
+            },
+            Err(WireError::Idle) => continue,
+            Err(WireError::Closed) => {
+                push(Event::Lost { slot, gen, mid_frame: false });
+                return;
+            }
+            Err(e @ WireError::Corrupt(_)) => {
+                // checksum noise: drop the frame, keep the link
+                eprintln!("[distrib] actor {slot}: {e}");
+                push(Event::Corrupt { slot, gen });
+            }
+            Err(e) => {
+                // Torn / Header / Malformed / Io: the byte stream can no
+                // longer be trusted — a frame died with it for the
+                // mid-frame cases
+                let mid_frame =
+                    matches!(e, WireError::Torn | WireError::Header(_));
+                eprintln!("[distrib] actor {slot}: {e}");
+                push(Event::Lost { slot, gen, mid_frame });
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn n_actors(&self) -> usize {
+        self.cfg.n_actors
+    }
+
+    fn send_to(&self, actor: usize, msg: ToActor) -> Result<()> {
+        let mut links = lock_ok(&self.links);
+        let link = match links.get_mut(actor) {
+            Some(Some(l)) => l,
+            Some(None) => bail!("actor {actor} not connected"),
+            None => bail!("actor slot {actor} out of range"),
+        };
+        match msg {
+            ToActor::Shutdown => {
+                link.stream.write_all(&encode_shutdown())?;
+            }
+            ToActor::Generate(item) => {
+                // first reference to this snapshot version on this link:
+                // ship the snapshot itself ahead of the work order
+                let v = item.snapshot.version;
+                if !link.sent_versions.contains(&v) {
+                    link.stream.write_all(&encode_snapshot(&item.snapshot))?;
+                    link.sent_versions.insert(v);
+                }
+                link.stream.write_all(&encode_generate(
+                    item.step, &item.x, &item.y, v, item.fault,
+                ))?;
+            }
+        }
+        link.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Recv {
+        let deadline = Instant::now() + timeout;
+        let mut q = lock_ok(&self.shared.events);
+        loop {
+            while let Some(ev) = q.pop_front() {
+                match ev {
+                    Event::From(m) => return Recv::Msg(m),
+                    Event::Corrupt { slot, gen } => {
+                        if gen == self.shared.gens[slot].load(Ordering::SeqCst) {
+                            return Recv::CorruptFrame { actor: slot };
+                        }
+                        // stale generation: noise from a replaced link
+                    }
+                    Event::Lost { slot, gen, mid_frame } => {
+                        if gen == self.shared.gens[slot].load(Ordering::SeqCst) {
+                            return Recv::ConnectionLost { actor: slot, mid_frame };
+                        }
+                    }
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(q);
+                let dead = lock_ok(&self.links).iter().all(|l| l.is_none());
+                return if dead { Recv::Disconnected } else { Recv::Timeout };
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            q = guard;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Actor-process side: the body of `repro actor`.
+
+/// Everything the `repro actor` subcommand parses off its command line.
+#[derive(Debug, Clone)]
+pub struct ActorProcCfg {
+    pub socket: PathBuf,
+    pub slot: usize,
+    pub seed: u64,
+    /// run fingerprint to present in the Hello
+    pub fingerprint: u64,
+    pub artifacts_dir: String,
+    pub f32_fast: bool,
+    pub deadline: Duration,
+}
+
+fn connect_retry(path: &Path, budget: Duration) -> Result<UnixStream> {
+    let t0 = Instant::now();
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) if t0.elapsed() < budget => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("connecting to {}", path.display()))
+            }
+        }
+    }
+}
+
+/// Run one actor process to completion: connect, handshake, then serve
+/// Generate orders until Shutdown, learner hangup, or a fault says
+/// otherwise. Wire-level fault orders are executed here by damaging the
+/// already-encoded reply through `WireFaults` — the learner's counters
+/// then measure its own detection of that exact damage.
+pub fn run_actor(cfg: &ActorProcCfg) -> Result<()> {
+    let eng = Engine::open(&cfg.artifacts_dir)?.with_f32_fast(cfg.f32_fast);
+    let mut ctx = ActorCtx::new(&eng, cfg.seed)?;
+    let mut stream = connect_retry(&cfg.socket, Duration::from_secs(10))?;
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_write_timeout(Some(cfg.deadline))?;
+    stream.write_all(&encode_hello(cfg.fingerprint, cfg.slot as u32))?;
+
+    // await the verdict (generous budget: the learner may be busy
+    // accepting a whole fleet)
+    let hs_t0 = Instant::now();
+    loop {
+        match read_frame(&mut stream, cfg.deadline) {
+            Ok((kind, payload)) => {
+                match decode_payload(kind, &payload).map_err(anyhow::Error::from)? {
+                    WireMsg::HelloAck => break,
+                    WireMsg::HelloReject { reason } => {
+                        bail!("handshake rejected by learner: {reason}")
+                    }
+                    other => bail!("expected HelloAck, got {other:?}"),
+                }
+            }
+            Err(WireError::Idle) if hs_t0.elapsed() < Duration::from_secs(30) => continue,
+            Err(e) => bail!("handshake failed: {e}"),
+        }
+    }
+
+    let mut snapshots: BTreeMap<u64, PolicySnapshot> = BTreeMap::new();
+    let mut last_heard = Instant::now();
+    loop {
+        let (kind, payload) = match read_frame(&mut stream, cfg.deadline) {
+            Ok(f) => f,
+            Err(WireError::Idle) => {
+                if last_heard.elapsed() > IDLE_EXIT {
+                    bail!("learner silent for {IDLE_EXIT:?}; exiting");
+                }
+                continue;
+            }
+            Err(WireError::Closed) => return Ok(()), // learner gone, clean
+            Err(e) => bail!("wire error from learner: {e}"),
+        };
+        last_heard = Instant::now();
+        let msg = decode_payload(kind, &payload).map_err(anyhow::Error::from)?;
+        match msg {
+            WireMsg::Shutdown => return Ok(()),
+            WireMsg::Snapshot(s) => {
+                let v = s.version;
+                snapshots.insert(v, s);
+                if v > SNAPSHOT_CACHE {
+                    snapshots = snapshots.split_off(&(v - SNAPSHOT_CACHE));
+                }
+            }
+            WireMsg::Generate { step, snapshot_version, x, y, fault } => {
+                if let Some(FaultKind::Crash) = fault {
+                    let _ =
+                        stream.write_all(&encode_died(cfg.slot, step, "injected crash"));
+                    return Ok(());
+                }
+                if let Some(FaultKind::Stall { ms }) = fault {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                let Some(snap) = snapshots.get(&snapshot_version) else {
+                    let _ = stream.write_all(&encode_died(
+                        cfg.slot,
+                        step,
+                        &format!("snapshot v{snapshot_version} not cached"),
+                    ));
+                    return Ok(());
+                };
+                match ctx.rollout(cfg.slot, snap, step, &x, &y) {
+                    Ok(mut rb) => {
+                        if let Some(FaultKind::Poison { kind, count }) = fault {
+                            apply_poison(&mut rb, kind, count);
+                        }
+                        let frame = encode_rollout(&rb);
+                        match fault.and_then(|f| WireFaults::damage(&frame, f)) {
+                            Some((bytes, sever)) => {
+                                let _ = stream.write_all(&bytes);
+                                let _ = stream.flush();
+                                if sever {
+                                    let _ = stream.shutdown(NetShutdown::Both);
+                                    return Ok(());
+                                }
+                            }
+                            None => stream.write_all(&frame)?,
+                        }
+                    }
+                    Err(e) => {
+                        let _ =
+                            stream.write_all(&encode_died(cfg.slot, step, &format!("{e:#}")));
+                        return Ok(());
+                    }
+                }
+            }
+            other => bail!("unexpected frame from learner: {other:?}"),
+        }
+    }
+}
+
+// The full transport (spawn, handshake, faults, reconnect) is exercised
+// end-to-end against real subprocesses in tests/distrib_e2e.rs and the
+// codec hardening in tests/wire_codec.rs; unit tests here would need a
+// second process and would duplicate those.

@@ -45,6 +45,15 @@ impl Supervisor {
         }
     }
 
+    /// Override the backoff schedule (base doubles per consecutive
+    /// respawn of a slot, saturating at `cap_ms`). The socket transport
+    /// uses this to stretch the in-process defaults to reconnect scale.
+    pub fn with_backoff(mut self, base_ms: u64, cap_ms: u64) -> Supervisor {
+        self.backoff_base_ms = base_ms.max(1);
+        self.backoff_cap_ms = cap_ms.max(self.backoff_base_ms);
+        self
+    }
+
     pub fn n_slots(&self) -> usize {
         self.alive.len()
     }
@@ -134,6 +143,25 @@ mod tests {
         assert_eq!(sup.on_death(0), RespawnVerdict::GiveUp);
         assert_eq!(sup.n_live(), 0);
         assert_eq!(sup.assign(3), None, "a dead fleet assigns nothing");
+    }
+
+    #[test]
+    fn with_backoff_rescales_the_schedule() {
+        let mut sup = Supervisor::new(1, 4).with_backoff(50, 200);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            match sup.on_death(0) {
+                RespawnVerdict::Respawn { backoff } => {
+                    seen.push(backoff.as_millis() as u64);
+                    sup.on_respawn(0);
+                }
+                RespawnVerdict::GiveUp => panic!("budget not exhausted"),
+            }
+        }
+        assert_eq!(seen, vec![50, 100, 200, 200], "doubles from base, saturates at cap");
+        // degenerate knobs are clamped, not panicked on
+        let mut sup = Supervisor::new(1, 1).with_backoff(0, 0);
+        assert!(matches!(sup.on_death(0), RespawnVerdict::Respawn { .. }));
     }
 
     #[test]

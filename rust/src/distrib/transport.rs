@@ -15,11 +15,13 @@
 //! its pending set), which is what a bandwidth-conscious socket transport
 //! would do too.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
+
+use super::faults::FaultKind;
 
 /// Immutable policy snapshot shipped to actors. `version` counts
 /// optimizer steps applied; `fingerprint` is the run fingerprint hash the
@@ -41,6 +43,11 @@ pub struct WorkItem {
     /// labels (actors need them only to score rewards)
     pub y: Vec<usize>,
     pub snapshot: Arc<PolicySnapshot>,
+    /// Injected fault order for this step, if any. The learner owns the
+    /// consume-once `FaultPlan` and ships the order with the work, so a
+    /// cross-process actor needs no plan of its own and re-dispatches
+    /// can explicitly choose whether the fault rides along.
+    pub fault: Option<FaultKind>,
 }
 
 /// An actor's reply for one step. `n` is the *claimed* sample count; the
@@ -63,6 +70,7 @@ pub enum ToActor {
     Shutdown,
 }
 
+#[derive(Debug)]
 pub enum FromActor {
     Rollout(RolloutBatch),
     /// Actor announced its own death (injected crash or compute error).
@@ -71,14 +79,54 @@ pub enum FromActor {
     Died { actor: usize, step: u64, reason: String },
 }
 
+/// What a `recv_timeout` call can yield. Splitting "quiet" from "dead"
+/// lets the supervisor stop arming heartbeat clocks against a fleet
+/// that can never answer, and the wire events let a byte-carrying
+/// transport report damage without pretending it was silence.
+#[derive(Debug)]
+pub enum Recv {
+    Msg(FromActor),
+    /// A frame from `actor` failed its checksum; the connection
+    /// survives, the frame is gone. The learner re-dispatches whatever
+    /// the frame was carrying.
+    CorruptFrame { actor: usize },
+    /// `actor`'s connection died. `mid_frame` distinguishes a torn
+    /// frame (bytes lost in flight — counts as corruption too) from a
+    /// close at a frame boundary.
+    ConnectionLost { actor: usize, mid_frame: bool },
+    /// Nothing arrived within the timeout; the fleet may still answer.
+    Timeout,
+    /// Every slot is permanently gone — no message can ever arrive.
+    Disconnected,
+}
+
+/// Which transport implementation carries the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (the reference implementation).
+    Channel,
+    /// Unix-domain sockets to actor subprocesses (distrib/socket.rs).
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "" | "channel" => TransportKind::Channel,
+            "socket" => TransportKind::Socket,
+            other => bail!("unknown transport '{other}' (channel|socket)"),
+        })
+    }
+}
+
 /// Learner-side view of the actor fleet.
 pub trait Transport: Send + Sync {
     fn n_actors(&self) -> usize;
     /// Send work to one actor slot. Fails if the slot has no live
     /// endpoint (never registered, deregistered, or hung up).
     fn send_to(&self, actor: usize, msg: ToActor) -> Result<()>;
-    /// Wait up to `timeout` for any actor's next message.
-    fn recv_timeout(&self, timeout: Duration) -> Option<FromActor>;
+    /// Wait up to `timeout` for any actor's next message or wire event.
+    fn recv_timeout(&self, timeout: Duration) -> Recv;
 }
 
 /// The pool-wide poisoned-mutex policy (coordinator/pool.rs): absorb the
@@ -109,17 +157,42 @@ impl ChannelTransport {
 
     /// Create (or replace, on respawn) the endpoint pair for slot
     /// `actor`: the actor-side inbox receiver and a clone of the shared
-    /// outbox sender.
-    pub fn register_actor(&self, actor: usize) -> (Receiver<ToActor>, Sender<FromActor>) {
-        let (tx, rx) = channel();
-        lock_ok(&self.to)[actor] = Some(tx);
-        (rx, lock_ok(&self.from_tx).clone())
+    /// outbox sender. An out-of-range slot is a clean error (loud in
+    /// debug builds): a supervisor holding a corrupted slot id must not
+    /// take the learner down with an index panic.
+    pub fn register_actor(
+        &self,
+        actor: usize,
+    ) -> Result<(Receiver<ToActor>, Sender<FromActor>)> {
+        let mut to = lock_ok(&self.to);
+        #[cfg(debug_assertions)]
+        if actor >= to.len() {
+            eprintln!("[transport] register_actor: slot {actor} out of range (fleet of {})", to.len());
+        }
+        match to.get_mut(actor) {
+            Some(slot) => {
+                let (tx, rx) = channel();
+                *slot = Some(tx);
+                drop(to);
+                Ok((rx, lock_ok(&self.from_tx).clone()))
+            }
+            None => bail!("register_actor: slot {actor} out of range (fleet of {})", to.len()),
+        }
     }
 
     /// Drop slot `actor`'s inbox sender; its receive loop ends once the
     /// queue drains. Used for shutdown and for abandoning a dead slot.
+    /// Deregistering an out-of-range slot is a no-op (loud in debug
+    /// builds): there is nothing to tear down.
     pub fn deregister(&self, actor: usize) {
-        lock_ok(&self.to)[actor] = None;
+        let mut to = lock_ok(&self.to);
+        #[cfg(debug_assertions)]
+        if actor >= to.len() {
+            eprintln!("[transport] deregister: slot {actor} out of range (fleet of {})", to.len());
+        }
+        if let Some(slot) = to.get_mut(actor) {
+            *slot = None;
+        }
     }
 }
 
@@ -142,8 +215,21 @@ impl Transport for ChannelTransport {
         }
     }
 
-    fn recv_timeout(&self, timeout: Duration) -> Option<FromActor> {
-        lock_ok(&self.from_rx).recv_timeout(timeout).ok()
+    fn recv_timeout(&self, timeout: Duration) -> Recv {
+        match lock_ok(&self.from_rx).recv_timeout(timeout) {
+            Ok(msg) => Recv::Msg(msg),
+            // the learner holds its own from_tx clone, so mpsc never
+            // reports Disconnected here; infer a dead fleet from the
+            // slot table instead: a timeout with zero live endpoints
+            // means no reply can ever arrive
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                if lock_ok(&self.to).iter().all(|s| s.is_none()) {
+                    Recv::Disconnected
+                } else {
+                    Recv::Timeout
+                }
+            }
+        }
     }
 }
 
@@ -159,26 +245,26 @@ mod tests {
         assert!(tp.send_to(0, ToActor::Shutdown).is_err());
         assert!(tp.send_to(7, ToActor::Shutdown).is_err());
 
-        let (rx, tx) = tp.register_actor(0);
+        let (rx, tx) = tp.register_actor(0).unwrap();
         tp.send_to(0, ToActor::Shutdown).unwrap();
         assert!(matches!(rx.recv().unwrap(), ToActor::Shutdown));
 
         tx.send(FromActor::Died { actor: 0, step: 3, reason: "test".into() }).unwrap();
         match tp.recv_timeout(Duration::from_millis(200)) {
-            Some(FromActor::Died { actor, step, .. }) => {
+            Recv::Msg(FromActor::Died { actor, step, .. }) => {
                 assert_eq!((actor, step), (0, 3));
             }
-            other => panic!("expected Died, got {:?}", other.is_some()),
+            other => panic!("expected Died, got {other:?}"),
         }
-        // empty inbox times out as None, not an error
-        assert!(tp.recv_timeout(Duration::from_millis(10)).is_none());
+        // empty inbox with a live slot: a quiet fleet, not a dead one
+        assert!(matches!(tp.recv_timeout(Duration::from_millis(10)), Recv::Timeout));
     }
 
     #[test]
     fn reregistering_replaces_the_endpoint() {
         let tp = ChannelTransport::new(1);
-        let (old_rx, _tx) = tp.register_actor(0);
-        let (new_rx, _tx2) = tp.register_actor(0);
+        let (old_rx, _tx) = tp.register_actor(0).unwrap();
+        let (new_rx, _tx2) = tp.register_actor(0).unwrap();
         tp.send_to(0, ToActor::Shutdown).unwrap();
         // the replaced inbox sees a hangup, the fresh one gets the message
         assert!(old_rx.recv().is_err());
@@ -187,5 +273,37 @@ mod tests {
         tp.deregister(0);
         assert!(tp.send_to(0, ToActor::Shutdown).is_err());
         assert!(new_rx.recv().is_err(), "deregister hangs up the actor");
+    }
+
+    #[test]
+    fn corrupted_slot_ids_never_panic() {
+        // regression (satellite): a supervisor respawning with a
+        // corrupted slot id must not take the learner down — both
+        // registration paths degrade to a clean error / no-op
+        let tp = ChannelTransport::new(2);
+        assert!(tp.register_actor(7).is_err());
+        tp.deregister(7); // must not panic
+        // the fleet is untouched: in-range slots still work
+        let (rx, _tx) = tp.register_actor(1).unwrap();
+        tp.send_to(1, ToActor::Shutdown).unwrap();
+        assert!(matches!(rx.recv().unwrap(), ToActor::Shutdown));
+    }
+
+    #[test]
+    fn quiet_fleet_vs_dead_fleet() {
+        let tp = ChannelTransport::new(2);
+        let (_rx0, _tx0) = tp.register_actor(0).unwrap();
+        assert!(matches!(tp.recv_timeout(Duration::from_millis(5)), Recv::Timeout));
+        // deregister every slot: no reply can ever arrive
+        tp.deregister(0);
+        assert!(matches!(tp.recv_timeout(Duration::from_millis(5)), Recv::Disconnected));
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("").unwrap(), TransportKind::Channel);
+        assert_eq!(TransportKind::parse("channel").unwrap(), TransportKind::Channel);
+        assert_eq!(TransportKind::parse("socket").unwrap(), TransportKind::Socket);
+        assert!(TransportKind::parse("tcp").is_err());
     }
 }

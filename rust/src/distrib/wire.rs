@@ -1,0 +1,931 @@
+//! Hardened wire protocol for the cross-process actor fleet.
+//!
+//! Everything that crosses a process boundary travels in a
+//! length-prefixed frame:
+//!
+//! ```text
+//! [len: u32 LE][len_check: u32 LE][kind: u8][crc: u64 LE][payload...]
+//! ```
+//!
+//! `len` counts everything after the 8-byte header (kind + crc +
+//! payload, so `len >= 9`). `len_check = len ^ LEN_XOR` lets the reader
+//! validate the header *before* trusting `len` — a corrupted length
+//! field is detected without allocating, and without it a single flipped
+//! length byte would silently desynchronize the stream. `crc` is FNV-1a
+//! (the checkpoint module's checksum) over `kind || payload`, so a
+//! flipped byte anywhere past the header is caught by the checksum while
+//! the framing survives: the learner drops the frame, counts it, and
+//! keeps reading. Header corruption, by contrast, is connection-fatal —
+//! the byte stream can no longer be trusted to be frame-aligned — and
+//! drains into the reconnect path instead.
+//!
+//! Decoding is bounds-checked end to end (`Rd`): a crc-valid frame whose
+//! payload still fails to decode is `Malformed`, which is fatal by
+//! policy (it means a protocol bug or an adversarial peer, not line
+//! noise). Float payloads round-trip bitwise via `to_bits`/`from_bits`,
+//! so NaN/±inf survive the wire exactly — the admission path, not the
+//! codec, decides what to do with them.
+//!
+//! The module is pure bytes-in/bytes-out (generic over `Read`), so every
+//! robustness case — truncation at arbitrary offsets, flipped header vs
+//! payload bytes, allocation-bomb lengths — is testable over a `Cursor`
+//! without a socket in sight.
+
+use std::io::{ErrorKind, Read};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::faults::{FaultKind, PoisonKind};
+use super::transport::{PolicySnapshot, RolloutBatch};
+
+/// "KWR0" — Kondo WiRe, revision 0.
+pub const WIRE_MAGIC: u32 = 0x4b57_5230;
+/// Bumped on any frame-layout or payload-codec change.
+pub const WIRE_VERSION: u32 = 1;
+/// XOR mask relating `len` to `len_check` in the frame header.
+pub const LEN_XOR: u32 = 0x5a5a_a5a5;
+/// Hard ceiling on a claimed frame length (64 MiB): anything larger is
+/// header corruption or an allocation bomb, rejected before `Vec::with_capacity`.
+pub const MAX_FRAME: usize = 1 << 26;
+/// Bytes of header before the checksummed region.
+pub const HDR: usize = 8;
+/// kind (1) + crc (8): the minimum legal `len`.
+pub const OVERHEAD: usize = 9;
+/// How long a blocking read waits before reporting `Idle` at a frame
+/// boundary; also the granularity of the mid-frame deadline clock.
+pub const READ_POLL: Duration = Duration::from_millis(100);
+
+pub const K_HELLO: u8 = 1;
+pub const K_HELLO_ACK: u8 = 2;
+pub const K_HELLO_REJECT: u8 = 3;
+pub const K_SNAPSHOT: u8 = 4;
+pub const K_GENERATE: u8 = 5;
+pub const K_ROLLOUT: u8 = 6;
+pub const K_DIED: u8 = 7;
+pub const K_SHUTDOWN: u8 = 8;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `kind || payload` — the same fold the checkpoint format
+/// uses (`checkpoint::fnv1a64`), inlined here so the frame checksum
+/// never allocates a concatenated buffer.
+pub fn crc_frame(kind: u8, payload: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    h ^= kind as u64;
+    h = h.wrapping_mul(FNV_PRIME);
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Everything that can go wrong reading one frame. `fatal()` encodes the
+/// drop-frame vs drop-connection policy in one place.
+#[derive(Debug)]
+pub enum WireError {
+    /// No bytes arrived within one poll interval at a frame boundary —
+    /// the benign "nothing to read yet" case.
+    Idle,
+    /// Clean EOF at a frame boundary (peer closed between frames).
+    Closed,
+    /// EOF or deadline expiry *mid-frame*: the peer died or stalled
+    /// while a frame was in flight.
+    Torn,
+    /// Header self-check failed (`len_check` mismatch or `len` out of
+    /// range): the stream is no longer frame-aligned. Fatal.
+    Header(String),
+    /// Checksum mismatch on an intact frame: line noise. The framing
+    /// survives, so this is recoverable — drop the frame, keep reading.
+    Corrupt(String),
+    /// Checksum-valid payload that fails to decode: a protocol bug or a
+    /// hostile peer, not line noise. Fatal.
+    Malformed(String),
+    Io(std::io::Error),
+}
+
+impl WireError {
+    /// Whether the connection itself can no longer be trusted. `Idle`
+    /// and `Corrupt` are the only survivable cases; `Closed`/`Torn` end
+    /// the connection by definition.
+    pub fn fatal(&self) -> bool {
+        !matches!(self, WireError::Idle | WireError::Corrupt(_))
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Idle => write!(f, "idle (no frame within poll interval)"),
+            WireError::Closed => write!(f, "connection closed at frame boundary"),
+            WireError::Torn => write!(f, "torn frame (EOF or deadline mid-frame)"),
+            WireError::Header(m) => write!(f, "frame header corrupt: {m}"),
+            WireError::Corrupt(m) => write!(f, "frame checksum mismatch: {m}"),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Encode one complete frame: header + kind + crc + payload.
+pub fn encode_frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let len = (OVERHEAD + payload.len()) as u32;
+    let mut out = Vec::with_capacity(HDR + OVERHEAD + payload.len());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&(len ^ LEN_XOR).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&crc_frame(kind, payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Fill `buf` from `r`, honoring the frame deadline. `*total` counts
+/// bytes read across the whole frame: zero-byte EOF is `Closed`, EOF
+/// after any byte is `Torn`. A would-block with zero bytes read is
+/// `Idle` (frame-boundary poll); once a byte has arrived, `clock` arms
+/// and would-blocks only fail after `deadline` elapses.
+fn fill(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    total: &mut usize,
+    clock: &mut Option<Instant>,
+    deadline: Duration,
+) -> Result<(), WireError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(if *total == 0 { WireError::Closed } else { WireError::Torn })
+            }
+            Ok(n) => {
+                off += n;
+                *total += n;
+                if clock.is_none() {
+                    *clock = Some(Instant::now());
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                match clock {
+                    // nothing read yet: a quiet peer, not a torn frame
+                    None => return Err(WireError::Idle),
+                    Some(t0) if t0.elapsed() >= deadline => return Err(WireError::Torn),
+                    Some(_) => {}
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. The caller is expected to have set a short read
+/// timeout (`READ_POLL`) on the underlying stream; this function turns
+/// those polls into `Idle` at a frame boundary and enforces `deadline`
+/// wall-clock from the first byte of a frame to its last.
+pub fn read_frame(r: &mut impl Read, deadline: Duration) -> Result<(u8, Vec<u8>), WireError> {
+    let mut total = 0usize;
+    let mut clock: Option<Instant> = None;
+    let mut hdr = [0u8; HDR];
+    fill(r, &mut hdr, &mut total, &mut clock, deadline)?;
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    let check = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]);
+    if len ^ LEN_XOR != check {
+        return Err(WireError::Header(format!(
+            "len={len:#010x} len_check={check:#010x} (xor mask violated)"
+        )));
+    }
+    let len = len as usize;
+    if len < OVERHEAD || len > MAX_FRAME {
+        // reject before allocating: an oversized claim is either header
+        // corruption the xor check missed or an allocation bomb
+        return Err(WireError::Header(format!(
+            "claimed length {len} outside [{OVERHEAD}, {MAX_FRAME}]"
+        )));
+    }
+    let mut kind_crc = [0u8; OVERHEAD];
+    fill(r, &mut kind_crc, &mut total, &mut clock, deadline)?;
+    let kind = kind_crc[0];
+    let crc = u64::from_le_bytes([
+        kind_crc[1], kind_crc[2], kind_crc[3], kind_crc[4], kind_crc[5], kind_crc[6],
+        kind_crc[7], kind_crc[8],
+    ]);
+    let mut payload = vec![0u8; len - OVERHEAD];
+    fill(r, &mut payload, &mut total, &mut clock, deadline)?;
+    let want = crc_frame(kind, &payload);
+    if want != crc {
+        return Err(WireError::Corrupt(format!(
+            "kind={kind} len={len}: crc {crc:#018x} != computed {want:#018x}"
+        )));
+    }
+    Ok((kind, payload))
+}
+
+/// Bounds-checked payload reader: every primitive read is checked, so a
+/// truncated or lying payload becomes `Malformed`, never a panic.
+pub struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        let end = self.p.checked_add(n).filter(|&e| e <= self.b.len()).ok_or_else(|| {
+            WireError::Malformed(format!(
+                "{what}: need {n} bytes at offset {}, payload has {}",
+                self.p,
+                self.b.len()
+            ))
+        })?;
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A `u32` length prefix validated against the bytes actually
+    /// remaining, so a lying count cannot trigger an oversized
+    /// allocation: `per_item` is the minimum encoded size of one
+    /// element.
+    pub fn len_prefix(&mut self, per_item: usize, what: &str) -> Result<usize, WireError> {
+        let n = self.u32(what)? as usize;
+        let remaining = self.b.len() - self.p;
+        if n.checked_mul(per_item).map_or(true, |need| need > remaining) {
+            return Err(WireError::Malformed(format!(
+                "{what}: claimed {n} items x {per_item}B but only {remaining}B remain"
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn str(&mut self, what: &str) -> Result<String, WireError> {
+        let n = self.len_prefix(1, what)?;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| WireError::Malformed(format!("{what}: invalid utf-8")))
+    }
+
+    /// All bytes consumed? Trailing garbage in a crc-valid frame means
+    /// an encoder/decoder mismatch — surfaced loudly, not ignored.
+    pub fn done(&self) -> Result<(), WireError> {
+        if self.p != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.p
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Fault codec: `FaultKind` crosses the wire inside Generate frames (the
+// learner owns the consume-once `FaultPlan`; actors just execute orders).
+
+fn put_fault(out: &mut Vec<u8>, f: Option<FaultKind>) {
+    match f {
+        None => out.push(0),
+        Some(FaultKind::Crash) => out.push(1),
+        Some(FaultKind::Stall { ms }) => {
+            out.push(2);
+            out.extend_from_slice(&ms.to_le_bytes());
+        }
+        Some(FaultKind::Poison { kind, count }) => {
+            out.push(3);
+            out.push(match kind {
+                PoisonKind::NanU => 0,
+                PoisonKind::NanEll => 1,
+                PoisonKind::BadAction => 2,
+                PoisonKind::Shape => 3,
+                PoisonKind::Fingerprint => 4,
+            });
+            out.extend_from_slice(&(count as u32).to_le_bytes());
+        }
+        Some(FaultKind::Torn) => out.push(4),
+        Some(FaultKind::Partial { bytes }) => {
+            out.push(5);
+            out.extend_from_slice(&(bytes as u32).to_le_bytes());
+        }
+        Some(FaultKind::BitFlip { offset }) => {
+            out.push(6);
+            out.extend_from_slice(&(offset as u32).to_le_bytes());
+        }
+        Some(FaultKind::Disconnect) => out.push(7),
+    }
+}
+
+fn get_fault(rd: &mut Rd) -> Result<Option<FaultKind>, WireError> {
+    Ok(match rd.u8("fault tag")? {
+        0 => None,
+        1 => Some(FaultKind::Crash),
+        2 => Some(FaultKind::Stall { ms: rd.u64("stall ms")? }),
+        3 => {
+            let kind = match rd.u8("poison kind")? {
+                0 => PoisonKind::NanU,
+                1 => PoisonKind::NanEll,
+                2 => PoisonKind::BadAction,
+                3 => PoisonKind::Shape,
+                4 => PoisonKind::Fingerprint,
+                k => {
+                    return Err(WireError::Malformed(format!("unknown poison kind tag {k}")))
+                }
+            };
+            Some(FaultKind::Poison { kind, count: rd.u32("poison count")? as usize })
+        }
+        4 => Some(FaultKind::Torn),
+        5 => Some(FaultKind::Partial { bytes: rd.u32("partial bytes")? as usize }),
+        6 => Some(FaultKind::BitFlip { offset: rd.u32("bitflip offset")? as usize }),
+        7 => Some(FaultKind::Disconnect),
+        t => return Err(WireError::Malformed(format!("unknown fault tag {t}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Message encoders. All borrow — snapshot params are never cloned to
+// build a frame.
+
+/// The actor's opening frame; the learner validates it before anything
+/// else crosses the link.
+pub fn encode_hello(fingerprint: u64, slot: u32) -> Vec<u8> {
+    let mut p = Vec::with_capacity(20);
+    p.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    p.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    p.extend_from_slice(&fingerprint.to_le_bytes());
+    p.extend_from_slice(&slot.to_le_bytes());
+    encode_frame(K_HELLO, &p)
+}
+
+pub fn encode_hello_ack() -> Vec<u8> {
+    encode_frame(K_HELLO_ACK, &[])
+}
+
+pub fn encode_hello_reject(reason: &str) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_str(&mut p, reason);
+    encode_frame(K_HELLO_REJECT, &p)
+}
+
+pub fn encode_snapshot(s: &PolicySnapshot) -> Vec<u8> {
+    let total: usize = s.params.iter().map(|t| 4 + 4 * t.len()).sum();
+    let mut p = Vec::with_capacity(20 + total);
+    p.extend_from_slice(&s.version.to_le_bytes());
+    p.extend_from_slice(&s.fingerprint.to_le_bytes());
+    p.extend_from_slice(&(s.params.len() as u32).to_le_bytes());
+    for t in s.params.iter() {
+        p.extend_from_slice(&(t.len() as u32).to_le_bytes());
+        for &v in t {
+            p.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    encode_frame(K_SNAPSHOT, &p)
+}
+
+/// Work order: contexts + labels + the snapshot *version* to compute
+/// against (the snapshot itself ships once per link in its own frame).
+pub fn encode_generate(
+    step: u64,
+    x: &[f32],
+    y: &[usize],
+    snapshot_version: u64,
+    fault: Option<FaultKind>,
+) -> Vec<u8> {
+    let mut p = Vec::with_capacity(25 + 4 * x.len() + 4 * y.len());
+    p.extend_from_slice(&step.to_le_bytes());
+    p.extend_from_slice(&snapshot_version.to_le_bytes());
+    p.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    for &v in x {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    p.extend_from_slice(&(y.len() as u32).to_le_bytes());
+    for &v in y {
+        p.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    put_fault(&mut p, fault);
+    encode_frame(K_GENERATE, &p)
+}
+
+pub fn encode_rollout(rb: &RolloutBatch) -> Vec<u8> {
+    let mut p =
+        Vec::with_capacity(40 + 4 * rb.actions.len() + 8 * rb.u.len() + 8 * rb.ell.len());
+    p.extend_from_slice(&(rb.actor as u32).to_le_bytes());
+    p.extend_from_slice(&rb.step.to_le_bytes());
+    p.extend_from_slice(&rb.snapshot_version.to_le_bytes());
+    p.extend_from_slice(&rb.fingerprint.to_le_bytes());
+    p.extend_from_slice(&(rb.n as u32).to_le_bytes());
+    p.extend_from_slice(&(rb.actions.len() as u32).to_le_bytes());
+    for &a in &rb.actions {
+        p.extend_from_slice(&a.to_le_bytes());
+    }
+    p.extend_from_slice(&(rb.u.len() as u32).to_le_bytes());
+    for &v in &rb.u {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    p.extend_from_slice(&(rb.ell.len() as u32).to_le_bytes());
+    for &v in &rb.ell {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    encode_frame(K_ROLLOUT, &p)
+}
+
+pub fn encode_died(actor: usize, step: u64, reason: &str) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&(actor as u32).to_le_bytes());
+    p.extend_from_slice(&step.to_le_bytes());
+    put_str(&mut p, reason);
+    encode_frame(K_DIED, &p)
+}
+
+pub fn encode_shutdown() -> Vec<u8> {
+    encode_frame(K_SHUTDOWN, &[])
+}
+
+// ---------------------------------------------------------------------------
+// Decoder: one owned enum the receive loops match on.
+
+#[derive(Debug)]
+pub enum WireMsg {
+    Hello { magic: u32, version: u32, fingerprint: u64, slot: u32 },
+    HelloAck,
+    HelloReject { reason: String },
+    Snapshot(PolicySnapshot),
+    Generate {
+        step: u64,
+        snapshot_version: u64,
+        x: Vec<f32>,
+        y: Vec<usize>,
+        fault: Option<FaultKind>,
+    },
+    Rollout(RolloutBatch),
+    Died { actor: usize, step: u64, reason: String },
+    Shutdown,
+}
+
+pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, WireError> {
+    let mut rd = Rd::new(payload);
+    let msg = match kind {
+        K_HELLO => WireMsg::Hello {
+            magic: rd.u32("hello magic")?,
+            version: rd.u32("hello version")?,
+            fingerprint: rd.u64("hello fingerprint")?,
+            slot: rd.u32("hello slot")?,
+        },
+        K_HELLO_ACK => WireMsg::HelloAck,
+        K_HELLO_REJECT => WireMsg::HelloReject { reason: rd.str("reject reason")? },
+        K_SNAPSHOT => {
+            let version = rd.u64("snapshot version")?;
+            let fingerprint = rd.u64("snapshot fingerprint")?;
+            let n_tensors = rd.len_prefix(4, "snapshot tensor count")?;
+            let mut params = Vec::with_capacity(n_tensors);
+            for i in 0..n_tensors {
+                let n = rd.len_prefix(4, "snapshot tensor len")?;
+                let mut t = Vec::with_capacity(n);
+                for _ in 0..n {
+                    t.push(rd.f32(&format!("snapshot tensor {i}"))?);
+                }
+                params.push(t);
+            }
+            WireMsg::Snapshot(PolicySnapshot {
+                version,
+                params: Arc::new(params),
+                fingerprint,
+            })
+        }
+        K_GENERATE => {
+            let step = rd.u64("generate step")?;
+            let snapshot_version = rd.u64("generate snapshot version")?;
+            let nx = rd.len_prefix(4, "generate x len")?;
+            let mut x = Vec::with_capacity(nx);
+            for _ in 0..nx {
+                x.push(rd.f32("generate x")?);
+            }
+            let ny = rd.len_prefix(4, "generate y len")?;
+            let mut y = Vec::with_capacity(ny);
+            for _ in 0..ny {
+                y.push(rd.u32("generate y")? as usize);
+            }
+            let fault = get_fault(&mut rd)?;
+            WireMsg::Generate { step, snapshot_version, x, y, fault }
+        }
+        K_ROLLOUT => {
+            let actor = rd.u32("rollout actor")? as usize;
+            let step = rd.u64("rollout step")?;
+            let snapshot_version = rd.u64("rollout snapshot version")?;
+            let fingerprint = rd.u64("rollout fingerprint")?;
+            let n = rd.u32("rollout n")? as usize;
+            let na = rd.len_prefix(4, "rollout actions len")?;
+            let mut actions = Vec::with_capacity(na);
+            for _ in 0..na {
+                actions.push(rd.u32("rollout action")? as i32);
+            }
+            let nu = rd.len_prefix(8, "rollout u len")?;
+            let mut u = Vec::with_capacity(nu);
+            for _ in 0..nu {
+                u.push(rd.f64("rollout u")?);
+            }
+            let ne = rd.len_prefix(8, "rollout ell len")?;
+            let mut ell = Vec::with_capacity(ne);
+            for _ in 0..ne {
+                ell.push(rd.f64("rollout ell")?);
+            }
+            WireMsg::Rollout(RolloutBatch {
+                actor,
+                step,
+                snapshot_version,
+                fingerprint,
+                n,
+                actions,
+                u,
+                ell,
+            })
+        }
+        K_DIED => WireMsg::Died {
+            actor: rd.u32("died actor")? as usize,
+            step: rd.u64("died step")?,
+            reason: rd.str("died reason")?,
+        },
+        K_SHUTDOWN => WireMsg::Shutdown,
+        k => return Err(WireError::Malformed(format!("unknown frame kind {k}"))),
+    };
+    rd.done()?;
+    Ok(msg)
+}
+
+/// Validate an actor's Hello against this run. Returns the claimed slot,
+/// or a human-readable rejection reason the learner echoes back in a
+/// `HelloReject` frame before closing the link.
+pub fn validate_hello(msg: &WireMsg, expect_fingerprint: u64) -> Result<u32, String> {
+    match msg {
+        WireMsg::Hello { magic, version, fingerprint, slot } => {
+            if *magic != WIRE_MAGIC {
+                return Err(format!("bad magic {magic:#010x} (want {WIRE_MAGIC:#010x})"));
+            }
+            if *version != WIRE_VERSION {
+                return Err(format!("wire version {version} (want {WIRE_VERSION})"));
+            }
+            if *fingerprint != expect_fingerprint {
+                return Err(format!(
+                    "run fingerprint {fingerprint:#018x} does not match learner {expect_fingerprint:#018x}"
+                ));
+            }
+            Ok(*slot)
+        }
+        other => Err(format!("expected Hello as first frame, got {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WireFaults: the byte-level damage shim. Applied actor-side to the
+// encoded rollout frame for the one step the learner ordered damaged, so
+// injected corruption counts are exact and deterministic — same bytes,
+// same damage, every run.
+
+pub struct WireFaults;
+
+impl WireFaults {
+    /// Damage an encoded frame per `fault`. Returns the bytes to write
+    /// and whether to sever the connection immediately after, or `None`
+    /// for fault kinds that are not wire-level (the caller handles those
+    /// before encoding).
+    pub fn damage(frame: &[u8], fault: FaultKind) -> Option<(Vec<u8>, bool)> {
+        match fault {
+            FaultKind::Torn => {
+                // cut mid-frame (past the header, before the end) and hang up:
+                // the learner sees a frame that starts and never finishes
+                let cut = (frame.len() / 2).max(HDR + 1).min(frame.len() - 1);
+                Some((frame[..cut].to_vec(), true))
+            }
+            FaultKind::Partial { bytes } => {
+                let cut = bytes.clamp(1, frame.len() - 1);
+                Some((frame[..cut].to_vec(), true))
+            }
+            FaultKind::BitFlip { offset } => {
+                // flip one payload bit: always checksum-caught, never
+                // header-desyncing, so the connection survives
+                let payload_len = frame.len() - HDR - OVERHEAD;
+                let mut out = frame.to_vec();
+                if payload_len > 0 {
+                    let byte = HDR + OVERHEAD + (offset % payload_len);
+                    out[byte] ^= 1 << (offset % 8);
+                } else {
+                    // degenerate empty payload: flip the crc instead
+                    out[HDR + 1] ^= 1 << (offset % 8);
+                }
+                Some((out, false))
+            }
+            FaultKind::Disconnect => Some((Vec::new(), true)),
+            FaultKind::Crash | FaultKind::Stall { .. } | FaultKind::Poison { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const DL: Duration = Duration::from_millis(200);
+
+    fn batch() -> RolloutBatch {
+        RolloutBatch {
+            actor: 1,
+            step: 7,
+            snapshot_version: 5,
+            fingerprint: 0xdead_beef,
+            n: 3,
+            actions: vec![0, 4, 9],
+            u: vec![0.5, f64::NAN, f64::NEG_INFINITY],
+            ell: vec![2.302, -0.0, f64::INFINITY],
+        }
+    }
+
+    #[test]
+    fn rollout_round_trips_bitwise() {
+        let rb = batch();
+        let frame = encode_rollout(&rb);
+        let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+        assert_eq!(kind, K_ROLLOUT);
+        match decode_payload(kind, &payload).unwrap() {
+            WireMsg::Rollout(got) => {
+                assert_eq!(got.actor, rb.actor);
+                assert_eq!(got.step, rb.step);
+                assert_eq!(got.n, rb.n);
+                assert_eq!(got.actions, rb.actions);
+                // bitwise, not ==: NaN payloads must survive exactly
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got.u), bits(&rb.u));
+                assert_eq!(bits(&got.ell), bits(&rb.ell));
+            }
+            other => panic!("expected Rollout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generate_and_snapshot_round_trip() {
+        let snap = PolicySnapshot {
+            version: 9,
+            params: Arc::new(vec![vec![1.0, -0.0, f32::NAN], vec![]]),
+            fingerprint: 77,
+        };
+        let frame = encode_snapshot(&snap);
+        let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+        match decode_payload(kind, &payload).unwrap() {
+            WireMsg::Snapshot(got) => {
+                assert_eq!(got.version, 9);
+                assert_eq!(got.fingerprint, 77);
+                assert_eq!(got.params.len(), 2);
+                assert_eq!(got.params[0][0].to_bits(), 1.0f32.to_bits());
+                assert_eq!(got.params[0][1].to_bits(), (-0.0f32).to_bits());
+                assert!(got.params[0][2].is_nan());
+                assert!(got.params[1].is_empty());
+            }
+            other => panic!("expected Snapshot, got {other:?}"),
+        }
+
+        let frame = encode_generate(
+            3,
+            &[0.25, 0.5],
+            &[7, 0],
+            2,
+            Some(FaultKind::Poison { kind: PoisonKind::Shape, count: 2 }),
+        );
+        let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+        match decode_payload(kind, &payload).unwrap() {
+            WireMsg::Generate { step, snapshot_version, x, y, fault } => {
+                assert_eq!((step, snapshot_version), (3, 2));
+                assert_eq!(x, vec![0.25, 0.5]);
+                assert_eq!(y, vec![7, 0]);
+                assert_eq!(
+                    fault,
+                    Some(FaultKind::Poison { kind: PoisonKind::Shape, count: 2 })
+                );
+            }
+            other => panic!("expected Generate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_tags_round_trip() {
+        for f in [
+            None,
+            Some(FaultKind::Crash),
+            Some(FaultKind::Stall { ms: 1500 }),
+            Some(FaultKind::Poison { kind: PoisonKind::NanEll, count: 4 }),
+            Some(FaultKind::Torn),
+            Some(FaultKind::Partial { bytes: 13 }),
+            Some(FaultKind::BitFlip { offset: 17 }),
+            Some(FaultKind::Disconnect),
+        ] {
+            let mut p = Vec::new();
+            put_fault(&mut p, f);
+            let mut rd = Rd::new(&p);
+            assert_eq!(get_fault(&mut rd).unwrap(), f);
+            rd.done().unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_closed_and_header_prefix_is_torn() {
+        let frame = encode_shutdown();
+        // no bytes at all: clean close
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&[][..]), DL),
+            Err(WireError::Closed)
+        ));
+        // any strict prefix: torn, never a panic or a silent truncation
+        for cut in 1..frame.len() {
+            match read_frame(&mut Cursor::new(&frame[..cut]), DL) {
+                Err(WireError::Torn) => {}
+                other => panic!("cut at {cut}: expected Torn, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_corruption_is_fatal_payload_corruption_is_not() {
+        let frame = encode_rollout(&batch());
+        // flip a bit in each header byte: len/len_check disagree -> Header
+        for i in 0..HDR {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x10;
+            match read_frame(&mut Cursor::new(&bad), DL) {
+                Err(e @ WireError::Header(_)) => assert!(e.fatal()),
+                other => panic!("header byte {i}: expected Header, got {other:?}"),
+            }
+        }
+        // flip the kind byte, a crc byte, and payload bytes: crc catches
+        // all of them, and the error is the recoverable kind
+        for i in [HDR, HDR + 1, HDR + 5, HDR + OVERHEAD, frame.len() - 1] {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x10;
+            match read_frame(&mut Cursor::new(&bad), DL) {
+                Err(e @ WireError::Corrupt(_)) => assert!(!e.fatal()),
+                other => panic!("byte {i}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_does_not_desync_the_stream() {
+        // a checksum-failed frame is dropped and the NEXT frame decodes:
+        // the framing layer survives payload noise
+        let mut bad = encode_rollout(&batch());
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        let mut stream = bad;
+        stream.extend_from_slice(&encode_shutdown());
+        let mut cur = Cursor::new(&stream);
+        assert!(matches!(read_frame(&mut cur, DL), Err(WireError::Corrupt(_))));
+        let (kind, payload) = read_frame(&mut cur, DL).unwrap();
+        assert_eq!(kind, K_SHUTDOWN);
+        assert!(matches!(decode_payload(kind, &payload).unwrap(), WireMsg::Shutdown));
+    }
+
+    #[test]
+    fn oversized_claimed_length_is_rejected_before_allocation() {
+        // a header claiming 3 GiB must fail the range check, not OOM;
+        // keep len_check consistent so only the range guard can catch it
+        let len: u32 = 3 << 30;
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&len.to_le_bytes());
+        bad.extend_from_slice(&(len ^ LEN_XOR).to_le_bytes());
+        bad.extend_from_slice(&[0u8; 32]);
+        match read_frame(&mut Cursor::new(&bad), DL) {
+            Err(WireError::Header(m)) => assert!(m.contains("outside"), "{m}"),
+            other => panic!("expected Header, got {other:?}"),
+        }
+        // same guard for under-length claims
+        let len: u32 = 3;
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&len.to_le_bytes());
+        bad.extend_from_slice(&(len ^ LEN_XOR).to_le_bytes());
+        bad.extend_from_slice(&[0u8; 32]);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bad), DL),
+            Err(WireError::Header(_))
+        ));
+    }
+
+    #[test]
+    fn lying_interior_counts_are_malformed_not_panics() {
+        // crc-valid frame whose payload claims more items than it holds:
+        // the len_prefix guard rejects it before any oversized allocation
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u64.to_le_bytes()); // version
+        p.extend_from_slice(&2u64.to_le_bytes()); // fingerprint
+        p.extend_from_slice(&0xffff_ffffu32.to_le_bytes()); // tensor count lie
+        let frame = encode_frame(K_SNAPSHOT, &p);
+        let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+        match decode_payload(kind, &payload) {
+            Err(e @ WireError::Malformed(_)) => assert!(e.fatal()),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // trailing garbage after a valid message is also loud
+        let mut p = Vec::new();
+        put_str(&mut p, "done");
+        p.push(0xaa);
+        let frame = encode_frame(K_HELLO_REJECT, &p);
+        let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+        assert!(matches!(decode_payload(kind, &payload), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn hello_validation_rejects_mismatches() {
+        let ok = |fp: u64, frame: Vec<u8>| {
+            let (kind, payload) = read_frame(&mut Cursor::new(&frame), DL).unwrap();
+            let msg = decode_payload(kind, &payload).unwrap();
+            validate_hello(&msg, fp)
+        };
+        assert_eq!(ok(42, encode_hello(42, 3)), Ok(3));
+        // wrong fingerprint
+        assert!(ok(43, encode_hello(42, 3)).unwrap_err().contains("fingerprint"));
+        // wrong magic / version: craft the payload by hand
+        let mut p = Vec::new();
+        p.extend_from_slice(&0x6261_6421u32.to_le_bytes());
+        p.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        p.extend_from_slice(&42u64.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        let msg = decode_payload(K_HELLO, &p).unwrap();
+        assert!(validate_hello(&msg, 42).unwrap_err().contains("magic"));
+        let mut p = Vec::new();
+        p.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        p.extend_from_slice(&(WIRE_VERSION + 9).to_le_bytes());
+        p.extend_from_slice(&42u64.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        let msg = decode_payload(K_HELLO, &p).unwrap();
+        assert!(validate_hello(&msg, 42).unwrap_err().contains("version"));
+        // not a Hello at all
+        let msg = decode_payload(K_SHUTDOWN, &[]).unwrap();
+        assert!(validate_hello(&msg, 42).is_err());
+    }
+
+    #[test]
+    fn wire_faults_damage_deterministically() {
+        let frame = encode_rollout(&batch());
+
+        let (torn, sever) = WireFaults::damage(&frame, FaultKind::Torn).unwrap();
+        assert!(sever);
+        assert!(torn.len() > HDR && torn.len() < frame.len());
+        assert_eq!(&torn[..], &frame[..torn.len()]);
+        assert!(matches!(read_frame(&mut Cursor::new(&torn), DL), Err(WireError::Torn)));
+
+        let (part, sever) = WireFaults::damage(&frame, FaultKind::Partial { bytes: 5 }).unwrap();
+        assert!(sever);
+        assert_eq!(part.len(), 5);
+
+        let (flip, sever) = WireFaults::damage(&frame, FaultKind::BitFlip { offset: 17 }).unwrap();
+        assert!(!sever, "a bitflip leaves the connection up");
+        assert_eq!(flip.len(), frame.len());
+        assert_eq!(flip.iter().zip(&frame).filter(|(a, b)| a != b).count(), 1);
+        // the flip always lands past the header: checksum-caught, recoverable
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&flip), DL),
+            Err(WireError::Corrupt(_))
+        ));
+
+        let (empty, sever) = WireFaults::damage(&frame, FaultKind::Disconnect).unwrap();
+        assert!(sever);
+        assert!(empty.is_empty());
+
+        // non-wire kinds are not this shim's business
+        assert!(WireFaults::damage(&frame, FaultKind::Crash).is_none());
+
+        // determinism: same frame + same fault -> same bytes
+        let again = WireFaults::damage(&frame, FaultKind::BitFlip { offset: 17 }).unwrap();
+        assert_eq!(again.0, flip);
+    }
+}

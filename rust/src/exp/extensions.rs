@@ -392,7 +392,7 @@ pub fn dist(ctx: &ExpCtx) -> Result<String> {
         &[
             "lag", "seed", "final_test_err", "fwd_samples", "bwd_kept", "stale_samples",
             "stale_kept", "quarantined", "quarantined_batches", "crashes", "restarts",
-            "timeouts", "shed",
+            "timeouts", "shed", "wire_corrupt_frames", "wire_reconnects", "handshake_rejects",
         ],
     )?;
     // sweep around the configured lag; `fault_spec`'s own `lag=` override,
@@ -404,7 +404,7 @@ pub fn dist(ctx: &ExpCtx) -> Result<String> {
         let mut errs = Vec::new();
         let mut stale_frac = Vec::new();
         for s in 0..ctx.cfg.seeds {
-            let mut d = ctx.cfg.distrib_cfg(method, s as u64);
+            let mut d = ctx.cfg.distrib_cfg(method, s as u64)?;
             d.lag = lag;
             let res = train_distrib(ctx.eng, &d, &DistribMode::Threaded)?;
             let l = &res.ledger;
@@ -422,9 +422,12 @@ pub fn dist(ctx: &ExpCtx) -> Result<String> {
                 l.actor_restarts.to_string(),
                 l.actor_timeouts.to_string(),
                 l.shed_samples.to_string(),
+                l.wire_corrupt_frames.to_string(),
+                l.wire_reconnects.to_string(),
+                l.handshake_rejects.to_string(),
             ])?;
             println!(
-                "[dist] lag={lag} seed={s} crashes={} restarts={} timeouts={} shed={} quarantined={} quarantined_batches={} stale={} stale_kept={} err={:.4}",
+                "[dist] lag={lag} seed={s} actor_crashes={} actor_restarts={} timeouts={} shed={} quarantined={} quarantined_batches={} stale={} stale_kept={} wire_corrupt_frames={} wire_reconnects={} handshake_rejects={} err={:.4}",
                 l.actor_crashes,
                 l.actor_restarts,
                 l.actor_timeouts,
@@ -433,6 +436,9 @@ pub fn dist(ctx: &ExpCtx) -> Result<String> {
                 l.quarantined_batches,
                 l.stale_samples,
                 l.stale_kept,
+                l.wire_corrupt_frames,
+                l.wire_reconnects,
+                l.handshake_rejects,
                 res.final_test_err,
             );
             errs.push(res.final_test_err);

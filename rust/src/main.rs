@@ -11,6 +11,7 @@
 //! out_dir, artifacts_dir, workers, rho_screen, draft_lr, screen_warmup,
 //! checkpoint_every, checkpoint_path, resume_from, priority, actors,
 //! snapshot_lag, stale_penalty, fault_spec, heartbeat_ms, max_respawns,
+//! transport, socket_dir, wire_deadline_ms, reconnect_backoff_ms,
 //! f32_fast), plus `preset=scaled|paper` to load configs/<preset>.toml
 //! first. `f32_fast=true` routes the forward/screen tier through the
 //! non-golden f32 kernels (DESIGN.md §13); the gated backward stays exact.
@@ -19,11 +20,14 @@
 //! methods (both `repro train` and the exp drivers honour it).
 //! `repro train distrib` runs the fault-tolerant actor–learner runtime
 //! (DESIGN.md §12): `mode=threaded|inline`, `record_to=PATH` to persist
-//! the actor stream, `replay_from=PATH` to re-ingest a recorded one.
+//! the actor stream, `replay_from=PATH` to re-ingest a recorded one,
+//! `transport=socket` to run the fleet as subprocesses over Unix sockets
+//! (DESIGN.md §14). `repro actor --slot N --socket PATH [k=v...]` is the
+//! subprocess entry point those fleets spawn — not for interactive use.
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use kondo::algo::{baseline::Baseline, Method};
 use kondo::config::ExpConfig;
@@ -61,7 +65,8 @@ fn load_config(args: &[String]) -> Result<ExpConfig> {
         "lr_rev", "out_dir", "artifacts_dir", "workers", "rho_screen", "draft_lr",
         "screen_warmup", "checkpoint_every", "checkpoint_path", "resume_from", "priority",
         "actors", "snapshot_lag", "stale_penalty", "fault_spec", "heartbeat_ms",
-        "max_respawns", "f32_fast",
+        "max_respawns", "transport", "socket_dir", "wire_deadline_ms",
+        "reconnect_backoff_ms", "f32_fast",
     ];
     for a in args {
         if let Some((k, v)) = a.split_once('=') {
@@ -172,8 +177,9 @@ fn real_main() -> Result<()> {
                     );
                 }
                 "distrib" => {
-                    let mut dcfg = cfg.distrib_cfg(method, arg_u64(rest, "seed").unwrap_or(0));
+                    let mut dcfg = cfg.distrib_cfg(method, arg_u64(rest, "seed").unwrap_or(0))?;
                     dcfg.record_to = arg_str(rest, "record_to");
+                    dcfg.actor_bin = arg_str(rest, "actor_bin");
                     let mode = match (arg_str(rest, "replay_from"), arg_str(rest, "mode")) {
                         (Some(path), _) => DistribMode::Replay(path),
                         (None, Some(m)) if m == "inline" => DistribMode::Inline,
@@ -195,7 +201,7 @@ fn real_main() -> Result<()> {
                         res.ledger.backward_executed,
                     );
                     println!(
-                        "distrib: crashes={} restarts={} timeouts={} shed={} quarantined={} quarantined_batches={} stale={} stale_kept={}",
+                        "distrib: actor_crashes={} actor_restarts={} timeouts={} shed={} quarantined={} quarantined_batches={} stale={} stale_kept={} wire_corrupt_frames={} wire_reconnects={} handshake_rejects={}",
                         res.ledger.actor_crashes,
                         res.ledger.actor_restarts,
                         res.ledger.actor_timeouts,
@@ -204,6 +210,9 @@ fn real_main() -> Result<()> {
                         res.ledger.quarantined_batches,
                         res.ledger.stale_samples,
                         res.ledger.stale_kept,
+                        res.ledger.wire_corrupt_frames,
+                        res.ledger.wire_reconnects,
+                        res.ledger.handshake_rejects,
                     );
                 }
                 other => bail!("unknown trainer '{other}' (mnist|reversal|distrib)"),
@@ -211,6 +220,9 @@ fn real_main() -> Result<()> {
             print_artifact_stats(&eng);
             Ok(())
         }
+        // subprocess entry point for socket-transport fleets; spawned by
+        // the learner, speaks the distrib::wire protocol on --socket
+        Some("actor") => run_actor_proc(&args[1..]),
         Some("stats") => {
             let cfg = load_config(&args[1.min(args.len())..])?;
             let eng = Engine::open(&cfg.artifacts_dir)?;
@@ -234,12 +246,71 @@ fn real_main() -> Result<()> {
         }
         Some("help") | None => {
             println!(
-                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg\n  repro train mnist method=dgk_rho0.25 priority=additive:0.2\n  repro train distrib method=dgk_rho0.25 actors=4 snapshot_lag=3 fault_spec=crash@5\n  repro train distrib mode=inline record_to=out/stream.json"
+                "usage: repro <list|exp|train|stats>\n  repro exp fig1 seeds=5 mnist_steps=2000\n  repro exp all preset=scaled\n  repro train reversal method=dgk_rho0.03 h=10 m=2\n  repro train mnist method=dg\n  repro train mnist method=dgk_rho0.25 priority=additive:0.2\n  repro train distrib method=dgk_rho0.25 actors=4 snapshot_lag=3 fault_spec=crash@5\n  repro train distrib transport=socket actors=2 fault_spec=disconnect@4,bitflip@6:17\n  repro train distrib mode=inline record_to=out/stream.json"
             );
             Ok(())
         }
         Some(other) => bail!("unknown command '{other}' (try `repro help`)"),
     }
+}
+
+/// Parse `repro actor --slot N --socket PATH [k=v...]` and run the actor
+/// loop to completion. Accepts both `--flag value` (the fields every
+/// spawn needs) and `k=v` (the tunables) so the learner's spawn line
+/// stays greppable in `ps` output.
+fn run_actor_proc(rest: &[String]) -> Result<()> {
+    let mut socket: Option<String> = None;
+    let mut slot: Option<usize> = None;
+    let mut seed = 0u64;
+    let mut fingerprint = 0u64;
+    let mut artifacts_dir = String::from("native");
+    let mut f32_fast = false;
+    let mut deadline_ms = 2000u64;
+    let mut i = 0;
+    while i < rest.len() {
+        let a = rest[i].as_str();
+        match a {
+            "--slot" => {
+                slot = Some(rest.get(i + 1).context("actor: --slot needs a value")?.parse()?);
+                i += 2;
+            }
+            "--socket" => {
+                socket = Some(rest.get(i + 1).context("actor: --socket needs a value")?.clone());
+                i += 2;
+            }
+            _ => {
+                let Some((k, v)) = a.split_once('=') else {
+                    bail!("actor: unexpected argument '{a}'");
+                };
+                match k {
+                    "slot" => slot = Some(v.parse()?),
+                    "socket" => socket = Some(v.to_string()),
+                    "seed" => seed = v.parse()?,
+                    // shipped as 16 hex digits; a mangled value simply
+                    // fails the handshake instead of erroring here
+                    "fingerprint" => {
+                        fingerprint = u64::from_str_radix(v, 16)
+                            .with_context(|| format!("actor: bad fingerprint '{v}'"))?
+                    }
+                    "artifacts_dir" => artifacts_dir = v.to_string(),
+                    "f32_fast" => f32_fast = v == "1" || v == "true",
+                    "deadline_ms" => deadline_ms = v.parse::<u64>()?.max(1),
+                    other => bail!("actor: unknown key '{other}'"),
+                }
+                i += 1;
+            }
+        }
+    }
+    let acfg = kondo::distrib::ActorProcCfg {
+        socket: socket.context("actor: --socket PATH required")?.into(),
+        slot: slot.context("actor: --slot N required")?,
+        seed,
+        fingerprint,
+        artifacts_dir,
+        f32_fast,
+        deadline: std::time::Duration::from_millis(deadline_ms),
+    };
+    kondo::distrib::run_actor(&acfg)
 }
 
 fn arg_u64(args: &[String], key: &str) -> Option<u64> {

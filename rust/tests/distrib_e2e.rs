@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use kondo::checkpoint::CheckpointCfg;
 use kondo::coordinator::{KondoGate, Priority};
-use kondo::distrib::{train_distrib, DistribCfg, DistribMode, FaultPlan};
+use kondo::distrib::{train_distrib, DistribCfg, DistribMode, FaultPlan, TransportKind};
 use kondo::runtime::Engine;
 use kondo::trainers::EvalPoint;
 
@@ -49,6 +49,20 @@ fn base_cfg(seed: u64) -> DistribCfg {
         seed,
         ..Default::default()
     }
+}
+
+/// Socket-fleet variant of [`base_cfg`]: same trajectory knobs, but the
+/// actors are OS processes reached over a Unix socket. The heartbeat is
+/// generous (process spawn and engine boot must not read as silence) and
+/// the respawn budget covers every sever the wire-fault tests schedule
+/// on one slot (torn + disconnect + crash all land on slot 0).
+fn socket_cfg(seed: u64) -> DistribCfg {
+    let mut cfg = base_cfg(seed);
+    cfg.transport = TransportKind::Socket;
+    cfg.actor_bin = Some(env!("CARGO_BIN_EXE_repro").to_string());
+    cfg.heartbeat_ms = 4_000;
+    cfg.max_respawns = 4;
+    cfg
 }
 
 fn assert_curves_bit_identical(a: &[EvalPoint], b: &[EvalPoint], what: &str) {
@@ -311,4 +325,129 @@ fn resume_with_a_lagged_ring_is_bit_identical_to_the_uninterrupted_run() {
     assert!(err.contains("lag"), "wrong-lag resume must name the knob: {err}");
 
     let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// cross-process transport: socket == channel == inline, exactly
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_socket_fleet_matches_channel_and_inline_bit_for_bit() {
+    let eng = Engine::native_testbed();
+    let inline = train_distrib(&eng, &base_cfg(23), &DistribMode::Inline).unwrap();
+
+    for (actors, workers) in [(1usize, 1usize), (2, 2)] {
+        let mut ch = base_cfg(23);
+        ch.actors = actors;
+        ch.workers = workers;
+        let channel = train_distrib(&eng, &ch, &DistribMode::Threaded).unwrap();
+
+        let mut sk = socket_cfg(23);
+        sk.actors = actors;
+        sk.workers = workers;
+        let socket = train_distrib(&eng, &sk, &DistribMode::Threaded).unwrap();
+
+        let what = format!("socket fleet {actors} actors x {workers} workers");
+        assert_curves_bit_identical(&inline.curve, &socket.curve, &what);
+        assert_curves_bit_identical(&channel.curve, &socket.curve, &what);
+        assert_eq!(
+            socket.final_test_err.to_bits(),
+            inline.final_test_err.to_bits(),
+            "{what}: final test err"
+        );
+
+        // clean run: wire and recovery ledgers are all zeros, and the
+        // ingest totals match the channel fleet exactly
+        let l = &socket.ledger;
+        assert_eq!(
+            (l.wire_corrupt_frames, l.wire_reconnects, l.handshake_rejects),
+            (0, 0, 0),
+            "{what}: clean wire"
+        );
+        assert_eq!(
+            (l.actor_crashes, l.actor_restarts, l.actor_timeouts, l.shed_samples),
+            (0, 0, 0, 0),
+            "{what}: clean recovery ledger"
+        );
+        assert_eq!(l.forward_samples, channel.ledger.forward_samples, "{what}");
+        assert_eq!(l.backward_kept, channel.ledger.backward_kept, "{what}");
+    }
+}
+
+#[test]
+fn a_socket_fleet_quarantines_poison_exactly_like_the_channel_one() {
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch;
+    let spec = "poison@3:nan_u:3,poison@6:fingerprint";
+
+    let mut ch = base_cfg(27);
+    ch.actors = 2;
+    ch.fault_spec = spec.into();
+    let channel = train_distrib(&eng, &ch, &DistribMode::Threaded).unwrap();
+
+    let mut sk = socket_cfg(27);
+    sk.actors = 2;
+    sk.fault_spec = spec.into();
+    let socket = train_distrib(&eng, &sk, &DistribMode::Threaded).unwrap();
+
+    // the poison crossed the wire intact (NaNs round-trip bitwise) and
+    // hit the same admission path: same curves, same quarantine ledger
+    assert_curves_bit_identical(&channel.curve, &socket.curve, "poisoned socket vs channel");
+    assert_eq!(socket.ledger.quarantined_samples, 3 + b as u64);
+    assert_eq!(socket.ledger.quarantined_samples, channel.ledger.quarantined_samples);
+    assert_eq!(socket.ledger.quarantined_batches, channel.ledger.quarantined_batches);
+    assert_eq!(
+        socket.ledger.wire_corrupt_frames, 0,
+        "poison is bad data in valid frames, not wire damage"
+    );
+}
+
+#[test]
+fn a_torn_disconnected_bitflipped_and_crashed_socket_run_recovers_exactly() {
+    let eng = Engine::native_testbed();
+    let b = eng.manifest().constants.mnist_batch;
+    let spec = "torn@2,disconnect@4,bitflip@6:17,crash@8";
+    let expect = FaultPlan::parse(spec).unwrap().expected_counts(b);
+    assert_eq!(expect.wire_corrupt_frames, 2, "torn + bitflip each cost a frame");
+    assert_eq!(expect.wire_reconnects, 2, "torn + disconnect each sever the link");
+    assert_eq!(expect.crashes, 1);
+    assert_eq!(expect.restarts, 1);
+
+    let mut cfg = socket_cfg(29);
+    cfg.actors = 2;
+    cfg.fault_spec = spec.into();
+    let res = train_distrib(&eng, &cfg, &DistribMode::Threaded).unwrap();
+
+    // recovery is asserted by EQUALITY against the plan, not survival
+    let l = &res.ledger;
+    assert_eq!(l.wire_corrupt_frames, expect.wire_corrupt_frames, "corrupt frames");
+    assert_eq!(l.wire_reconnects, expect.wire_reconnects, "reconnects");
+    assert_eq!(l.actor_crashes, expect.crashes, "crashes");
+    assert_eq!(l.actor_restarts, expect.restarts, "restarts");
+    assert_eq!(l.handshake_rejects, 0, "respawned actors present the right fingerprint");
+    assert_eq!(
+        (l.quarantined_samples, l.quarantined_batches),
+        (0, 0),
+        "wire damage is dropped before admission, never quarantined as data"
+    );
+
+    // wire damage happens AFTER the rollout is computed, so the repaired
+    // trajectory is bit-identical to an undamaged fleet and to inline
+    let mut clean = socket_cfg(29);
+    clean.actors = 2;
+    let reference = train_distrib(&eng, &clean, &DistribMode::Threaded).unwrap();
+    assert_curves_bit_identical(&reference.curve, &res.curve, "faulted socket vs clean");
+    let inline = train_distrib(&eng, &base_cfg(29), &DistribMode::Inline).unwrap();
+    assert_curves_bit_identical(&inline.curve, &res.curve, "faulted socket vs inline");
+}
+
+#[test]
+fn wire_faults_demand_the_socket_transport() {
+    let eng = Engine::native_testbed();
+    let mut cfg = base_cfg(31);
+    cfg.fault_spec = "torn@2,bitflip@5:3".into();
+    for mode in [DistribMode::Inline, DistribMode::Threaded] {
+        let err = train_distrib(&eng, &cfg, &mode).unwrap_err().to_string();
+        assert!(err.contains("transport=socket"), "must name the fix: {err}");
+    }
 }

@@ -1,0 +1,201 @@
+//! Byte-level hardening contracts for the wire codec (DESIGN.md §14).
+//!
+//! The frame layer's promise is narrow and absolute: damaged bytes
+//! produce a *classified error*, never a panic, never a silently wrong
+//! decode. These tests attack an encoded rollout frame exhaustively —
+//! every truncation point, every single-bit flip — and drive the real
+//! `SocketTransport` handshake with impostor connections.
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use kondo::distrib::wire::{
+    decode_payload, encode_hello, encode_rollout, read_frame, WireError, WireMsg, HDR,
+    LEN_XOR, MAX_FRAME,
+};
+use kondo::distrib::{RolloutBatch, SocketCfg, SocketTransport};
+use kondo::utils::rng::Pcg32;
+
+const DEADLINE: Duration = Duration::from_millis(500);
+
+/// A random rollout with hostile floats mixed in: NaN, both infinities,
+/// subnormals, and negative zero all have to survive the wire bitwise.
+fn rand_batch(r: &mut Pcg32) -> RolloutBatch {
+    let n = 1 + (r.next_u64() % 40) as usize;
+    let hostile = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        -0.0,
+        f64::MIN_POSITIVE / 2.0, // subnormal
+    ];
+    let mut actions = Vec::with_capacity(n);
+    let mut u = Vec::with_capacity(n);
+    let mut ell = Vec::with_capacity(n);
+    for i in 0..n {
+        actions.push((r.next_u64() % 10) as i32);
+        u.push(if r.next_u64() % 4 == 0 {
+            hostile[i % hostile.len()]
+        } else {
+            f64::from_bits(r.next_u64())
+        });
+        ell.push(f64::from_bits(r.next_u64()));
+    }
+    RolloutBatch {
+        actor: (r.next_u64() % 8) as usize,
+        step: r.next_u64(),
+        snapshot_version: r.next_u64(),
+        fingerprint: r.next_u64(),
+        n,
+        actions,
+        u,
+        ell,
+    }
+}
+
+fn decode_one(frame: &[u8]) -> Result<WireMsg, WireError> {
+    let mut cur = frame;
+    let (kind, payload) = read_frame(&mut cur, DEADLINE)?;
+    decode_payload(kind, &payload)
+}
+
+#[test]
+fn random_rollouts_round_trip_bitwise() {
+    let mut r = Pcg32::new(99, 7);
+    for case in 0..200 {
+        let rb = rand_batch(&mut r);
+        let frame = encode_rollout(&rb);
+        let got = match decode_one(&frame) {
+            Ok(WireMsg::Rollout(got)) => got,
+            other => panic!("case {case}: {other:?}"),
+        };
+        assert_eq!(got.actor, rb.actor, "case {case}");
+        assert_eq!(got.step, rb.step, "case {case}");
+        assert_eq!(got.snapshot_version, rb.snapshot_version, "case {case}");
+        assert_eq!(got.fingerprint, rb.fingerprint, "case {case}");
+        assert_eq!(got.n, rb.n, "case {case}");
+        assert_eq!(got.actions, rb.actions, "case {case}");
+        // float equality is BIT equality: NaN payloads included
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got.u), bits(&rb.u), "case {case}: u");
+        assert_eq!(bits(&got.ell), bits(&rb.ell), "case {case}: ell");
+    }
+}
+
+#[test]
+fn every_truncation_point_errors_cleanly() {
+    let mut r = Pcg32::new(3, 1);
+    let frame = encode_rollout(&rand_batch(&mut r));
+    for cut in 0..frame.len() {
+        match decode_one(&frame[..cut]) {
+            Ok(msg) => panic!("truncated at {cut}/{} decoded: {msg:?}", frame.len()),
+            // nothing at all is a clean boundary close; any strict
+            // prefix is a torn frame — never a panic, never Ok
+            Err(WireError::Closed) => assert_eq!(cut, 0),
+            Err(WireError::Torn) => assert!(cut > 0),
+            Err(e) => panic!("truncated at {cut}: unexpected class {e:?}"),
+        }
+    }
+}
+
+#[test]
+fn every_single_bitflip_is_caught_and_classified() {
+    let mut r = Pcg32::new(5, 2);
+    let frame = encode_rollout(&rand_batch(&mut r));
+    for i in 0..frame.len() {
+        let mut damaged = frame.clone();
+        damaged[i] ^= 1 << (i % 8);
+        match decode_one(&damaged) {
+            // flips inside the dual length fields break the header's
+            // self-check (fatal: the stream is desynchronized) ...
+            Err(WireError::Header(_)) => assert!(i < HDR, "Header class at byte {i}"),
+            // ... flips anywhere else are caught by the checksum
+            // (recoverable: the NEXT frame is still readable)
+            Err(WireError::Corrupt(_)) => assert!(i >= HDR, "Corrupt class at byte {i}"),
+            other => panic!("flip at byte {i} slipped through: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn an_oversized_length_claim_is_refused_before_allocation() {
+    // a malicious header claiming a huge-but-self-consistent length must
+    // be refused by the size guard, not handed to Vec::with_capacity
+    for claim in [MAX_FRAME as u32 + 1, u32::MAX] {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&claim.to_le_bytes());
+        frame.extend_from_slice(&(claim ^ LEN_XOR).to_le_bytes());
+        frame.extend_from_slice(&[0u8; 32]);
+        match decode_one(&frame) {
+            Err(WireError::Header(m)) => {
+                assert!(m.contains("length"), "guard should name the length: {m}")
+            }
+            other => panic!("length bomb {claim}: {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the real handshake, attacked over a real socket
+// ---------------------------------------------------------------------
+
+/// Connect to the learner's socket and present `hello`; return the
+/// learner's verdict frame.
+fn impostor(path: &std::path::Path, hello: Vec<u8>) -> WireMsg {
+    let mut s = UnixStream::connect(path).expect("connecting impostor");
+    s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    s.write_all(&hello).unwrap();
+    let t0 = std::time::Instant::now();
+    loop {
+        match read_frame(&mut s, DEADLINE) {
+            Ok((kind, payload)) => return decode_payload(kind, &payload).unwrap(),
+            Err(WireError::Idle) if t0.elapsed() < Duration::from_secs(2) => continue,
+            Err(e) => panic!("no verdict frame: {e:?}"),
+        }
+    }
+}
+
+#[test]
+fn wrong_fingerprint_and_wrong_slot_handshakes_are_rejected_and_counted() {
+    let tp = SocketTransport::bind(SocketCfg {
+        dir: std::env::temp_dir(),
+        n_actors: 1,
+        fingerprint: 0xF00D_F00D,
+        deadline: DEADLINE,
+        accept_timeout: Duration::from_millis(1500),
+        // start() spawns one "actor" that exits immediately and never
+        // connects — only the impostors below ever reach the listener
+        bin: PathBuf::from("/bin/true"),
+        args: vec![],
+    })
+    .unwrap();
+    let path = tp.socket_path().to_path_buf();
+
+    let attacker = std::thread::spawn(move || {
+        // wrong run fingerprint: right protocol, wrong universe
+        let v1 = impostor(&path, encode_hello(0xDEAD_BEEF, 0));
+        // right fingerprint, nonexistent slot
+        let v2 = impostor(&path, encode_hello(0xF00D_F00D, 7));
+        (v1, v2)
+    });
+
+    // no valid actor ever arrives, so start() must give up on its own
+    // deadline rather than hang
+    let err = tp.start().unwrap_err().to_string();
+    assert!(err.contains("handshake"), "{err}");
+
+    let (v1, v2) = attacker.join().unwrap();
+    match v1 {
+        WireMsg::HelloReject { reason } => {
+            assert!(reason.contains("fingerprint"), "{reason}")
+        }
+        other => panic!("fingerprint impostor got {other:?}"),
+    }
+    match v2 {
+        WireMsg::HelloReject { reason } => assert!(reason.contains("slot"), "{reason}"),
+        other => panic!("slot impostor got {other:?}"),
+    }
+    assert_eq!(tp.handshake_rejects(), 2, "every reject is counted exactly once");
+}
